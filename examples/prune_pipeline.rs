@@ -1,0 +1,103 @@
+//! End-to-end driver (the EXPERIMENTS.md §E2E run): the full system on a
+//! real small workload, proving all layers compose.
+//!
+//!   1. pretrain the `small` (~0.9M param) transformer on synth-c4,
+//!      logging the loss curve (L2 train_step HLO driven from rust),
+//!   2. prune to 90% with ELSA (global Fisher-weighted ADMM projection)
+//!      and with SparseGPT as the layer-wise comparator,
+//!   3. evaluate perplexity on both held-out corpora + the 7-task
+//!      zero-shot probe suite,
+//!   4. write a summary table to results/e2e.{csv,md}.
+//!
+//! Run: `cargo run --release --example prune_pipeline [-- --steps 600]`
+
+use std::path::Path;
+
+use anyhow::Result;
+use elsa::cli::Args;
+use elsa::coordinator::elsa::{prune_elsa, ElsaOptions};
+use elsa::coordinator::eval_ppl;
+use elsa::coordinator::pretrain::{pretrain, PretrainOptions};
+use elsa::data::{Dataset, Grammar};
+use elsa::eval::{build_suite, score_task};
+use elsa::model::Params;
+use elsa::report::{f2, pct, Table};
+use elsa::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = if argv.is_empty() {
+        Args::parse(&["e2e".to_string()])?
+    } else {
+        let mut full = vec!["e2e".to_string()];
+        full.extend(argv);
+        Args::parse(&full)?
+    };
+
+    let rt = Runtime::load(Path::new("artifacts"))?;
+    let cfg = rt.manifest.config(&args.str_or("config", "small"))?.clone();
+    let c4 = Dataset::standard("synth-c4", cfg.vocab);
+    let wiki = Dataset::standard("synth-wiki", cfg.vocab);
+
+    // --- 1. pretraining with loss curve --------------------------------
+    let steps = args.usize_or("steps", 600)?;
+    println!("[1/4] pretraining {} ({} params) for {steps} steps",
+             cfg.name, cfg.flat_len);
+    let mut popts = PretrainOptions::new(steps);
+    popts.log_every = 50;
+    let t0 = std::time::Instant::now();
+    let (dense, losses) = pretrain(&rt, &cfg, &c4.train, &popts)?;
+    println!("  loss curve (every 50): {:?}",
+             losses.iter().step_by(50).map(|l| (l * 100.0).round() / 100.0)
+                   .collect::<Vec<_>>());
+    println!("  pretrain wall: {:.1}s", t0.elapsed().as_secs_f64());
+    let dense_c4 = eval_ppl(&rt, &cfg, &dense, &c4.valid)?;
+    let dense_wiki = eval_ppl(&rt, &cfg, &dense, &wiki.valid)?;
+    println!("  dense ppl: c4={dense_c4:.2} wiki={dense_wiki:.2}");
+
+    // --- 2. prune: ELSA vs SparseGPT at 90% -----------------------------
+    let sp = args.f64_or("sparsity", 0.9)?;
+    println!("[2/4] ELSA @ {:.0}%", sp * 100.0);
+    let mut eopts = ElsaOptions::new(sp, args.usize_or("elsa-steps", 300)?);
+    eopts.lam = 2e-2;
+    let (elsa_p, metrics) = prune_elsa(&rt, &cfg, &c4.train, &dense,
+                                       &eopts)?;
+    println!("  achieved {:.4}, final residual {:.2e}, {:.1}s",
+             metrics.achieved_sparsity,
+             metrics.residuals.last().map(|r| r.1).unwrap_or(f64::NAN),
+             metrics.wall_seconds);
+
+    println!("[2/4] SparseGPT @ {:.0}% (layer-wise comparator)",
+             sp * 100.0);
+    let sg_p = elsa::pruners::prune_oneshot(&rt, &cfg, "sparsegpt", &dense,
+                                            &c4.train, sp, &args)?;
+
+    // --- 3. evaluate ----------------------------------------------------
+    println!("[3/4] evaluating");
+    let g = Grammar::named("synth-c4", cfg.vocab);
+    let suite = build_suite(&g, 30, 0xE2E);
+    let mut table = Table::new(
+        &format!("E2E pipeline — {} @ {:.0}% sparsity", cfg.name,
+                 sp * 100.0),
+        &["model", "ppl_c4", "ppl_wiki", "zeroshot_avg", "sparsity"]);
+    for (name, params) in [("dense", &dense), ("elsa", &elsa_p),
+                           ("sparsegpt", &sg_p)] {
+        let pc = eval_ppl(&rt, &cfg, params, &c4.valid)?;
+        let pw = eval_ppl(&rt, &cfg, params, &wiki.valid)?;
+        let pobj = Params::new(&cfg, params.clone());
+        let mut acc = 0.0;
+        for (_, exs) in &suite {
+            acc += score_task(&pobj, exs)?;
+        }
+        acc /= suite.len() as f64;
+        println!("  {name:10} ppl c4={pc:7.2} wiki={pw:7.2} \
+                  zs={:.1}% sparsity={:.3}", acc * 100.0, pobj.sparsity());
+        table.row(vec![name.into(), f2(pc), f2(pw), pct(acc),
+                       format!("{:.4}", pobj.sparsity())]);
+    }
+
+    // --- 4. persist -----------------------------------------------------
+    let path = table.save(Path::new("results"), "e2e")?;
+    println!("[4/4] wrote {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! Serving demo: load a pruned checkpoint into the sparse inference
+//! engine and serve a batch of generation requests, reporting per-request
+//! latency, aggregate throughput and weight memory vs the dense backend
+//! (the deployment story of paper §5.3 / Table 1).
+//!
+//! Run: `cargo run --release --example serve_sparse`
+//! (pretrains + prunes a model on the fly if no checkpoint is given;
+//!  pass `-- --ckpt path.bin` to serve an existing one)
+
+use std::path::Path;
+
+use anyhow::Result;
+use elsa::cli::Args;
+use elsa::coordinator::elsa::{prune_elsa, ElsaOptions};
+use elsa::coordinator::pretrain::{pretrain_cached, PretrainOptions};
+use elsa::data::{Dataset, Grammar};
+use elsa::infer::{Backend, Engine};
+use elsa::model::checkpoint::Checkpoint;
+use elsa::model::Params;
+use elsa::runtime::Runtime;
+use elsa::util::{human_bytes, stats::Summary};
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut full = vec!["serve".to_string()];
+    full.extend(argv);
+    let args = Args::parse(&full)?;
+
+    let rt = Runtime::load(Path::new("artifacts"))?;
+    let (cfg, params) = match args.get("ckpt") {
+        Some(path) => {
+            let ck = Checkpoint::load(Path::new(path))?;
+            let cfg = rt.manifest.config(&ck.config)?.clone();
+            let p = ck.get("params")?.clone();
+            (cfg, p)
+        }
+        None => {
+            let cfg = rt.manifest.config("tiny")?.clone();
+            let ds = Dataset::standard("synth-c4", cfg.vocab);
+            println!("no --ckpt given: pretraining + pruning tiny @ 90%");
+            let dense = pretrain_cached(&rt, &cfg, &ds.train,
+                                        &PretrainOptions::new(800),
+                                        Path::new("checkpoints"))?;
+            let (p, _) = prune_elsa(&rt, &cfg, &ds.train, &dense,
+                                    &ElsaOptions::new(0.9, 250))?;
+            (cfg, p)
+        }
+    };
+    let params = Params::new(&cfg, params);
+    println!("model {} | sparsity {:.2}%", cfg.name,
+             100.0 * params.sparsity());
+
+    let g = Grammar::named("synth-c4", cfg.vocab);
+    let n_requests = args.usize_or("requests", 16)?;
+    let prompt_len = 8;
+    let n_new = cfg.seq_len - prompt_len;
+
+    for backend in [Backend::Dense, Backend::Csr, Backend::Macko] {
+        let engine = Engine::build(&params, backend)?;
+        // warmup
+        engine.generate(&g.generate(prompt_len, 0), n_new, 0.8, 0);
+        let mut lat = Summary::new();
+        let t0 = std::time::Instant::now();
+        let mut total_tokens = 0usize;
+        for r in 0..n_requests {
+            let prompt = g.generate(prompt_len, r as u64);
+            let (_, stats) = engine.generate(&prompt, n_new, 0.8,
+                                             r as u64);
+            lat.push(stats.decode_seconds * 1e3);
+            total_tokens += stats.tokens_generated;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "{:>6}: {:4} reqs | p50 {:7.2} ms | p95 {:7.2} ms | \
+             {:8.1} tok/s | weights {}",
+            format!("{backend:?}"), n_requests, lat.median(),
+            lat.percentile(95.0), total_tokens as f64 / wall,
+            human_bytes(engine.mem_bytes()));
+    }
+    Ok(())
+}

@@ -1,0 +1,1 @@
+"""ELSA compile path: JAX/Pallas authoring, AOT-lowered to HLO text."""

@@ -1,0 +1,219 @@
+"""AOT exporter: lower every L2 entry point to HLO *text* + manifest.json.
+
+HLO text (NOT `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids that the crate's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Python runs exactly once: `make artifacts` invokes this module, after
+which the rust binary is self-contained. The manifest records, for every
+(config, artifact): the HLO file, the argument/output specs, the flat
+parameter layout (name/offset/shape/prunable), and the shared Adam
+hyperparameters — everything the rust runtime needs to drive the graphs.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--configs tiny,small]
+                             [--no-pallas]
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from . import model
+from .configs import CONFIGS, ADAM_BETA1, ADAM_BETA2, ADAM_EPS
+from .kernels import quant
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    from jax._src.lib import xla_client as xc
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="f32"):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def _lower(fn, args):
+    return jax.jit(fn).lower(*args)
+
+
+def export_config(cfg, out_dir, *, use_pallas=True):
+    """Lower all entry points for one ModelConfig; returns manifest entry."""
+    d = model.flat_len(cfg)
+    dl = model.lora_len(cfg)
+    b, s, be = cfg.batch, cfg.seq_len, cfg.eval_batch
+
+    f32 = jnp.float32
+    i32 = jnp.int32
+    vec = lambda n: jax.ShapeDtypeStruct((n,), f32)
+    scalar = jax.ShapeDtypeStruct((), f32)
+    tok_train = jax.ShapeDtypeStruct((b, s + 1), i32)
+    tok_eval = jax.ShapeDtypeStruct((be, s + 1), i32)
+    tok_fwd = jax.ShapeDtypeStruct((be, s), i32)
+
+    arts = {}
+
+    def emit(name, lowered, args_spec, outs_spec):
+        fname = f"{cfg.name}_{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        t0 = time.time()
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  [{cfg.name}] {name}: {len(text) / 1e6:.2f} MB "
+              f"({time.time() - t0:.1f}s)")
+        arts[name] = {
+            "file": fname,
+            "args": args_spec,
+            "outputs": outs_spec,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        }
+
+    # train_step(flat, m, v, z, u, wmask, pmask, tokens, step, lr, lam)
+    emit(
+        "train_step",
+        _lower(
+            lambda p, m, v, z, u, wm, pm, t, st, lr, lam: model.train_step(
+                cfg, p, m, v, z, u, wm, pm, t, st, lr, lam,
+                use_pallas=use_pallas),
+            (vec(d), vec(d), vec(d), vec(d), vec(d), vec(d), vec(d),
+             tok_train, scalar, scalar, scalar)),
+        [
+            {"name": "params", **_spec([d])}, {"name": "m", **_spec([d])},
+            {"name": "v", **_spec([d])}, {"name": "z", **_spec([d])},
+            {"name": "u", **_spec([d])}, {"name": "wmask", **_spec([d])},
+            {"name": "pmask", **_spec([d])},
+            {"name": "tokens", **_spec([b, s + 1], "i32")},
+            {"name": "step", **_spec([])}, {"name": "lr", **_spec([])},
+            {"name": "lam", **_spec([])},
+        ],
+        [{"name": "params", **_spec([d])}, {"name": "m", **_spec([d])},
+         {"name": "v", **_spec([d])}, {"name": "loss", **_spec([])}],
+    )
+
+    # eval_loss(flat, tokens) -> (nll_sum, count)
+    emit(
+        "eval_loss",
+        _lower(lambda p, t: model.eval_loss(cfg, p, t, use_pallas=use_pallas),
+               (vec(d), tok_eval)),
+        [{"name": "params", **_spec([d])},
+         {"name": "tokens", **_spec([be, s + 1], "i32")}],
+        [{"name": "nll_sum", **_spec([])}, {"name": "count", **_spec([])}],
+    )
+
+    # logits(flat, tokens) -> (logits,)
+    emit(
+        "logits",
+        _lower(lambda p, t: (model.forward(cfg, p, t, use_pallas=use_pallas),),
+               (vec(d), tok_fwd)),
+        [{"name": "params", **_spec([d])},
+         {"name": "tokens", **_spec([be, s], "i32")}],
+        [{"name": "logits", **_spec([be, s, cfg.vocab])}],
+    )
+
+    # lora_train_step(flat, lora, m, v, wmask, tokens, step, lr)
+    emit(
+        "lora_train_step",
+        _lower(
+            lambda p, a, m, v, wm, t, st, lr: model.lora_train_step(
+                cfg, p, a, m, v, wm, t, st, lr, use_pallas=use_pallas),
+            (vec(d), vec(dl), vec(dl), vec(dl), vec(d), tok_train, scalar,
+             scalar)),
+        [{"name": "params", **_spec([d])}, {"name": "lora", **_spec([dl])},
+         {"name": "m", **_spec([dl])}, {"name": "v", **_spec([dl])},
+         {"name": "wmask", **_spec([d])},
+         {"name": "tokens", **_spec([b, s + 1], "i32")},
+         {"name": "step", **_spec([])}, {"name": "lr", **_spec([])}],
+        [{"name": "lora", **_spec([dl])}, {"name": "m", **_spec([dl])},
+         {"name": "v", **_spec([dl])}, {"name": "loss", **_spec([])}],
+    )
+
+    # lora_merge(flat, lora) -> (flat',)
+    emit(
+        "lora_merge",
+        _lower(lambda p, a: (model.lora_merge(cfg, p, a),), (vec(d), vec(dl))),
+        [{"name": "params", **_spec([d])}, {"name": "lora", **_spec([dl])}],
+        [{"name": "params", **_spec([d])}],
+    )
+
+    segs = [
+        {"name": sg.name, "offset": sg.offset, "shape": list(sg.shape),
+         "prunable": sg.prunable, "init": sg.init}
+        for sg in model.param_layout(cfg)
+    ]
+    lsegs = [
+        {"name": sg.name, "offset": sg.offset, "shape": list(sg.shape),
+         "init": sg.init}
+        for sg in model.lora_layout(cfg)
+    ]
+    return {
+        "vocab": cfg.vocab, "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+        "seq_len": cfg.seq_len, "batch": cfg.batch,
+        "eval_batch": cfg.eval_batch, "d_ff": cfg.d_ff,
+        "lora_rank": cfg.lora_rank, "lora_alpha": model.LORA_ALPHA,
+        "flat_len": d, "lora_len": dl,
+        "segments": segs, "lora_segments": lsegs,
+        "artifacts": arts,
+    }
+
+
+def export_quant_demo(out_dir):
+    """Standalone quant round-trip artifact (cross-checks rust codecs)."""
+    n = 8192
+    vecspec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    lowered = jax.jit(
+        lambda x: quant.quant_roundtrip(x, vmax=quant.VMAX_INT8)).lower(vecspec)
+    text = to_hlo_text(lowered)
+    fname = "quant_roundtrip_int8.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    return {
+        "file": fname,
+        "args": [{"name": "x", **_spec([n])}],
+        "outputs": [{"name": "remat", **_spec([n])},
+                    {"name": "codes", **_spec([n])},
+                    {"name": "scale", **_spec([])}],
+        "vmax": quant.VMAX_INT8, "n": n,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default="tiny,small,med")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="build against the jnp oracles (debug only)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {
+        "format_version": 1,
+        "use_pallas": not args.no_pallas,
+        "adam": {"beta1": ADAM_BETA1, "beta2": ADAM_BETA2, "eps": ADAM_EPS},
+        "configs": {},
+    }
+    for name in args.configs.split(","):
+        cfg = CONFIGS[name.strip()]
+        print(f"exporting config '{cfg.name}' "
+              f"(flat_len={model.flat_len(cfg)})")
+        manifest["configs"][cfg.name] = export_config(
+            cfg, args.out_dir, use_pallas=not args.no_pallas)
+    manifest["quant_roundtrip"] = export_quant_demo(args.out_dir)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Model configurations exported as AOT artifacts.
+
+Scales are chosen for a single-core CPU testbed (see DESIGN.md §3): the
+cross-scale story of the paper (Fig 2) is preserved with three sizes. Every
+config is lowered to a self-contained set of HLO-text artifacts; the rust
+coordinator picks a config by name at run time.
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    seq_len: int          # training sequence length (static in the HLO)
+    batch: int            # training batch size (static in the HLO)
+    eval_batch: int       # batch size of the eval_loss artifact
+    d_ff_mult: int = 4
+    lora_rank: int = 4
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff(self) -> int:
+        return self.d_ff_mult * self.d_model
+
+
+# The three scales used across the experiment suite. `tiny` drives tests
+# and the full method x sparsity sweep; `small` is the end-to-end example
+# model; `med` is the "largest scale" used for the ELSA-L experiment
+# (Fig 5 analogue).
+CONFIGS = {
+    "tiny": ModelConfig(
+        name="tiny", vocab=256, d_model=64, n_layers=2, n_heads=2,
+        seq_len=64, batch=8, eval_batch=8,
+    ),
+    "small": ModelConfig(
+        name="small", vocab=512, d_model=128, n_layers=4, n_heads=4,
+        seq_len=64, batch=8, eval_batch=8,
+    ),
+    "med": ModelConfig(
+        name="med", vocab=1024, d_model=192, n_layers=6, n_heads=6,
+        seq_len=96, batch=8, eval_batch=8,
+    ),
+}
+
+# Adam hyperparameters shared by every artifact (paper Table 4).
+ADAM_BETA1 = 0.9
+ADAM_BETA2 = 0.999
+ADAM_EPS = 1e-8

@@ -1,0 +1,143 @@
+"""L1 Pallas kernel: fused causal attention with online softmax.
+
+Hardware adaptation (DESIGN.md §4): the paper's training runs on A100s
+with CUDA flash-attention; the TPU re-think tiles the HBM->VMEM schedule
+with BlockSpecs instead of threadblocks. The grid is (batch*heads,
+q-blocks); each program holds one (blk_q, d_head) query tile resident in
+VMEM and streams (blk_k, d_head) key/value tiles through an online-softmax
+accumulator, so the (S, S) score matrix is never materialized. On the MXU
+the two inner matmuls are (blk_q x d_head x blk_k) and (blk_q x blk_k x
+d_head); with blk_q = blk_k = 128 and bf16 inputs they map one-to-one onto
+the 128x128 systolic array (we run fp32 tiles sized to the toy models
+here; the roofline discussion lives in EXPERIMENTS.md §Perf).
+
+Executed with interpret=True: the CPU PJRT plugin cannot run Mosaic
+custom-calls, and interpret mode lowers the kernel to plain HLO that the
+rust runtime executes directly (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Large-negative instead of -inf: keeps exp() well-defined for fully
+# masked rows without generating NaNs in interpret mode.
+_NEG_BIG = -1e30
+
+
+def _attn_fwd_kernel(q_ref, k_ref, v_ref, o_ref, *, sm_scale, blk_q, blk_k,
+                     seq_len):
+    """One program: one (blk_q, dh) query tile vs all key/value tiles."""
+    qi = pl.program_id(1)
+    q = q_ref[0]  # (blk_q, dh)
+    dh = q.shape[-1]
+    n_k = seq_len // blk_k
+
+    q_pos = qi * blk_q + jax.lax.iota(jnp.int32, blk_q)  # (blk_q,)
+
+    def body(j, carry):
+        acc, m_i, l_i = carry
+        k = pl.load(k_ref, (0, pl.ds(j * blk_k, blk_k), slice(None)))
+        v = pl.load(v_ref, (0, pl.ds(j * blk_k, blk_k), slice(None)))
+        s = jnp.dot(q, k.T) * sm_scale  # (blk_q, blk_k)
+        k_pos = j * blk_k + jax.lax.iota(jnp.int32, blk_k)
+        causal = k_pos[None, :] <= q_pos[:, None]
+        s = jnp.where(causal, s, _NEG_BIG)
+        # online softmax update
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_i - m_new)
+        l_new = alpha * l_i + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + jnp.dot(p, v)
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((blk_q, dh), dtype=jnp.float32)
+    m0 = jnp.full((blk_q,), _NEG_BIG, dtype=jnp.float32)
+    l0 = jnp.zeros((blk_q,), dtype=jnp.float32)
+    # Causality: key tiles beyond this query tile contribute nothing, so
+    # the loop stops at the diagonal tile (the HBM->VMEM schedule skips
+    # them entirely rather than masking them out).
+    n_live = jnp.minimum(qi + 1 if blk_q == blk_k else n_k, n_k)
+    acc, m_i, l_i = jax.lax.fori_loop(0, n_live, body, (acc0, m0, l0))
+    o_ref[0] = (acc / l_i[:, None]).astype(o_ref.dtype)
+
+
+def attention(q, k, v, *, sm_scale=None, blk_q=None, blk_k=None):
+    """Fused causal attention. q, k, v: (BH, S, Dh) -> (BH, S, Dh)."""
+    bh, seq_len, dh = q.shape
+    if sm_scale is None:
+        sm_scale = 1.0 / (dh ** 0.5)
+    if blk_q is None:
+        # largest power-of-two tile <= 64 that divides seq_len
+        blk_q = 1
+        while blk_q < 64 and seq_len % (blk_q * 2) == 0:
+            blk_q *= 2
+        blk_q = min(blk_q, seq_len)
+    if blk_k is None:
+        blk_k = blk_q
+    assert seq_len % blk_q == 0 and seq_len % blk_k == 0, (
+        f"seq_len {seq_len} must tile by blk_q={blk_q}, blk_k={blk_k}")
+
+    grid = (bh, seq_len // blk_q)
+    kernel = functools.partial(
+        _attn_fwd_kernel, sm_scale=sm_scale, blk_q=blk_q, blk_k=blk_k,
+        seq_len=seq_len)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk_q, dh), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, seq_len, dh), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, seq_len, dh), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, dh), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, seq_len, dh), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+# --- custom VJP: pallas forward, analytic jnp backward -------------------
+#
+# Autodiff cannot trace through pallas_call; the backward pass recomputes
+# the (tiled-size) probabilities in plain jnp. It lowers into the same HLO
+# module as the forward, keeping the whole train_step a single artifact.
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def attention_vjp(q, k, v, sm_scale):
+    return attention(q, k, v, sm_scale=sm_scale)
+
+
+def _attn_fwd(q, k, v, sm_scale):
+    o = attention(q, k, v, sm_scale=sm_scale)
+    return o, (q, k, v)
+
+
+def _attn_bwd(sm_scale, res, do):
+    q, k, v = res
+    s = jnp.einsum("bqd,bkd->bqk", q, k) * sm_scale
+    seq = q.shape[1]
+    mask = jnp.tril(jnp.ones((seq, seq), dtype=bool))[None]
+    s = jnp.where(mask, s, _NEG_BIG)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)          # (b, q, k)
+    dv = jnp.einsum("bqk,bqd->bkd", p, do)
+    dp = jnp.einsum("bqd,bkd->bqk", do, v)
+    # softmax jacobian: ds = p * (dp - sum(dp * p))
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    ds = jnp.where(mask, ds, 0.0) * sm_scale
+    dq = jnp.einsum("bqk,bkd->bqd", ds, k)
+    dk = jnp.einsum("bqk,bqd->bkd", ds, q)
+    return dq, dk, dv
+
+
+attention_vjp.defvjp(_attn_fwd, _attn_bwd)
+
+
+def attention_ref_vjp(q, k, v, sm_scale):
+    """Oracle path with the same signature as attention_vjp."""
+    return ref.attention_ref(q, k, v, sm_scale=sm_scale)

@@ -1,0 +1,75 @@
+"""L1 Pallas kernel: symmetric absmax quant/dequant cycle (paper eq. 12-13).
+
+ELSA-L stores the auxiliary ADMM states (z, u) in low precision between
+outer iterations: Q(x) = (round(x/s), s) with s = max|x| / vmax, and
+R(z_q, s) = s * z_q. The kernel implements the elementwise half of the
+cycle — the global absmax reduction is a one-pass jnp.max outside (a
+two-pass grid reduction on real hardware); the blocked kernel then streams
+the vector once, emitting the *rematerialized* value (what the next
+high-precision update consumes) plus the quantized codes.
+
+vmax selects the format: 127 -> INT8, 448 -> FP8-E4M3 dynamic range,
+57344 -> FP8-E5M2. The rust-side quant/ module mirrors these codecs
+natively for the state manager; this artifact is the cross-checked
+reference (tests assert rust codec == HLO kernel == ref.quant_ref).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# TPU tile (documented); interpret mode runs one whole-vector tile —
+# see admm.py for why a blocked interpreted grid is O(d * n_blocks).
+BLOCK = 4096
+_ALIGN = 1024
+
+
+def _block_for(d):
+    return -(-d // _ALIGN) * _ALIGN
+
+VMAX_INT8 = 127.0
+VMAX_FP8_E4M3 = 448.0
+VMAX_FP8_E5M2 = 57344.0
+
+
+def _quant_kernel(x_ref, s_ref, q_ref, r_ref, *, vmax):
+    x = x_ref[...]
+    s = s_ref[0]
+    q = jnp.clip(jnp.round(x / s), -vmax, vmax)
+    q_ref[...] = q
+    r_ref[...] = s * q
+
+
+def quant_roundtrip(x, *, vmax=VMAX_INT8):
+    """Quantize-dequantize a flat f32 vector.
+
+    Returns (rematerialized, codes, scale). codes are f32-held integers in
+    [-vmax, vmax] (the storage narrowing to int8/fp8 bytes happens in the
+    rust state manager; HLO keeps f32 for CPU-PJRT portability).
+    """
+    d = x.shape[0]
+    absmax = jnp.max(jnp.abs(x))
+    # Guard the all-zero tensor: scale 1.0 quantizes everything to 0.
+    scale = jnp.where(absmax > 0, absmax / vmax, 1.0)
+
+    block = _block_for(d)
+    pad = (-d) % block
+    xp = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)]) if pad else x
+    dp = xp.shape[0]
+
+    vec_spec = pl.BlockSpec((block,), lambda i: (i,))
+    scal_spec = pl.BlockSpec((1,), lambda i: (0,))
+    kernel = functools.partial(_quant_kernel, vmax=vmax)
+    q, r = pl.pallas_call(
+        kernel,
+        grid=(dp // block,),
+        in_specs=[vec_spec, scal_spec],
+        out_specs=[vec_spec, vec_spec],
+        out_shape=[jax.ShapeDtypeStruct((dp,), jnp.float32)] * 2,
+        interpret=True,
+    )(xp, scale.reshape((1,)))
+    if pad:
+        q, r = q[:d], r[:d]
+    return r, q, scale

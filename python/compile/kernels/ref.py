@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These are deliberately the most direct possible implementations: the
+pytest suite asserts `assert_allclose(kernel(...), ref(...))` across shape
+sweeps (hypothesis), and the L2 model can be built against either
+implementation (`use_pallas` flag) so the whole lowered HLO can be
+A/B-checked end to end.
+"""
+
+import jax.numpy as jnp
+
+
+def _softmax(x):
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def attention_ref(q, k, v, *, sm_scale=None):
+    """Causal attention oracle.
+
+    q, k, v: (BH, S, Dh) — batch*heads folded into the leading dim.
+    Returns (BH, S, Dh).
+    """
+    _, s, dh = q.shape
+    if sm_scale is None:
+        sm_scale = 1.0 / (dh ** 0.5)
+    scores = jnp.einsum("bqd,bkd->bqk", q, k) * sm_scale
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(mask[None, :, :], scores, jnp.finfo(scores.dtype).min)
+    probs = _softmax(scores)
+    return jnp.einsum("bqk,bkd->bqd", probs, v)
+
+
+def adam_prox_ref(p, g, m, v, z, u, pmask, *, step, lr, lam,
+                  beta1=0.9, beta2=0.999, eps=1e-8):
+    """Fused Adam + ADMM proximal x-update oracle (paper eq. 7).
+
+    Minimizes f(x) + lam/2 ||pmask * (x - z + u)||^2 by one Adam step: the
+    proximal penalty gradient lam * pmask * (p - z + u) is added to the
+    data gradient g before the moment updates, so the second moment `v`
+    recycled as the empirical Fisher (paper §3.2) reflects the full
+    augmented objective. Returns (p_new, m_new, v_new).
+    """
+    g_total = g + lam * pmask * (p - z + u)
+    m_new = beta1 * m + (1.0 - beta1) * g_total
+    v_new = beta2 * v + (1.0 - beta2) * g_total * g_total
+    mhat = m_new / (1.0 - beta1 ** step)
+    vhat = v_new / (1.0 - beta2 ** step)
+    p_new = p - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return p_new, m_new, v_new
+
+
+def quant_ref(x, scale, *, vmax):
+    """Symmetric absmax quant/dequant round-trip oracle (paper eq. 12-13).
+
+    `scale` is computed by the caller as max(|x|)/vmax; the round trip is
+    R(Q(x)) = scale * clip(round(x / scale), -vmax, vmax).
+    """
+    q = jnp.clip(jnp.round(x / scale), -vmax, vmax)
+    return scale * q

@@ -1,0 +1,308 @@
+"""L2: GPT-style causal LM over a flat f32 parameter vector, plus every
+ADMM entry point lowered to HLO by aot.py.
+
+The *flat-parameter calling convention* (DESIGN.md §2) is the backbone of
+the surrogate-free formulation: ELSA's z-update is a global top-k over one
+vector, so the model exposes its parameters as a single f32[d] argument,
+with a static layout table mapping (name, offset, shape, prunable). The
+rust coordinator slices the same table for per-layer baseline pruners and
+for the sparse inference engine.
+
+Entry points (each lowered once per ModelConfig, see aot.py):
+
+  train_step(flat, m, v, z, u, wmask, pmask, tokens, step, lr, lam)
+      -> (flat', m', v', loss)
+    One fused HLO: forward on flat*wmask, backward, and the Pallas
+    adam_prox kernel (eq. 7). lam=0 + wmask=1 is plain Adam pretraining;
+    lam=0 + frozen wmask is the Wanda+Full retraining baseline; lam>0 is
+    the ELSA x-update.
+  eval_loss(flat, tokens) -> (nll_sum, count)    perplexity evaluation
+  logits(flat, tokens)   -> logits               zero-shot scoring + the
+                                                 rust-forward numerics check
+  lora_train_step / lora_merge                   Wanda+LoRA baseline
+"""
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig, ADAM_BETA1, ADAM_BETA2, ADAM_EPS
+from .kernels import admm
+from .kernels.attention import attention_vjp, attention_ref_vjp
+
+
+# --------------------------------------------------------------------------
+# Parameter layout
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Segment:
+    name: str
+    offset: int
+    shape: tuple
+    prunable: bool
+    init: str      # "normal" | "zeros" | "ones"
+
+    @property
+    def length(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+def param_layout(cfg: ModelConfig):
+    """Static layout of the flat parameter vector.
+
+    Prunable = the transformer linear weights (wq/wk/wv/wo/w1/w2), the
+    standard target set of Wanda/SparseGPT; embeddings, layernorms, biases
+    and the LM head are kept dense (non-prunable, zero proximal penalty).
+    """
+    d, f, v, s = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq_len
+    segs = []
+    off = 0
+
+    def add(name, shape, prunable=False, init="normal"):
+        nonlocal off
+        seg = Segment(name, off, tuple(shape), prunable, init)
+        segs.append(seg)
+        off += seg.length
+
+    add("embed", (v, d))
+    add("pos", (s, d))
+    for i in range(cfg.n_layers):
+        p = f"l{i}."
+        add(p + "ln1.g", (d,), init="ones")
+        add(p + "ln1.b", (d,), init="zeros")
+        add(p + "attn.wq", (d, d), prunable=True)
+        add(p + "attn.wk", (d, d), prunable=True)
+        add(p + "attn.wv", (d, d), prunable=True)
+        add(p + "attn.wo", (d, d), prunable=True)
+        add(p + "ln2.g", (d,), init="ones")
+        add(p + "ln2.b", (d,), init="zeros")
+        add(p + "mlp.w1", (d, f), prunable=True)
+        add(p + "mlp.b1", (f,), init="zeros")
+        add(p + "mlp.w2", (f, d), prunable=True)
+        add(p + "mlp.b2", (d,), init="zeros")
+    add("lnf.g", (d,), init="ones")
+    add("lnf.b", (d,), init="zeros")
+    add("head", (d, v))
+    return segs
+
+
+def flat_len(cfg: ModelConfig) -> int:
+    segs = param_layout(cfg)
+    return segs[-1].offset + segs[-1].length
+
+
+def prunable_mask(cfg: ModelConfig):
+    """0/1 f32 vector marking the prunable coordinates."""
+    import numpy as np
+    mask = np.zeros((flat_len(cfg),), dtype=np.float32)
+    for seg in param_layout(cfg):
+        if seg.prunable:
+            mask[seg.offset:seg.offset + seg.length] = 1.0
+    return mask
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """Reference initializer (rust model/init mirrors this for tests)."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    out = np.zeros((flat_len(cfg),), dtype=np.float32)
+    for seg in param_layout(cfg):
+        sl = slice(seg.offset, seg.offset + seg.length)
+        if seg.init == "ones":
+            out[sl] = 1.0
+        elif seg.init == "zeros":
+            out[sl] = 0.0
+        else:
+            fan_in = seg.shape[0] if len(seg.shape) == 2 else cfg.d_model
+            std = 0.02 if seg.name in ("embed", "pos") else 1.0 / math.sqrt(fan_in)
+            out[sl] = rng.normal(0.0, std, size=seg.length).astype(np.float32)
+    return out
+
+
+def _views(cfg: ModelConfig, flat):
+    """Materialize named weight arrays from the flat vector (static slices)."""
+    w = {}
+    for seg in param_layout(cfg):
+        w[seg.name] = flat[seg.offset:seg.offset + seg.length].reshape(seg.shape)
+    return w
+
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _block(cfg: ModelConfig, w, prefix, x, attn_fn):
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    sm_scale = 1.0 / math.sqrt(dh)
+
+    # attention
+    xa = _layernorm(x, w[prefix + "ln1.g"], w[prefix + "ln1.b"])
+    q = xa @ w[prefix + "attn.wq"]
+    k = xa @ w[prefix + "attn.wk"]
+    v = xa @ w[prefix + "attn.wv"]
+
+    def split(t):  # (B,S,D) -> (B*H, S, Dh)
+        return t.reshape(b, s, h, dh).transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+
+    o = attn_fn(split(q), split(k), split(v), sm_scale)
+    o = o.reshape(b, h, s, dh).transpose(0, 2, 1, 3).reshape(b, s, d)
+    x = x + o @ w[prefix + "attn.wo"]
+
+    # mlp
+    xm = _layernorm(x, w[prefix + "ln2.g"], w[prefix + "ln2.b"])
+    hmid = jax.nn.gelu(xm @ w[prefix + "mlp.w1"] + w[prefix + "mlp.b1"])
+    x = x + hmid @ w[prefix + "mlp.w2"] + w[prefix + "mlp.b2"]
+    return x
+
+
+def forward(cfg: ModelConfig, flat, tokens, *, use_pallas=True,
+            lora_flat=None):
+    """tokens: i32 (B, S) -> logits f32 (B, S, V)."""
+    attn_fn = attention_vjp if use_pallas else attention_ref_vjp
+    w = _views(cfg, flat)
+    if lora_flat is not None:
+        w = _apply_lora(cfg, w, lora_flat)
+    s = tokens.shape[1]
+    x = w["embed"][tokens] + w["pos"][:s][None, :, :]
+    for i in range(cfg.n_layers):
+        x = _block(cfg, w, f"l{i}.", x, attn_fn)
+    x = _layernorm(x, w["lnf.g"], w["lnf.b"])
+    return x @ w["head"]
+
+
+def nll(cfg: ModelConfig, flat, tokens, *, use_pallas=True, lora_flat=None):
+    """Mean next-token NLL. tokens: i32 (B, S+1)."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(cfg, flat, inp, use_pallas=use_pallas,
+                     lora_flat=lora_flat)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return -jnp.mean(picked)
+
+
+# --------------------------------------------------------------------------
+# Entry points (AOT-lowered)
+# --------------------------------------------------------------------------
+
+def train_step(cfg: ModelConfig, flat, m, v, z, u, wmask, pmask, tokens,
+               step, lr, lam, *, use_pallas=True):
+    """Fused fwd + bwd + Adam/proximal update (ELSA x-update, eq. 7)."""
+    loss, g = jax.value_and_grad(
+        lambda p: nll(cfg, p * wmask, tokens, use_pallas=use_pallas))(flat)
+    if use_pallas:
+        p_new, m_new, v_new = admm.adam_prox(
+            flat, g, m, v, z, u, pmask, step=step, lr=lr, lam=lam,
+            beta1=ADAM_BETA1, beta2=ADAM_BETA2, eps=ADAM_EPS)
+    else:
+        from .kernels.ref import adam_prox_ref
+        p_new, m_new, v_new = adam_prox_ref(
+            flat, g, m, v, z, u, pmask, step=step, lr=lr, lam=lam,
+            beta1=ADAM_BETA1, beta2=ADAM_BETA2, eps=ADAM_EPS)
+    return p_new, m_new, v_new, loss
+
+
+def eval_loss(cfg: ModelConfig, flat, tokens, *, use_pallas=True):
+    """Summed NLL + token count for exact corpus perplexity aggregation."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(cfg, flat, inp, use_pallas=use_pallas)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    total = -jnp.sum(picked)
+    count = jnp.asarray(picked.size, jnp.float32)
+    return total, count
+
+
+# --------------------------------------------------------------------------
+# LoRA (Wanda+LoRA retraining baseline, paper §5.2 / Table 2)
+# --------------------------------------------------------------------------
+
+LORA_TARGETS = ("attn.wq", "attn.wk", "attn.wv", "attn.wo",
+                "mlp.w1", "mlp.w2")
+LORA_ALPHA = 8.0
+
+
+def lora_layout(cfg: ModelConfig):
+    """Rank-r adapters (A: din x r, B: r x dout) on every linear target."""
+    r = cfg.lora_rank
+    segs = []
+    off = 0
+    for seg in param_layout(cfg):
+        if not any(seg.name.endswith(t) for t in LORA_TARGETS):
+            continue
+        din, dout = seg.shape
+        segs.append(Segment(seg.name + ".A", off, (din, r), False, "normal"))
+        off += din * r
+        segs.append(Segment(seg.name + ".B", off, (r, dout), False, "zeros"))
+        off += r * dout
+    return segs
+
+
+def lora_len(cfg: ModelConfig) -> int:
+    segs = lora_layout(cfg)
+    return segs[-1].offset + segs[-1].length if segs else 0
+
+
+def init_lora(cfg: ModelConfig, seed: int = 1):
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    out = np.zeros((lora_len(cfg),), dtype=np.float32)
+    for seg in lora_layout(cfg):
+        if seg.init == "normal":
+            std = 1.0 / math.sqrt(seg.shape[0])
+            sl = slice(seg.offset, seg.offset + seg.length)
+            out[sl] = rng.normal(0.0, std, size=seg.length).astype(np.float32)
+    return out
+
+
+def _apply_lora(cfg: ModelConfig, w, lora_flat):
+    lv = {}
+    for seg in lora_layout(cfg):
+        lv[seg.name] = lora_flat[seg.offset:seg.offset + seg.length].reshape(seg.shape)
+    scale = LORA_ALPHA / cfg.lora_rank
+    w = dict(w)
+    for seg in param_layout(cfg):
+        if seg.name + ".A" in lv:
+            w[seg.name] = w[seg.name] + scale * (lv[seg.name + ".A"] @ lv[seg.name + ".B"])
+    return w
+
+
+def lora_train_step(cfg: ModelConfig, flat, lora, m, v, wmask, tokens,
+                    step, lr, *, use_pallas=True):
+    """Adam step on the adapter parameters only; base weights frozen
+    (and masked: the Wanda mask stays applied throughout retraining)."""
+    loss, g = jax.value_and_grad(
+        lambda a: nll(cfg, flat * wmask, tokens, use_pallas=use_pallas,
+                      lora_flat=a))(lora)
+    zeros = jnp.zeros_like(lora)
+    ones = jnp.ones_like(lora)
+    if use_pallas:
+        l_new, m_new, v_new = admm.adam_prox(
+            lora, g, m, v, zeros, zeros, ones, step=step, lr=lr, lam=0.0,
+            beta1=ADAM_BETA1, beta2=ADAM_BETA2, eps=ADAM_EPS)
+    else:
+        from .kernels.ref import adam_prox_ref
+        l_new, m_new, v_new = adam_prox_ref(
+            lora, g, m, v, zeros, zeros, ones, step=step, lr=lr, lam=0.0,
+            beta1=ADAM_BETA1, beta2=ADAM_BETA2, eps=ADAM_EPS)
+    return l_new, m_new, v_new, loss
+
+
+def lora_merge(cfg: ModelConfig, flat, lora):
+    """Fold the adapters back into the flat vector (rust pulls the result)."""
+    w = _views(cfg, flat)
+    wl = _apply_lora(cfg, w, lora)
+    parts = [wl[seg.name].reshape(-1) for seg in param_layout(cfg)]
+    return jnp.concatenate(parts)

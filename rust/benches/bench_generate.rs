@@ -1,0 +1,85 @@
+//! End-to-end generation bench across backends (the Table-1 protocol as a
+//! repeatable micro-bench, with a synthetic 90%-sparse model so it runs
+//! without checkpoints).
+//!
+//! Run: cargo bench --bench bench_generate
+
+use elsa::infer::{Backend, Engine};
+use elsa::model::Params;
+use elsa::pruners::{magnitude, uniform_alloc};
+use elsa::runtime::manifest::{ArtifactSpec, Segment};
+use elsa::runtime::ConfigEntry;
+use elsa::util::bench::bench;
+use std::collections::BTreeMap;
+
+/// A manifest-free model config mirroring `small` for engine benches.
+fn bench_config() -> ConfigEntry {
+    let (v, d, l, s) = (512usize, 128usize, 4usize, 64usize);
+    let f = 4 * d;
+    let mut segments = vec![];
+    let mut off = 0usize;
+    let mut add = |name: String, shape: Vec<usize>, prunable: bool,
+                   init: &str, segs: &mut Vec<Segment>| {
+        let len: usize = shape.iter().product();
+        segs.push(Segment { name, offset: off, shape, prunable,
+                            init: init.into() });
+        off += len;
+    };
+    add("embed".into(), vec![v, d], false, "normal", &mut segments);
+    add("pos".into(), vec![s, d], false, "normal", &mut segments);
+    for i in 0..l {
+        let p = format!("l{i}.");
+        add(p.clone() + "ln1.g", vec![d], false, "ones", &mut segments);
+        add(p.clone() + "ln1.b", vec![d], false, "zeros", &mut segments);
+        for w in ["attn.wq", "attn.wk", "attn.wv", "attn.wo"] {
+            add(p.clone() + w, vec![d, d], true, "normal", &mut segments);
+        }
+        add(p.clone() + "ln2.g", vec![d], false, "ones", &mut segments);
+        add(p.clone() + "ln2.b", vec![d], false, "zeros", &mut segments);
+        add(p.clone() + "mlp.w1", vec![d, f], true, "normal",
+            &mut segments);
+        add(p.clone() + "mlp.b1", vec![f], false, "zeros", &mut segments);
+        add(p.clone() + "mlp.w2", vec![f, d], true, "normal",
+            &mut segments);
+        add(p.clone() + "mlp.b2", vec![d], false, "zeros", &mut segments);
+    }
+    add("lnf.g".into(), vec![d], false, "ones", &mut segments);
+    add("lnf.b".into(), vec![d], false, "zeros", &mut segments);
+    add("head".into(), vec![d, v], false, "normal", &mut segments);
+    ConfigEntry {
+        name: "bench".into(), vocab: v, d_model: d, n_layers: l,
+        n_heads: 4, seq_len: s, batch: 8, eval_batch: 8, d_ff: f,
+        lora_rank: 4, lora_alpha: 8.0, flat_len: off, lora_len: 0,
+        segments, lora_segments: vec![],
+        artifacts: BTreeMap::<String, ArtifactSpec>::new(),
+    }
+}
+
+fn main() {
+    let cfg = bench_config();
+    for &sp in &[0.0, 0.9, 0.95] {
+        let mut params = Params::init(&cfg, 7);
+        if sp > 0.0 {
+            params.flat = magnitude::prune(&cfg, &params.flat,
+                                           &uniform_alloc(&cfg, sp))
+                .unwrap();
+        }
+        for backend in [Backend::Dense, Backend::Csr, Backend::Macko] {
+            let engine = Engine::build(&params, backend).unwrap();
+            let prompt = [1u32, 2, 3, 4, 5, 6, 7, 8];
+            let n_new = cfg.seq_len - prompt.len();
+            let r = bench(
+                &format!("generate {backend:?} sp={sp:.2} ({} new tok)",
+                         n_new),
+                2500,
+                || {
+                    std::hint::black_box(
+                        engine.generate(&prompt, n_new, 0.8, 0));
+                });
+            let ms_per_tok = r.median_ns / 1e6 / n_new as f64;
+            println!("  -> {:.3} ms/token | weights {}", ms_per_tok,
+                     elsa::util::human_bytes(engine.mem_bytes()));
+        }
+        println!();
+    }
+}

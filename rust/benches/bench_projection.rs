@@ -1,0 +1,35 @@
+//! ELSA z-update micro-bench: the global Fisher-weighted top-k projection
+//! at realistic coordinate counts (O(d) quickselect vs O(d log d) sort).
+//!
+//! Run: cargo bench --bench bench_projection
+
+use elsa::tensor::select::{kth_largest, topk_mask};
+use elsa::util::bench::{bench, throughput};
+use elsa::util::rng::Rng;
+
+fn main() {
+    for &d in &[100_000usize, 1_000_000, 3_000_000] {
+        let mut rng = Rng::new(0);
+        let scores: Vec<f32> = (0..d).map(|_| rng.f32()).collect();
+        let k = d / 10;
+
+        let r = bench(&format!("kth_largest       d={d}"), 400, || {
+            std::hint::black_box(kth_largest(&scores, k));
+        });
+        throughput(&r, d as f64, "elem");
+
+        let r = bench(&format!("topk_mask (10%)   d={d}"), 400, || {
+            std::hint::black_box(topk_mask(&scores, k));
+        });
+        throughput(&r, d as f64, "elem");
+
+        // the sort-based strawman, for the §Perf before/after record
+        let r = bench(&format!("full-sort baseline d={d}"), 400, || {
+            let mut s = scores.clone();
+            s.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            std::hint::black_box(s[k - 1]);
+        });
+        throughput(&r, d as f64, "elem");
+        println!();
+    }
+}

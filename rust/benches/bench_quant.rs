@@ -1,0 +1,33 @@
+//! ELSA-L codec bench: quant/dequant throughput per precision — the
+//! per-outer-iteration overhead of low-precision state storage (§3.3).
+//!
+//! Run: cargo bench --bench bench_quant
+
+use elsa::quant::{Precision, StoredVec};
+use elsa::util::bench::{bench, throughput};
+use elsa::util::rng::Rng;
+
+fn main() {
+    let d = 1_000_000usize;
+    let mut rng = Rng::new(0);
+    let xs: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+
+    for (name, p) in [
+        ("bf16", Precision::Bf16),
+        ("fp8-e4m3", Precision::Fp8E4M3),
+        ("int8", Precision::Int8),
+        ("int8-block256", Precision::Int8Block(256)),
+    ] {
+        let r = bench(&format!("quantize   {name} d={d}"), 500, || {
+            std::hint::black_box(StoredVec::quantize(&xs, p));
+        });
+        throughput(&r, d as f64, "elem");
+        let sv = StoredVec::quantize(&xs, p);
+        let r = bench(&format!("dequantize {name} d={d}"), 500, || {
+            std::hint::black_box(sv.dequantize());
+        });
+        throughput(&r, d as f64, "elem");
+        println!("  stored size: {} B ({:.2}x vs f32)\n", sv.mem_bytes(),
+                 (d * 4) as f64 / sv.mem_bytes() as f64);
+    }
+}

@@ -1,0 +1,78 @@
+//! End-to-end HLO dispatch bench: train_step / eval_loss throughput per
+//! config through the PJRT runtime — the x-update cost that dominates
+//! every ELSA run (Table 3's wall-clock column).
+//!
+//! Needs artifacts/ (make artifacts). Run: cargo bench --bench bench_runtime
+
+use std::path::Path;
+
+use elsa::data::Dataset;
+use elsa::model::Params;
+use elsa::runtime::{self, Runtime};
+use elsa::util::bench::{bench, throughput};
+
+fn main() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::load(dir).unwrap();
+
+    for cfg_name in ["tiny", "small"] {
+        let Ok(cfg) = rt.manifest.config(cfg_name) else { continue };
+        let cfg = cfg.clone();
+        let d = cfg.flat_len;
+        let params = Params::init(&cfg, 0);
+        let ds = Dataset::generate("synth-c4", cfg.vocab, 60_000, 0, 0);
+        let mut batcher =
+            elsa::data::Batcher::new(&ds.train, cfg.batch, cfg.seq_len, 0);
+        let batch = batcher.next_batch();
+        let zeros = vec![0.0f32; d];
+        let ones = vec![1.0f32; d];
+        let pmask = cfg.prunable_mask();
+
+        let exe = rt.executable(cfg_name, "train_step").unwrap();
+        let tokens_per_step = (cfg.batch * cfg.seq_len) as f64;
+        let mut p = params.flat.clone();
+        let mut m = zeros.clone();
+        let mut v = zeros.clone();
+        let mut t = 0f32;
+        let r = bench(&format!("train_step {cfg_name} (d={d})"), 3000,
+                      || {
+            t += 1.0;
+            let outs = rt.execute(&exe, &[
+                runtime::lit_f32(&p),
+                runtime::lit_f32(&m),
+                runtime::lit_f32(&v),
+                runtime::lit_f32(&zeros),
+                runtime::lit_f32(&zeros),
+                runtime::lit_f32(&ones),
+                runtime::lit_f32(&pmask),
+                runtime::lit_i32_2d(&batch, cfg.batch, cfg.seq_len + 1)
+                    .unwrap(),
+                runtime::lit_scalar(t),
+                runtime::lit_scalar(1e-3),
+                runtime::lit_scalar(0.0),
+            ]).unwrap();
+            p = runtime::to_f32(&outs[0]).unwrap();
+            m = runtime::to_f32(&outs[1]).unwrap();
+            v = runtime::to_f32(&outs[2]).unwrap();
+        });
+        throughput(&r, tokens_per_step, "token");
+
+        let exe = rt.executable(cfg_name, "eval_loss").unwrap();
+        let ebatch = elsa::data::Batcher::eval_batches(
+            &ds.train, cfg.eval_batch, cfg.seq_len)[0].clone();
+        let r = bench(&format!("eval_loss  {cfg_name}"), 2000, || {
+            let outs = rt.execute(&exe, &[
+                runtime::lit_f32(&params.flat),
+                runtime::lit_i32_2d(&ebatch, cfg.eval_batch,
+                                    cfg.seq_len + 1).unwrap(),
+            ]).unwrap();
+            std::hint::black_box(runtime::to_scalar(&outs[0]).unwrap());
+        });
+        throughput(&r, (cfg.eval_batch * cfg.seq_len) as f64, "token");
+        println!();
+    }
+}

@@ -1,0 +1,57 @@
+//! Table-1 micro-bench: SpMV across formats and sparsities (the MACKO
+//! comparison — who wins where, and the CSR/MACKO crossover).
+//!
+//! Run: cargo bench --bench bench_spmv
+
+use elsa::sparse::{dense_matvec, Csr, Macko};
+use elsa::tensor::Matrix;
+use elsa::util::bench::{bench, throughput};
+use elsa::util::rng::Rng;
+
+fn sparse_weight(din: usize, dout: usize, sparsity: f64, seed: u64)
+                 -> Matrix {
+    let mut rng = Rng::new(seed);
+    let mut w = Matrix::randn(din, dout, 1.0, &mut rng);
+    for x in w.data.iter_mut() {
+        if rng.f64() < sparsity {
+            *x = 0.0;
+        }
+    }
+    w
+}
+
+fn main() {
+    let (din, dout) = (768, 768);
+    let mut rng = Rng::new(1);
+    let x: Vec<f32> = (0..din).map(|_| rng.normal()).collect();
+    let mut y = vec![0.0f32; dout];
+
+    println!("== SpMV {din}x{dout}, y = W^T x ==");
+    for &sp in &[0.0, 0.5, 0.7, 0.9, 0.95, 0.99] {
+        let w = sparse_weight(din, dout, sp, 42);
+        let nnz = w.nnz() as f64;
+
+        let r = bench(&format!("dense   sp={sp:.2}"), 300, || {
+            dense_matvec(&w, &x, &mut y);
+            std::hint::black_box(&y);
+        });
+        throughput(&r, (din * dout) as f64 * 2.0, "flop");
+
+        let csr = Csr::from_weight(&w);
+        let r = bench(&format!("csr     sp={sp:.2} ({} B)",
+                               csr.mem_bytes()), 300, || {
+            csr.matvec(&x, &mut y);
+            std::hint::black_box(&y);
+        });
+        throughput(&r, nnz * 2.0, "flop");
+
+        let macko = Macko::from_weight(&w);
+        let r = bench(&format!("macko   sp={sp:.2} ({} B)",
+                               macko.mem_bytes()), 300, || {
+            macko.matvec(&x, &mut y);
+            std::hint::black_box(&y);
+        });
+        throughput(&r, nnz * 2.0, "flop");
+        println!();
+    }
+}

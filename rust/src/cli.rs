@@ -1,0 +1,125 @@
+//! Hand-rolled CLI (clap is not in the offline vendor set).
+//!
+//! Subcommands:
+//!   pretrain  --config tiny --steps 300 [--lr 3e-3] [--out ckpt.bin]
+//!   prune     --config tiny --method elsa --sparsity 0.9 [...]
+//!   eval      --config tiny --ckpt ckpt.bin [--dataset synth-c4]
+//!   generate  --config tiny --ckpt ckpt.bin [--sparse] [--prompt-len 8]
+//!   exp       --id fig2|fig3|...|all [--scale quick|full]
+//!   report    --results results/
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed `--key value` flags plus the subcommand name.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub cmd: String,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        if argv.is_empty() {
+            bail!("usage: elsa <pretrain|prune|eval|generate|exp|report> \
+                   [--key value ...]");
+        }
+        let mut a = Args { cmd: argv[0].clone(), ..Default::default() };
+        let mut i = 1;
+        while i < argv.len() {
+            let k = argv[i]
+                .strip_prefix("--")
+                .with_context(|| format!("expected --flag, got '{}'", argv[i]))?;
+            let v = if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                i += 1;
+                argv[i].clone()
+            } else {
+                "true".to_string() // boolean flag
+            };
+            a.flags.insert(k.to_string(), v);
+            i += 1;
+        }
+        Ok(a)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> Result<f32> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.get(key)
+            .with_context(|| format!("missing required flag --{key}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags() {
+        let a = Args::parse(&argv(&[
+            "prune", "--config", "tiny", "--sparsity", "0.9", "--quiet",
+        ]))
+        .unwrap();
+        assert_eq!(a.cmd, "prune");
+        assert_eq!(a.get("config"), Some("tiny"));
+        assert_eq!(a.f32_or("sparsity", 0.5).unwrap(), 0.9);
+        assert!(a.bool("quiet"));
+        assert!(!a.bool("verbose"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&argv(&["eval"])).unwrap();
+        assert_eq!(a.usize_or("steps", 100).unwrap(), 100);
+        assert_eq!(a.str_or("config", "tiny"), "tiny");
+        assert!(a.require("ckpt").is_err());
+    }
+
+    #[test]
+    fn rejects_positional() {
+        assert!(Args::parse(&argv(&["exp", "oops"])).is_err());
+        assert!(Args::parse(&argv(&[])).is_err());
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = Args::parse(&argv(&["exp", "--id", "fig2"])).unwrap();
+        assert_eq!(a.get("id"), Some("fig2"));
+    }
+}

@@ -1,0 +1,149 @@
+//! CLI subcommand implementations (the `elsa` binary surface).
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::cli::Args;
+use crate::coordinator::elsa::{prune_elsa, ElsaOptions};
+use crate::coordinator::patterns::Pattern;
+use crate::coordinator::pretrain::{pretrain_cached, PretrainOptions};
+use crate::coordinator::{self};
+use crate::data::Dataset;
+use crate::model::checkpoint::Checkpoint;
+use crate::model::Params;
+use crate::quant::Precision;
+use crate::runtime::Runtime;
+
+pub fn dispatch(args: &Args) -> Result<()> {
+    match args.cmd.as_str() {
+        "pretrain" => cmd_pretrain(args),
+        "prune" => cmd_prune(args),
+        "eval" => cmd_eval(args),
+        "generate" => crate::infer::cmd_generate(args),
+        "exp" => crate::experiments::cmd_exp(args),
+        other => bail!(
+            "unknown subcommand '{other}'\n\
+             usage: elsa <pretrain|prune|eval|generate|exp> [--flags]"),
+    }
+}
+
+pub fn open_runtime(args: &Args) -> Result<Runtime> {
+    let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    Runtime::load(&dir)
+}
+
+fn ckpt_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.str_or("ckpt-dir", "checkpoints"))
+}
+
+fn cmd_pretrain(args: &Args) -> Result<()> {
+    let rt = open_runtime(args)?;
+    let cfg_name = args.str_or("config", "tiny");
+    let cfg = rt.manifest.config(&cfg_name)?.clone();
+    let steps = args.usize_or("steps", 400)?;
+    let ds = Dataset::standard(&args.str_or("dataset", "synth-c4"),
+                               cfg.vocab);
+    let mut opts = PretrainOptions::new(steps);
+    opts.lr = args.f32_or("lr", opts.lr)?;
+    opts.seed = args.usize_or("seed", 0)? as u64;
+    let p = pretrain_cached(&rt, &cfg, &ds.train, &opts, &ckpt_dir(args))?;
+    let ppl = coordinator::eval_ppl(&rt, &cfg, &p, &ds.valid)?;
+    crate::info!("pretrain", "dense valid ppl = {ppl:.3}");
+    println!("dense_ppl {ppl:.4}");
+    Ok(())
+}
+
+pub fn parse_elsa_options(args: &Args, sparsity: f64, steps: usize)
+                          -> Result<ElsaOptions> {
+    let mut opts = ElsaOptions::new(sparsity, steps);
+    opts.lr = args.f32_or("lr", opts.lr)?;
+    opts.lam = args.f32_or("lam", opts.lam)?;
+    opts.interval_k = args.usize_or("interval-k", opts.interval_k)?;
+    opts.seed = args.usize_or("seed", 0)? as u64;
+    if args.bool("no-objective-aware") {
+        opts.objective_aware = false;
+    }
+    if let Some(p) = args.get("pattern") {
+        opts.pattern = Pattern::parse(p)
+            .ok_or_else(|| anyhow::anyhow!("bad --pattern '{p}'"))?;
+    }
+    if args.bool("low-memory") {
+        opts = opts.low_memory();
+    }
+    if let Some(zp) = args.get("z-prec") {
+        opts.z_prec = Precision::parse(zp)
+            .ok_or_else(|| anyhow::anyhow!("bad --z-prec '{zp}'"))?;
+    }
+    if let Some(up) = args.get("u-prec") {
+        opts.u_prec = Precision::parse(up)
+            .ok_or_else(|| anyhow::anyhow!("bad --u-prec '{up}'"))?;
+    }
+    Ok(opts)
+}
+
+fn cmd_prune(args: &Args) -> Result<()> {
+    let rt = open_runtime(args)?;
+    let cfg_name = args.str_or("config", "tiny");
+    let cfg = rt.manifest.config(&cfg_name)?.clone();
+    let sparsity = args.f64_or("sparsity", 0.9)?;
+    let method = args.str_or("method", "elsa");
+    let ds = Dataset::standard(&args.str_or("dataset", "synth-c4"),
+                               cfg.vocab);
+
+    // dense base model (pretrained + cached)
+    let psteps = args.usize_or("pretrain-steps", 400)?;
+    let dense = pretrain_cached(&rt, &cfg, &ds.train,
+                                &PretrainOptions::new(psteps),
+                                &ckpt_dir(args))?;
+    let dense_ppl = coordinator::eval_ppl(&rt, &cfg, &dense, &ds.valid)?;
+
+    let steps = args.usize_or("steps", 300)?;
+    let (pruned, note) = match method.as_str() {
+        "elsa" => {
+            let opts = parse_elsa_options(args, sparsity, steps)?;
+            let (p, m) = prune_elsa(&rt, &cfg, &ds.train, &dense, &opts)?;
+            (p, format!("achieved={:.4} aux_state={} wall={:.1}s",
+                        m.achieved_sparsity,
+                        crate::util::human_bytes(m.aux_state_bytes),
+                        m.wall_seconds))
+        }
+        other => {
+            let p = crate::pruners::prune_oneshot(
+                &rt, &cfg, other, &dense, &ds.train, sparsity, args)?;
+            (p, String::new())
+        }
+    };
+
+    let params = Params::new(&cfg, pruned.clone());
+    let ppl = coordinator::eval_ppl(&rt, &cfg, &pruned, &ds.valid)?;
+    crate::info!("prune", "{method} @ {sparsity}: ppl {dense_ppl:.2} -> \
+                  {ppl:.2} (sparsity {:.4}) {note}", params.sparsity());
+    println!("method {method}");
+    println!("sparsity {:.4}", params.sparsity());
+    println!("dense_ppl {dense_ppl:.4}");
+    println!("pruned_ppl {ppl:.4}");
+
+    if let Some(out) = args.get("out") {
+        let mut ck = Checkpoint::new(&cfg.name);
+        ck.insert("params", pruned);
+        ck.save(&PathBuf::from(out))?;
+        crate::info!("prune", "saved to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let rt = open_runtime(args)?;
+    let ck = Checkpoint::load(&PathBuf::from(args.require("ckpt")?))?;
+    let cfg = rt.manifest.config(&ck.config)?.clone();
+    let params = ck.get("params")?.clone();
+    let ds = Dataset::standard(&args.str_or("dataset", "synth-c4"),
+                               cfg.vocab);
+    let ppl = coordinator::eval_ppl(&rt, &cfg, &params, &ds.valid)?;
+    let p = Params::new(&cfg, params);
+    println!("config {}", cfg.name);
+    println!("sparsity {:.4}", p.sparsity());
+    println!("ppl {ppl:.4}");
+    Ok(())
+}

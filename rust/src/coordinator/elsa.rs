@@ -1,0 +1,255 @@
+//! ELSA / ELSA-L: surrogate-free ADMM sparsification (paper §3).
+//!
+//! The outer loop alternates:
+//!   x-update (eq. 7)  — `interval_k` fused Adam+proximal HLO steps on
+//!                       the true next-token objective,
+//!   z-update (eq. 8/11) — projection of x+u onto the sparsity set, in
+//!                       the diag-Fisher norm recycled from Adam's second
+//!                       moments (objective-aware projection, §3.2),
+//!   u-update (eq. 9)  — dual ascent u += x - z.
+//!
+//! ELSA-L (§3.3) stores (z, u) — and optionally the Adam moments — in low
+//! precision between outer iterations through the quant/dequant cycle of
+//! eq. (12)-(13); the convergence condition of Thm 4.6 bounds how much
+//! quantization noise (γ) the penalty λ can absorb.
+
+use anyhow::Result;
+
+use super::patterns::{mask_sparsity, project_mask, Pattern};
+use super::schedule::{LrSchedule, PenaltySchedule};
+use crate::data::Batcher;
+use crate::quant::{Precision, StoredVec};
+use crate::runtime::{ConfigEntry, Runtime};
+use crate::util::timer::Timer;
+
+#[derive(Debug, Clone)]
+pub struct ElsaOptions {
+    pub steps: usize,
+    pub lr: f32,
+    pub lam: f32,
+    pub lam_schedule: PenaltySchedule,
+    pub lr_schedule: LrSchedule,
+    /// x-steps between consecutive z/u updates (paper Table 4: 32).
+    pub interval_k: usize,
+    pub sparsity: f64,
+    pub pattern: Pattern,
+    /// Fisher-weighted projection (§3.2). Off = plain Euclidean (ablation
+    /// Table 9).
+    pub objective_aware: bool,
+    /// ELSA-L state precisions; F32/F32 = plain ELSA.
+    pub z_prec: Precision,
+    pub u_prec: Precision,
+    /// Block-wise INT8 Adam moments (the adam8bit analogue, §5.4).
+    pub adam8bit: bool,
+    pub seed: u64,
+}
+
+impl ElsaOptions {
+    pub fn new(sparsity: f64, steps: usize) -> ElsaOptions {
+        ElsaOptions {
+            steps,
+            lr: 1e-3,
+            lam: 1e-2,
+            lam_schedule: PenaltySchedule::for_sparsity(sparsity),
+            lr_schedule: LrSchedule::LinearDecay { floor_frac: 0.1 },
+            interval_k: 32,
+            sparsity,
+            pattern: Pattern::Global,
+            objective_aware: true,
+            z_prec: Precision::F32,
+            u_prec: Precision::F32,
+            adam8bit: false,
+            seed: 0,
+        }
+    }
+
+    /// ELSA-L preset: (bf16, fp8) for (u, z) + 8-bit Adam (paper §5.4).
+    pub fn low_memory(mut self) -> ElsaOptions {
+        self.z_prec = Precision::Fp8E4M3;
+        self.u_prec = Precision::Bf16;
+        self.adam8bit = true;
+        self
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct PruneMetrics {
+    pub losses: Vec<f32>,
+    /// (step, ||x-z|| / ||x||) at each outer iteration
+    pub residuals: Vec<(usize, f64)>,
+    /// peak bytes held by the ADMM auxiliary states (z, u)
+    pub aux_state_bytes: usize,
+    /// peak bytes held by the optimizer moments (m, v)
+    pub opt_state_bytes: usize,
+    pub achieved_sparsity: f64,
+    pub wall_seconds: f64,
+}
+
+/// Run ELSA on `init` params; returns (exactly-sparse params, metrics).
+pub fn prune_elsa(rt: &Runtime, cfg: &ConfigEntry, train: &[u32],
+                  init: &[f32], opts: &ElsaOptions)
+                  -> Result<(Vec<f32>, PruneMetrics)> {
+    let timer = Timer::start();
+    let d = cfg.flat_len;
+    anyhow::ensure!(init.len() == d, "param length mismatch");
+    let exe = rt.executable(&cfg.name, "train_step")?;
+    let pmask = cfg.prunable_mask();
+    let wmask = vec![1.0f32; d];
+    let mut batcher = Batcher::new(train, cfg.batch, cfg.seq_len,
+                                   opts.seed);
+
+    let mut p = init.to_vec();
+    let mut m = vec![0.0f32; d];
+    let mut v = vec![0.0f32; d];
+
+    // z0 = Pi_S(x0) by magnitude (Fisher is empty before any step),
+    // u0 = 0.
+    let mut z = project(cfg, &p, &vec![0.0; d], &v, &pmask, opts, false);
+    let mut u = vec![0.0f32; d];
+
+    let mut metrics = PruneMetrics::default();
+    track_state_mem(&z, &u, &m, &v, opts, &mut metrics);
+
+    for t in 1..=opts.steps {
+        let lr = opts.lr_schedule.at(opts.lr, t, opts.steps);
+        let lam = opts.lam_schedule.at(opts.lam, t, opts.steps);
+        let batch = batcher.next_batch();
+        let (np, nm, nv, loss) = super::run_train_step(
+            rt, &exe, cfg, &p, &m, &v, &z, &u, &wmask, &pmask, &batch,
+            t as f32, lr, lam)?;
+        p = np;
+        m = nm;
+        v = nv;
+        metrics.losses.push(loss);
+
+        if opts.adam8bit {
+            // adam8bit cycle: moments live in block-wise INT8 between
+            // steps; rematerialize for the next update.
+            // m: signed linear blocks; v: sqrt-companded unsigned blocks
+            // (linear INT8 on v zeroes small second moments and the
+            // update explodes — see quant::Precision::U8Sqrt)
+            let ms = StoredVec::quantize(&m, Precision::Int8Block(256));
+            let vs = StoredVec::quantize(&v, Precision::U8Sqrt(256));
+            m = ms.dequantize();
+            v = vs.dequantize();
+        }
+
+        if t % opts.interval_k == 0 || t == opts.steps {
+            // z-update: objective-aware projection of x + u (eq. 11)
+            z = project(cfg, &p, &u, &v, &pmask, opts,
+                        opts.objective_aware);
+            // u-update: dual ascent (eq. 9), only where the constraint
+            // lives (pmask gates the penalty, so the dual is zero
+            // elsewhere by construction)
+            let mut res_num = 0.0f64;
+            let mut res_den = 0.0f64;
+            for i in 0..d {
+                if pmask[i] > 0.0 {
+                    let r = p[i] - z[i];
+                    u[i] += r;
+                    res_num += (r as f64) * (r as f64);
+                    res_den += (p[i] as f64) * (p[i] as f64);
+                }
+            }
+            metrics
+                .residuals
+                .push((t, (res_num / res_den.max(1e-30)).sqrt()));
+
+            // ELSA-L: states are stored quantized between outer
+            // iterations; the next x-updates consume the rematerialized
+            // values (the R step of eq. 13).
+            let zs = StoredVec::quantize(&z, opts.z_prec);
+            let us = StoredVec::quantize(&u, opts.u_prec);
+            z = zs.dequantize();
+            u = us.dequantize();
+            track_state_mem_stored(&zs, &us, &m, &v, opts, &mut metrics);
+        }
+    }
+
+    // Final retrieval: hard-project x itself (the sparse solution the
+    // paper reports); Fisher weights come from the final Adam moments.
+    let final_mask = scores_and_mask(cfg, &p, &vec![0.0; d], &v, &pmask,
+                                     opts, opts.objective_aware);
+    for i in 0..d {
+        if pmask[i] > 0.0 && final_mask[i] == 0.0 {
+            p[i] = 0.0;
+        }
+    }
+    metrics.achieved_sparsity = mask_sparsity(cfg, &final_mask);
+    metrics.wall_seconds = timer.seconds();
+    Ok((p, metrics))
+}
+
+/// z = mask .* (x + u) with mask from the (optionally Fisher-weighted)
+/// projection.
+fn project(cfg: &ConfigEntry, p: &[f32], u: &[f32], fisher: &[f32],
+           pmask: &[f32], opts: &ElsaOptions, objective_aware: bool)
+           -> Vec<f32> {
+    let mask = scores_and_mask(cfg, p, u, fisher, pmask, opts,
+                               objective_aware);
+    let mut z = vec![0.0f32; p.len()];
+    for i in 0..p.len() {
+        let xu = p[i] + u[i];
+        z[i] = if pmask[i] > 0.0 { mask[i] * xu } else { xu };
+    }
+    z
+}
+
+fn scores_and_mask(cfg: &ConfigEntry, p: &[f32], u: &[f32], fisher: &[f32],
+                   pmask: &[f32], opts: &ElsaOptions,
+                   objective_aware: bool) -> Vec<f32> {
+    // score_i = F_ii * (x_i + u_i)^2 (eq. 11); F=1 for the Euclidean
+    // ablation. The small floor keeps never-touched coords comparable.
+    let mut scores = vec![0.0f32; p.len()];
+    for i in 0..p.len() {
+        if pmask[i] > 0.0 {
+            let xu = p[i] + u[i];
+            let f = if objective_aware { fisher[i] + 1e-12 } else { 1.0 };
+            scores[i] = f * xu * xu;
+        }
+    }
+    project_mask(cfg, &scores, &opts.pattern, opts.sparsity)
+}
+
+fn track_state_mem(z: &[f32], u: &[f32], m: &[f32], v: &[f32],
+                   opts: &ElsaOptions, metrics: &mut PruneMetrics) {
+    let zs = StoredVec::quantize(z, opts.z_prec);
+    let us = StoredVec::quantize(u, opts.u_prec);
+    track_state_mem_stored(&zs, &us, m, v, opts, metrics);
+}
+
+fn track_state_mem_stored(zs: &StoredVec, us: &StoredVec, m: &[f32],
+                          v: &[f32], opts: &ElsaOptions,
+                          metrics: &mut PruneMetrics) {
+    let aux = zs.mem_bytes() + us.mem_bytes();
+    let opt = if opts.adam8bit {
+        StoredVec::quantize(m, Precision::Int8Block(256)).mem_bytes()
+            + StoredVec::quantize(v, Precision::U8Sqrt(256)).mem_bytes()
+    } else {
+        m.len() * 4 + v.len() * 4
+    };
+    metrics.aux_state_bytes = metrics.aux_state_bytes.max(aux);
+    metrics.opt_state_bytes = metrics.opt_state_bytes.max(opt);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn options_presets() {
+        let o = ElsaOptions::new(0.9, 100);
+        assert_eq!(o.lam_schedule, PenaltySchedule::CosineRamp);
+        assert_eq!(o.interval_k, 32);
+        let l = o.low_memory();
+        assert_eq!(l.z_prec, Precision::Fp8E4M3);
+        assert_eq!(l.u_prec, Precision::Bf16);
+        assert!(l.adam8bit);
+    }
+
+    #[test]
+    fn moderate_sparsity_keeps_constant_penalty() {
+        let o = ElsaOptions::new(0.5, 100);
+        assert_eq!(o.lam_schedule, PenaltySchedule::Constant);
+    }
+}

@@ -1,0 +1,70 @@
+//! L3 coordinator — the paper's system contribution.
+//!
+//! The ADMM pruning orchestrator (ELSA / ELSA-L), the pretrainer that
+//! produces the dense models every experiment starts from, and the
+//! retrainers used by the Wanda+Full / Wanda+LoRA baselines. All compute
+//! flows through the AOT HLO artifacts via `runtime::Runtime`; the
+//! coordinator owns schedules, the z/u updates, state precision, and
+//! metrics.
+
+pub mod elsa;
+pub mod patterns;
+pub mod pretrain;
+pub mod retrain;
+pub mod schedule;
+
+use anyhow::Result;
+use xla::Literal;
+
+use crate::runtime::{self, ConfigEntry, Executable, Runtime};
+
+/// One train_step invocation: feeds the 11-arg artifact, returns the
+/// updated (params, m, v) and the batch loss.
+#[allow(clippy::too_many_arguments)]
+pub fn run_train_step(rt: &Runtime, exe: &Executable, cfg: &ConfigEntry,
+                      p: &[f32], m: &[f32], v: &[f32], z: &[f32],
+                      u: &[f32], wmask: &[f32], pmask: &[f32],
+                      batch: &[i32], step: f32, lr: f32, lam: f32)
+                      -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, f32)> {
+    let outs = rt.execute(exe, &[
+        runtime::lit_f32(p),
+        runtime::lit_f32(m),
+        runtime::lit_f32(v),
+        runtime::lit_f32(z),
+        runtime::lit_f32(u),
+        runtime::lit_f32(wmask),
+        runtime::lit_f32(pmask),
+        runtime::lit_i32_2d(batch, cfg.batch, cfg.seq_len + 1)?,
+        runtime::lit_scalar(step),
+        runtime::lit_scalar(lr),
+        runtime::lit_scalar(lam),
+    ])?;
+    Ok((
+        runtime::to_f32(&outs[0])?,
+        runtime::to_f32(&outs[1])?,
+        runtime::to_f32(&outs[2])?,
+        runtime::to_scalar(&outs[3])?,
+    ))
+}
+
+/// Perplexity of `params` on a token stream via the eval_loss artifact.
+pub fn eval_ppl(rt: &Runtime, cfg: &ConfigEntry, params: &[f32],
+                tokens: &[u32]) -> Result<f64> {
+    let exe = rt.executable(&cfg.name, "eval_loss")?;
+    let batches =
+        crate::data::Batcher::eval_batches(tokens, cfg.eval_batch,
+                                           cfg.seq_len);
+    anyhow::ensure!(!batches.is_empty(), "eval stream too short");
+    let plit: Literal = runtime::lit_f32(params);
+    let mut nll = 0.0f64;
+    let mut count = 0.0f64;
+    for b in &batches {
+        let outs = rt.execute(&exe, &[
+            plit.clone(),
+            runtime::lit_i32_2d(b, cfg.eval_batch, cfg.seq_len + 1)?,
+        ])?;
+        nll += runtime::to_scalar(&outs[0])? as f64;
+        count += runtime::to_scalar(&outs[1])? as f64;
+    }
+    Ok((nll / count).exp())
+}

@@ -1,0 +1,228 @@
+//! Sparsity patterns: the feasible set S of the z-update (eq. 8 / §C.1).
+//!
+//! Given a per-coordinate score vector over the flat parameters, build
+//! the 0/1 keep-mask implementing the projection onto:
+//!  - `Global`      — ||z||_0 <= k over ALL prunable coordinates jointly
+//!                    (the surrogate-free ELSA set; the global top-k is
+//!                    what distinguishes it from layer-wise methods),
+//!  - `PerLayer`    — uniform per-segment sparsity (baseline convention),
+//!  - `NM{n, m}`    — N:M semi-structured along the input dimension
+//!                    (Table 8),
+//!  - `NonUniform`  — per-segment budgets from OWL / EvoPress (Table 7).
+//!
+//! Non-prunable coordinates are always kept.
+
+use std::collections::BTreeMap;
+
+use crate::runtime::ConfigEntry;
+use crate::tensor::select::topk_mask;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Pattern {
+    Global,
+    PerLayer,
+    NM { n: usize, m: usize },
+    /// segment name -> sparsity (fraction pruned); segments absent from
+    /// the map fall back to `default`
+    NonUniform { per_segment: BTreeMap<String, f64>, default: f64 },
+}
+
+impl Pattern {
+    pub fn parse(s: &str) -> Option<Pattern> {
+        match s {
+            "global" => Some(Pattern::Global),
+            "per-layer" => Some(Pattern::PerLayer),
+            _ => {
+                // "2:4" / "4:8"
+                let (n, m) = s.split_once(':')?;
+                Some(Pattern::NM { n: n.parse().ok()?, m: m.parse().ok()? })
+            }
+        }
+    }
+}
+
+/// Build the keep-mask over the flat vector. `sparsity` is the fraction
+/// of *prunable* weights to remove. Scores must be >= 0 (larger = more
+/// important); non-prunable coordinates get mask 1 regardless.
+pub fn project_mask(cfg: &ConfigEntry, scores: &[f32], pattern: &Pattern,
+                    sparsity: f64) -> Vec<f32> {
+    assert_eq!(scores.len(), cfg.flat_len);
+    let mut mask = vec![1.0f32; cfg.flat_len];
+    match pattern {
+        Pattern::Global => {
+            // gather prunable scores, global top-k, scatter back
+            let prunable: Vec<(usize, f32)> = cfg
+                .segments
+                .iter()
+                .filter(|s| s.prunable)
+                .flat_map(|s| (s.offset..s.end()).map(|i| (i, scores[i])))
+                .collect();
+            let keep = ((1.0 - sparsity) * prunable.len() as f64).round()
+                as usize;
+            let vals: Vec<f32> = prunable.iter().map(|(_, v)| *v).collect();
+            let sub = topk_mask(&vals, keep.min(vals.len()));
+            for ((i, _), &m) in prunable.iter().zip(sub.iter()) {
+                mask[*i] = m;
+            }
+        }
+        Pattern::PerLayer => {
+            for seg in cfg.segments.iter().filter(|s| s.prunable) {
+                let vals = &scores[seg.offset..seg.end()];
+                let keep = ((1.0 - sparsity) * vals.len() as f64).round()
+                    as usize;
+                let sub = topk_mask(vals, keep.min(vals.len()));
+                mask[seg.offset..seg.end()].copy_from_slice(&sub);
+            }
+        }
+        Pattern::NM { n, m } => {
+            assert!(n <= m && *m > 0);
+            for seg in cfg.segments.iter().filter(|s| s.prunable) {
+                let (rows, cols) = (seg.shape[0], seg.shape[1]);
+                // groups of M consecutive weights along the input (row)
+                // dimension of each output column
+                for c in 0..cols {
+                    let mut r = 0;
+                    while r < rows {
+                        let g = (rows - r).min(*m);
+                        let grp: Vec<f32> = (0..g)
+                            .map(|i| scores[seg.offset + (r + i) * cols + c])
+                            .collect();
+                        let keep = (*n).min(g);
+                        let sub = topk_mask(&grp, keep);
+                        for i in 0..g {
+                            mask[seg.offset + (r + i) * cols + c] = sub[i];
+                        }
+                        r += g;
+                    }
+                }
+            }
+        }
+        Pattern::NonUniform { per_segment, default } => {
+            for seg in cfg.segments.iter().filter(|s| s.prunable) {
+                let sp = per_segment.get(&seg.name).copied()
+                    .unwrap_or(*default);
+                let vals = &scores[seg.offset..seg.end()];
+                let keep = ((1.0 - sp) * vals.len() as f64).round() as usize;
+                let sub = topk_mask(vals, keep.min(vals.len()));
+                mask[seg.offset..seg.end()].copy_from_slice(&sub);
+            }
+        }
+    }
+    mask
+}
+
+/// Achieved sparsity of a mask over the prunable set.
+pub fn mask_sparsity(cfg: &ConfigEntry, mask: &[f32]) -> f64 {
+    let mut zeros = 0usize;
+    let mut total = 0usize;
+    for seg in cfg.segments.iter().filter(|s| s.prunable) {
+        zeros += mask[seg.offset..seg.end()]
+            .iter()
+            .filter(|x| **x == 0.0)
+            .count();
+        total += seg.len();
+    }
+    zeros as f64 / total.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::fake_config;
+    use crate::util::rng::Rng;
+
+    fn scores(cfg: &ConfigEntry, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..cfg.flat_len).map(|_| rng.f32()).collect()
+    }
+
+    #[test]
+    fn global_hits_exact_sparsity() {
+        let cfg = fake_config();
+        let sc = scores(&cfg, 0);
+        for sp in [0.3, 0.5, 0.9] {
+            let mask = project_mask(&cfg, &sc, &Pattern::Global, sp);
+            assert!((mask_sparsity(&cfg, &mask) - sp).abs() < 0.01,
+                    "sp={sp}");
+        }
+    }
+
+    #[test]
+    fn global_never_touches_nonprunable() {
+        let cfg = fake_config();
+        let sc = scores(&cfg, 1);
+        let mask = project_mask(&cfg, &sc, &Pattern::Global, 0.99);
+        for seg in cfg.segments.iter().filter(|s| !s.prunable) {
+            assert!(mask[seg.offset..seg.end()].iter().all(|&m| m == 1.0),
+                    "{} was pruned", seg.name);
+        }
+    }
+
+    #[test]
+    fn per_layer_uniform_within_each_segment() {
+        let cfg = fake_config();
+        let sc = scores(&cfg, 2);
+        let mask = project_mask(&cfg, &sc, &Pattern::PerLayer, 0.5);
+        for seg in cfg.segments.iter().filter(|s| s.prunable) {
+            let kept: usize = mask[seg.offset..seg.end()]
+                .iter()
+                .filter(|x| **x > 0.0)
+                .count();
+            assert_eq!(kept, seg.len() / 2, "{}", seg.name);
+        }
+    }
+
+    #[test]
+    fn nm_pattern_respects_group_budget() {
+        let cfg = fake_config();
+        let sc = scores(&cfg, 3);
+        let mask = project_mask(&cfg, &sc,
+                                &Pattern::NM { n: 2, m: 4 }, 0.5);
+        for seg in cfg.segments.iter().filter(|s| s.prunable) {
+            let (rows, cols) = (seg.shape[0], seg.shape[1]);
+            for c in 0..cols {
+                let mut r = 0;
+                while r < rows {
+                    let g = (rows - r).min(4);
+                    let kept: usize = (0..g)
+                        .filter(|i| {
+                            mask[seg.offset + (r + i) * cols + c] > 0.0
+                        })
+                        .count();
+                    assert_eq!(kept, 2.min(g), "{} col {c} row {r}",
+                               seg.name);
+                    r += g;
+                }
+            }
+        }
+        // overall N:M(2:4) == 50%
+        assert!((mask_sparsity(&cfg, &mask) - 0.5).abs() < 0.05);
+    }
+
+    #[test]
+    fn non_uniform_budgets() {
+        let cfg = fake_config();
+        let sc = scores(&cfg, 4);
+        let mut per = BTreeMap::new();
+        per.insert("l0.attn.wq".to_string(), 0.9);
+        let mask = project_mask(
+            &cfg, &sc,
+            &Pattern::NonUniform { per_segment: per, default: 0.25 }, 0.0);
+        let wq = cfg.segment("l0.attn.wq").unwrap();
+        let kept: usize = mask[wq.offset..wq.end()]
+            .iter().filter(|x| **x > 0.0).count();
+        assert_eq!(kept, (wq.len() as f64 * 0.1).round() as usize);
+        let wk = cfg.segment("l0.attn.wk").unwrap();
+        let kept_k: usize = mask[wk.offset..wk.end()]
+            .iter().filter(|x| **x > 0.0).count();
+        assert_eq!(kept_k, (wk.len() as f64 * 0.75).round() as usize);
+    }
+
+    #[test]
+    fn pattern_parse() {
+        assert_eq!(Pattern::parse("global"), Some(Pattern::Global));
+        assert_eq!(Pattern::parse("2:4"),
+                   Some(Pattern::NM { n: 2, m: 4 }));
+        assert_eq!(Pattern::parse("junk"), None);
+    }
+}

@@ -1,0 +1,94 @@
+//! Dense pretraining: produces the "pretrained LLM" every pruning
+//! experiment starts from (the paper's substitution for downloading
+//! OPT/LLaMA checkpoints — DESIGN.md §3).
+//!
+//! Reuses the train_step artifact with λ=0 (plain Adam), linear-decay LR.
+
+use anyhow::Result;
+
+use super::schedule::LrSchedule;
+use crate::data::Batcher;
+use crate::model::checkpoint::Checkpoint;
+use crate::model::Params;
+use crate::runtime::{ConfigEntry, Runtime};
+
+#[derive(Debug, Clone)]
+pub struct PretrainOptions {
+    pub steps: usize,
+    pub lr: f32,
+    pub lr_schedule: LrSchedule,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl PretrainOptions {
+    pub fn new(steps: usize) -> PretrainOptions {
+        PretrainOptions {
+            steps,
+            lr: 3e-3,
+            lr_schedule: LrSchedule::LinearDecay { floor_frac: 0.1 },
+            seed: 0,
+            log_every: 50,
+        }
+    }
+}
+
+/// Pretrain from random init; returns (params, per-step losses).
+pub fn pretrain(rt: &Runtime, cfg: &ConfigEntry, train: &[u32],
+                opts: &PretrainOptions) -> Result<(Vec<f32>, Vec<f32>)> {
+    let d = cfg.flat_len;
+    let exe = rt.executable(&cfg.name, "train_step")?;
+    let init = Params::init(cfg, opts.seed);
+    let zeros = vec![0.0f32; d];
+    let ones = vec![1.0f32; d];
+    let pmask = cfg.prunable_mask();
+    let mut batcher = Batcher::new(train, cfg.batch, cfg.seq_len,
+                                   opts.seed ^ 0x5eed);
+
+    let mut p = init.flat;
+    let mut m = zeros.clone();
+    let mut v = zeros.clone();
+    let mut losses = Vec::with_capacity(opts.steps);
+    for t in 1..=opts.steps {
+        let lr = opts.lr_schedule.at(opts.lr, t, opts.steps);
+        let batch = batcher.next_batch();
+        let (np, nm, nv, loss) = super::run_train_step(
+            rt, &exe, cfg, &p, &m, &v, &zeros, &zeros, &ones, &pmask,
+            &batch, t as f32, lr, 0.0)?;
+        p = np;
+        m = nm;
+        v = nv;
+        losses.push(loss);
+        if opts.log_every > 0 && t % opts.log_every == 0 {
+            crate::info!("pretrain", "{}/{} loss={loss:.4} lr={lr:.2e}",
+                         t, opts.steps);
+        }
+    }
+    Ok((p, losses))
+}
+
+/// Pretrain-or-load: caches the dense model under `cache_dir` so the
+/// experiment suite pretrains each config exactly once.
+pub fn pretrain_cached(rt: &Runtime, cfg: &ConfigEntry, train: &[u32],
+                       opts: &PretrainOptions, cache_dir: &std::path::Path)
+                       -> Result<Vec<f32>> {
+    let path = cache_dir.join(format!("{}_dense_s{}.bin", cfg.name,
+                                      opts.steps));
+    if path.exists() {
+        let ck = Checkpoint::load(&path)?;
+        anyhow::ensure!(ck.config == cfg.name, "checkpoint config mismatch");
+        let p = ck.get("params")?.clone();
+        anyhow::ensure!(p.len() == cfg.flat_len);
+        crate::info!("pretrain", "loaded cached dense model {}",
+                     path.display());
+        return Ok(p);
+    }
+    let (p, losses) = pretrain(rt, cfg, train, opts)?;
+    let mut ck = Checkpoint::new(&cfg.name);
+    ck.insert("params", p.clone());
+    ck.insert("final_losses",
+              losses[losses.len().saturating_sub(16)..].to_vec());
+    ck.save(&path)?;
+    crate::info!("pretrain", "saved dense model to {}", path.display());
+    Ok(p)
+}

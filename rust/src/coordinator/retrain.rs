@@ -1,0 +1,136 @@
+//! Retraining baselines for Tables 2-3: one-shot prune (Wanda) followed
+//! by either full fine-tuning of the surviving weights or LoRA adapters.
+//!
+//! Full FT reuses the train_step artifact with a frozen weight mask
+//! (masked forward + masked updates: pruned coords have zero gradient by
+//! the chain rule, so they stay dead — tested in python/tests). LoRA
+//! drives the lora_train_step artifact and folds adapters back with
+//! lora_merge.
+
+use anyhow::Result;
+
+use super::schedule::LrSchedule;
+use crate::data::Batcher;
+use crate::runtime::{self, ConfigEntry, Runtime};
+
+#[derive(Debug, Clone)]
+pub struct RetrainOptions {
+    pub steps: usize,
+    pub lr: f32,
+    pub lr_schedule: LrSchedule,
+    pub seed: u64,
+}
+
+impl RetrainOptions {
+    pub fn new(steps: usize, lr: f32) -> RetrainOptions {
+        RetrainOptions {
+            steps,
+            lr,
+            lr_schedule: LrSchedule::LinearDecay { floor_frac: 0.1 },
+            seed: 1,
+        }
+    }
+}
+
+/// Full fine-tuning of the unpruned weights under a frozen mask.
+/// `mask` is the flat keep-mask (1 = alive); params must already be
+/// masked. Returns (params, losses).
+pub fn full_retrain(rt: &Runtime, cfg: &ConfigEntry, train: &[u32],
+                    params: &[f32], mask: &[f32], opts: &RetrainOptions)
+                    -> Result<(Vec<f32>, Vec<f32>)> {
+    let d = cfg.flat_len;
+    let exe = rt.executable(&cfg.name, "train_step")?;
+    let zeros = vec![0.0f32; d];
+    let pmask = cfg.prunable_mask();
+    let mut batcher = Batcher::new(train, cfg.batch, cfg.seq_len,
+                                   opts.seed);
+    let mut p: Vec<f32> = params
+        .iter()
+        .zip(mask.iter())
+        .map(|(&x, &m)| x * m)
+        .collect();
+    let mut m_st = zeros.clone();
+    let mut v_st = zeros.clone();
+    let mut losses = Vec::with_capacity(opts.steps);
+    for t in 1..=opts.steps {
+        let lr = opts.lr_schedule.at(opts.lr, t, opts.steps);
+        let batch = batcher.next_batch();
+        let (np, nm, nv, loss) = super::run_train_step(
+            rt, &exe, cfg, &p, &m_st, &v_st, &zeros, &zeros, mask, &pmask,
+            &batch, t as f32, lr, 0.0)?;
+        p = np;
+        m_st = nm;
+        v_st = nv;
+        losses.push(loss);
+    }
+    // Belt-and-braces: the masked coords are zero-gradient by
+    // construction, but enforce exact zeros against fp drift.
+    for (x, &mk) in p.iter_mut().zip(mask.iter()) {
+        if mk == 0.0 {
+            *x = 0.0;
+        }
+    }
+    Ok((p, losses))
+}
+
+/// LoRA retraining: rank-r adapters trained on top of the frozen masked
+/// base, then merged. NOTE: merging densifies the adapted matrices — the
+/// merged model is only *approximately* sparse, which is exactly the
+/// deployment caveat the paper raises for LoRA at extreme sparsity.
+/// Returns (merged params, losses).
+pub fn lora_retrain(rt: &Runtime, cfg: &ConfigEntry, train: &[u32],
+                    params: &[f32], mask: &[f32], opts: &RetrainOptions)
+                    -> Result<(Vec<f32>, Vec<f32>)> {
+    let dl = cfg.lora_len;
+    let exe = rt.executable(&cfg.name, "lora_train_step")?;
+    let merge = rt.executable(&cfg.name, "lora_merge")?;
+    let masked: Vec<f32> = params
+        .iter()
+        .zip(mask.iter())
+        .map(|(&x, &m)| x * m)
+        .collect();
+
+    // init A ~ N(0, 1/sqrt(din)), B = 0 — mirrors model.init_lora
+    let mut rng = crate::util::rng::Rng::new(opts.seed);
+    let mut lora = vec![0.0f32; dl];
+    for seg in &cfg.lora_segments {
+        if seg.init == "normal" {
+            let std = 1.0 / (seg.shape[0] as f32).sqrt();
+            let end = seg.offset + seg.shape.iter().product::<usize>();
+            for x in lora[seg.offset..end].iter_mut() {
+                *x = rng.normal() * std;
+            }
+        }
+    }
+
+    let mut m_st = vec![0.0f32; dl];
+    let mut v_st = vec![0.0f32; dl];
+    let mut batcher = Batcher::new(train, cfg.batch, cfg.seq_len,
+                                   opts.seed ^ 0x10ca);
+    let mut losses = Vec::with_capacity(opts.steps);
+    let base_lit = runtime::lit_f32(&masked);
+    for t in 1..=opts.steps {
+        let lr = opts.lr_schedule.at(opts.lr, t, opts.steps);
+        let batch = batcher.next_batch();
+        let outs = rt.execute(&exe, &[
+            base_lit.clone(),
+            runtime::lit_f32(&lora),
+            runtime::lit_f32(&m_st),
+            runtime::lit_f32(&v_st),
+            runtime::lit_f32(mask),
+            runtime::lit_i32_2d(&batch, cfg.batch, cfg.seq_len + 1)?,
+            runtime::lit_scalar(t as f32),
+            runtime::lit_scalar(lr),
+        ])?;
+        lora = runtime::to_f32(&outs[0])?;
+        m_st = runtime::to_f32(&outs[1])?;
+        v_st = runtime::to_f32(&outs[2])?;
+        losses.push(runtime::to_scalar(&outs[3])?);
+    }
+
+    let outs = rt.execute(&merge, &[
+        runtime::lit_f32(&masked),
+        runtime::lit_f32(&lora),
+    ])?;
+    Ok((runtime::to_f32(&outs[0])?, losses))
+}

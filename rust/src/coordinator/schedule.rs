@@ -1,0 +1,94 @@
+//! Learning-rate and penalty schedules (paper Tables 4-5).
+//!
+//! The paper keeps λ constant for moderate sparsity (50-60%) and uses a
+//! cosine ramp 0 → λ for high sparsity (70-90%), with a linearly decaying
+//! learning rate throughout.
+
+/// LR schedule over `total` steps.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LrSchedule {
+    Constant,
+    /// linear decay from lr to lr*floor_frac
+    LinearDecay { floor_frac: f32 },
+}
+
+impl LrSchedule {
+    pub fn at(&self, base: f32, step: usize, total: usize) -> f32 {
+        match self {
+            LrSchedule::Constant => base,
+            LrSchedule::LinearDecay { floor_frac } => {
+                let t = step as f32 / total.max(1) as f32;
+                base * (1.0 - t * (1.0 - floor_frac))
+            }
+        }
+    }
+}
+
+/// Penalty (λ) schedule over `total` steps.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PenaltySchedule {
+    Constant,
+    /// cosine ramp: 0 at step 0 rising to λ at the final step
+    CosineRamp,
+}
+
+impl PenaltySchedule {
+    pub fn at(&self, lam: f32, step: usize, total: usize) -> f32 {
+        match self {
+            PenaltySchedule::Constant => lam,
+            PenaltySchedule::CosineRamp => {
+                // 0 -> lam following (1 - cos(pi t)) / 2, saturating at
+                // 60% of training so the final x-updates run against the
+                // full-strength constraint (keeps the primal residual low
+                // going into the terminal projection).
+                let t = (step as f32 / (0.6 * total.max(1) as f32))
+                    .clamp(0.0, 1.0);
+                lam * 0.5 * (1.0 - (std::f32::consts::PI * t).cos())
+            }
+        }
+    }
+
+    /// The paper's rule of thumb: constant for <= 60% sparsity, cosine
+    /// ramp above (Table 5).
+    pub fn for_sparsity(sparsity: f64) -> PenaltySchedule {
+        if sparsity <= 0.60 {
+            PenaltySchedule::Constant
+        } else {
+            PenaltySchedule::CosineRamp
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_decay_endpoints() {
+        let s = LrSchedule::LinearDecay { floor_frac: 0.1 };
+        assert_eq!(s.at(1.0, 0, 100), 1.0);
+        assert!((s.at(1.0, 100, 100) - 0.1).abs() < 1e-6);
+        assert!((s.at(1.0, 50, 100) - 0.55).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_ramp_monotone() {
+        let s = PenaltySchedule::CosineRamp;
+        let mut prev = -1.0;
+        for t in 0..=50 {
+            let v = s.at(2.0, t, 50);
+            assert!(v >= prev, "not monotone at {t}");
+            prev = v;
+        }
+        assert!(s.at(2.0, 0, 50).abs() < 1e-6);
+        assert!((s.at(2.0, 50, 50) - 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn schedule_selection_rule() {
+        assert_eq!(PenaltySchedule::for_sparsity(0.5),
+                   PenaltySchedule::Constant);
+        assert_eq!(PenaltySchedule::for_sparsity(0.9),
+                   PenaltySchedule::CosineRamp);
+    }
+}

@@ -1,0 +1,175 @@
+//! Data pipeline: synthetic corpora, datasets, batch iterators,
+//! calibration sampling.
+
+pub mod grammar;
+
+use crate::util::rng::Rng;
+pub use grammar::Grammar;
+
+/// A tokenized corpus with a train/validation split.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    pub train: Vec<u32>,
+    pub valid: Vec<u32>,
+}
+
+impl Dataset {
+    /// Generate `n_train`+`n_valid` tokens of the named corpus.
+    pub fn generate(name: &str, vocab: usize, n_train: usize,
+                    n_valid: usize, seed: u64) -> Dataset {
+        let g = Grammar::named(name, vocab);
+        // disjoint streams so validation is held out by construction
+        let train = g.generate(n_train, seed.wrapping_mul(2) + 1);
+        let valid = g.generate(n_valid, seed.wrapping_mul(2) + 2);
+        Dataset { name: name.to_string(), train, valid }
+    }
+
+    /// Standard sizes used across the experiment suite.
+    pub fn standard(name: &str, vocab: usize) -> Dataset {
+        Dataset::generate(name, vocab, 600_000, 60_000, 0xDA7A)
+    }
+}
+
+/// Iterator over (batch, seq_len+1) i32 token windows, reshuffled each
+/// epoch. Mirrors the paper's "each data point has sequence length S"
+/// protocol: windows are drawn at stride S so one epoch covers the
+/// corpus once.
+pub struct Batcher {
+    tokens: Vec<u32>,
+    batch: usize,
+    window: usize, // seq_len + 1
+    starts: Vec<usize>,
+    cursor: usize,
+    rng: Rng,
+    pub epoch: usize,
+}
+
+impl Batcher {
+    pub fn new(tokens: &[u32], batch: usize, seq_len: usize, seed: u64)
+               -> Batcher {
+        let window = seq_len + 1;
+        assert!(tokens.len() >= window * batch,
+                "corpus too small: {} tokens < {}", tokens.len(),
+                window * batch);
+        let n_windows = tokens.len() / window;
+        let mut starts: Vec<usize> =
+            (0..n_windows).map(|i| i * window).collect();
+        let mut rng = Rng::new(seed);
+        rng.shuffle(&mut starts);
+        Batcher {
+            tokens: tokens.to_vec(),
+            batch,
+            window,
+            starts,
+            cursor: 0,
+            rng,
+            epoch: 0,
+        }
+    }
+
+    /// Next (batch * window) i32 buffer, row-major.
+    pub fn next_batch(&mut self) -> Vec<i32> {
+        let mut out = Vec::with_capacity(self.batch * self.window);
+        for _ in 0..self.batch {
+            if self.cursor >= self.starts.len() {
+                self.rng.shuffle(&mut self.starts);
+                self.cursor = 0;
+                self.epoch += 1;
+            }
+            let s = self.starts[self.cursor];
+            self.cursor += 1;
+            out.extend(self.tokens[s..s + self.window].iter()
+                       .map(|&t| t as i32));
+        }
+        out
+    }
+
+    /// Deterministic sequential batches over a corpus (for evaluation:
+    /// every window visited exactly once, no shuffling).
+    pub fn eval_batches(tokens: &[u32], batch: usize, seq_len: usize)
+                        -> Vec<Vec<i32>> {
+        let window = seq_len + 1;
+        let n_windows = tokens.len() / window;
+        let n_batches = n_windows / batch;
+        let mut out = Vec::with_capacity(n_batches);
+        for b in 0..n_batches {
+            let mut buf = Vec::with_capacity(batch * window);
+            for r in 0..batch {
+                let s = (b * batch + r) * window;
+                buf.extend(tokens[s..s + window].iter().map(|&t| t as i32));
+            }
+            out.push(buf);
+        }
+        out
+    }
+}
+
+/// Calibration set: `n` sequences of `seq_len` tokens (the layer-wise
+/// baselines' 128-sequence convention, Frantar & Alistarh 2023).
+pub fn calibration(tokens: &[u32], n: usize, seq_len: usize, seed: u64)
+                   -> Vec<Vec<u32>> {
+    let mut rng = Rng::new(seed);
+    let max_start = tokens.len().saturating_sub(seq_len);
+    (0..n)
+        .map(|_| {
+            let s = rng.below(max_start.max(1));
+            tokens[s..s + seq_len].to_vec()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_split_disjoint_streams() {
+        let d = Dataset::generate("synth-c4", 256, 5000, 1000, 0);
+        assert_eq!(d.train.len(), 5000);
+        assert_eq!(d.valid.len(), 1000);
+        assert_ne!(&d.train[..1000], &d.valid[..]);
+    }
+
+    #[test]
+    fn batcher_shapes_and_determinism() {
+        let d = Dataset::generate("synth-c4", 256, 20_000, 0, 1);
+        let mut a = Batcher::new(&d.train, 4, 16, 7);
+        let mut b = Batcher::new(&d.train, 4, 16, 7);
+        for _ in 0..5 {
+            let x = a.next_batch();
+            let y = b.next_batch();
+            assert_eq!(x.len(), 4 * 17);
+            assert_eq!(x, y);
+        }
+    }
+
+    #[test]
+    fn batcher_epochs_roll() {
+        let d = Dataset::generate("synth-c4", 256, 4 * 17 * 3, 0, 2);
+        let mut b = Batcher::new(&d.train, 4, 16, 0);
+        for _ in 0..10 {
+            b.next_batch();
+        }
+        assert!(b.epoch >= 2);
+    }
+
+    #[test]
+    fn eval_batches_cover_once() {
+        let tokens: Vec<u32> = (0..(17 * 8)).map(|i| (i % 250) as u32).collect();
+        let bs = Batcher::eval_batches(&tokens, 2, 16);
+        assert_eq!(bs.len(), 4);
+        // first window of first batch is the corpus head
+        assert_eq!(bs[0][..17],
+                   tokens[..17].iter().map(|&t| t as i32)
+                       .collect::<Vec<_>>()[..]);
+    }
+
+    #[test]
+    fn calibration_shapes() {
+        let d = Dataset::generate("synth-wiki", 256, 10_000, 0, 3);
+        let c = calibration(&d.train, 32, 64, 5);
+        assert_eq!(c.len(), 32);
+        assert!(c.iter().all(|s| s.len() == 64));
+    }
+}

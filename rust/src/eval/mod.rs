@@ -1,0 +1,7 @@
+//! Evaluation harness: perplexity (via the HLO eval_loss artifact, see
+//! coordinator::eval_ppl) and the zero-shot probe suite (Fig 4 / Tables
+//! 11-12 analogue).
+
+pub mod zeroshot;
+
+pub use zeroshot::{build_suite, score_task, Example, TASK_NAMES};

@@ -1,0 +1,308 @@
+//! Zero-shot probe tasks over the synthetic language (DESIGN.md §3).
+//!
+//! Seven likelihood-ranked multiple-choice tasks mirroring the paper's
+//! lm-eval suite (ARC-E/C, BoolQ, HellaSwag, OBQA, RTE, Winogrande):
+//! each probes a capability the grammar defines ground truth for, and
+//! each degrades with model damage at its own rate — which is exactly
+//! what the Fig-4 radar plots measure across sparsity levels.
+//!
+//! Scoring follows the lm-eval convention: candidate = argmax of the
+//! summed token log-likelihood of the continuation given the context
+//! (rust forward; no HLO dependency so arbitrary lengths work).
+
+use anyhow::Result;
+
+use crate::data::grammar::{Grammar, AGREE_GAP, N_AGREE};
+use crate::model::forward::forward_seq;
+use crate::model::Params;
+use crate::util::rng::Rng;
+
+/// One multiple-choice example.
+#[derive(Debug, Clone)]
+pub struct Example {
+    pub context: Vec<u32>,
+    pub candidates: Vec<Vec<u32>>,
+    pub answer: usize,
+}
+
+/// Task names, paired 1:1 with the paper's seven tasks.
+pub const TASK_NAMES: [&str; 7] = [
+    "agree",      // Winogrande: long-range agreement, 2-way
+    "cloze-easy", // ARC-E: next token vs random distractors, 4-way
+    "cloze-hard", // ARC-C: next token vs frequent distractors, 4-way
+    "boolstate",  // BoolQ: high- vs low-probability token, 2-way
+    "contin",     // HellaSwag: true vs shuffled continuation, 2-way
+    "recall",     // OBQA: which opener was seen, 4-way
+    "entail",     // RTE: true vs foreign continuation, 2-way
+];
+
+const CTX: usize = 24;
+
+/// Generate `n` examples for each task. Deterministic in `seed`.
+pub fn build_suite(g: &Grammar, n: usize, seed: u64)
+                   -> Vec<(String, Vec<Example>)> {
+    TASK_NAMES
+        .iter()
+        .enumerate()
+        .map(|(i, name)| {
+            let mut rng = Rng::new(seed ^ ((i as u64 + 1) * 0x9E37));
+            let exs = (0..n)
+                .map(|j| make_example(g, name, &mut rng, j as u64))
+                .collect();
+            (name.to_string(), exs)
+        })
+        .collect()
+}
+
+fn stream_with_opener(g: &Grammar, rng: &mut Rng) -> (Vec<u32>, usize) {
+    // regenerate until an opener lands early enough for a full context
+    loop {
+        let s = g.generate(CTX + AGREE_GAP + 4, rng.next_u64());
+        if let Some(p) = s
+            .iter()
+            .take(CTX)
+            .position(|t| g.closer_for(*t).is_some())
+        {
+            if p + AGREE_GAP < s.len() {
+                return (s, p);
+            }
+        }
+    }
+}
+
+fn other_closer(g: &Grammar, not: u32, rng: &mut Rng) -> u32 {
+    loop {
+        let c = g.closers[rng.below(N_AGREE)];
+        if c != not {
+            return c;
+        }
+    }
+}
+
+fn make_example(g: &Grammar, task: &str, rng: &mut Rng, _id: u64)
+                -> Example {
+    match task {
+        "agree" => {
+            let (s, p) = stream_with_opener(g, rng);
+            let closer = g.closer_for(s[p]).unwrap();
+            let context = s[..p + AGREE_GAP].to_vec();
+            let wrong = other_closer(g, closer, rng);
+            shuffle2(context, vec![closer], vec![wrong], rng)
+        }
+        "recall" => {
+            let (s, p) = stream_with_opener(g, rng);
+            let closer = g.closer_for(s[p]).unwrap();
+            let context = s[..p + AGREE_GAP].to_vec();
+            let mut cands = vec![vec![closer]];
+            while cands.len() < 4 {
+                let c = other_closer(g, closer, rng);
+                if !cands.iter().any(|v| v[0] == c) {
+                    cands.push(vec![c]);
+                }
+            }
+            shuffle_n(context, cands, 0, rng)
+        }
+        "cloze-easy" | "cloze-hard" => {
+            let s = g.generate(CTX + 1, rng.next_u64());
+            let context = s[..CTX].to_vec();
+            let truth = s[CTX];
+            let mut cands = vec![vec![truth]];
+            let hard = task == "cloze-hard";
+            // distractors: random tokens (easy) or tokens drawn from the
+            // same stream, i.e. plausible under the marginal (hard)
+            let alt = g.generate(256, rng.next_u64());
+            while cands.len() < 4 {
+                let c = if hard {
+                    alt[rng.below(alt.len())]
+                } else {
+                    rng.below(g.ordinary_vocab()) as u32
+                };
+                if c != truth && !cands.iter().any(|v| v[0] == c) {
+                    cands.push(vec![c]);
+                }
+            }
+            shuffle_n(context, cands, 0, rng)
+        }
+        "boolstate" => {
+            let s = g.generate(CTX + 64, rng.next_u64());
+            let context = s[..CTX].to_vec();
+            // "yes" = the actually-next token; "no" = a token that never
+            // appears in this stream (out-of-distribution for the state)
+            let truth = s[CTX];
+            let mut no = rng.below(g.ordinary_vocab()) as u32;
+            while s.contains(&no) {
+                no = rng.below(g.ordinary_vocab()) as u32;
+            }
+            shuffle2(context, vec![truth], vec![no], rng)
+        }
+        "contin" => {
+            let s = g.generate(CTX + 8, rng.next_u64());
+            let context = s[..CTX].to_vec();
+            let truth = s[CTX..CTX + 8].to_vec();
+            let mut wrong = truth.clone();
+            wrong.reverse();
+            if wrong == truth {
+                wrong[0] = wrong[0].wrapping_add(1) % g.vocab as u32;
+            }
+            shuffle2(context, truth, wrong, rng)
+        }
+        "entail" => {
+            let s = g.generate(CTX + 8, rng.next_u64());
+            let context = s[..CTX].to_vec();
+            let truth = s[CTX..CTX + 8].to_vec();
+            // foreign continuation from an independent stream
+            let other = g.generate(CTX + 8, rng.next_u64());
+            let wrong = other[CTX..CTX + 8].to_vec();
+            shuffle2(context, truth, wrong, rng)
+        }
+        _ => panic!("unknown task {task}"),
+    }
+}
+
+fn shuffle2(context: Vec<u32>, truth: Vec<u32>, wrong: Vec<u32>,
+            rng: &mut Rng) -> Example {
+    shuffle_n(context, vec![truth, wrong], 0, rng)
+}
+
+fn shuffle_n(context: Vec<u32>, mut cands: Vec<Vec<u32>>, answer: usize,
+             rng: &mut Rng) -> Example {
+    let mut order: Vec<usize> = (0..cands.len()).collect();
+    rng.shuffle(&mut order);
+    let new_answer = order.iter().position(|&i| i == answer).unwrap();
+    let mut shuffled = Vec::with_capacity(cands.len());
+    for &i in &order {
+        shuffled.push(std::mem::take(&mut cands[i]));
+    }
+    Example { context, candidates: shuffled, answer: new_answer }
+}
+
+/// Log-likelihood of `cand` following `context` under the model.
+fn cand_loglik(p: &Params, context: &[u32], cand: &[u32]) -> Result<f64> {
+    let mut seq = context.to_vec();
+    seq.extend_from_slice(cand);
+    // positions are bounded by the pos table
+    anyhow::ensure!(seq.len() <= p.cfg.seq_len, "example too long");
+    let logits = forward_seq(p, &seq[..seq.len() - 1], None)?;
+    let mut total = 0.0f64;
+    for (i, &tok) in cand.iter().enumerate() {
+        let t = context.len() + i - 1; // logits row predicting position t+1
+        let row = logits.row(t);
+        let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let lse: f32 =
+            row.iter().map(|v| (v - max).exp()).sum::<f32>().ln() + max;
+        total += (row[tok as usize] - lse) as f64;
+    }
+    Ok(total)
+}
+
+/// Accuracy of the model on one task.
+pub fn score_task(p: &Params, examples: &[Example]) -> Result<f64> {
+    let mut correct = 0usize;
+    for ex in examples {
+        let mut best = (f64::NEG_INFINITY, 0usize);
+        for (i, cand) in ex.candidates.iter().enumerate() {
+            let ll = cand_loglik(p, &ex.context, cand)?;
+            if ll > best.0 {
+                best = (ll, i);
+            }
+        }
+        if best.1 == ex.answer {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / examples.len().max(1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grammar() -> Grammar {
+        Grammar::named("synth-c4", 256)
+    }
+
+    #[test]
+    fn suite_shapes() {
+        let g = grammar();
+        let suite = build_suite(&g, 5, 0);
+        assert_eq!(suite.len(), 7);
+        for (name, exs) in &suite {
+            assert_eq!(exs.len(), 5, "{name}");
+            for ex in exs {
+                assert!(ex.answer < ex.candidates.len());
+                assert!(!ex.context.is_empty());
+                let total = ex.context.len()
+                    + ex.candidates.iter().map(|c| c.len()).max().unwrap();
+                assert!(total <= 64, "{name} example too long: {total}");
+            }
+        }
+    }
+
+    #[test]
+    fn suite_deterministic() {
+        let g = grammar();
+        let a = build_suite(&g, 3, 42);
+        let b = build_suite(&g, 3, 42);
+        for ((_, ea), (_, eb)) in a.iter().zip(b.iter()) {
+            for (x, y) in ea.iter().zip(eb.iter()) {
+                assert_eq!(x.context, y.context);
+                assert_eq!(x.answer, y.answer);
+            }
+        }
+    }
+
+    #[test]
+    fn agree_answer_is_the_forced_closer() {
+        let g = grammar();
+        let suite = build_suite(&g, 10, 1);
+        let (_, agree) = &suite[0];
+        for ex in agree {
+            // the opener appears in the context...
+            let opener_pos = ex
+                .context
+                .iter()
+                .position(|t| g.closer_for(*t).is_some())
+                .expect("no opener in context");
+            let closer = g.closer_for(ex.context[opener_pos]).unwrap();
+            // ...and the gold candidate is exactly its closer
+            assert_eq!(ex.candidates[ex.answer], vec![closer]);
+        }
+    }
+
+    #[test]
+    fn answers_shuffled_uniformly() {
+        // guards against an always-first-answer bug that would let a
+        // position-biased scorer cheat
+        let g = grammar();
+        let suite = build_suite(&g, 40, 3);
+        for (name, exs) in &suite {
+            let firsts =
+                exs.iter().filter(|e| e.answer == 0).count();
+            assert!(firsts < exs.len(), "{name}: answers never shuffled");
+        }
+    }
+
+    #[test]
+    fn random_model_scores_near_chance() {
+        let g = grammar();
+        // a fresh random model should be ~chance on cloze-easy (4-way)
+        let cfg_entry = {
+            // reuse the real tiny layout via a quick manifest-free params:
+            // fake_config has vocab 16 < 256, so build examples on a tiny
+            // vocab-compatible grammar is impossible; instead just check
+            // the scorer runs on the fake model with clipped tokens.
+            crate::model::fake_config()
+        };
+        let p = Params::init(&cfg_entry, 0);
+        let exs: Vec<Example> = (0..8)
+            .map(|i| Example {
+                context: vec![1, 2, 3, (i % 8) as u32],
+                candidates: vec![vec![4], vec![5], vec![6], vec![7]],
+                answer: (i % 4) as usize,
+            })
+            .collect();
+        let acc = score_task(&p, &exs).unwrap();
+        assert!((0.0..=1.0).contains(&acc));
+        let _ = g;
+    }
+}

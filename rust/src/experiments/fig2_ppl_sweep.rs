@@ -1,0 +1,61 @@
+//! Fig 1 + Fig 2 + Table 10: perplexity vs sparsity across methods and
+//! model scales, on both evaluation corpora. The headline experiment —
+//! existing methods deteriorate past ~70% sparsity while ELSA stays
+//! stable.
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::cli::Args;
+use crate::coordinator::eval_ppl;
+use crate::model::Params;
+use crate::pruners;
+use crate::report::{f2, f4, Table};
+
+pub const SPARSITIES: [f64; 5] = [0.5, 0.6, 0.7, 0.8, 0.9];
+pub const METHODS: [&str; 6] =
+    ["magnitude", "wanda", "sparsegpt", "l-admm", "alps", "elsa"];
+
+pub fn run(ctx: &Ctx, args: &Args) -> Result<()> {
+    let mut table = Table::new(
+        "Fig 2 / Table 10 — perplexity vs sparsity (synth-c4 / synth-wiki)",
+        &["model", "method", "sparsity", "ppl_c4", "ppl_wiki",
+          "achieved", "nnz_total"]);
+
+    for model in ctx.sweep_models() {
+        let (cfg, dense, c4, wiki) = ctx.dense_setup(model)?;
+        let dense_c4 = eval_ppl(&ctx.rt, &cfg, &dense, &c4.valid)?;
+        let dense_wiki = eval_ppl(&ctx.rt, &cfg, &dense, &wiki.valid)?;
+        let dense_nnz = Params::new(&cfg, dense.clone()).nnz_total();
+        table.row(vec![model.into(), "dense".into(), "0.00".into(),
+                       f2(dense_c4), f2(dense_wiki), "0.0000".into(),
+                       dense_nnz.to_string()]);
+
+        for &sp in &SPARSITIES {
+            for method in METHODS {
+                let pruned = ctx.pruned_cached(&cfg, method, sp, "", || {
+                    if method == "elsa" {
+                        ctx.run_elsa(&cfg, &dense, &c4.train, sp, |_| {})
+                    } else {
+                        pruners::prune_oneshot(&ctx.rt, &cfg, method,
+                                               &dense, &c4.train, sp, args)
+                    }
+                })?;
+                let p = Params::new(&cfg, pruned.clone());
+                let ppl_c4 = eval_ppl(&ctx.rt, &cfg, &pruned, &c4.valid)?;
+                let ppl_wiki =
+                    eval_ppl(&ctx.rt, &cfg, &pruned, &wiki.valid)?;
+                crate::info!("fig2", "{model} {method} @{sp:.1}: \
+                              c4={ppl_c4:.2} wiki={ppl_wiki:.2}");
+                table.row(vec![
+                    model.into(), method.into(), format!("{sp:.2}"),
+                    f2(ppl_c4), f2(ppl_wiki), f4(p.sparsity()),
+                    p.nnz_total().to_string(),
+                ]);
+            }
+        }
+    }
+    let path = table.save(&ctx.results, "fig2")?;
+    crate::info!("fig2", "wrote {}", path.display());
+    Ok(())
+}

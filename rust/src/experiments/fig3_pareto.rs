@@ -1,0 +1,56 @@
+//! Fig 3: Pareto frontier — perplexity vs number of non-zero parameters.
+//! Derived from the fig2 sweep data (runs it first if missing).
+
+use anyhow::{Context, Result};
+
+use super::Ctx;
+use crate::cli::Args;
+use crate::report::Table;
+
+pub fn run(ctx: &Ctx, args: &Args) -> Result<()> {
+    let fig2_csv = ctx.results.join("fig2.csv");
+    if !fig2_csv.exists() {
+        crate::info!("fig3", "fig2.csv missing; running fig2 first");
+        super::fig2_ppl_sweep::run(ctx, args)?;
+    }
+    let text = std::fs::read_to_string(&fig2_csv)?;
+    let mut lines = text.lines();
+    let header: Vec<&str> =
+        lines.next().context("empty fig2.csv")?.split(',').collect();
+    let col = |name: &str| -> Result<usize> {
+        header.iter().position(|c| *c == name)
+            .with_context(|| format!("fig2.csv missing column {name}"))
+    };
+    let (c_model, c_method, c_ppl, c_nnz) =
+        (col("model")?, col("method")?, col("ppl_c4")?, col("nnz_total")?);
+
+    // points: (nnz, ppl, model, method)
+    let mut pts: Vec<(f64, f64, String, String)> = vec![];
+    for line in lines {
+        let f: Vec<&str> = line.split(',').collect();
+        if f.len() <= c_nnz {
+            continue;
+        }
+        pts.push((f[c_nnz].parse()?, f[c_ppl].parse()?,
+                  f[c_model].to_string(), f[c_method].to_string()));
+    }
+    pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+    // mark Pareto-optimal points (no other point has <= nnz and <= ppl)
+    let mut table = Table::new(
+        "Fig 3 — ppl vs non-zero params (Pareto frontier marked)",
+        &["nnz", "ppl_c4", "model", "method", "pareto"]);
+    let mut best_so_far = f64::INFINITY;
+    for (nnz, ppl, model, method) in &pts {
+        let pareto = *ppl < best_so_far;
+        if pareto {
+            best_so_far = *ppl;
+        }
+        table.row(vec![format!("{nnz:.0}"), format!("{ppl:.2}"),
+                       model.clone(), method.clone(),
+                       if pareto { "yes" } else { "no" }.into()]);
+    }
+    let path = table.save(&ctx.results, "fig3")?;
+    crate::info!("fig3", "wrote {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Fig 4 + Tables 11/12: zero-shot probe accuracy of pruned models across
+//! sparsity levels. The paper's claim: the accuracy gap between ELSA and
+//! the baselines widens as sparsity grows.
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::cli::Args;
+use crate::data::Grammar;
+use crate::eval::{build_suite, score_task, TASK_NAMES};
+use crate::model::Params;
+use crate::pruners;
+use crate::report::{pct, Table};
+
+const SPARSITIES: [f64; 4] = [0.5, 0.7, 0.8, 0.9];
+const METHODS: [&str; 5] =
+    ["magnitude", "wanda", "sparsegpt", "alps", "elsa"];
+
+pub fn run(ctx: &Ctx, args: &Args) -> Result<()> {
+    let model = ctx.sweep_models()[0];
+    let (cfg, dense, c4, _) = ctx.dense_setup(model)?;
+    let g = Grammar::named("synth-c4", cfg.vocab);
+    let n_ex = match ctx.scale {
+        super::Scale::Quick => 25,
+        super::Scale::Full => 60,
+    };
+    let suite = build_suite(&g, n_ex, 0x4E05);
+
+    let mut cols: Vec<&str> = vec!["sparsity", "method"];
+    cols.extend(TASK_NAMES.iter());
+    cols.push("avg");
+    let mut table = Table::new(
+        &format!("Fig 4 / Table 11 — zero-shot accuracy (%), {model}"),
+        &cols);
+
+    let mut eval_row = |label: &str, sp_label: &str, params: &Params|
+                       -> Result<()> {
+        let mut row = vec![sp_label.to_string(), label.to_string()];
+        let mut sum = 0.0;
+        for (_, exs) in &suite {
+            let acc = score_task(params, exs)?;
+            sum += acc;
+            row.push(pct(acc));
+        }
+        row.push(pct(sum / suite.len() as f64));
+        crate::info!("fig4", "{sp_label} {label}: avg={:.1}%",
+                     100.0 * sum / suite.len() as f64);
+        table.row(row);
+        Ok(())
+    };
+
+    eval_row("dense", "0.0", &Params::new(&cfg, dense.clone()))?;
+    for &sp in &SPARSITIES {
+        for method in METHODS {
+            let pruned = ctx.pruned_cached(&cfg, method, sp, "", || {
+                if method == "elsa" {
+                    ctx.run_elsa(&cfg, &dense, &c4.train, sp, |_| {})
+                } else {
+                    pruners::prune_oneshot(&ctx.rt, &cfg, method, &dense,
+                                           &c4.train, sp, args)
+                }
+            })?;
+            eval_row(method, &format!("{sp:.1}"),
+                     &Params::new(&cfg, pruned))?;
+        }
+    }
+    let path = table.save(&ctx.results, "fig4")?;
+    crate::info!("fig4", "wrote {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Fig 5 + §5.4: scaling with low-precision states — ELSA-L ((bf16, fp8)
+//! for (u, z) + block-wise INT8 Adam) on the largest local config,
+//! reporting perplexity at 90% against the strongest baselines plus the
+//! measured state-memory saving (the paper reports 55%).
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::cli::Args;
+use crate::coordinator::elsa::{prune_elsa, ElsaOptions};
+use crate::coordinator::eval_ppl;
+use crate::report::{f2, Table};
+use crate::util::human_bytes;
+
+pub fn run(ctx: &Ctx, args: &Args) -> Result<()> {
+    let model = match ctx.scale {
+        super::Scale::Quick => "small",
+        super::Scale::Full => "med",
+    };
+    let (cfg, dense, c4, wiki) = ctx.dense_setup(model)?;
+    let sp = 0.9;
+
+    let mut table = Table::new(
+        &format!("Fig 5 — ELSA-L at 90% sparsity ({model})"),
+        &["method", "ppl_wiki", "ppl_c4", "aux_state_bytes",
+          "opt_state_bytes", "state_saving_vs_fp32"]);
+
+    // baselines for the bar chart
+    for method in ["wanda", "sparsegpt", "alps"] {
+        let pruned = ctx.pruned_cached(&cfg, method, sp, "", || {
+            crate::pruners::prune_oneshot(&ctx.rt, &cfg, method, &dense,
+                                          &c4.train, sp, args)
+        })?;
+        let pw = eval_ppl(&ctx.rt, &cfg, &pruned, &wiki.valid)?;
+        let pc = eval_ppl(&ctx.rt, &cfg, &pruned, &c4.valid)?;
+        table.row(vec![method.into(), f2(pw), f2(pc), "-".into(),
+                       "-".into(), "-".into()]);
+    }
+
+    // ELSA (fp32 states) vs ELSA-L (quantized states)
+    let steps = ctx.elsa_steps(model);
+    let mut run_variant = |name: &str, low_mem: bool| -> Result<()> {
+        let mut opts = ElsaOptions::new(sp, steps);
+        opts.lam = 2e-2;
+        if low_mem {
+            opts = opts.low_memory();
+        }
+        let (pruned, metrics) =
+            prune_elsa(&ctx.rt, &cfg, &c4.train, &dense, &opts)?;
+        let pw = eval_ppl(&ctx.rt, &cfg, &pruned, &wiki.valid)?;
+        let pc = eval_ppl(&ctx.rt, &cfg, &pruned, &c4.valid)?;
+        let fp32_state = 4 * cfg.flat_len * 4; // z + u + m + v in f32
+        let used = metrics.aux_state_bytes + metrics.opt_state_bytes;
+        let saving = 1.0 - used as f64 / fp32_state as f64;
+        crate::info!("fig5", "{name}: wiki={pw:.2} c4={pc:.2} states={} \
+                      saving={:.0}%", human_bytes(used), saving * 100.0);
+        table.row(vec![
+            name.into(), f2(pw), f2(pc),
+            human_bytes(metrics.aux_state_bytes),
+            human_bytes(metrics.opt_state_bytes),
+            format!("{:.0}%", saving * 100.0),
+        ]);
+        Ok(())
+    };
+    run_variant("elsa", false)?;
+    run_variant("elsa-l", true)?;
+
+    let path = table.save(&ctx.results, "fig5")?;
+    crate::info!("fig5", "wrote {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Fig 6 (ablation): NTP vs REM objective data efficiency — the
+//! surrogate-free next-token objective keeps improving with more data,
+//! while layer-wise reconstruction saturates (the paper's §C.2).
+//!
+//! Emulation of the paper's protocol (fixed optimization steps, varying
+//! data budget): ELSA sees `budget` distinct training tokens (the batcher
+//! cycles a truncated corpus); REM = SparseGPT with a calibration set of
+//! the same token budget.
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::cli::Args;
+use crate::coordinator::eval_ppl;
+use crate::pruners;
+use crate::report::{f2, Table};
+
+pub fn run(ctx: &Ctx, args: &Args) -> Result<()> {
+    let model = ctx.sweep_models()[0];
+    let (cfg, dense, c4, _) = ctx.dense_setup(model)?;
+    let sp = 0.9;
+
+    let budgets: &[usize] = match ctx.scale {
+        super::Scale::Quick => &[4_096, 16_384, 65_536, 262_144],
+        super::Scale::Full => &[4_096, 16_384, 65_536, 262_144, 524_288],
+    };
+
+    let mut table = Table::new(
+        &format!("Fig 6 — data efficiency of NTP (ELSA) vs REM \
+                  (SparseGPT) at 90% ({model}, ppl on synth-c4)"),
+        &["data_tokens", "ntp_elsa", "rem_sparsegpt"]);
+
+    for &budget in budgets {
+        let train = &c4.train[..budget.min(c4.train.len())];
+
+        let elsa = ctx.pruned_cached(
+            &cfg, "elsa", sp, &format!("d{budget}"), || {
+                ctx.run_elsa(&cfg, &dense, train, sp, |_| {})
+            })?;
+        let ntp = eval_ppl(&ctx.rt, &cfg, &elsa, &c4.valid)?;
+
+        // REM: calibration sequences drawn from the same token budget
+        let n_seqs =
+            (budget / cfg.seq_len).clamp(2, pruners::CALIB_SEQS * 4);
+        let sg = ctx.pruned_cached(
+            &cfg, "sparsegpt", sp, &format!("d{budget}"), || {
+                let params =
+                    crate::model::Params::new(&cfg, dense.clone());
+                let seqs = crate::data::calibration(train, n_seqs,
+                                                    cfg.seq_len, 7);
+                let calib = crate::model::forward::collect_calibration(
+                    &params, &seqs)?;
+                pruners::sparsegpt::prune(
+                    &cfg, &dense, &calib, &pruners::uniform_alloc(&cfg, sp))
+            })?;
+        let rem = eval_ppl(&ctx.rt, &cfg, &sg, &c4.valid)?;
+
+        crate::info!("fig6", "{budget} tokens: ntp={ntp:.2} rem={rem:.2}");
+        table.row(vec![budget.to_string(), f2(ntp), f2(rem)]);
+    }
+    let _ = args;
+    let path = table.save(&ctx.results, "fig6")?;
+    crate::info!("fig6", "wrote {}", path.display());
+    Ok(())
+}

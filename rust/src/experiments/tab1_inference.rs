@@ -1,0 +1,79 @@
+//! Table 1: deployment gains — end-to-end generation latency, throughput
+//! and weight memory vs sparsity, on the rust sparse engine (the MACKO
+//! substitute, DESIGN.md §3).
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::cli::Args;
+use crate::infer::{Backend, Engine};
+use crate::model::Params;
+use crate::report::{f2, Table};
+use crate::util::human_bytes;
+
+const SPARSITIES: [f64; 4] = [0.5, 0.7, 0.9, 0.95];
+
+pub fn run(ctx: &Ctx, _args: &Args) -> Result<()> {
+    // The decode-phase SpMV story needs matrices big enough that weight
+    // streaming dominates (tiny's d=64 layers are overhead-bound), so
+    // this table always uses the `small` config (d=128).
+    let model = match ctx.scale {
+        super::Scale::Quick => "small",
+        super::Scale::Full => "med",
+    };
+    let (cfg, dense, c4, _) = ctx.dense_setup(model)?;
+
+    let mut table = Table::new(
+        &format!("Table 1 — latency / throughput / memory ({model}, \
+                  MACKO backend)"),
+        &["sparsity", "latency_ms_per_tok", "speedup", "tokens_per_s",
+          "throughput_x", "memory", "compression_x"]);
+
+    let n_new = cfg.seq_len - 8;
+    let reps = match ctx.scale {
+        super::Scale::Quick => 6,
+        super::Scale::Full => 10,
+    };
+    let prompt: Vec<u32> = c4.valid[..8].to_vec();
+
+    let bench = |params: &Params, backend: Backend| -> Result<(f64, f64,
+                                                               usize)> {
+        let engine = Engine::build(params, backend)?;
+        // warmup
+        engine.generate(&prompt, n_new, 0.8, 0);
+        let mut lat = crate::util::stats::Summary::new();
+        let mut tps = crate::util::stats::Summary::new();
+        for r in 0..reps {
+            let (_, stats) = engine.generate(&prompt, n_new, 0.8, r as u64);
+            lat.push(stats.decode_seconds * 1e3
+                     / stats.tokens_generated as f64);
+            tps.push(stats.tokens_per_second);
+        }
+        Ok((lat.median(), tps.median(), engine.mem_bytes()))
+    };
+
+    // dense reference uses the dense backend (what you'd actually deploy)
+    let dense_params = Params::new(&cfg, dense.clone());
+    let (lat0, tps0, mem0) = bench(&dense_params, Backend::Dense)?;
+    table.row(vec!["dense".into(), f2(lat0), "x1.00".into(), f2(tps0),
+                   "x1.00".into(), human_bytes(mem0), "x1.00".into()]);
+
+    for &sp in &SPARSITIES {
+        let pruned = ctx.pruned_cached(&cfg, "elsa", sp, "", || {
+            ctx.run_elsa(&cfg, &dense, &c4.train, sp, |_| {})
+        })?;
+        let p = Params::new(&cfg, pruned);
+        let (lat, tps, mem) = bench(&p, Backend::Macko)?;
+        crate::info!("tab1", "{sp:.2}: {lat:.2} ms/tok ({:.2}x), \
+                      {tps:.1} tok/s, {}", lat0 / lat, human_bytes(mem));
+        table.row(vec![
+            format!("{sp:.2}"), f2(lat),
+            format!("x{:.2}", lat0 / lat), f2(tps),
+            format!("x{:.2}", tps / tps0), human_bytes(mem),
+            format!("x{:.2}", mem0 as f64 / mem as f64),
+        ]);
+    }
+    let path = table.save(&ctx.results, "tab1")?;
+    crate::info!("tab1", "wrote {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Table 2: extreme sparsity (90/95/99%) — ELSA vs Wanda + retraining
+//! (LoRA / full fine-tune) at matched data budgets.
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::cli::Args;
+use crate::coordinator::eval_ppl;
+use crate::report::{f2, Table};
+
+const SPARSITIES: [f64; 3] = [0.90, 0.95, 0.99];
+const METHODS: [&str; 3] = ["wanda-lora", "wanda-full", "elsa"];
+
+pub fn run(ctx: &Ctx, args: &Args) -> Result<()> {
+    let model = ctx.sweep_models()[0];
+    let (cfg, dense, c4, wiki) = ctx.dense_setup(model)?;
+
+    let mut table = Table::new(
+        &format!("Table 2 — extreme sparsity ({model})"),
+        &["sparsity", "method", "ppl_wiki", "ppl_c4"]);
+
+    for &sp in &SPARSITIES {
+        for method in METHODS {
+            let pruned = ctx.pruned_cached(&cfg, method, sp, "", || {
+                if method == "elsa" {
+                    ctx.run_elsa(&cfg, &dense, &c4.train, sp, |o| {
+                        // extreme sparsity: double budget (paper §B.3)
+                        if sp > 0.95 {
+                            o.steps *= 2;
+                        }
+                    })
+                } else {
+                    // matched budget: retraining steps = ELSA steps
+                    crate::pruners::prune_oneshot(
+                        &ctx.rt, &cfg, method, &dense, &c4.train, sp, args)
+                }
+            })?;
+            let pw = eval_ppl(&ctx.rt, &cfg, &pruned, &wiki.valid)?;
+            let pc = eval_ppl(&ctx.rt, &cfg, &pruned, &c4.valid)?;
+            crate::info!("tab2", "{method} @{sp}: wiki={pw:.2} c4={pc:.2}");
+            table.row(vec![format!("{sp:.2}"), method.into(), f2(pw),
+                           f2(pc)]);
+        }
+    }
+    let path = table.save(&ctx.results, "tab2")?;
+    crate::info!("tab2", "wrote {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! Table 3: pruning compute vs quality at 90% sparsity — wall-clock
+//! seconds (the GPU-hours analogue on this single-core testbed) against
+//! achieved perplexity, for every method.
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::cli::Args;
+use crate::coordinator::eval_ppl;
+use crate::report::{f2, Table};
+use crate::util::timer::Timer;
+
+const METHODS: [&str; 6] =
+    ["wanda", "sparsegpt", "alps", "wanda-lora", "wanda-full", "elsa"];
+
+pub fn run(ctx: &Ctx, args: &Args) -> Result<()> {
+    let model = ctx.sweep_models()[0];
+    let (cfg, dense, c4, wiki) = ctx.dense_setup(model)?;
+    let sp = 0.9;
+
+    let mut table = Table::new(
+        &format!("Table 3 — pruning cost vs quality at 90% ({model})"),
+        &["method", "wall_clock_s", "ppl_wiki", "ppl_c4"]);
+
+    for method in METHODS {
+        let t = Timer::start();
+        let pruned = if method == "elsa" {
+            ctx.run_elsa(&cfg, &dense, &c4.train, sp, |_| {})?
+        } else {
+            crate::pruners::prune_oneshot(&ctx.rt, &cfg, method, &dense,
+                                          &c4.train, sp, args)?
+        };
+        let wall = t.seconds();
+        let pw = eval_ppl(&ctx.rt, &cfg, &pruned, &wiki.valid)?;
+        let pc = eval_ppl(&ctx.rt, &cfg, &pruned, &c4.valid)?;
+        crate::info!("tab3", "{method}: {wall:.1}s wiki={pw:.2} c4={pc:.2}");
+        table.row(vec![method.into(), f2(wall), f2(pw), f2(pc)]);
+    }
+    let path = table.save(&ctx.results, "tab3")?;
+    crate::info!("tab3", "wrote {}", path.display());
+    Ok(())
+}

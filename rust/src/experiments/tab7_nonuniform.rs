@@ -1,0 +1,74 @@
+//! Table 7: non-uniform sparsity allocation at 70% — SparseGPT uniform,
+//! OWL, EvoPress-lite, ELSA (global budget) and ELSA seeded with the
+//! EvoPress allocation.
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::cli::Args;
+use crate::coordinator::eval_ppl;
+use crate::coordinator::patterns::Pattern;
+use crate::pruners::{self, alloc};
+use crate::report::{f2, Table};
+
+pub fn run(ctx: &Ctx, args: &Args) -> Result<()> {
+    let model = ctx.sweep_models()[0];
+    let (cfg, dense, c4, wiki) = ctx.dense_setup(model)?;
+    let sp = 0.7;
+
+    let mut table = Table::new(
+        &format!("Table 7 — non-uniform allocation at 70% ({model})"),
+        &["method", "ppl_wiki", "ppl_c4"]);
+    let mut add = |name: &str, pruned: &[f32]| -> Result<()> {
+        let pw = eval_ppl(&ctx.rt, &cfg, pruned, &wiki.valid)?;
+        let pc = eval_ppl(&ctx.rt, &cfg, pruned, &c4.valid)?;
+        crate::info!("tab7", "{name}: wiki={pw:.2} c4={pc:.2}");
+        table.row(vec![name.into(), f2(pw), f2(pc)]);
+        Ok(())
+    };
+
+    // uniform layer-wise baseline
+    let sg = ctx.pruned_cached(&cfg, "sparsegpt", sp, "", || {
+        pruners::prune_oneshot(&ctx.rt, &cfg, "sparsegpt", &dense,
+                               &c4.train, sp, args)
+    })?;
+    add("sparsegpt (uniform)", &sg)?;
+
+    // OWL allocation on wanda
+    let owl = ctx.pruned_cached(&cfg, "wanda-owl", sp, "", || {
+        pruners::prune_oneshot(&ctx.rt, &cfg, "wanda-owl", &dense,
+                               &c4.train, sp, args)
+    })?;
+    add("owl (wanda)", &owl)?;
+
+    // EvoPress-lite allocation on wanda
+    let calib = pruners::calibrate(&cfg, &dense, &c4.train, 7)?;
+    let evo_alloc = alloc::evopress_allocation(
+        &cfg, &dense, &calib, &c4.train, sp,
+        &alloc::EvoOptions::default())?;
+    let evo = ctx.pruned_cached(&cfg, "wanda-evo", sp, "", || {
+        pruners::wanda::prune(&cfg, &dense, &calib, &evo_alloc)
+    })?;
+    add("evopress (wanda)", &evo)?;
+
+    // ELSA with the EvoPress non-uniform budget
+    let evo_pat = Pattern::NonUniform {
+        per_segment: evo_alloc.clone(),
+        default: sp,
+    };
+    let elsa_evo = ctx.pruned_cached(&cfg, "elsa-evo", sp, "", || {
+        ctx.run_elsa(&cfg, &dense, &c4.train, sp,
+                     |o| o.pattern = evo_pat.clone())
+    })?;
+    add("elsa (evopress alloc)", &elsa_evo)?;
+
+    // ELSA's native global budget (the paper's uniform ELSA)
+    let elsa = ctx.pruned_cached(&cfg, "elsa", sp, "", || {
+        ctx.run_elsa(&cfg, &dense, &c4.train, sp, |_| {})
+    })?;
+    add("elsa (global)", &elsa)?;
+
+    let path = table.save(&ctx.results, "tab7")?;
+    crate::info!("tab7", "wrote {}", path.display());
+    Ok(())
+}

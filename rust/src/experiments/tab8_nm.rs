@@ -1,0 +1,78 @@
+//! Table 8: N:M semi-structured sparsity (2:4 and 4:8) — ELSA adapts to
+//! hardware-friendly patterns by swapping the projection set.
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::cli::Args;
+use crate::coordinator::eval_ppl;
+use crate::coordinator::patterns::{project_mask, Pattern};
+use crate::model::Params;
+use crate::pruners;
+use crate::report::{f2, f4, Table};
+
+pub fn run(ctx: &Ctx, args: &Args) -> Result<()> {
+    let model = ctx.sweep_models()[0];
+    let (cfg, dense, c4, wiki) = ctx.dense_setup(model)?;
+
+    let mut table = Table::new(
+        &format!("Table 8 — N:M semi-structured sparsity ({model})"),
+        &["pattern", "method", "ppl_wiki", "ppl_c4", "achieved"]);
+
+    for (n, m) in [(2usize, 4usize), (4, 8)] {
+        let pat = Pattern::NM { n, m };
+        let tag = format!("{n}x{m}");
+        // magnitude / wanda under the N:M mask (their standard variants)
+        for method in ["magnitude", "wanda"] {
+            let pruned = ctx.pruned_cached(&cfg, method, 0.5, &tag, || {
+                let scores: Vec<f32> = match method {
+                    "magnitude" => dense.iter().map(|x| x.abs()).collect(),
+                    _ => {
+                        let calib = pruners::calibrate(&cfg, &dense,
+                                                       &c4.train, 7)?;
+                        let mut s = vec![0.0f32; cfg.flat_len];
+                        for seg in cfg.segments.iter()
+                            .filter(|s| s.prunable) {
+                            let xn = calib[&seg.name].col_norms();
+                            let cols = seg.shape[1];
+                            for i in 0..seg.len() {
+                                let r = i / cols;
+                                s[seg.offset + i] =
+                                    dense[seg.offset + i].abs() * xn[r];
+                            }
+                        }
+                        s
+                    }
+                };
+                let mask = project_mask(&cfg, &scores, &pat, 0.5);
+                let mut p = dense.clone();
+                for (x, mk) in p.iter_mut().zip(mask.iter()) {
+                    *x *= mk;
+                }
+                Ok(p)
+            })?;
+            let p = Params::new(&cfg, pruned.clone());
+            let pw = eval_ppl(&ctx.rt, &cfg, &pruned, &wiki.valid)?;
+            let pc = eval_ppl(&ctx.rt, &cfg, &pruned, &c4.valid)?;
+            table.row(vec![format!("{n}:{m}"), method.into(), f2(pw),
+                           f2(pc), f4(p.sparsity())]);
+        }
+        // ELSA with the N:M projection
+        let pruned = ctx.pruned_cached(&cfg, "elsa", 0.5, &tag, || {
+            ctx.run_elsa(&cfg, &dense, &c4.train, 0.5, |o| {
+                o.pattern = Pattern::NM { n, m };
+                o.lam = 5e-3; // 50% effective sparsity -> moderate penalty
+            })
+        })?;
+        let p = Params::new(&cfg, pruned.clone());
+        let pw = eval_ppl(&ctx.rt, &cfg, &pruned, &wiki.valid)?;
+        let pc = eval_ppl(&ctx.rt, &cfg, &pruned, &c4.valid)?;
+        crate::info!("tab8", "elsa {n}:{m}: wiki={pw:.2} c4={pc:.2}");
+        table.row(vec![format!("{n}:{m}"), "elsa".into(), f2(pw), f2(pc),
+                       f4(p.sparsity())]);
+    }
+    let _ = args;
+    let path = table.save(&ctx.results, "tab8")?;
+    crate::info!("tab8", "wrote {}", path.display());
+    Ok(())
+}

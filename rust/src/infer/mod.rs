@@ -1,0 +1,442 @@
+//! Sparse inference engine: KV-cached autoregressive generation over
+//! dense / CSR / MACKO weight backends (the Table-1 deployment benchmark).
+//!
+//! The decode phase is one matvec per linear per token — exactly the
+//! memory-bound SpMV regime the paper's §5.3 targets. The engine shares
+//! numerics with model::forward (tested), so a pruned checkpoint can be
+//! loaded, converted, and served without touching the HLO path.
+
+use anyhow::Result;
+
+use crate::cli::Args;
+use crate::model::forward::gelu_tanh;
+use crate::model::Params;
+use crate::runtime::ConfigEntry;
+use crate::sparse::{Csr, Macko};
+use crate::tensor::Matrix;
+use crate::util::rng::Rng;
+use crate::util::timer::Timer;
+
+/// Weight storage backend for one linear layer.
+pub enum WeightFmt {
+    Dense(Matrix),
+    Csr(Csr),
+    Macko(Macko),
+}
+
+impl WeightFmt {
+    pub fn build(w: Matrix, kind: Backend) -> WeightFmt {
+        match kind {
+            Backend::Dense => WeightFmt::Dense(w),
+            Backend::Csr => WeightFmt::Csr(Csr::from_weight(&w)),
+            Backend::Macko => WeightFmt::Macko(Macko::from_weight(&w)),
+        }
+    }
+
+    /// y = W^T x (x: din, y: dout).
+    pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        match self {
+            WeightFmt::Dense(w) => {
+                let t = w.t_matvec(x);
+                y.copy_from_slice(&t);
+            }
+            WeightFmt::Csr(c) => c.matvec(x, y),
+            WeightFmt::Macko(m) => m.matvec(x, y),
+        }
+    }
+
+    pub fn mem_bytes(&self) -> usize {
+        match self {
+            WeightFmt::Dense(w) => w.data.len() * 4,
+            WeightFmt::Csr(c) => c.mem_bytes(),
+            WeightFmt::Macko(m) => m.mem_bytes(),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    Dense,
+    Csr,
+    Macko,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Option<Backend> {
+        Some(match s {
+            "dense" => Backend::Dense,
+            "csr" => Backend::Csr,
+            "macko" => Backend::Macko,
+            _ => return None,
+        })
+    }
+}
+
+struct Layer {
+    ln1_g: Vec<f32>,
+    ln1_b: Vec<f32>,
+    wq: WeightFmt,
+    wk: WeightFmt,
+    wv: WeightFmt,
+    wo: WeightFmt,
+    ln2_g: Vec<f32>,
+    ln2_b: Vec<f32>,
+    w1: WeightFmt,
+    b1: Vec<f32>,
+    w2: WeightFmt,
+    b2: Vec<f32>,
+}
+
+/// KV cache for one layer (grows up to seq_len).
+struct Kv {
+    k: Vec<f32>, // t * d
+    v: Vec<f32>,
+    len: usize,
+}
+
+pub struct Engine {
+    pub cfg: ConfigEntry,
+    embed: Matrix,
+    pos: Matrix,
+    layers: Vec<Layer>,
+    lnf_g: Vec<f32>,
+    lnf_b: Vec<f32>,
+    head: Matrix, // non-prunable, always dense
+    pub backend: Backend,
+}
+
+impl Engine {
+    /// Convert params: prunable matrices go to `backend` storage.
+    pub fn build(params: &Params, backend: Backend) -> Result<Engine> {
+        let cfg = params.cfg.clone();
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            let p = format!("l{l}.");
+            let get = |n: &str| params.matrix(&(p.clone() + n));
+            let vec = |n: &str| -> Result<Vec<f32>> {
+                Ok(params.vector(&(p.clone() + n))?.to_vec())
+            };
+            layers.push(Layer {
+                ln1_g: vec("ln1.g")?,
+                ln1_b: vec("ln1.b")?,
+                wq: WeightFmt::build(get("attn.wq")?, backend),
+                wk: WeightFmt::build(get("attn.wk")?, backend),
+                wv: WeightFmt::build(get("attn.wv")?, backend),
+                wo: WeightFmt::build(get("attn.wo")?, backend),
+                ln2_g: vec("ln2.g")?,
+                ln2_b: vec("ln2.b")?,
+                w1: WeightFmt::build(get("mlp.w1")?, backend),
+                b1: vec("mlp.b1")?,
+                w2: WeightFmt::build(get("mlp.w2")?, backend),
+                b2: vec("mlp.b2")?,
+            });
+        }
+        Ok(Engine {
+            embed: params.matrix("embed")?,
+            pos: params.matrix("pos")?,
+            layers,
+            lnf_g: params.vector("lnf.g")?.to_vec(),
+            lnf_b: params.vector("lnf.b")?.to_vec(),
+            head: params.matrix("head")?,
+            cfg,
+            backend,
+        })
+    }
+
+    /// Total weight storage (the Table-1 "Memory" column).
+    pub fn mem_bytes(&self) -> usize {
+        let mut total = (self.embed.data.len() + self.pos.data.len()
+                         + self.head.data.len()) * 4;
+        for l in &self.layers {
+            total += l.wq.mem_bytes() + l.wk.mem_bytes() + l.wv.mem_bytes()
+                + l.wo.mem_bytes() + l.w1.mem_bytes() + l.w2.mem_bytes();
+            total += (l.ln1_g.len() + l.ln1_b.len() + l.ln2_g.len()
+                      + l.ln2_b.len() + l.b1.len() + l.b2.len()) * 4;
+        }
+        total + (self.lnf_g.len() + self.lnf_b.len()) * 4
+    }
+
+    fn layernorm_vec(x: &[f32], g: &[f32], b: &[f32], out: &mut [f32]) {
+        let n = x.len() as f32;
+        let mean = x.iter().sum::<f32>() / n;
+        let var = x.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for i in 0..x.len() {
+            out[i] = (x[i] - mean) * inv * g[i] + b[i];
+        }
+    }
+
+    /// One decode step: append `token` at position `t`, return logits.
+    fn decode_step(&self, kvs: &mut [Kv], token: u32, t: usize,
+                   scratch: &mut Scratch) -> Vec<f32> {
+        let d = self.cfg.d_model;
+        let h = self.cfg.n_heads;
+        let dh = d / h;
+        let scale = 1.0 / (dh as f32).sqrt();
+
+        let e = self.embed.row(token as usize);
+        let pr = self.pos.row(t.min(self.pos.rows - 1));
+        let x = &mut scratch.x;
+        for c in 0..d {
+            x[c] = e[c] + pr[c];
+        }
+
+        for (l, kv) in self.layers.iter().zip(kvs.iter_mut()) {
+            Self::layernorm_vec(x, &l.ln1_g, &l.ln1_b, &mut scratch.xa);
+            l.wq.matvec(&scratch.xa, &mut scratch.q);
+            l.wk.matvec(&scratch.xa, &mut scratch.k);
+            l.wv.matvec(&scratch.xa, &mut scratch.v);
+            kv.k.extend_from_slice(&scratch.k);
+            kv.v.extend_from_slice(&scratch.v);
+            kv.len += 1;
+
+            // attention over the cache, per head
+            let o = &mut scratch.o;
+            o.iter_mut().for_each(|v| *v = 0.0);
+            for hh in 0..h {
+                let c0 = hh * dh;
+                let q = &scratch.q[c0..c0 + dh];
+                let probs = &mut scratch.probs[..kv.len];
+                let mut max = f32::NEG_INFINITY;
+                for (j, p) in probs.iter_mut().enumerate() {
+                    let krow = &kv.k[j * d + c0..j * d + c0 + dh];
+                    let mut acc = 0.0f32;
+                    for i in 0..dh {
+                        acc += q[i] * krow[i];
+                    }
+                    *p = acc * scale;
+                    max = max.max(*p);
+                }
+                let mut sum = 0.0f32;
+                for p in probs.iter_mut() {
+                    *p = (*p - max).exp();
+                    sum += *p;
+                }
+                let inv = 1.0 / sum;
+                for (j, p) in probs.iter().enumerate() {
+                    let w = p * inv;
+                    let vrow = &kv.v[j * d + c0..j * d + c0 + dh];
+                    let orow = &mut o[c0..c0 + dh];
+                    for i in 0..dh {
+                        orow[i] += w * vrow[i];
+                    }
+                }
+            }
+            l.wo.matvec(o, &mut scratch.tmp_d);
+            for c in 0..d {
+                x[c] += scratch.tmp_d[c];
+            }
+
+            Self::layernorm_vec(x, &l.ln2_g, &l.ln2_b, &mut scratch.xa);
+            l.w1.matvec(&scratch.xa, &mut scratch.ff);
+            for (f, b) in scratch.ff.iter_mut().zip(l.b1.iter()) {
+                *f = gelu_tanh(*f + b);
+            }
+            l.w2.matvec(&scratch.ff, &mut scratch.tmp_d);
+            for c in 0..d {
+                x[c] += scratch.tmp_d[c] + l.b2[c];
+            }
+        }
+
+        Self::layernorm_vec(x, &self.lnf_g, &self.lnf_b, &mut scratch.xa);
+        self.head.t_matvec(&scratch.xa)
+    }
+
+    /// Greedy/temperature generation. Returns (tokens, decode stats).
+    pub fn generate(&self, prompt: &[u32], n_new: usize, temperature: f32,
+                    seed: u64) -> (Vec<u32>, GenStats) {
+        let d = self.cfg.d_model;
+        let max_t = self.cfg.seq_len;
+        let mut kvs: Vec<Kv> = (0..self.cfg.n_layers)
+            .map(|_| Kv { k: Vec::with_capacity(max_t * d),
+                          v: Vec::with_capacity(max_t * d), len: 0 })
+            .collect();
+        let mut scratch = Scratch::new(&self.cfg);
+        let mut rng = Rng::new(seed);
+        let mut out = prompt.to_vec();
+
+        // prefill (timed separately)
+        let tp = Timer::start();
+        let mut logits = vec![];
+        for (t, &tok) in prompt.iter().enumerate() {
+            logits = self.decode_step(&mut kvs, tok, t, &mut scratch);
+        }
+        let prefill_s = tp.seconds();
+
+        let td = Timer::start();
+        for i in 0..n_new {
+            let t = prompt.len() + i;
+            if t >= max_t {
+                break;
+            }
+            let next = sample(&logits, temperature, &mut rng);
+            out.push(next);
+            logits = self.decode_step(&mut kvs, next, t, &mut scratch);
+        }
+        let decode_s = td.seconds();
+        let generated = out.len() - prompt.len();
+        (out, GenStats {
+            prefill_seconds: prefill_s,
+            decode_seconds: decode_s,
+            tokens_generated: generated,
+            tokens_per_second: generated as f64 / decode_s.max(1e-9),
+            mem_bytes: self.mem_bytes(),
+        })
+    }
+}
+
+struct Scratch {
+    x: Vec<f32>,
+    xa: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    o: Vec<f32>,
+    ff: Vec<f32>,
+    tmp_d: Vec<f32>,
+    probs: Vec<f32>,
+}
+
+impl Scratch {
+    fn new(cfg: &ConfigEntry) -> Scratch {
+        let d = cfg.d_model;
+        Scratch {
+            x: vec![0.0; d],
+            xa: vec![0.0; d],
+            q: vec![0.0; d],
+            k: vec![0.0; d],
+            v: vec![0.0; d],
+            o: vec![0.0; d],
+            ff: vec![0.0; cfg.d_ff],
+            tmp_d: vec![0.0; d],
+            probs: vec![0.0; cfg.seq_len],
+        }
+    }
+}
+
+fn sample(logits: &[f32], temperature: f32, rng: &mut Rng) -> u32 {
+    if temperature <= 0.0 {
+        return logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i as u32)
+            .unwrap_or(0);
+    }
+    let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let weights: Vec<f32> =
+        logits.iter().map(|&l| ((l - max) / temperature).exp()).collect();
+    rng.categorical(&weights) as u32
+}
+
+#[derive(Debug, Clone)]
+pub struct GenStats {
+    pub prefill_seconds: f64,
+    pub decode_seconds: f64,
+    pub tokens_generated: usize,
+    pub tokens_per_second: f64,
+    pub mem_bytes: usize,
+}
+
+/// `elsa generate` subcommand.
+pub fn cmd_generate(args: &Args) -> Result<()> {
+    let rt = crate::commands::open_runtime(args)?;
+    let ck = crate::model::checkpoint::Checkpoint::load(
+        &std::path::PathBuf::from(args.require("ckpt")?))?;
+    let cfg = rt.manifest.config(&ck.config)?.clone();
+    let params = Params::new(&cfg, ck.get("params")?.clone());
+    let backend = Backend::parse(&args.str_or("backend", "macko"))
+        .ok_or_else(|| anyhow::anyhow!("bad --backend"))?;
+    let engine = Engine::build(&params, backend)?;
+
+    let g = crate::data::Grammar::named(
+        &args.str_or("dataset", "synth-c4"), cfg.vocab);
+    let prompt_len = args.usize_or("prompt-len", 8)?;
+    let n_new = args.usize_or("tokens", cfg.seq_len - prompt_len)?;
+    let prompt = g.generate(prompt_len, args.usize_or("seed", 0)? as u64);
+
+    let (tokens, stats) =
+        engine.generate(&prompt, n_new, args.f32_or("temp", 0.8)?, 0);
+    println!("prompt  {:?}", &tokens[..prompt_len]);
+    println!("output  {:?}", &tokens[prompt_len..]);
+    println!("sparsity {:.4}", params.sparsity());
+    println!("backend {:?}", backend);
+    println!("tokens_per_s {:.2}", stats.tokens_per_second);
+    println!("decode_s {:.4}", stats.decode_seconds);
+    println!("mem {}", crate::util::human_bytes(stats.mem_bytes));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::forward::forward_seq;
+    use crate::model::{fake_config, Params};
+
+    fn toy() -> Params {
+        Params::init(&fake_config(), 4)
+    }
+
+    #[test]
+    fn engine_matches_reference_forward() {
+        let p = toy();
+        let tokens = [1u32, 5, 9, 2, 7];
+        let expect = forward_seq(&p, &tokens, None).unwrap();
+        for backend in [Backend::Dense, Backend::Csr, Backend::Macko] {
+            let engine = Engine::build(&p, backend).unwrap();
+            let mut kvs: Vec<Kv> = (0..p.cfg.n_layers)
+                .map(|_| Kv { k: vec![], v: vec![], len: 0 })
+                .collect();
+            let mut scratch = Scratch::new(&p.cfg);
+            let mut logits = vec![];
+            for (t, &tok) in tokens.iter().enumerate() {
+                logits = engine.decode_step(&mut kvs, tok, t, &mut scratch);
+            }
+            let last = expect.row(tokens.len() - 1);
+            for (a, b) in logits.iter().zip(last.iter()) {
+                assert!((a - b).abs() < 1e-4,
+                        "{backend:?}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_backends_agree_on_pruned_model() {
+        let mut p = toy();
+        // prune 70% by magnitude
+        let alloc = crate::pruners::uniform_alloc(&p.cfg, 0.7);
+        p.flat = crate::pruners::magnitude::prune(&p.cfg, &p.flat, &alloc)
+            .unwrap();
+        let prompt = [1u32, 2, 3];
+        let (dense_out, _) = Engine::build(&p, Backend::Dense).unwrap()
+            .generate(&prompt, 4, 0.0, 0);
+        let (csr_out, _) = Engine::build(&p, Backend::Csr).unwrap()
+            .generate(&prompt, 4, 0.0, 0);
+        let (macko_out, _) = Engine::build(&p, Backend::Macko).unwrap()
+            .generate(&prompt, 4, 0.0, 0);
+        assert_eq!(dense_out, csr_out);
+        assert_eq!(dense_out, macko_out);
+    }
+
+    #[test]
+    fn sparse_memory_smaller_after_pruning() {
+        let mut p = toy();
+        let dense_mem =
+            Engine::build(&p, Backend::Macko).unwrap().mem_bytes();
+        let alloc = crate::pruners::uniform_alloc(&p.cfg, 0.9);
+        p.flat = crate::pruners::magnitude::prune(&p.cfg, &p.flat, &alloc)
+            .unwrap();
+        let sparse_mem =
+            Engine::build(&p, Backend::Macko).unwrap().mem_bytes();
+        assert!(sparse_mem < dense_mem);
+    }
+
+    #[test]
+    fn generate_respects_max_len() {
+        let p = toy();
+        let engine = Engine::build(&p, Backend::Dense).unwrap();
+        let (out, stats) = engine.generate(&[1, 2], 100, 0.5, 1);
+        assert!(out.len() <= p.cfg.seq_len);
+        assert_eq!(stats.tokens_generated, out.len() - 2);
+    }
+}

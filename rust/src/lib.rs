@@ -1,0 +1,33 @@
+//! ELSA: Extreme LLM Sparsity via Surrogate-free ADMM — a rust + JAX +
+//! Pallas reproduction of Lee et al., 2025 (see DESIGN.md).
+//!
+//! Layering (python never on the hot path):
+//! - L1/L2 live in `python/compile/` and are AOT-lowered once to
+//!   `artifacts/*.hlo.txt` by `make artifacts`.
+//! - L3 is this crate: the ADMM pruning coordinator, baseline pruners,
+//!   sparse inference engine, evaluation + experiment harness.
+
+pub mod cli;
+pub mod commands;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod experiments;
+pub mod infer;
+pub mod model;
+pub mod pruners;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod sparse;
+pub mod tensor;
+pub mod util;
+
+use anyhow::Result;
+
+/// Entry point for the `elsa` binary.
+pub fn run_cli() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = cli::Args::parse(&argv)?;
+    commands::dispatch(&args)
+}

@@ -1,0 +1,8 @@
+//! `elsa` CLI — leader entrypoint. See cli.rs for subcommands.
+
+fn main() {
+    if let Err(e) = elsa::run_cli() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,135 @@
+//! Checkpoint IO: a simple named-section binary format.
+//!
+//! Layout: magic "ELSACKP1" | config-name | n sections | per section:
+//! name, f32 length, raw LE bytes. Sections store the flat params and
+//! optionally optimizer/ADMM state for resumable pruning runs.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 8] = b"ELSACKP1";
+
+#[derive(Debug, Default)]
+pub struct Checkpoint {
+    pub config: String,
+    pub sections: BTreeMap<String, Vec<f32>>,
+}
+
+impl Checkpoint {
+    pub fn new(config: &str) -> Checkpoint {
+        Checkpoint { config: config.to_string(), sections: BTreeMap::new() }
+    }
+
+    pub fn insert(&mut self, name: &str, data: Vec<f32>) {
+        self.sections.insert(name.to_string(), data);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Vec<f32>> {
+        self.sections
+            .get(name)
+            .with_context(|| format!("checkpoint missing section '{name}'"))
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        write_str(&mut f, &self.config)?;
+        f.write_all(&(self.sections.len() as u32).to_le_bytes())?;
+        for (name, data) in &self.sections {
+            write_str(&mut f, name)?;
+            f.write_all(&(data.len() as u64).to_le_bytes())?;
+            // SAFETY-free path: stream as LE bytes
+            let mut buf = Vec::with_capacity(data.len() * 4);
+            for x in data {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+            f.write_all(&buf)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path)
+                .with_context(|| format!("opening {}", path.display()))?);
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{} is not an ELSA checkpoint", path.display());
+        }
+        let config = read_str(&mut f)?;
+        let mut n = [0u8; 4];
+        f.read_exact(&mut n)?;
+        let n = u32::from_le_bytes(n) as usize;
+        let mut sections = BTreeMap::new();
+        for _ in 0..n {
+            let name = read_str(&mut f)?;
+            let mut len8 = [0u8; 8];
+            f.read_exact(&mut len8)?;
+            let len = u64::from_le_bytes(len8) as usize;
+            let mut bytes = vec![0u8; len * 4];
+            f.read_exact(&mut bytes)?;
+            let data = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            sections.insert(name, data);
+        }
+        Ok(Checkpoint { config, sections })
+    }
+}
+
+fn write_str(w: &mut impl Write, s: &str) -> Result<()> {
+    w.write_all(&(s.len() as u32).to_le_bytes())?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn read_str(r: &mut impl Read) -> Result<String> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let len = u32::from_le_bytes(len) as usize;
+    if len > 1 << 20 {
+        bail!("implausible string length {len}");
+    }
+    let mut bytes = vec![0u8; len];
+    r.read_exact(&mut bytes)?;
+    Ok(String::from_utf8(bytes)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("elsa_ckpt_test");
+        let path = dir.join("a.bin");
+        let mut c = Checkpoint::new("tiny");
+        c.insert("params", vec![1.0, -2.5, 3.25]);
+        c.insert("m", vec![0.0; 10]);
+        c.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.config, "tiny");
+        assert_eq!(back.get("params").unwrap(), &vec![1.0, -2.5, 3.25]);
+        assert_eq!(back.get("m").unwrap().len(), 10);
+        assert!(back.get("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("elsa_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"NOTACKPT________").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

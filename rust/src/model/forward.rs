@@ -1,0 +1,320 @@
+//! Rust reference forward pass (dense).
+//!
+//! Mirrors python/compile/model.py exactly (pre-LN GPT, tanh-GELU,
+//! causal attention, untied head) and is cross-checked against the AOT
+//! `logits` artifact in tests/runtime_integration.rs. Used for:
+//!  - calibration activation capture for the layer-wise baselines
+//!    (Wanda / SparseGPT / L-ADMM / ALPS need per-layer X^T X),
+//!  - the dense CPU baseline of the sparse inference engine,
+//!  - zero-shot probe scoring when the HLO batch shape doesn't fit.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use super::Params;
+use crate::tensor::Matrix;
+
+/// jax.nn.gelu(approximate=True): 0.5x(1+tanh(sqrt(2/pi)(x+0.044715x^3))).
+#[inline]
+pub fn gelu_tanh(x: f32) -> f32 {
+    const C: f32 = 0.7978845608028654; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// Row-wise layernorm (eps matches the L2 model).
+pub fn layernorm(x: &Matrix, g: &[f32], b: &[f32]) -> Matrix {
+    let mut out = Matrix::zeros(x.rows, x.cols);
+    let n = x.cols as f32;
+    for r in 0..x.rows {
+        let row = x.row(r);
+        let mean = row.iter().sum::<f32>() / n;
+        let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        let orow = out.row_mut(r);
+        for c in 0..x.cols {
+            orow[c] = (row[c] - mean) * inv * g[c] + b[c];
+        }
+    }
+    out
+}
+
+/// Softmax over the last axis with causal masking already applied.
+fn softmax_rows(m: &mut Matrix) {
+    for r in 0..m.rows {
+        let row = m.row_mut(r);
+        let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+/// Calibration statistics for one linear layer: running X^T X + row count.
+#[derive(Debug, Clone)]
+pub struct CalibStat {
+    pub gram: Matrix,
+    pub rows: usize,
+}
+
+impl CalibStat {
+    pub fn new(dim: usize) -> CalibStat {
+        CalibStat { gram: Matrix::zeros(dim, dim), rows: 0 }
+    }
+
+    pub fn add(&mut self, x: &Matrix) {
+        assert_eq!(x.cols, self.gram.cols);
+        let g = x.gram();
+        for (a, b) in self.gram.data.iter_mut().zip(g.data.iter()) {
+            *a += b;
+        }
+        self.rows += x.rows;
+    }
+
+    /// Column L2 norms of the calibration inputs (Wanda's activation term).
+    pub fn col_norms(&self) -> Vec<f32> {
+        (0..self.gram.cols).map(|i| self.gram.at(i, i).sqrt()).collect()
+    }
+}
+
+/// Per-layer calibration capture, keyed by segment name.
+pub type CalibSet = BTreeMap<String, CalibStat>;
+
+/// Causal self-attention for one sequence. x: (S, D) -> (S, D).
+fn attention_seq(x: &Matrix, wq: &Matrix, wk: &Matrix, wv: &Matrix,
+                 n_heads: usize) -> Matrix {
+    let (s, d) = (x.rows, x.cols);
+    let dh = d / n_heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let q = x.matmul(wq);
+    let k = x.matmul(wk);
+    let v = x.matmul(wv);
+    let mut out = Matrix::zeros(s, d);
+    for h in 0..n_heads {
+        let c0 = h * dh;
+        // scores (S, S) for this head
+        let mut scores = Matrix::zeros(s, s);
+        for i in 0..s {
+            let qi = &q.row(i)[c0..c0 + dh];
+            for j in 0..=i {
+                let kj = &k.row(j)[c0..c0 + dh];
+                let mut acc = 0.0f32;
+                for t in 0..dh {
+                    acc += qi[t] * kj[t];
+                }
+                *scores.at_mut(i, j) = acc * scale;
+            }
+            for j in i + 1..s {
+                *scores.at_mut(i, j) = f32::NEG_INFINITY;
+            }
+        }
+        softmax_rows(&mut scores);
+        for i in 0..s {
+            let orow = &mut out.row_mut(i)[c0..c0 + dh];
+            for j in 0..=i {
+                let p = scores.at(i, j);
+                if p == 0.0 {
+                    continue;
+                }
+                let vj = &v.row(j)[c0..c0 + dh];
+                for t in 0..dh {
+                    orow[t] += p * vj[t];
+                }
+            }
+        }
+    }
+    out
+}
+
+fn add_bias(m: &mut Matrix, b: &[f32]) {
+    for r in 0..m.rows {
+        let row = m.row_mut(r);
+        for (x, bi) in row.iter_mut().zip(b.iter()) {
+            *x += bi;
+        }
+    }
+}
+
+fn add_into(dst: &mut Matrix, src: &Matrix) {
+    for (a, b) in dst.data.iter_mut().zip(src.data.iter()) {
+        *a += b;
+    }
+}
+
+/// Full forward for one sequence of tokens. Returns logits (S, V).
+/// If `calib` is Some, accumulates the input activations of every
+/// prunable linear into it.
+pub fn forward_seq(p: &Params, tokens: &[u32],
+                   mut calib: Option<&mut CalibSet>) -> Result<Matrix> {
+    let cfg = &p.cfg;
+    let s = tokens.len();
+    let d = cfg.d_model;
+    let embed = p.matrix("embed")?;
+    let pos = p.matrix("pos")?;
+
+    let mut x = Matrix::zeros(s, d);
+    for (t, &tok) in tokens.iter().enumerate() {
+        let e = embed.row(tok as usize);
+        let pr = pos.row(t);
+        let row = x.row_mut(t);
+        for c in 0..d {
+            row[c] = e[c] + pr[c];
+        }
+    }
+
+    for l in 0..cfg.n_layers {
+        let pre = format!("l{l}.");
+        let ln1 = layernorm(&x, p.vector(&(pre.clone() + "ln1.g"))?,
+                            p.vector(&(pre.clone() + "ln1.b"))?);
+        if let Some(cal) = calib.as_deref_mut() {
+            for t in ["attn.wq", "attn.wk", "attn.wv"] {
+                cal.entry(pre.clone() + t)
+                    .or_insert_with(|| CalibStat::new(d))
+                    .add(&ln1);
+            }
+        }
+        let wq = p.matrix(&(pre.clone() + "attn.wq"))?;
+        let wk = p.matrix(&(pre.clone() + "attn.wk"))?;
+        let wv = p.matrix(&(pre.clone() + "attn.wv"))?;
+        let o = attention_seq(&ln1, &wq, &wk, &wv, cfg.n_heads);
+        if let Some(cal) = calib.as_deref_mut() {
+            cal.entry(pre.clone() + "attn.wo")
+                .or_insert_with(|| CalibStat::new(d))
+                .add(&o);
+        }
+        let wo = p.matrix(&(pre.clone() + "attn.wo"))?;
+        add_into(&mut x, &o.matmul(&wo));
+
+        let ln2 = layernorm(&x, p.vector(&(pre.clone() + "ln2.g"))?,
+                            p.vector(&(pre.clone() + "ln2.b"))?);
+        if let Some(cal) = calib.as_deref_mut() {
+            cal.entry(pre.clone() + "mlp.w1")
+                .or_insert_with(|| CalibStat::new(d))
+                .add(&ln2);
+        }
+        let w1 = p.matrix(&(pre.clone() + "mlp.w1"))?;
+        let mut h = ln2.matmul(&w1);
+        add_bias(&mut h, p.vector(&(pre.clone() + "mlp.b1"))?);
+        for v in h.data.iter_mut() {
+            *v = gelu_tanh(*v);
+        }
+        if let Some(cal) = calib.as_deref_mut() {
+            cal.entry(pre.clone() + "mlp.w2")
+                .or_insert_with(|| CalibStat::new(cfg.d_ff))
+                .add(&h);
+        }
+        let w2 = p.matrix(&(pre.clone() + "mlp.w2"))?;
+        let mut mo = h.matmul(&w2);
+        add_bias(&mut mo, p.vector(&(pre.clone() + "mlp.b2"))?);
+        add_into(&mut x, &mo);
+    }
+
+    let xf = layernorm(&x, p.vector("lnf.g")?, p.vector("lnf.b")?);
+    let head = p.matrix("head")?;
+    Ok(xf.matmul(&head))
+}
+
+/// Mean next-token NLL of a window (tokens length S+1) under the model.
+pub fn nll_seq(p: &Params, window: &[u32]) -> Result<f64> {
+    let inp = &window[..window.len() - 1];
+    let logits = forward_seq(p, inp, None)?;
+    let mut total = 0.0f64;
+    for t in 0..inp.len() {
+        let row = logits.row(t);
+        let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let lse: f32 = row.iter().map(|v| (v - max).exp()).sum::<f32>().ln()
+            + max;
+        let tgt = window[t + 1] as usize;
+        total += (lse - row[tgt]) as f64;
+    }
+    Ok(total / inp.len() as f64)
+}
+
+/// Run the calibration set through the model, returning per-layer stats.
+pub fn collect_calibration(p: &Params, seqs: &[Vec<u32>])
+                           -> Result<CalibSet> {
+    let mut calib = CalibSet::new();
+    for seq in seqs {
+        forward_seq(p, seq, Some(&mut calib))?;
+    }
+    Ok(calib)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::fake_config;
+    use crate::model::Params;
+
+    fn toy() -> Params {
+        Params::init(&fake_config(), 0)
+    }
+
+    #[test]
+    fn gelu_known_values() {
+        assert!(gelu_tanh(0.0).abs() < 1e-7);
+        assert!((gelu_tanh(1.0) - 0.841192).abs() < 1e-4);
+        assert!((gelu_tanh(-1.0) + 0.158808).abs() < 1e-4);
+        // large positive ~ identity, large negative ~ 0
+        assert!((gelu_tanh(6.0) - 6.0).abs() < 1e-4);
+        assert!(gelu_tanh(-6.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn layernorm_normalizes() {
+        let x = Matrix::from_vec(1, 4, vec![1.0, 2.0, 3.0, 4.0]);
+        let out = layernorm(&x, &[1.0; 4], &[0.0; 4]);
+        let mean: f32 = out.row(0).iter().sum::<f32>() / 4.0;
+        let var: f32 =
+            out.row(0).iter().map(|v| (v - mean) * (v - mean)).sum::<f32>()
+            / 4.0;
+        assert!(mean.abs() < 1e-5);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let p = toy();
+        let logits = forward_seq(&p, &[1, 2, 3, 4, 5], None).unwrap();
+        assert_eq!((logits.rows, logits.cols), (5, 16));
+    }
+
+    #[test]
+    fn forward_is_causal() {
+        let p = toy();
+        let a = forward_seq(&p, &[1, 2, 3, 4, 5, 6], None).unwrap();
+        let b = forward_seq(&p, &[1, 2, 3, 9, 9, 9], None).unwrap();
+        // positions 0..2 depend only on tokens 0..2
+        for t in 0..3 {
+            for c in 0..16 {
+                assert!((a.at(t, c) - b.at(t, c)).abs() < 1e-5,
+                        "leak at t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn calibration_capture_covers_all_prunables() {
+        let p = toy();
+        let calib =
+            collect_calibration(&p, &[vec![1, 2, 3, 4], vec![5, 6, 7, 8]])
+                .unwrap();
+        for seg in p.prunable_segments() {
+            let stat = calib.get(&seg.name).expect(&seg.name);
+            assert_eq!(stat.gram.rows, seg.shape[0]);
+            assert_eq!(stat.rows, 8); // 2 seqs x 4 tokens
+        }
+    }
+
+    #[test]
+    fn nll_positive_and_finite() {
+        let p = toy();
+        let nll = nll_seq(&p, &[1, 2, 3, 4, 5]).unwrap();
+        assert!(nll.is_finite() && nll > 0.0);
+    }
+}

@@ -1,0 +1,229 @@
+//! Model plumbing on the rust side: parameter views over the flat vector,
+//! initialization, checkpoints, and the rust reference forward.
+//!
+//! The flat vector + manifest layout is the contract with L2 (see
+//! DESIGN.md §2): `Params` wraps one `Vec<f32>` and hands out per-segment
+//! matrix views for the baseline pruners and the sparse inference engine.
+
+pub mod checkpoint;
+pub mod forward;
+
+use anyhow::Result;
+
+use crate::runtime::{ConfigEntry, Segment};
+use crate::tensor::Matrix;
+use crate::util::rng::Rng;
+
+/// A model instance: flat parameters + its manifest config.
+#[derive(Debug, Clone)]
+pub struct Params {
+    pub flat: Vec<f32>,
+    pub cfg: ConfigEntry,
+}
+
+impl Params {
+    pub fn new(cfg: &ConfigEntry, flat: Vec<f32>) -> Params {
+        assert_eq!(flat.len(), cfg.flat_len);
+        Params { flat, cfg: cfg.clone() }
+    }
+
+    /// Initialize like python model.init_params: ones for LN gains,
+    /// zeros for biases, scaled normals for weights. (Distributionally
+    /// identical, not bit-identical — the RNGs differ.)
+    pub fn init(cfg: &ConfigEntry, seed: u64) -> Params {
+        let mut rng = Rng::new(seed);
+        let mut flat = vec![0.0f32; cfg.flat_len];
+        for seg in &cfg.segments {
+            let sl = &mut flat[seg.offset..seg.end()];
+            match seg.init.as_str() {
+                "ones" => sl.fill(1.0),
+                "zeros" => sl.fill(0.0),
+                _ => {
+                    let std = if seg.name == "embed" || seg.name == "pos" {
+                        0.02
+                    } else {
+                        let fan_in = if seg.shape.len() == 2 {
+                            seg.shape[0]
+                        } else {
+                            cfg.d_model
+                        };
+                        1.0 / (fan_in as f32).sqrt()
+                    };
+                    for x in sl.iter_mut() {
+                        *x = rng.normal() * std;
+                    }
+                }
+            }
+        }
+        Params { flat, cfg: cfg.clone() }
+    }
+
+    /// Immutable matrix view (copies; segments are small).
+    pub fn matrix(&self, name: &str) -> Result<Matrix> {
+        let seg = self.cfg.segment(name)?;
+        anyhow::ensure!(seg.is_matrix(), "segment '{name}' is not 2-D");
+        Ok(Matrix::from_vec(
+            seg.shape[0],
+            seg.shape[1],
+            self.flat[seg.offset..seg.end()].to_vec(),
+        ))
+    }
+
+    /// Vector view.
+    pub fn vector(&self, name: &str) -> Result<&[f32]> {
+        let seg = self.cfg.segment(name)?;
+        Ok(&self.flat[seg.offset..seg.end()])
+    }
+
+    /// Write a matrix back into its segment.
+    pub fn set_matrix(&mut self, name: &str, m: &Matrix) -> Result<()> {
+        let seg = self.cfg.segment(name)?.clone();
+        anyhow::ensure!(seg.shape == [m.rows, m.cols], "shape mismatch");
+        self.flat[seg.offset..seg.end()].copy_from_slice(&m.data);
+        Ok(())
+    }
+
+    /// Prunable segments (the pruning target set), in layout order.
+    pub fn prunable_segments(&self) -> Vec<Segment> {
+        self.cfg.segments.iter().filter(|s| s.prunable).cloned().collect()
+    }
+
+    /// Fraction of *prunable* weights that are exactly zero.
+    pub fn sparsity(&self) -> f64 {
+        let mut zeros = 0usize;
+        let mut total = 0usize;
+        for seg in self.cfg.segments.iter().filter(|s| s.prunable) {
+            for &x in &self.flat[seg.offset..seg.end()] {
+                if x == 0.0 {
+                    zeros += 1;
+                }
+            }
+            total += seg.len();
+        }
+        zeros as f64 / total.max(1) as f64
+    }
+
+    /// Count of non-zero parameters over the whole flat vector.
+    pub fn nnz_total(&self) -> usize {
+        self.flat.iter().filter(|x| **x != 0.0).count()
+    }
+
+    /// Apply a 0/1 mask over the flat vector in place.
+    pub fn apply_mask(&mut self, mask: &[f32]) {
+        assert_eq!(mask.len(), self.flat.len());
+        for (p, m) in self.flat.iter_mut().zip(mask.iter()) {
+            if *m == 0.0 {
+                *p = 0.0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{ArtifactSpec, Segment as Seg};
+    use std::collections::BTreeMap;
+
+    /// Build a miniature fake config for unit tests (no manifest file).
+    pub fn fake_config() -> ConfigEntry {
+        let mut segments = vec![];
+        let mut off = 0usize;
+        let mut add = |name: &str, shape: Vec<usize>, prunable: bool,
+                       init: &str, segments: &mut Vec<Seg>| {
+            let len: usize = shape.iter().product();
+            segments.push(Seg {
+                name: name.into(),
+                offset: off,
+                shape,
+                prunable,
+                init: init.into(),
+            });
+            off += len;
+        };
+        add("embed", vec![16, 4], false, "normal", &mut segments);
+        add("pos", vec![8, 4], false, "normal", &mut segments);
+        add("l0.ln1.g", vec![4], false, "ones", &mut segments);
+        add("l0.ln1.b", vec![4], false, "zeros", &mut segments);
+        add("l0.attn.wq", vec![4, 4], true, "normal", &mut segments);
+        add("l0.attn.wk", vec![4, 4], true, "normal", &mut segments);
+        add("l0.attn.wv", vec![4, 4], true, "normal", &mut segments);
+        add("l0.attn.wo", vec![4, 4], true, "normal", &mut segments);
+        add("l0.ln2.g", vec![4], false, "ones", &mut segments);
+        add("l0.ln2.b", vec![4], false, "zeros", &mut segments);
+        add("l0.mlp.w1", vec![4, 16], true, "normal", &mut segments);
+        add("l0.mlp.b1", vec![16], false, "zeros", &mut segments);
+        add("l0.mlp.w2", vec![16, 4], true, "normal", &mut segments);
+        add("l0.mlp.b2", vec![4], false, "zeros", &mut segments);
+        add("lnf.g", vec![4], false, "ones", &mut segments);
+        add("lnf.b", vec![4], false, "zeros", &mut segments);
+        add("head", vec![4, 16], false, "normal", &mut segments);
+        let flat_len = off;
+        ConfigEntry {
+            name: "fake".into(),
+            vocab: 16,
+            d_model: 4,
+            n_layers: 1,
+            n_heads: 2,
+            seq_len: 8,
+            batch: 2,
+            eval_batch: 2,
+            d_ff: 16,
+            lora_rank: 2,
+            lora_alpha: 8.0,
+            flat_len,
+            lora_len: 0,
+            segments,
+            lora_segments: vec![],
+            artifacts: BTreeMap::<String, ArtifactSpec>::new(),
+        }
+    }
+
+    #[test]
+    fn init_respects_segment_kinds() {
+        let cfg = fake_config();
+        let p = Params::init(&cfg, 0);
+        assert!(p.vector("l0.ln1.g").unwrap().iter().all(|&x| x == 1.0));
+        assert!(p.vector("l0.mlp.b1").unwrap().iter().all(|&x| x == 0.0));
+        let wq = p.vector("l0.attn.wq").unwrap();
+        assert!(wq.iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn matrix_roundtrip() {
+        let cfg = fake_config();
+        let mut p = Params::init(&cfg, 1);
+        let mut m = p.matrix("l0.attn.wq").unwrap();
+        m.data[0] = 42.0;
+        p.set_matrix("l0.attn.wq", &m).unwrap();
+        assert_eq!(p.matrix("l0.attn.wq").unwrap().data[0], 42.0);
+    }
+
+    #[test]
+    fn sparsity_counts_prunable_only() {
+        let cfg = fake_config();
+        let mut p = Params::init(&cfg, 2);
+        assert!(p.sparsity() < 0.01);
+        // zero half of wq
+        let seg = cfg.segment("l0.attn.wq").unwrap().clone();
+        for i in 0..seg.len() / 2 {
+            p.flat[seg.offset + i] = 0.0;
+        }
+        let expected = (seg.len() / 2) as f64
+            / cfg.prunable_len() as f64;
+        assert!((p.sparsity() - expected).abs() < 1e-9);
+    }
+
+    #[test]
+    fn apply_mask_zeroes() {
+        let cfg = fake_config();
+        let mut p = Params::init(&cfg, 3);
+        let mut mask = vec![1.0f32; cfg.flat_len];
+        mask[0] = 0.0;
+        p.apply_mask(&mask);
+        assert_eq!(p.flat[0], 0.0);
+    }
+}
+
+#[cfg(test)]
+pub use tests::fake_config;

@@ -1,0 +1,248 @@
+//! Layer-wise ADMM reconstruction solvers: L-ADMM (Boža 2024) and the
+//! ALPS preset (Meng et al. 2024).
+//!
+//! Both minimize the layer reconstruction error ||X W - X W0||_F^2
+//! subject to per-layer sparsity, by ADMM over W with exact ridge
+//! W-updates:
+//!     W  <- (H + rho I)^{-1} (H W0 + rho (Z - U))
+//!     Z  <- Pi_S(W + U)          (magnitude projection)
+//!     U  <- U + W - Z
+//! L-ADMM runs a fixed rho; ALPS ramps rho and finishes with an
+//! OBS-compensated backsolve on the final support (its "optimal weight
+//! update" step). These are the strongest layer-wise baselines in the
+//! paper's tables — and still collapse at extreme sparsity, which is the
+//! paper's point.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::model::forward::CalibSet;
+use crate::runtime::ConfigEntry;
+use crate::tensor::linalg::{damp, Cholesky};
+use crate::tensor::select::topk_mask;
+use crate::tensor::Matrix;
+
+#[derive(Debug, Clone)]
+pub struct LAdmmOptions {
+    pub iters: usize,
+    pub rho: f32,
+    /// multiply rho by this factor each iteration (ALPS ramp)
+    pub rho_growth: f32,
+    /// OBS-compensated solve on the final support (ALPS refinement)
+    pub obs_refine: bool,
+}
+
+impl Default for LAdmmOptions {
+    fn default() -> Self {
+        LAdmmOptions { iters: 12, rho: 0.1, rho_growth: 1.0,
+                       obs_refine: false }
+    }
+}
+
+impl LAdmmOptions {
+    pub fn alps() -> Self {
+        LAdmmOptions { iters: 16, rho: 0.03, rho_growth: 1.3,
+                       obs_refine: true }
+    }
+}
+
+pub fn prune(cfg: &ConfigEntry, dense: &[f32], calib: &CalibSet,
+             alloc: &BTreeMap<String, f64>, opts: &LAdmmOptions)
+             -> Result<Vec<f32>> {
+    super::map_prunable(cfg, dense, alloc, |name, w, sp| {
+        let stat = calib.get(name)
+            .with_context(|| format!("no calibration for {name}"))?;
+        prune_layer(&w, &stat.gram, sp, opts)
+    })
+}
+
+/// Layer-wise ADMM on one (din, dout) matrix.
+pub fn prune_layer(w0: &Matrix, gram: &Matrix, sparsity: f64,
+                   opts: &LAdmmOptions) -> Result<Matrix> {
+    let din = w0.rows;
+    let dout = w0.cols;
+    let mut h = gram.clone();
+    damp(&mut h, 0.01);
+
+    let mut w = w0.clone();
+    let mut z = project_magnitude(&w, sparsity);
+    let mut u = Matrix::zeros(din, dout);
+    let mut rho = opts.rho * mean_diag(&h);
+
+    for _ in 0..opts.iters {
+        // W-update: ridge solve per output column
+        let mut a = h.clone();
+        for i in 0..din {
+            *a.at_mut(i, i) += rho;
+        }
+        let ch = Cholesky::factor(&a)?;
+        // rhs = H w0_col + rho (z - u)_col
+        let mut w0_col = vec![0.0f32; din];
+        let mut zu_col = vec![0.0f32; din];
+        for c in 0..dout {
+            for r in 0..din {
+                w0_col[r] = w0.at(r, c);
+                zu_col[r] = z.at(r, c) - u.at(r, c);
+            }
+            let mut rhs = h.matvec(&w0_col);
+            for r in 0..din {
+                rhs[r] += rho * zu_col[r];
+            }
+            let sol = ch.solve(&rhs);
+            for r in 0..din {
+                *w.at_mut(r, c) = sol[r];
+            }
+        }
+        // Z-update + dual ascent
+        let wu = add(&w, &u);
+        z = project_magnitude(&wu, sparsity);
+        for i in 0..u.data.len() {
+            u.data[i] += w.data[i] - z.data[i];
+        }
+        rho *= opts.rho_growth;
+    }
+
+    if opts.obs_refine {
+        refine_on_support(w0, &h, &z)
+    } else {
+        // Return the primal W restricted to the converged support: z's
+        // values still carry the (scaled) dual u, which is only a valid
+        // weight estimate at exact convergence; W on supp(z) is the
+        // consistent finite-iteration answer (Boza 2024 runs the same
+        // masked retrieval).
+        let mut out = w;
+        for i in 0..out.data.len() {
+            if z.data[i] == 0.0 {
+                out.data[i] = 0.0;
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Ridge regression restricted to the kept support of each column
+/// (solve the small SPD system over the support indices).
+fn refine_on_support(w0: &Matrix, h: &Matrix, z: &Matrix)
+                     -> Result<Matrix> {
+    let din = w0.rows;
+    let dout = w0.cols;
+    let mut out = Matrix::zeros(din, dout);
+    let mut w0_col = vec![0.0f32; din];
+    for c in 0..dout {
+        let support: Vec<usize> =
+            (0..din).filter(|&r| z.at(r, c) != 0.0).collect();
+        if support.is_empty() {
+            continue;
+        }
+        for r in 0..din {
+            w0_col[r] = w0.at(r, c);
+        }
+        // minimize (w - w0)^T H (w - w0) over support:
+        //   H_ss w_s = H_s: w0   (rows of H restricted to support)
+        let k = support.len();
+        let mut hss = Matrix::zeros(k, k);
+        let mut rhs = vec![0.0f32; k];
+        let hw0 = h.matvec(&w0_col);
+        for (a, &ra) in support.iter().enumerate() {
+            for (b, &rb) in support.iter().enumerate() {
+                *hss.at_mut(a, b) = h.at(ra, rb);
+            }
+            rhs[a] = hw0[ra];
+        }
+        damp(&mut hss, 1e-4);
+        let ch = Cholesky::factor(&hss)?;
+        let sol = ch.solve(&rhs);
+        for (a, &ra) in support.iter().enumerate() {
+            *out.at_mut(ra, c) = sol[a];
+        }
+    }
+    Ok(out)
+}
+
+fn project_magnitude(w: &Matrix, sparsity: f64) -> Matrix {
+    let scores: Vec<f32> = w.data.iter().map(|x| x.abs()).collect();
+    let keep = ((1.0 - sparsity) * scores.len() as f64).round() as usize;
+    let mask = topk_mask(&scores, keep.min(scores.len()));
+    let mut out = w.clone();
+    for (x, m) in out.data.iter_mut().zip(mask.iter()) {
+        *x *= m;
+    }
+    out
+}
+
+fn add(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut out = a.clone();
+    for (x, y) in out.data.iter_mut().zip(b.data.iter()) {
+        *x += y;
+    }
+    out
+}
+
+fn mean_diag(h: &Matrix) -> f32 {
+    (0..h.rows).map(|i| h.at(i, i)).sum::<f32>() / h.rows as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruners::sparsegpt::recon_error;
+    use crate::pruners::test_support::*;
+    use crate::pruners::uniform_alloc;
+    use crate::util::rng::Rng;
+
+    use crate::pruners::sparsegpt::tests::correlated_problem as
+        random_problem;
+
+    #[test]
+    fn output_is_sparse() {
+        let (w, gram) = random_problem(16, 4, 32, 0);
+        let z = prune_layer(&w, &gram, 0.5,
+                            &LAdmmOptions::default()).unwrap();
+        let nnz = z.nnz();
+        assert!(nnz <= 32, "nnz={nnz}");
+    }
+
+    #[test]
+    fn admm_beats_plain_magnitude_projection() {
+        let mut worse = 0;
+        for seed in 0..5 {
+            let (w, gram) = random_problem(20, 5, 40, seed);
+            let admm = prune_layer(&w, &gram, 0.6,
+                                   &LAdmmOptions::default()).unwrap();
+            let mag = project_magnitude(&w, 0.6);
+            if recon_error(&admm, &w, &gram) >= recon_error(&mag, &w, &gram)
+            {
+                worse += 1;
+            }
+        }
+        assert!(worse <= 1, "l-admm worse {worse}/5");
+    }
+
+    #[test]
+    fn alps_refine_improves_over_plain_admm() {
+        let mut worse = 0;
+        for seed in 10..15 {
+            let (w, gram) = random_problem(20, 5, 40, seed);
+            let plain = prune_layer(&w, &gram, 0.7,
+                                    &LAdmmOptions::default()).unwrap();
+            let alps =
+                prune_layer(&w, &gram, 0.7, &LAdmmOptions::alps()).unwrap();
+            if recon_error(&alps, &w, &gram)
+                > recon_error(&plain, &w, &gram) * 1.05
+            {
+                worse += 1;
+            }
+        }
+        assert!(worse <= 1, "alps worse {worse}/5");
+    }
+
+    #[test]
+    fn full_pipeline_runs() {
+        let (cfg, dense, calib) = toy_setup();
+        let pruned = prune(&cfg, &dense, &calib, &uniform_alloc(&cfg, 0.5),
+                           &LAdmmOptions::default()).unwrap();
+        let sp = sparsity_of(&cfg, &pruned);
+        assert!(sp >= 0.45, "sp={sp}");
+    }
+}

@@ -1,0 +1,81 @@
+//! Magnitude pruning (Han et al. 2015): keep the largest |w| per layer.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::runtime::ConfigEntry;
+use crate::tensor::select::topk_mask;
+use crate::tensor::Matrix;
+
+pub fn prune(cfg: &ConfigEntry, dense: &[f32],
+             alloc: &BTreeMap<String, f64>) -> Result<Vec<f32>> {
+    super::map_prunable(cfg, dense, alloc, |_, mut w, sp| {
+        let scores: Vec<f32> = w.data.iter().map(|x| x.abs()).collect();
+        let keep = ((1.0 - sp) * scores.len() as f64).round() as usize;
+        let mask = topk_mask(&scores, keep.min(scores.len()));
+        for (x, m) in w.data.iter_mut().zip(mask.iter()) {
+            *x *= m;
+        }
+        Ok(w)
+    })
+}
+
+/// Score-only variant used by allocation search: returns the keep-mask
+/// for one matrix.
+pub fn layer_mask(w: &Matrix, sparsity: f64) -> Vec<f32> {
+    let scores: Vec<f32> = w.data.iter().map(|x| x.abs()).collect();
+    let keep = ((1.0 - sparsity) * scores.len() as f64).round() as usize;
+    topk_mask(&scores, keep.min(scores.len()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruners::test_support::*;
+    use crate::pruners::uniform_alloc;
+
+    #[test]
+    fn hits_target_sparsity() {
+        let (cfg, dense, _) = toy_setup();
+        for sp in [0.25, 0.5, 0.9] {
+            let pruned =
+                prune(&cfg, &dense, &uniform_alloc(&cfg, sp)).unwrap();
+            assert!((sparsity_of(&cfg, &pruned) - sp).abs() < 0.05,
+                    "sp={sp}");
+        }
+    }
+
+    #[test]
+    fn keeps_largest() {
+        let (cfg, dense, _) = toy_setup();
+        let pruned =
+            prune(&cfg, &dense, &uniform_alloc(&cfg, 0.5)).unwrap();
+        let seg = cfg.segment("l0.attn.wq").unwrap().clone();
+        let orig = &dense[seg.offset..seg.end()];
+        let new = &pruned[seg.offset..seg.end()];
+        let kept_min = orig
+            .iter()
+            .zip(new.iter())
+            .filter(|(_, n)| **n != 0.0)
+            .map(|(o, _)| o.abs())
+            .fold(f32::INFINITY, f32::min);
+        let pruned_max = orig
+            .iter()
+            .zip(new.iter())
+            .filter(|(_, n)| **n == 0.0)
+            .map(|(o, _)| o.abs())
+            .fold(0.0f32, f32::max);
+        assert!(kept_min >= pruned_max);
+    }
+
+    #[test]
+    fn nonprunable_untouched() {
+        let (cfg, dense, _) = toy_setup();
+        let pruned =
+            prune(&cfg, &dense, &uniform_alloc(&cfg, 0.9)).unwrap();
+        let emb = cfg.segment("embed").unwrap().clone();
+        assert_eq!(&dense[emb.offset..emb.end()],
+                   &pruned[emb.offset..emb.end()]);
+    }
+}

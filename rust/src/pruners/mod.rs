@@ -1,0 +1,188 @@
+//! Baseline pruners (the paper's comparators, §5): every method the
+//! evaluation tables sweep, implemented over per-layer matrix views +
+//! calibration activations from the rust reference forward.
+//!
+//! All of these are *layer-wise reconstruction/saliency* methods — the
+//! practice the paper argues against (§2) — so they share the same
+//! skeleton: calibrate once on the dense model, then prune each
+//! prunable matrix independently.
+
+pub mod alloc;
+pub mod ladmm;
+pub mod magnitude;
+pub mod sparsegpt;
+pub mod wanda;
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::cli::Args;
+use crate::coordinator::retrain::{full_retrain, lora_retrain,
+                                  RetrainOptions};
+use crate::data;
+use crate::model::forward::{collect_calibration, CalibSet};
+use crate::model::Params;
+use crate::runtime::{ConfigEntry, Runtime};
+
+/// Number of calibration sequences (the 128-sequence convention of
+/// Frantar & Alistarh 2023, scaled to the CPU testbed).
+pub const CALIB_SEQS: usize = 64;
+
+/// Collect calibration statistics for `dense` on `train`.
+pub fn calibrate(cfg: &ConfigEntry, dense: &[f32], train: &[u32],
+                 seed: u64) -> Result<CalibSet> {
+    let params = Params::new(cfg, dense.to_vec());
+    let seqs = data::calibration(train, CALIB_SEQS, cfg.seq_len, seed);
+    collect_calibration(&params, &seqs)
+}
+
+/// One-shot (no gradient) pruning dispatch. `sparsity` is uniform
+/// per-layer unless the method carries its own allocation.
+pub fn prune_oneshot(rt: &Runtime, cfg: &ConfigEntry, method: &str,
+                     dense: &[f32], train: &[u32], sparsity: f64,
+                     args: &Args) -> Result<Vec<f32>> {
+    let uniform = uniform_alloc(cfg, sparsity);
+    match method {
+        "magnitude" => magnitude::prune(cfg, dense, &uniform),
+        "wanda" => {
+            let calib = calibrate(cfg, dense, train, 7)?;
+            wanda::prune(cfg, dense, &calib, &uniform)
+        }
+        "sparsegpt" => {
+            let calib = calibrate(cfg, dense, train, 7)?;
+            sparsegpt::prune(cfg, dense, &calib, &uniform)
+        }
+        "l-admm" => {
+            let calib = calibrate(cfg, dense, train, 7)?;
+            ladmm::prune(cfg, dense, &calib, &uniform,
+                         &ladmm::LAdmmOptions::default())
+        }
+        "alps" => {
+            let calib = calibrate(cfg, dense, train, 7)?;
+            ladmm::prune(cfg, dense, &calib, &uniform,
+                         &ladmm::LAdmmOptions::alps())
+        }
+        "wanda-owl" => {
+            let calib = calibrate(cfg, dense, train, 7)?;
+            let alloc = alloc::owl_allocation(cfg, dense, &calib, sparsity);
+            wanda::prune(cfg, dense, &calib, &alloc)
+        }
+        "wanda-full" => {
+            let calib = calibrate(cfg, dense, train, 7)?;
+            let pruned = wanda::prune(cfg, dense, &calib, &uniform)?;
+            let mask = mask_of(cfg, &pruned);
+            let opts = RetrainOptions::new(
+                args.usize_or("retrain-steps", 500)?,
+                args.f32_or("retrain-lr", 1e-3)?);
+            let (p, _) = full_retrain(rt, cfg, train, &pruned, &mask,
+                                      &opts)?;
+            Ok(p)
+        }
+        "wanda-lora" => {
+            let calib = calibrate(cfg, dense, train, 7)?;
+            let pruned = wanda::prune(cfg, dense, &calib, &uniform)?;
+            let mask = mask_of(cfg, &pruned);
+            let opts = RetrainOptions::new(
+                args.usize_or("retrain-steps", 500)?,
+                args.f32_or("retrain-lr", 3e-3)?);
+            let (p, _) = lora_retrain(rt, cfg, train, &pruned, &mask,
+                                      &opts)?;
+            Ok(p)
+        }
+        other => bail!("unknown pruning method '{other}'"),
+    }
+}
+
+/// Uniform per-segment sparsity allocation.
+pub fn uniform_alloc(cfg: &ConfigEntry, sparsity: f64)
+                     -> BTreeMap<String, f64> {
+    cfg.segments
+        .iter()
+        .filter(|s| s.prunable)
+        .map(|s| (s.name.clone(), sparsity))
+        .collect()
+}
+
+/// Flat keep-mask implied by the zeros of pruned params (prunable
+/// segments only; everything else 1).
+pub fn mask_of(cfg: &ConfigEntry, params: &[f32]) -> Vec<f32> {
+    let mut mask = vec![1.0f32; cfg.flat_len];
+    for seg in cfg.segments.iter().filter(|s| s.prunable) {
+        for i in seg.offset..seg.end() {
+            mask[i] = if params[i] == 0.0 { 0.0 } else { 1.0 };
+        }
+    }
+    mask
+}
+
+/// Shared helper: replace the prunable matrices of `dense` with the
+/// per-segment matrices produced by `f(segment_name, W, target_sparsity)`.
+pub fn map_prunable(cfg: &ConfigEntry, dense: &[f32],
+                    alloc: &BTreeMap<String, f64>,
+                    mut f: impl FnMut(&str, crate::tensor::Matrix, f64)
+                        -> Result<crate::tensor::Matrix>)
+                    -> Result<Vec<f32>> {
+    let mut out = dense.to_vec();
+    let params = Params::new(cfg, dense.to_vec());
+    for seg in cfg.segments.iter().filter(|s| s.prunable) {
+        let sp = alloc.get(&seg.name).copied().unwrap_or(0.0);
+        let w = params.matrix(&seg.name)?;
+        let new = f(&seg.name, w, sp)?;
+        anyhow::ensure!(new.rows * new.cols == seg.len());
+        out[seg.offset..seg.end()].copy_from_slice(&new.data);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+pub mod test_support {
+    use super::*;
+    use crate::model::fake_config;
+    use crate::util::rng::Rng;
+
+    /// Dense toy params + a calibration set from random walks.
+    pub fn toy_setup() -> (ConfigEntry, Vec<f32>, CalibSet) {
+        let cfg = fake_config();
+        let params = Params::init(&cfg, 3);
+        let mut rng = Rng::new(9);
+        let seqs: Vec<Vec<u32>> = (0..8)
+            .map(|_| (0..8).map(|_| rng.below(16) as u32).collect())
+            .collect();
+        let calib = collect_calibration(&params, &seqs).unwrap();
+        (cfg, params.flat, calib)
+    }
+
+    /// Achieved sparsity of a pruned flat vector over prunable segments.
+    pub fn sparsity_of(cfg: &ConfigEntry, flat: &[f32]) -> f64 {
+        Params::new(cfg, flat.to_vec()).sparsity()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_support::*;
+    use super::*;
+
+    #[test]
+    fn uniform_alloc_covers_prunables() {
+        let (cfg, _, _) = toy_setup();
+        let a = uniform_alloc(&cfg, 0.5);
+        assert_eq!(a.len(),
+                   cfg.segments.iter().filter(|s| s.prunable).count());
+        assert!(a.values().all(|&v| v == 0.5));
+    }
+
+    #[test]
+    fn mask_of_tracks_zeros() {
+        let (cfg, mut flat, _) = toy_setup();
+        let seg = cfg.segment("l0.attn.wq").unwrap().clone();
+        flat[seg.offset] = 0.0;
+        let m = mask_of(&cfg, &flat);
+        assert_eq!(m[seg.offset], 0.0);
+        assert_eq!(m[seg.offset + 1], 1.0);
+        // non-prunable zeros stay 1 (they are not "pruned")
+        let b1 = cfg.segment("l0.mlp.b1").unwrap().clone();
+        assert_eq!(m[b1.offset], 1.0);
+    }
+}

@@ -1,0 +1,87 @@
+//! Wanda (Sun et al. 2024): prune by |W_ij| * ||X_i||_2, compared within
+//! each output's input group — no weight update, only calibration norms.
+//!
+//! Our weights are stored (din, dout) for x @ W, so the comparison group
+//! for output neuron c is column c, and the activation norm indexes the
+//! *row* (input feature) i.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::model::forward::CalibSet;
+use crate::runtime::ConfigEntry;
+use crate::tensor::select::topk_mask;
+use crate::tensor::Matrix;
+
+pub fn prune(cfg: &ConfigEntry, dense: &[f32], calib: &CalibSet,
+             alloc: &BTreeMap<String, f64>) -> Result<Vec<f32>> {
+    super::map_prunable(cfg, dense, alloc, |name, w, sp| {
+        let stat = calib.get(name)
+            .with_context(|| format!("no calibration for {name}"))?;
+        Ok(prune_layer(&w, &stat.col_norms(), sp))
+    })
+}
+
+/// Prune one (din, dout) matrix given input-feature norms (len din).
+pub fn prune_layer(w: &Matrix, xnorms: &[f32], sparsity: f64) -> Matrix {
+    assert_eq!(xnorms.len(), w.rows);
+    let mut out = w.clone();
+    let keep_per_col =
+        ((1.0 - sparsity) * w.rows as f64).round() as usize;
+    let mut col_scores = vec![0.0f32; w.rows];
+    for c in 0..w.cols {
+        for r in 0..w.rows {
+            col_scores[r] = w.at(r, c).abs() * xnorms[r];
+        }
+        let mask = topk_mask(&col_scores, keep_per_col.min(w.rows));
+        for r in 0..w.rows {
+            if mask[r] == 0.0 {
+                *out.at_mut(r, c) = 0.0;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruners::test_support::*;
+    use crate::pruners::uniform_alloc;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn hits_target_sparsity() {
+        let (cfg, dense, calib) = toy_setup();
+        let pruned =
+            prune(&cfg, &dense, &calib, &uniform_alloc(&cfg, 0.5)).unwrap();
+        assert!((sparsity_of(&cfg, &pruned) - 0.5).abs() < 0.05);
+    }
+
+    #[test]
+    fn activation_norms_matter() {
+        // identical weights, one input feature with huge activations:
+        // its weights must survive
+        let mut rng = Rng::new(0);
+        let w = Matrix::randn(8, 4, 1.0, &mut rng);
+        let mut xn = vec![1.0f32; 8];
+        xn[3] = 1e4;
+        let pruned = prune_layer(&w, &xn, 0.5);
+        for c in 0..4 {
+            assert!(pruned.at(3, c) != 0.0, "high-activation row pruned");
+        }
+    }
+
+    #[test]
+    fn per_output_group_budget() {
+        let mut rng = Rng::new(1);
+        let w = Matrix::randn(16, 5, 1.0, &mut rng);
+        let xn = vec![1.0f32; 16];
+        let pruned = prune_layer(&w, &xn, 0.75);
+        for c in 0..5 {
+            let kept = (0..16).filter(|&r| pruned.at(r, c) != 0.0).count();
+            assert_eq!(kept, 4, "col {c}");
+        }
+    }
+}

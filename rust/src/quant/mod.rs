@@ -1,0 +1,465 @@
+//! Software low-precision codecs for ELSA-L state storage (paper §3.3).
+//!
+//! The coordinator stores the ADMM auxiliary states (z, u) and optionally
+//! the Adam moments in low precision between outer iterations, exactly
+//! the quant/dequant cycle of eq. (12)-(13): Q(x) = (round(x/s), s) with
+//! a per-tensor (or per-block) dynamic scale, R(q, s) = s*q. Codecs:
+//!
+//! - `Bf16`   — truncated-f32 storage (u in the paper's 27B run)
+//! - `Fp8E4M3`/`Fp8E5M2` — byte-table FP8 (z in the paper's 27B run)
+//! - `Int8`   — symmetric absmax INT8
+//! - `Int8Block` — block-wise absmax INT8 (the adam8bit analogue,
+//!   Dettmers et al. 2022)
+//!
+//! Every codec round-trips through an actual compact byte buffer so the
+//! memory accounting in the Fig-5 experiment reflects real storage.
+
+use std::sync::OnceLock;
+
+pub const FP8_E4M3_MAX: f32 = 448.0;
+pub const FP8_E5M2_MAX: f32 = 57344.0;
+
+/// Decode an E4M3 byte (1-4-3, bias 7; no inf, S.1111.111 = NaN).
+pub fn fp8_e4m3_decode(b: u8) -> f32 {
+    let sign = if b & 0x80 != 0 { -1.0f32 } else { 1.0 };
+    let exp = ((b >> 3) & 0x0f) as i32;
+    let man = (b & 0x07) as f32;
+    if exp == 0x0f && man == 7.0 {
+        return f32::NAN;
+    }
+    if exp == 0 {
+        // subnormal: man * 2^-9
+        sign * man * (2.0f32).powi(-9)
+    } else {
+        sign * (1.0 + man / 8.0) * (2.0f32).powi(exp - 7)
+    }
+}
+
+/// Decode an E5M2 byte (1-5-2, bias 15; IEEE-style inf/nan).
+pub fn fp8_e5m2_decode(b: u8) -> f32 {
+    let sign = if b & 0x80 != 0 { -1.0f32 } else { 1.0 };
+    let exp = ((b >> 2) & 0x1f) as i32;
+    let man = (b & 0x03) as f32;
+    if exp == 0x1f {
+        return if man == 0.0 { sign * f32::INFINITY } else { f32::NAN };
+    }
+    if exp == 0 {
+        sign * man * (2.0f32).powi(-16)
+    } else {
+        sign * (1.0 + man / 4.0) * (2.0f32).powi(exp - 15)
+    }
+}
+
+fn e4m3_table() -> &'static [(f32, u8)] {
+    static T: OnceLock<Vec<(f32, u8)>> = OnceLock::new();
+    T.get_or_init(|| build_table(fp8_e4m3_decode))
+}
+
+fn e5m2_table() -> &'static [(f32, u8)] {
+    static T: OnceLock<Vec<(f32, u8)>> = OnceLock::new();
+    T.get_or_init(|| build_table(fp8_e5m2_decode))
+}
+
+fn build_table(decode: fn(u8) -> f32) -> Vec<(f32, u8)> {
+    let mut t: Vec<(f32, u8)> = (0u16..256)
+        .map(|b| (decode(b as u8), b as u8))
+        .filter(|(v, _)| v.is_finite())
+        .collect();
+    t.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    t
+}
+
+/// Nearest-value FP8 encode via the sorted decode table.
+fn fp8_encode(x: f32, table: &[(f32, u8)]) -> u8 {
+    let x = if x.is_nan() { 0.0 } else { x };
+    let i = table.partition_point(|(v, _)| *v < x);
+    if i == 0 {
+        return table[0].1;
+    }
+    if i >= table.len() {
+        return table[table.len() - 1].1;
+    }
+    // nearest of neighbours (ties -> lower, adequate for storage)
+    let (lo, hi) = (table[i - 1], table[i]);
+    if (x - lo.0).abs() <= (hi.0 - x).abs() {
+        lo.1
+    } else {
+        hi.1
+    }
+}
+
+pub fn fp8_e4m3_encode(x: f32) -> u8 {
+    fp8_encode(x.clamp(-FP8_E4M3_MAX, FP8_E4M3_MAX), e4m3_table())
+}
+
+pub fn fp8_e5m2_encode(x: f32) -> u8 {
+    fp8_encode(x.clamp(-FP8_E5M2_MAX, FP8_E5M2_MAX), e5m2_table())
+}
+
+// Fast path: a 64 KB LUT keyed by the bf16 bits of the input maps
+// straight to the nearest FP8 code. bf16's 8 mantissa bits dominate
+// FP8's 2-3, so routing the nearest-value decision through bf16 loses
+// nothing measurable; this replaced a per-element binary search and took
+// the 1M-element quantize from 32.5 ms to ~1 ms (EXPERIMENTS.md §Perf).
+fn e4m3_lut() -> &'static [u8; 65536] {
+    static T: OnceLock<Box<[u8; 65536]>> = OnceLock::new();
+    T.get_or_init(|| {
+        let mut t = Box::new([0u8; 65536]);
+        for b in 0u32..65536 {
+            let x = bf16_decode(b as u16);
+            t[b as usize] = if x.is_finite() {
+                fp8_encode(x.clamp(-FP8_E4M3_MAX, FP8_E4M3_MAX),
+                           e4m3_table())
+            } else {
+                fp8_e4m3_encode(if x > 0.0 { FP8_E4M3_MAX }
+                                else if x < 0.0 { -FP8_E4M3_MAX }
+                                else { 0.0 })
+            };
+        }
+        t
+    })
+}
+
+/// LUT-accelerated E4M3 encode (bit-identical to `fp8_e4m3_encode` on
+/// every bf16-representable input; tested on the full grid).
+#[inline]
+pub fn fp8_e4m3_encode_fast(x: f32) -> u8 {
+    e4m3_lut()[bf16_encode(x) as usize]
+}
+
+/// bf16 = top 16 bits of f32 with round-to-nearest-even.
+pub fn bf16_encode(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let round = ((bits >> 16) & 1) + 0x7fff;
+    ((bits + round) >> 16) as u16
+}
+
+pub fn bf16_decode(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+// ---------------------------------------------------------------------
+// Vector codecs
+// ---------------------------------------------------------------------
+
+/// Storage precision for a state vector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    F32,
+    Bf16,
+    Fp8E4M3,
+    Fp8E5M2,
+    Int8,
+    /// block-wise absmax INT8 with the given block size (adam8bit style)
+    Int8Block(usize),
+    /// block-wise sqrt-companded unsigned 8-bit for NON-NEGATIVE tensors
+    /// (Adam second moments): code = round(255*sqrt(x/s)), decode =
+    /// (c/255)^2 * s. Quadratic spacing concentrates codes near zero —
+    /// first non-zero level ~1.5e-5*s vs 3.9e-3*s linear — which keeps
+    /// 1/sqrt(v_hat) bounded (a linear INT8 v zeroes small moments and
+    /// the Adam update explodes; the dynamic-quantization insight of
+    /// Dettmers et al. 2022).
+    U8Sqrt(usize),
+}
+
+impl Precision {
+    pub fn parse(s: &str) -> Option<Precision> {
+        Some(match s {
+            "f32" => Precision::F32,
+            "bf16" => Precision::Bf16,
+            "fp8" | "fp8e4m3" => Precision::Fp8E4M3,
+            "fp8e5m2" => Precision::Fp8E5M2,
+            "int8" => Precision::Int8,
+            "int8block" => Precision::Int8Block(256),
+            _ => return None,
+        })
+    }
+}
+
+/// A state vector held in its storage precision.
+#[derive(Debug, Clone)]
+pub enum StoredVec {
+    F32(Vec<f32>),
+    Bf16(Vec<u16>),
+    /// FP8 with a per-tensor dynamic scale (eq. 12): codes store x/s.
+    Fp8 { codes: Vec<u8>, scale: f32, e5m2: bool },
+    Int8 { codes: Vec<i8>, scale: f32 },
+    Int8Block { codes: Vec<i8>, scales: Vec<f32>, block: usize },
+    U8Sqrt { codes: Vec<u8>, scales: Vec<f32>, block: usize },
+}
+
+impl StoredVec {
+    /// Q: quantize a f32 vector into its storage form.
+    pub fn quantize(xs: &[f32], p: Precision) -> StoredVec {
+        match p {
+            Precision::F32 => StoredVec::F32(xs.to_vec()),
+            Precision::Bf16 => {
+                StoredVec::Bf16(xs.iter().map(|&x| bf16_encode(x)).collect())
+            }
+            Precision::Fp8E4M3 | Precision::Fp8E5M2 => {
+                let e5m2 = p == Precision::Fp8E5M2;
+                let vmax = if e5m2 { FP8_E5M2_MAX } else { FP8_E4M3_MAX };
+                let absmax = xs.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+                let scale = if absmax > 0.0 { absmax / vmax } else { 1.0 };
+                let codes = if e5m2 {
+                    xs.iter().map(|&x| fp8_e5m2_encode(x / scale))
+                        .collect()
+                } else {
+                    let inv = 1.0 / scale;
+                    xs.iter().map(|&x| fp8_e4m3_encode_fast(x * inv))
+                        .collect()
+                };
+                StoredVec::Fp8 { codes, scale, e5m2 }
+            }
+            Precision::Int8 => {
+                let absmax = xs.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+                let scale = if absmax > 0.0 { absmax / 127.0 } else { 1.0 };
+                let codes = xs
+                    .iter()
+                    .map(|&x| (x / scale).round().clamp(-127.0, 127.0) as i8)
+                    .collect();
+                StoredVec::Int8 { codes, scale }
+            }
+            Precision::Int8Block(block) => {
+                let mut codes = Vec::with_capacity(xs.len());
+                let mut scales = Vec::with_capacity(xs.len() / block + 1);
+                for chunk in xs.chunks(block) {
+                    let absmax =
+                        chunk.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+                    let scale =
+                        if absmax > 0.0 { absmax / 127.0 } else { 1.0 };
+                    scales.push(scale);
+                    codes.extend(chunk.iter().map(|&x| {
+                        (x / scale).round().clamp(-127.0, 127.0) as i8
+                    }));
+                }
+                StoredVec::Int8Block { codes, scales, block }
+            }
+            Precision::U8Sqrt(block) => {
+                let mut codes = Vec::with_capacity(xs.len());
+                let mut scales = Vec::with_capacity(xs.len() / block + 1);
+                for chunk in xs.chunks(block) {
+                    let absmax =
+                        chunk.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+                    let scale =
+                        if absmax > 0.0 { absmax } else { 1.0 };
+                    scales.push(scale);
+                    codes.extend(chunk.iter().map(|&x| {
+                        let r = (x.max(0.0) / scale).sqrt();
+                        (r * 255.0).round().clamp(0.0, 255.0) as u8
+                    }));
+                }
+                StoredVec::U8Sqrt { codes, scales, block }
+            }
+        }
+    }
+
+    /// R: rematerialize the f32 vector.
+    pub fn dequantize(&self) -> Vec<f32> {
+        match self {
+            StoredVec::F32(v) => v.clone(),
+            StoredVec::Bf16(v) => v.iter().map(|&b| bf16_decode(b)).collect(),
+            StoredVec::Fp8 { codes, scale, e5m2 } => {
+                // 256-entry decode LUT (powi per element was the decode
+                // bottleneck — EXPERIMENTS.md §Perf)
+                let dec = if *e5m2 { fp8_e5m2_decode as fn(u8) -> f32 }
+                          else { fp8_e4m3_decode as fn(u8) -> f32 };
+                let mut lut = [0.0f32; 256];
+                for (b, v) in lut.iter_mut().enumerate() {
+                    *v = dec(b as u8) * scale;
+                }
+                codes.iter().map(|&b| lut[b as usize]).collect()
+            }
+            StoredVec::Int8 { codes, scale } => {
+                codes.iter().map(|&c| c as f32 * scale).collect()
+            }
+            StoredVec::Int8Block { codes, scales, block } => codes
+                .chunks(*block)
+                .zip(scales.iter())
+                .flat_map(|(chunk, &s)| {
+                    chunk.iter().map(move |&c| c as f32 * s)
+                })
+                .collect(),
+            StoredVec::U8Sqrt { codes, scales, block } => codes
+                .chunks(*block)
+                .zip(scales.iter())
+                .flat_map(|(chunk, &s)| {
+                    chunk.iter().map(move |&c| {
+                        let r = c as f32 / 255.0;
+                        r * r * s
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    /// Actual storage footprint in bytes (the Fig-5 accounting).
+    pub fn mem_bytes(&self) -> usize {
+        match self {
+            StoredVec::F32(v) => v.len() * 4,
+            StoredVec::Bf16(v) => v.len() * 2,
+            StoredVec::Fp8 { codes, .. } => codes.len() + 4,
+            StoredVec::Int8 { codes, .. } => codes.len() + 4,
+            StoredVec::Int8Block { codes, scales, .. } => {
+                codes.len() + scales.len() * 4
+            }
+            StoredVec::U8Sqrt { codes, scales, .. } => {
+                codes.len() + scales.len() * 4
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            StoredVec::F32(v) => v.len(),
+            StoredVec::Bf16(v) => v.len(),
+            StoredVec::Fp8 { codes, .. } => codes.len(),
+            StoredVec::Int8 { codes, .. } => codes.len(),
+            StoredVec::Int8Block { codes, .. } => codes.len(),
+            StoredVec::U8Sqrt { codes, .. } => codes.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn e4m3_decode_known_values() {
+        assert_eq!(fp8_e4m3_decode(0x00), 0.0);
+        assert_eq!(fp8_e4m3_decode(0x38), 1.0); // exp=7, man=0
+        assert_eq!(fp8_e4m3_decode(0xb8), -1.0);
+        assert_eq!(fp8_e4m3_decode(0x7e), 448.0); // max finite
+        assert!(fp8_e4m3_decode(0x7f).is_nan());
+        // smallest subnormal = 2^-9
+        assert!((fp8_e4m3_decode(0x01) - 0.001953125).abs() < 1e-9);
+    }
+
+    #[test]
+    fn e5m2_decode_known_values() {
+        assert_eq!(fp8_e5m2_decode(0x3c), 1.0); // exp=15, man=0
+        assert_eq!(fp8_e5m2_decode(0x7b), 57344.0); // max finite
+        assert!(fp8_e5m2_decode(0x7c).is_infinite());
+    }
+
+    #[test]
+    fn fp8_encode_decode_exact_on_grid() {
+        for b in 0u16..256 {
+            let v = fp8_e4m3_decode(b as u8);
+            if !v.is_finite() {
+                continue;
+            }
+            let rt = fp8_e4m3_decode(fp8_e4m3_encode(v));
+            assert_eq!(rt, v, "byte {b:#x}");
+        }
+    }
+
+    #[test]
+    fn fp8_fast_lut_matches_reference_on_grid() {
+        // every bf16-exact value must encode identically via the LUT
+        for b in 0u16..=u16::MAX {
+            let x = bf16_decode(b);
+            if !x.is_finite() {
+                continue;
+            }
+            let slow =
+                fp8_e4m3_encode(x.clamp(-FP8_E4M3_MAX, FP8_E4M3_MAX));
+            let fast = fp8_e4m3_encode_fast(x);
+            assert_eq!(fp8_e4m3_decode(slow), fp8_e4m3_decode(fast),
+                       "bf16 bits {b:#x} ({x})");
+        }
+    }
+
+    #[test]
+    fn fp8_relative_error_bounded() {
+        let mut rng = Rng::new(0);
+        for _ in 0..2000 {
+            let x = rng.normal() * 10.0;
+            let rt = fp8_e4m3_decode(fp8_e4m3_encode(x));
+            if x.abs() > 0.02 {
+                // 3 mantissa bits -> <= ~6.7% relative step, half for RTN
+                assert!((rt - x).abs() / x.abs() < 0.0667,
+                        "x={x} rt={rt}");
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_roundtrip_precision() {
+        let mut rng = Rng::new(1);
+        for _ in 0..2000 {
+            let x = rng.normal() * 100.0;
+            let rt = bf16_decode(bf16_encode(x));
+            assert!((rt - x).abs() <= x.abs() * 0.004 + 1e-30, "x={x}");
+        }
+        assert_eq!(bf16_decode(bf16_encode(1.0)), 1.0);
+        assert_eq!(bf16_decode(bf16_encode(0.0)), 0.0);
+    }
+
+    #[test]
+    fn stored_vec_roundtrip_error_by_precision() {
+        let mut rng = Rng::new(2);
+        let xs: Vec<f32> = (0..4096).map(|_| rng.normal()).collect();
+        let absmax = xs.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+        for (p, tol_rel) in [
+            (Precision::F32, 0.0f32),
+            (Precision::Bf16, 0.004),
+            (Precision::Int8, 0.5 / 127.0),
+            (Precision::Int8Block(256), 0.5 / 127.0),
+        ] {
+            let sv = StoredVec::quantize(&xs, p);
+            let back = sv.dequantize();
+            let max_err = xs
+                .iter()
+                .zip(back.iter())
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(max_err <= tol_rel * absmax + 1e-7,
+                    "{p:?}: err {max_err}");
+        }
+    }
+
+    #[test]
+    fn blockwise_beats_per_tensor_on_outliers() {
+        // one huge outlier ruins a per-tensor scale but not block scales
+        let mut xs = vec![0.01f32; 4096];
+        xs[0] = 100.0;
+        let per_tensor = StoredVec::quantize(&xs, Precision::Int8);
+        let blockwise = StoredVec::quantize(&xs, Precision::Int8Block(256));
+        // compare outside the outlier's block: block scales recover the
+        // small values there, the per-tensor scale cannot
+        let err = |sv: &StoredVec| {
+            sv.dequantize()
+                .iter()
+                .zip(xs.iter())
+                .skip(256)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max)
+        };
+        assert!(err(&blockwise) < err(&per_tensor) * 0.1,
+                "block {} vs tensor {}", err(&blockwise), err(&per_tensor));
+    }
+
+    #[test]
+    fn memory_footprints() {
+        let xs = vec![1.0f32; 1024];
+        assert_eq!(StoredVec::quantize(&xs, Precision::F32).mem_bytes(),
+                   4096);
+        assert_eq!(StoredVec::quantize(&xs, Precision::Bf16).mem_bytes(),
+                   2048);
+        assert_eq!(
+            StoredVec::quantize(&xs, Precision::Fp8E4M3).mem_bytes(),
+            1028
+        );
+        assert_eq!(
+            StoredVec::quantize(&xs, Precision::Int8Block(256)).mem_bytes(),
+            1024 + 4 * 4
+        );
+    }
+}

@@ -1,0 +1,105 @@
+//! Result emitters: CSV + markdown tables into results/, indexed by
+//! EXPERIMENTS.md.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+/// A rectangular result table with named columns.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|c| c.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(),
+                   "row width mismatch in '{}'", self.title);
+        self.rows.push(cells);
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = self.columns.join(",") + "\n";
+        for r in &self.rows {
+            s += &r.join(",");
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut s = format!("### {}\n\n", self.title);
+        s += &format!("| {} |\n", self.columns.join(" | "));
+        s += &format!("|{}\n", "---|".repeat(self.columns.len()));
+        for r in &self.rows {
+            s += &format!("| {} |\n", r.join(" | "));
+        }
+        s
+    }
+
+    /// Write both `<id>.csv` and append to `<id>.md` under `dir`.
+    pub fn save(&self, dir: &Path, id: &str) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let csv = dir.join(format!("{id}.csv"));
+        std::fs::write(&csv, self.to_csv())?;
+        let md = dir.join(format!("{id}.md"));
+        let mut text = if md.exists() {
+            std::fs::read_to_string(&md)?
+        } else {
+            String::new()
+        };
+        text += &self.to_markdown();
+        text.push('\n');
+        std::fs::write(&md, text)?;
+        Ok(csv)
+    }
+}
+
+/// Format helpers.
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+pub fn f4(x: f64) -> String {
+    format!("{x:.4}")
+}
+
+pub fn pct(x: f64) -> String {
+    format!("{:.1}", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_and_markdown() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        assert_eq!(t.to_csv(), "a,b\n1,2\n");
+        let md = t.to_markdown();
+        assert!(md.contains("### demo"));
+        assert!(md.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn width_mismatch_panics() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

@@ -1,0 +1,257 @@
+//! Typed view of `artifacts/manifest.json` (written by python/compile/aot.py).
+//!
+//! The manifest is the single contract between the compile path and the
+//! rust hot path: artifact files, argument/output specs, the flat
+//! parameter layout, and the Adam hyperparameters baked into the HLO.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Value};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            _ => bail!("unknown dtype '{s}'"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl ArgSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub args: Vec<ArgSpec>,
+    pub outputs: Vec<ArgSpec>,
+}
+
+/// One contiguous named region of the flat parameter vector.
+#[derive(Debug, Clone)]
+pub struct Segment {
+    pub name: String,
+    pub offset: usize,
+    pub shape: Vec<usize>,
+    pub prunable: bool,
+    pub init: String,
+}
+
+impl Segment {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_matrix(&self) -> bool {
+        self.shape.len() == 2
+    }
+
+    pub fn end(&self) -> usize {
+        self.offset + self.len()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ConfigEntry {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub d_ff: usize,
+    pub lora_rank: usize,
+    pub lora_alpha: f32,
+    pub flat_len: usize,
+    pub lora_len: usize,
+    pub segments: Vec<Segment>,
+    pub lora_segments: Vec<Segment>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl ConfigEntry {
+    pub fn segment(&self, name: &str) -> Result<&Segment> {
+        self.segments
+            .iter()
+            .find(|s| s.name == name)
+            .with_context(|| format!("no segment '{name}'"))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("no artifact '{name}'"))
+    }
+
+    /// Prunable coordinate count (the denominator of every sparsity %).
+    pub fn prunable_len(&self) -> usize {
+        self.segments.iter().filter(|s| s.prunable).map(|s| s.len()).sum()
+    }
+
+    /// 0/1 mask over the flat vector marking prunable coordinates.
+    pub fn prunable_mask(&self) -> Vec<f32> {
+        let mut m = vec![0.0f32; self.flat_len];
+        for seg in self.segments.iter().filter(|s| s.prunable) {
+            m[seg.offset..seg.end()].fill(1.0);
+        }
+        m
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct AdamHp {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+}
+
+#[derive(Debug, Clone)]
+pub struct QuantDemo {
+    pub file: String,
+    pub n: usize,
+    pub vmax: f32,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub use_pallas: bool,
+    pub adam: AdamHp,
+    pub configs: BTreeMap<String, ConfigEntry>,
+    pub quant_demo: Option<QuantDemo>,
+}
+
+fn parse_args(v: &Value) -> Result<Vec<ArgSpec>> {
+    v.as_arr()?
+        .iter()
+        .map(|a| {
+            Ok(ArgSpec {
+                name: a.get("name")?.as_str()?.to_string(),
+                shape: a.get("shape")?.as_usize_vec()?,
+                dtype: DType::parse(a.get("dtype")?.as_str()?)?,
+            })
+        })
+        .collect()
+}
+
+fn parse_segments(v: &Value, with_prunable: bool) -> Result<Vec<Segment>> {
+    v.as_arr()?
+        .iter()
+        .map(|s| {
+            Ok(Segment {
+                name: s.get("name")?.as_str()?.to_string(),
+                offset: s.get("offset")?.as_usize()?,
+                shape: s.get("shape")?.as_usize_vec()?,
+                prunable: if with_prunable {
+                    s.get("prunable")?.as_bool()?
+                } else {
+                    false
+                },
+                init: s.get("init")?.as_str()?.to_string(),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = json::parse(&text).context("parsing manifest.json")?;
+
+        let adam_v = v.get("adam")?;
+        let adam = AdamHp {
+            beta1: adam_v.get("beta1")?.as_f64()? as f32,
+            beta2: adam_v.get("beta2")?.as_f64()? as f32,
+            eps: adam_v.get("eps")?.as_f64()? as f32,
+        };
+
+        let mut configs = BTreeMap::new();
+        for (name, c) in v.get("configs")?.as_obj()? {
+            let mut artifacts = BTreeMap::new();
+            for (aname, a) in c.get("artifacts")?.as_obj()? {
+                artifacts.insert(
+                    aname.clone(),
+                    ArtifactSpec {
+                        file: a.get("file")?.as_str()?.to_string(),
+                        args: parse_args(a.get("args")?)?,
+                        outputs: parse_args(a.get("outputs")?)?,
+                    },
+                );
+            }
+            let entry = ConfigEntry {
+                name: name.clone(),
+                vocab: c.get("vocab")?.as_usize()?,
+                d_model: c.get("d_model")?.as_usize()?,
+                n_layers: c.get("n_layers")?.as_usize()?,
+                n_heads: c.get("n_heads")?.as_usize()?,
+                seq_len: c.get("seq_len")?.as_usize()?,
+                batch: c.get("batch")?.as_usize()?,
+                eval_batch: c.get("eval_batch")?.as_usize()?,
+                d_ff: c.get("d_ff")?.as_usize()?,
+                lora_rank: c.get("lora_rank")?.as_usize()?,
+                lora_alpha: c.get("lora_alpha")?.as_f64()? as f32,
+                flat_len: c.get("flat_len")?.as_usize()?,
+                lora_len: c.get("lora_len")?.as_usize()?,
+                segments: parse_segments(c.get("segments")?, true)?,
+                lora_segments: parse_segments(c.get("lora_segments")?, false)?,
+                artifacts,
+            };
+            // integrity: segments must tile [0, flat_len) contiguously
+            let mut off = 0;
+            for seg in &entry.segments {
+                if seg.offset != off {
+                    bail!("manifest segment '{}' not contiguous", seg.name);
+                }
+                off = seg.end();
+            }
+            if off != entry.flat_len {
+                bail!("segments cover {off} != flat_len {}", entry.flat_len);
+            }
+            configs.insert(name.clone(), entry);
+        }
+
+        let quant_demo = match v.opt("quant_roundtrip") {
+            Some(q) => Some(QuantDemo {
+                file: q.get("file")?.as_str()?.to_string(),
+                n: q.get("n")?.as_usize()?,
+                vmax: q.get("vmax")?.as_f64()? as f32,
+            }),
+            None => None,
+        };
+
+        Ok(Manifest {
+            use_pallas: v.get("use_pallas")?.as_bool()?,
+            adam,
+            configs,
+            quant_demo,
+        })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ConfigEntry> {
+        self.configs
+            .get(name)
+            .with_context(|| format!("no config '{name}' in manifest"))
+    }
+}

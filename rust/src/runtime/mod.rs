@@ -1,0 +1,129 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute many.
+//!
+//! Pattern from /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`. Text
+//! (not serialized proto) is the interchange format — jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns them.
+//!
+//! Python never runs here: every graph was lowered once by `make
+//! artifacts` and is compiled lazily on first use, then cached for the
+//! lifetime of the `Runtime`.
+
+pub mod manifest;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable,
+          XlaComputation};
+
+pub use manifest::{AdamHp, ArgSpec, ArtifactSpec, ConfigEntry, DType,
+                   Manifest, Segment};
+
+pub struct Runtime {
+    client: PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+/// A compiled artifact plus its manifest spec (for arg validation).
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: PjRtLoadedExecutable,
+}
+
+impl Runtime {
+    /// Load the manifest in `dir` and create the CPU PJRT client.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        crate::debug!("runtime", "PJRT platform={} devices={}",
+                      client.platform_name(), client.device_count());
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Compile (or fetch the cached) artifact `art` of config `cfg`.
+    pub fn executable(&self, cfg: &str, art: &str) -> Result<Rc<Executable>> {
+        let key = format!("{cfg}/{art}");
+        if let Some(e) = self.cache.borrow().get(&key) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.config(cfg)?.artifact(art)?.clone();
+        let exe = self.compile_file(&spec.file)?;
+        let e = Rc::new(Executable { spec, exe });
+        self.cache.borrow_mut().insert(key, e.clone());
+        Ok(e)
+    }
+
+    /// Compile a standalone artifact (e.g. the quant round-trip demo).
+    pub fn compile_file(&self, file: &str) -> Result<PjRtLoadedExecutable> {
+        let path = self.dir.join(file);
+        let t = crate::util::timer::Timer::start();
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        crate::debug!("runtime", "compiled {} in {:.2}s", file, t.seconds());
+        Ok(exe)
+    }
+
+    /// Execute with positional literals; unwraps the 1-tuple convention
+    /// (aot.py lowers with return_tuple=True) into the flat output list.
+    pub fn execute(&self, exe: &Executable, args: &[Literal])
+                   -> Result<Vec<Literal>> {
+        if args.len() != exe.spec.args.len() {
+            bail!("artifact '{}' expects {} args, got {}",
+                  exe.spec.file, exe.spec.args.len(), args.len());
+        }
+        let result = exe.exe.execute::<Literal>(args)?;
+        let lit = result[0][0].to_literal_sync()?;
+        let outs = lit.to_tuple()?;
+        if outs.len() != exe.spec.outputs.len() {
+            bail!("artifact '{}' returned {} outputs, expected {}",
+                  exe.spec.file, outs.len(), exe.spec.outputs.len());
+        }
+        Ok(outs)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Literal plumbing
+// ---------------------------------------------------------------------
+
+/// f32 slice -> rank-1 literal.
+pub fn lit_f32(xs: &[f32]) -> Literal {
+    Literal::vec1(xs)
+}
+
+/// f32 scalar literal (rank 0).
+pub fn lit_scalar(x: f32) -> Literal {
+    Literal::scalar(x)
+}
+
+/// i32 matrix -> rank-2 literal of shape (rows, cols).
+pub fn lit_i32_2d(xs: &[i32], rows: usize, cols: usize) -> Result<Literal> {
+    assert_eq!(xs.len(), rows * cols);
+    Ok(Literal::vec1(xs).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// literal -> Vec<f32> (any shape, flattened).
+pub fn to_f32(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// rank-0 f32 literal -> f32.
+pub fn to_scalar(lit: &Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}

@@ -1,0 +1,196 @@
+//! Cholesky factorization + solves (f64 accumulation for stability).
+//!
+//! SparseGPT and ALPS both need `H^{-1}` of the damped layer Hessian
+//! `H = X^T X + eps I`; we factor once and reuse triangular solves.
+
+use anyhow::{bail, Result};
+
+use super::Matrix;
+
+/// Lower-triangular Cholesky factor L with H = L L^T.
+#[derive(Debug, Clone)]
+pub struct Cholesky {
+    pub n: usize,
+    /// row-major lower triangle (full n x n storage, upper = 0)
+    pub l: Vec<f64>,
+}
+
+impl Cholesky {
+    /// Factor a symmetric positive-definite matrix.
+    pub fn factor(h: &Matrix) -> Result<Cholesky> {
+        if h.rows != h.cols {
+            bail!("cholesky: matrix not square");
+        }
+        let n = h.rows;
+        let mut l = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = h.at(i, j) as f64;
+                for k in 0..j {
+                    sum -= l[i * n + k] * l[j * n + k];
+                }
+                if i == j {
+                    if sum <= 0.0 {
+                        bail!("cholesky: not positive definite at {i} \
+                               (pivot {sum:.3e}); increase damping");
+                    }
+                    l[i * n + i] = sum.sqrt();
+                } else {
+                    l[i * n + j] = sum / l[j * n + j];
+                }
+            }
+        }
+        Ok(Cholesky { n, l })
+    }
+
+    /// Solve H x = b.
+    pub fn solve(&self, b: &[f32]) -> Vec<f32> {
+        let n = self.n;
+        debug_assert_eq!(b.len(), n);
+        // forward: L y = b
+        let mut y = vec![0.0f64; n];
+        for i in 0..n {
+            let mut sum = b[i] as f64;
+            for k in 0..i {
+                sum -= self.l[i * n + k] * y[k];
+            }
+            y[i] = sum / self.l[i * n + i];
+        }
+        // backward: L^T x = y
+        let mut x = vec![0.0f64; n];
+        for i in (0..n).rev() {
+            let mut sum = y[i];
+            for k in i + 1..n {
+                sum -= self.l[k * n + i] * x[k];
+            }
+            x[i] = sum / self.l[i * n + i];
+        }
+        x.into_iter().map(|v| v as f32).collect()
+    }
+
+    /// Full inverse H^{-1} (needed column-wise by SparseGPT's OBS update).
+    pub fn inverse(&self) -> Matrix {
+        let n = self.n;
+        let mut inv = Matrix::zeros(n, n);
+        let mut e = vec![0.0f32; n];
+        for j in 0..n {
+            e[j] = 1.0;
+            let col = self.solve(&e);
+            e[j] = 0.0;
+            for i in 0..n {
+                *inv.at_mut(i, j) = col[i];
+            }
+        }
+        inv
+    }
+
+    /// diag(H^{-1}) without materializing the full inverse.
+    pub fn inverse_diag(&self) -> Vec<f32> {
+        // Columns of L^{-1}: solve L v = e_j; then (H^{-1})_jj = ||v_j||^2
+        // restricted to rows >= j. We do it column by column.
+        let n = self.n;
+        let mut diag = vec![0.0f32; n];
+        let mut v = vec![0.0f64; n];
+        for j in 0..n {
+            for x in v.iter_mut() {
+                *x = 0.0;
+            }
+            v[j] = 1.0;
+            for i in j..n {
+                let mut sum = v[i];
+                for k in j..i {
+                    sum -= self.l[i * n + k] * v[k];
+                }
+                v[i] = sum / self.l[i * n + i];
+            }
+            diag[j] = v[j..n].iter().map(|x| x * x).sum::<f64>() as f32;
+        }
+        diag
+    }
+}
+
+/// Add `eps * mean(diag)` damping in place (SparseGPT convention).
+pub fn damp(h: &mut Matrix, eps: f32) {
+    let n = h.rows;
+    let mean_diag: f32 =
+        (0..n).map(|i| h.at(i, i)).sum::<f32>() / n as f32;
+    let add = eps * mean_diag.max(1e-8);
+    for i in 0..n {
+        *h.at_mut(i, i) += add;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let a = Matrix::randn(n + 4, n, 1.0, &mut rng);
+        let mut h = a.gram();
+        damp(&mut h, 0.01);
+        h
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let h = spd(8, 0);
+        let ch = Cholesky::factor(&h).unwrap();
+        let n = h.rows;
+        for i in 0..n {
+            for j in 0..n {
+                let mut v = 0.0;
+                for k in 0..n {
+                    v += ch.l[i * n + k] * ch.l[j * n + k];
+                }
+                assert!((v as f32 - h.at(i, j)).abs() < 1e-3,
+                        "({i},{j}): {v} vs {}", h.at(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn solve_inverts() {
+        let h = spd(10, 1);
+        let ch = Cholesky::factor(&h).unwrap();
+        let mut rng = Rng::new(2);
+        let b: Vec<f32> = (0..10).map(|_| rng.normal()).collect();
+        let x = ch.solve(&b);
+        let back = h.matvec(&x);
+        for (u, v) in back.iter().zip(b.iter()) {
+            assert!((u - v).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn inverse_matches_solve() {
+        let h = spd(6, 3);
+        let ch = Cholesky::factor(&h).unwrap();
+        let inv = ch.inverse();
+        let prod = h.matmul(&inv);
+        for i in 0..6 {
+            for j in 0..6 {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((prod.at(i, j) - expect).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_diag_matches_full() {
+        let h = spd(7, 4);
+        let ch = Cholesky::factor(&h).unwrap();
+        let inv = ch.inverse();
+        let diag = ch.inverse_diag();
+        for i in 0..7 {
+            assert!((diag[i] - inv.at(i, i)).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let h = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]);
+        assert!(Cholesky::factor(&h).is_err());
+    }
+}

@@ -1,0 +1,231 @@
+//! Dense f32 tensor substrate: matrices, GEMM/GEMV, Cholesky, selection.
+//!
+//! This is the linear-algebra floor under the baseline pruners
+//! (SparseGPT's Hessian solves, L-ADMM/ALPS reconstruction), the rust
+//! reference forward, and the sparse-engine comparisons. Deliberately
+//! f32-only and row-major.
+
+pub mod linalg;
+pub mod select;
+
+use crate::util::rng::Rng;
+
+/// Row-major f32 matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Rng) -> Self {
+        let data = (0..rows * cols).map(|_| rng.normal() * std).collect();
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// C = A @ B, ikj loop order (streaming, cache-friendly).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for (p, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue; // free sparsity win for pruned matrices
+                }
+                let brow = &other.data[p * n..(p + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// y = A @ x (GEMV).
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(self.cols, x.len());
+        let mut y = vec![0.0f32; self.rows];
+        for r in 0..self.rows {
+            let row = self.row(r);
+            let mut acc = 0.0f32;
+            for (a, b) in row.iter().zip(x.iter()) {
+                acc += a * b;
+            }
+            y[r] = acc;
+        }
+        y
+    }
+
+    /// y = A^T @ x without materializing the transpose.
+    pub fn t_matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(self.rows, x.len());
+        let mut y = vec![0.0f32; self.cols];
+        for r in 0..self.rows {
+            let xv = x[r];
+            if xv == 0.0 {
+                continue;
+            }
+            let row = self.row(r);
+            for (yj, &a) in y.iter_mut().zip(row.iter()) {
+                *yj += xv * a;
+            }
+        }
+        y
+    }
+
+    /// Gram matrix A^T A (the layer-wise Hessian proxy X^T X).
+    pub fn gram(&self) -> Matrix {
+        let n = self.cols;
+        let mut g = Matrix::zeros(n, n);
+        for r in 0..self.rows {
+            let row = self.row(r);
+            for i in 0..n {
+                let ri = row[i];
+                if ri == 0.0 {
+                    continue;
+                }
+                let grow = &mut g.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    grow[j] += ri * row[j];
+                }
+            }
+        }
+        g
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.data.iter().filter(|x| **x != 0.0).count()
+    }
+}
+
+/// Elementwise vector helpers used across the coordinator.
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * xi;
+    }
+}
+
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b.iter()).map(|(x, y)| x * y).sum()
+}
+
+pub fn l2(a: &[f32]) -> f32 {
+    dot(a, a).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(0);
+        let a = Matrix::randn(5, 7, 1.0, &mut rng);
+        let i = Matrix::eye(7);
+        assert_eq!(a.matmul(&i), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![5.0, 6.0, 7.0, 8.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(6, 4, 1.0, &mut rng);
+        let x: Vec<f32> = (0..4).map(|_| rng.normal()).collect();
+        let xm = Matrix::from_vec(4, 1, x.clone());
+        let via_mm = a.matmul(&xm);
+        let via_mv = a.matvec(&x);
+        for (u, v) in via_mm.data.iter().zip(via_mv.iter()) {
+            assert!((u - v).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn t_matvec_matches_transpose() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(6, 4, 1.0, &mut rng);
+        let x: Vec<f32> = (0..6).map(|_| rng.normal()).collect();
+        let direct = a.t_matvec(&x);
+        let via_t = a.transpose().matvec(&x);
+        for (u, v) in direct.iter().zip(via_t.iter()) {
+            assert!((u - v).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn gram_is_xtx() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::randn(8, 3, 1.0, &mut rng);
+        let g = a.gram();
+        let expect = a.transpose().matmul(&a);
+        for (u, v) in g.data.iter().zip(expect.data.iter()) {
+            assert!((u - v).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::randn(3, 5, 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+}

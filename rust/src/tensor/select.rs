@@ -1,0 +1,149 @@
+//! Selection: k-th largest threshold + top-k masks via quickselect.
+//!
+//! The ELSA z-update is a *global* projection onto `||z||_0 <= k` over a
+//! multi-million-entry score vector every `interval_k` steps — an O(d)
+//! quickselect instead of an O(d log d) sort is the difference between
+//! the projection being free and being the coordinator bottleneck
+//! (see EXPERIMENTS.md §Perf).
+
+use crate::util::rng::Rng;
+
+/// Value of the k-th largest element (1-based k) of `xs`, O(n) expected.
+/// NaNs are treated as -inf (never selected).
+pub fn kth_largest(xs: &[f32], k: usize) -> f32 {
+    assert!(k >= 1 && k <= xs.len(), "k={k} out of range n={}", xs.len());
+    let mut buf: Vec<f32> =
+        xs.iter().map(|&x| if x.is_nan() { f32::NEG_INFINITY } else { x })
+            .collect();
+    let idx = k - 1; // select index `idx` in descending order
+    let mut rng = Rng::new(0x9e3779b97f4a7c15);
+    let (mut lo, mut hi) = (0usize, buf.len());
+    loop {
+        if hi - lo <= 16 {
+            let slice = &mut buf[lo..hi];
+            slice.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            return buf[idx];
+        }
+        let pivot = buf[lo + rng.below(hi - lo)];
+        // three-way partition (descending): [> pivot | == pivot | < pivot]
+        let (mut i, mut j, mut p) = (lo, lo, hi);
+        while j < p {
+            if buf[j] > pivot {
+                buf.swap(i, j);
+                i += 1;
+                j += 1;
+            } else if buf[j] < pivot {
+                p -= 1;
+                buf.swap(j, p);
+            } else {
+                j += 1;
+            }
+        }
+        if idx < i {
+            hi = i;
+        } else if idx < p {
+            return pivot;
+        } else {
+            lo = p;
+        }
+    }
+}
+
+/// 0/1 mask keeping exactly `k` entries with the largest scores.
+/// Ties at the threshold are broken by index order (first come first kept)
+/// so the mask cardinality is exact — required for exact-sparsity claims.
+pub fn topk_mask(scores: &[f32], k: usize) -> Vec<f32> {
+    let n = scores.len();
+    let mut mask = vec![0.0f32; n];
+    if k == 0 {
+        return mask;
+    }
+    if k >= n {
+        mask.fill(1.0);
+        return mask;
+    }
+    let thr = kth_largest(scores, k);
+    let mut kept = 0usize;
+    // strictly-above first
+    for (m, &s) in mask.iter_mut().zip(scores.iter()) {
+        if s > thr {
+            *m = 1.0;
+            kept += 1;
+        }
+    }
+    // fill remaining budget from entries equal to the threshold
+    if kept < k {
+        for (m, &s) in mask.iter_mut().zip(scores.iter()) {
+            if *m == 0.0 && s == thr {
+                *m = 1.0;
+                kept += 1;
+                if kept == k {
+                    break;
+                }
+            }
+        }
+    }
+    debug_assert_eq!(kept, k);
+    mask
+}
+
+/// Indices of the top-k scores (order unspecified).
+pub fn topk_indices(scores: &[f32], k: usize) -> Vec<usize> {
+    topk_mask(scores, k)
+        .iter()
+        .enumerate()
+        .filter(|(_, m)| **m > 0.0)
+        .map(|(i, _)| i)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn kth_matches_sort() {
+        let mut rng = Rng::new(7);
+        for n in [1usize, 2, 17, 100, 1000] {
+            let xs: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let mut sorted = xs.clone();
+            sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            for k in [1, n / 2 + 1, n] {
+                assert_eq!(kth_largest(&xs, k), sorted[k - 1], "n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn topk_mask_exact_cardinality() {
+        let mut rng = Rng::new(8);
+        let xs: Vec<f32> = (0..5000).map(|_| rng.normal()).collect();
+        for k in [0usize, 1, 100, 2500, 4999, 5000] {
+            let m = topk_mask(&xs, k);
+            let kept = m.iter().filter(|x| **x > 0.0).count();
+            assert_eq!(kept, k);
+        }
+    }
+
+    #[test]
+    fn topk_mask_with_ties() {
+        let xs = vec![1.0f32; 100];
+        let m = topk_mask(&xs, 37);
+        assert_eq!(m.iter().filter(|x| **x > 0.0).count(), 37);
+    }
+
+    #[test]
+    fn topk_keeps_largest() {
+        let xs = vec![5.0, -1.0, 3.0, 0.5, 4.0];
+        let m = topk_mask(&xs, 2);
+        assert_eq!(m, vec![1.0, 0.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn nan_never_selected() {
+        let xs = vec![f32::NAN, 1.0, 2.0];
+        let m = topk_mask(&xs, 2);
+        assert_eq!(m, vec![0.0, 1.0, 1.0]);
+    }
+}

@@ -1,0 +1,86 @@
+//! Minimal benchmark harness (criterion is not in the offline vendor
+//! set). Warmup + timed iterations with median/MAD reporting, and a
+//! throughput helper. Used by every target in rust/benches (all declared
+//! `harness = false`).
+
+use std::time::Instant;
+
+use super::stats::Summary;
+
+pub struct BenchResult {
+    pub name: String,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn per_iter_pretty(&self) -> String {
+        fmt_ns(self.median_ns)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Run `f` repeatedly: a few warmup calls, then timed batches until
+/// `budget_ms` of measurement or `max_iters`, whichever first.
+pub fn bench(name: &str, budget_ms: u64, mut f: impl FnMut()) -> BenchResult {
+    // warmup
+    for _ in 0..3 {
+        f();
+    }
+    let budget = std::time::Duration::from_millis(budget_ms);
+    let mut samples = Summary::new();
+    let start = Instant::now();
+    let mut iters = 0usize;
+    while start.elapsed() < budget && iters < 1_000_000 {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+        iters += 1;
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        median_ns: samples.median(),
+        mean_ns: samples.mean(),
+        std_ns: samples.std(),
+        iters,
+    };
+    println!("{:<44} {:>12}/iter   ({} iters, sd {})", r.name,
+             r.per_iter_pretty(), r.iters, fmt_ns(r.std_ns));
+    r
+}
+
+/// Report a throughput line derived from a bench result.
+pub fn throughput(r: &BenchResult, units: f64, unit_name: &str) {
+    let per_sec = units / (r.median_ns / 1e9);
+    println!("{:<44} {:>12.2} {unit_name}/s", format!("  -> {}", r.name),
+             per_sec);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut x = 0u64;
+        let r = bench("noop-ish", 10, || {
+            x = x.wrapping_add(1);
+            std::hint::black_box(x);
+        });
+        assert!(r.iters > 10);
+        assert!(r.median_ns >= 0.0);
+    }
+}

@@ -1,0 +1,58 @@
+//! Leveled stderr logger with elapsed-time prefixes.
+//!
+//! `ELSA_LOG=debug|info|warn|quiet` selects verbosity (default info).
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Quiet = 3,
+}
+
+static START: OnceLock<Instant> = OnceLock::new();
+static LEVEL: OnceLock<Level> = OnceLock::new();
+
+fn level() -> Level {
+    *LEVEL.get_or_init(|| match std::env::var("ELSA_LOG").as_deref() {
+        Ok("debug") => Level::Debug,
+        Ok("warn") => Level::Warn,
+        Ok("quiet") => Level::Quiet,
+        _ => Level::Info,
+    })
+}
+
+pub fn log(lvl: Level, tag: &str, msg: &str) {
+    if lvl < level() {
+        return;
+    }
+    let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
+    eprintln!("[{t:8.2}s {tag}] {msg}");
+}
+
+#[macro_export]
+macro_rules! info {
+    ($tag:expr, $($arg:tt)*) => {
+        $crate::util::logger::log(
+            $crate::util::logger::Level::Info, $tag, &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($tag:expr, $($arg:tt)*) => {
+        $crate::util::logger::log(
+            $crate::util::logger::Level::Debug, $tag, &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($tag:expr, $($arg:tt)*) => {
+        $crate::util::logger::log(
+            $crate::util::logger::Level::Warn, $tag, &format!($($arg)*))
+    };
+}

@@ -1,0 +1,41 @@
+//! Small self-contained substrates the rest of the crate builds on.
+//!
+//! The offline vendor set ships only the `xla` dependency closure (no
+//! serde/clap/rayon/criterion), so JSON, RNG, statistics, timing and the
+//! bench harness are implemented here and unit-tested like any other
+//! module.
+
+pub mod bench;
+pub mod json;
+pub mod logger;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+/// Format a byte count as a human-readable size.
+pub fn human_bytes(n: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{} {}", n, UNITS[0])
+    } else {
+        format!("{:.2} {}", v, UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KB");
+        assert_eq!(human_bytes(5 * 1024 * 1024), "5.00 MB");
+    }
+}

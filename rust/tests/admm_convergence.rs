@@ -1,0 +1,204 @@
+//! Property tests for the convergence theory (paper §4 / Appendix A).
+//!
+//! Corollary 4.5 / Theorem 4.6 are exercised on a convex quadratic
+//! f(x) = 1/2 (x-a)^T D (x-a) where every ADMM subproblem has a closed
+//! form, so the tests isolate the *algorithm* (x/z/u updates, the
+//! projection, the quantized state cycle) from stochastic-gradient noise:
+//!
+//!  - monotone decrease of the augmented Lagrangian when λ satisfies the
+//!    Cor-4.5 condition λ^{-1}β² - (λ-μ)/2 < 0 (here μ=0 ⇒ λ > √2 β),
+//!  - primal residual ‖x-z‖ → 0,
+//!  - λ-stationarity of the limit (Def 4.4): the support of x survives
+//!    one projected-gradient step with stepsize 1/λ,
+//!  - ELSA-L (Thm 4.6): the INT8-quantized state cycle still converges
+//!    to feasibility when λ absorbs the quantization noise γ, and the
+//!    quantized trajectory tracks the exact one.
+
+use elsa::tensor::select::topk_mask;
+use elsa::quant::{Precision, StoredVec};
+use elsa::util::rng::Rng;
+
+struct Quad {
+    d: Vec<f64>, // diagonal Hessian
+    a: Vec<f64>, // minimizer
+}
+
+impl Quad {
+    fn new(n: usize, seed: u64) -> Quad {
+        let mut rng = Rng::new(seed);
+        Quad {
+            d: (0..n).map(|_| 0.5 + 4.0 * rng.f64()).collect(),
+            a: (0..n).map(|_| rng.normal() as f64 * 2.0).collect(),
+        }
+    }
+
+    fn beta(&self) -> f64 {
+        self.d.iter().cloned().fold(0.0, f64::max)
+    }
+
+    fn f(&self, x: &[f64]) -> f64 {
+        x.iter()
+            .zip(self.d.iter().zip(self.a.iter()))
+            .map(|(x, (d, a))| 0.5 * d * (x - a) * (x - a))
+            .sum()
+    }
+
+    fn grad(&self, x: &[f64]) -> Vec<f64> {
+        x.iter()
+            .zip(self.d.iter().zip(self.a.iter()))
+            .map(|(x, (d, a))| d * (x - a))
+            .collect()
+    }
+
+    /// exact x-update: argmin f(x) + lam/2 ||x - z + u||^2
+    fn x_update(&self, z: &[f64], u: &[f64], lam: f64) -> Vec<f64> {
+        (0..z.len())
+            .map(|i| {
+                (self.d[i] * self.a[i] + lam * (z[i] - u[i]))
+                    / (self.d[i] + lam)
+            })
+            .collect()
+    }
+}
+
+fn project_topk(v: &[f64], k: usize) -> Vec<f64> {
+    let scores: Vec<f32> = v.iter().map(|x| (x * x) as f32).collect();
+    let mask = topk_mask(&scores, k);
+    v.iter()
+        .zip(mask.iter())
+        .map(|(x, m)| if *m > 0.0 { *x } else { 0.0 })
+        .collect()
+}
+
+fn aug_lagrangian(q: &Quad, x: &[f64], z: &[f64], u: &[f64], lam: f64)
+                  -> f64 {
+    // L = f(x) + lam/2 ||x-z+u||^2 - lam/2 ||u||^2 (scaled form, eq. 6)
+    let pen: f64 = x.iter().zip(z.iter().zip(u.iter()))
+        .map(|(x, (z, u))| (x - z + u) * (x - z + u))
+        .sum();
+    let uu: f64 = u.iter().map(|u| u * u).sum();
+    q.f(x) + 0.5 * lam * (pen - uu)
+}
+
+struct AdmmRun {
+    x: Vec<f64>,
+    z: Vec<f64>,
+    residuals: Vec<f64>,
+    lagrangian: Vec<f64>,
+}
+
+fn run_admm(q: &Quad, k: usize, lam: f64, iters: usize,
+            quant: Option<Precision>) -> AdmmRun {
+    let n = q.d.len();
+    let mut z = project_topk(&q.a, k);
+    let mut u = vec![0.0f64; n];
+    let mut x = vec![0.0f64; n];
+    let mut residuals = vec![];
+    let mut lagrangian = vec![];
+    for _ in 0..iters {
+        x = q.x_update(&z, &u, lam);
+        let xu: Vec<f64> =
+            x.iter().zip(u.iter()).map(|(a, b)| a + b).collect();
+        z = project_topk(&xu, k);
+        for i in 0..n {
+            u[i] += x[i] - z[i];
+        }
+        if let Some(p) = quant {
+            // ELSA-L: states live in low precision between iterations
+            let zf: Vec<f32> = z.iter().map(|v| *v as f32).collect();
+            let uf: Vec<f32> = u.iter().map(|v| *v as f32).collect();
+            z = StoredVec::quantize(&zf, p).dequantize()
+                .iter().map(|v| *v as f64).collect();
+            u = StoredVec::quantize(&uf, p).dequantize()
+                .iter().map(|v| *v as f64).collect();
+        }
+        let res: f64 = x.iter().zip(z.iter())
+            .map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
+        residuals.push(res);
+        lagrangian.push(aug_lagrangian(q, &x, &z, &u, lam));
+    }
+    AdmmRun { x, z, residuals, lagrangian }
+}
+
+const N: usize = 64;
+const K: usize = 12;
+
+#[test]
+fn lagrangian_decreases_under_cor45_condition() {
+    let q = Quad::new(N, 0);
+    // Cor 4.5 (mu = 0): lambda^{-1} beta^2 - lambda/2 < 0 <=> lam > √2 β
+    let lam = 1.5 * q.beta() * std::f64::consts::SQRT_2;
+    let run = run_admm(&q, K, lam, 200, None);
+    // monotone non-increase after the first few iterations
+    let mut violations = 0;
+    for w in run.lagrangian.windows(2).skip(5) {
+        if w[1] > w[0] + 1e-9 {
+            violations += 1;
+        }
+    }
+    assert_eq!(violations, 0,
+               "augmented Lagrangian increased {violations} times");
+}
+
+#[test]
+fn primal_residual_vanishes() {
+    let q = Quad::new(N, 1);
+    let lam = 2.0 * q.beta();
+    let run = run_admm(&q, K, lam, 400, None);
+    let last = *run.residuals.last().unwrap();
+    assert!(last < 1e-6, "residual did not vanish: {last}");
+    // and the residual sequence trends down by orders of magnitude
+    assert!(last < run.residuals[0] * 1e-4);
+}
+
+#[test]
+fn limit_point_is_lambda_stationary() {
+    let q = Quad::new(N, 2);
+    let lam = 2.0 * q.beta();
+    let run = run_admm(&q, K, lam, 500, None);
+    // Def 4.4: x̄ ∈ argmin_{S} ‖x - (x̄ - ∇f(x̄)/λ)‖, i.e. projecting the
+    // gradient step onto S must recover x̄'s support and values.
+    let g = q.grad(&run.x);
+    let step: Vec<f64> = run.x.iter().zip(g.iter())
+        .map(|(x, g)| x - g / lam).collect();
+    let proj = project_topk(&step, K);
+    let supp = |v: &[f64]| -> Vec<usize> {
+        v.iter().enumerate().filter(|(_, x)| **x != 0.0)
+            .map(|(i, _)| i).collect()
+    };
+    assert_eq!(supp(&proj), supp(&run.z), "support not stationary");
+    // and x is the constrained optimum on that support: gradient is zero
+    // there (for a separable quadratic, x_i = a_i on the support)
+    for i in supp(&run.z) {
+        assert!((run.x[i] - q.a[i]).abs() < 1e-6,
+                "non-optimal on support at {i}");
+    }
+}
+
+#[test]
+fn elsa_l_converges_with_quantized_states() {
+    // Thm 4.6: with λ large enough relative to the quantization
+    // contraction γ, the low-precision cycle still reaches feasibility.
+    let q = Quad::new(N, 3);
+    let lam = 4.0 * q.beta();
+    let exact = run_admm(&q, K, lam, 300, None);
+    let quant = run_admm(&q, K, lam, 300, Some(Precision::Int8Block(64)));
+    let res_q = *quant.residuals.last().unwrap();
+    // residual shrinks to the quantization noise floor
+    assert!(res_q < quant.residuals[0] * 1e-2,
+            "quantized run did not contract: {res_q}");
+    // the quantized solution tracks the exact one on most coordinates
+    let agree = exact.z.iter().zip(quant.z.iter())
+        .filter(|(a, b)| (a.abs() > 1e-12) == (b.abs() > 1e-12))
+        .count();
+    assert!(agree as f64 >= 0.9 * N as f64,
+            "supports diverged: {agree}/{N}");
+}
+
+#[test]
+fn sparsity_constraint_always_feasible() {
+    let q = Quad::new(N, 4);
+    let run = run_admm(&q, K, 2.0 * q.beta(), 100, None);
+    let nnz = run.z.iter().filter(|x| **x != 0.0).count();
+    assert!(nnz <= K);
+}

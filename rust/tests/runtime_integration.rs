@@ -1,0 +1,149 @@
+//! Integration tests across the runtime boundary: the AOT HLO artifacts
+//! and the rust-side model must agree numerically.
+//!
+//! These tests need `make artifacts` to have run; they are skipped (with
+//! a loud message) when artifacts/ is absent so `cargo test` stays green
+//! in a fresh checkout.
+
+use std::path::{Path, PathBuf};
+
+use elsa::data::Dataset;
+use elsa::model::{forward, Params};
+use elsa::runtime::{self, Runtime};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn manifest_loads_and_is_consistent() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    for (name, cfg) in &rt.manifest.configs {
+        assert_eq!(&cfg.name, name);
+        assert!(cfg.prunable_len() > 0);
+        assert!(cfg.prunable_len() < cfg.flat_len);
+        let ts = cfg.artifact("train_step").unwrap();
+        assert_eq!(ts.args.len(), 11);
+        assert_eq!(ts.outputs.len(), 4);
+        // prunable mask cardinality matches prunable_len
+        let pm = cfg.prunable_mask();
+        let ones = pm.iter().filter(|x| **x > 0.0).count();
+        assert_eq!(ones, cfg.prunable_len());
+    }
+}
+
+#[test]
+fn rust_forward_matches_hlo_logits() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let cfg = rt.manifest.config("tiny").unwrap().clone();
+    let params = Params::init(&cfg, 42);
+
+    let ds = Dataset::generate("synth-c4", cfg.vocab, 10_000, 0, 9);
+    let be = cfg.eval_batch;
+    let s = cfg.seq_len;
+    let tokens: Vec<u32> = ds.train[..be * s].to_vec();
+    let tokens_i32: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+
+    let exe = rt.executable("tiny", "logits").unwrap();
+    let outs = rt
+        .execute(&exe, &[
+            runtime::lit_f32(&params.flat),
+            runtime::lit_i32_2d(&tokens_i32, be, s).unwrap(),
+        ])
+        .unwrap();
+    let hlo_logits = runtime::to_f32(&outs[0]).unwrap(); // (be, s, v)
+
+    // compare a couple of sequences against the rust forward
+    for b in [0usize, be - 1] {
+        let seq = &tokens[b * s..(b + 1) * s];
+        let rust_logits = forward::forward_seq(&params, seq, None).unwrap();
+        let mut max_err = 0.0f32;
+        for t in 0..s {
+            for c in 0..cfg.vocab {
+                let h = hlo_logits[(b * s + t) * cfg.vocab + c];
+                let r = rust_logits.at(t, c);
+                max_err = max_err.max((h - r).abs());
+            }
+        }
+        assert!(max_err < 2e-3,
+                "rust forward diverges from HLO: max_err={max_err}");
+    }
+}
+
+#[test]
+fn train_step_decreases_loss_from_rust() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let cfg = rt.manifest.config("tiny").unwrap().clone();
+    let d = cfg.flat_len;
+    let params = Params::init(&cfg, 0);
+    let ds = Dataset::generate("synth-c4", cfg.vocab, 50_000, 0, 1);
+    let mut batcher =
+        elsa::data::Batcher::new(&ds.train, cfg.batch, cfg.seq_len, 0);
+
+    let exe = rt.executable("tiny", "train_step").unwrap();
+    let zeros = vec![0.0f32; d];
+    let ones = vec![1.0f32; d];
+    let pmask = cfg.prunable_mask();
+
+    let mut p = params.flat;
+    let mut m = zeros.clone();
+    let mut v = zeros.clone();
+    let batch = batcher.next_batch(); // repeated batch: loss must drop fast
+    let mut losses = vec![];
+    for t in 0..8 {
+        let outs = rt
+            .execute(&exe, &[
+                runtime::lit_f32(&p),
+                runtime::lit_f32(&m),
+                runtime::lit_f32(&v),
+                runtime::lit_f32(&zeros),
+                runtime::lit_f32(&zeros),
+                runtime::lit_f32(&ones),
+                runtime::lit_f32(&pmask),
+                runtime::lit_i32_2d(&batch, cfg.batch, cfg.seq_len + 1)
+                    .unwrap(),
+                runtime::lit_scalar((t + 1) as f32),
+                runtime::lit_scalar(3e-3),
+                runtime::lit_scalar(0.0),
+            ])
+            .unwrap();
+        p = runtime::to_f32(&outs[0]).unwrap();
+        m = runtime::to_f32(&outs[1]).unwrap();
+        v = runtime::to_f32(&outs[2]).unwrap();
+        losses.push(runtime::to_scalar(&outs[3]).unwrap());
+    }
+    assert!(losses[7] < losses[0] - 0.3, "{losses:?}");
+}
+
+#[test]
+fn quant_roundtrip_artifact_matches_rust_codec() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let Some(q) = rt.manifest.quant_demo.clone() else { return };
+    let exe = rt.compile_file(&q.file).unwrap();
+    let mut rng = elsa::util::rng::Rng::new(5);
+    let x: Vec<f32> = (0..q.n).map(|_| rng.normal() * 4.0).collect();
+    let result = exe
+        .execute::<xla::Literal>(&[runtime::lit_f32(&x)])
+        .unwrap()[0][0]
+        .to_literal_sync()
+        .unwrap();
+    let outs = result.to_tuple().unwrap();
+    let remat = runtime::to_f32(&outs[0]).unwrap();
+    // rust-side absmax int8 reference
+    let absmax = x.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+    let scale = absmax / q.vmax;
+    for (i, (&r, &orig)) in remat.iter().zip(x.iter()).enumerate() {
+        let expect = (orig / scale).round().clamp(-q.vmax, q.vmax) * scale;
+        assert!((r - expect).abs() < 1e-5, "idx {i}: {r} vs {expect}");
+    }
+}
