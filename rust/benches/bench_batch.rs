@@ -1,0 +1,145 @@
+//! Batched serving bench: multi-vector SpMM kernels and end-to-end
+//! batched decode vs N× sequential single-sequence decode.
+//!
+//! The claim under test (ISSUE 1 / Table 1b): at batch=8 the batched
+//! CSR/MACKO decode path yields measurably higher aggregate tokens/sec
+//! than running the same 8 sequences one at a time, because index /
+//! bitmap decode is amortized across the batch in the memory-bound
+//! decode regime.
+//!
+//! Run: cargo bench --bench bench_batch [-- <threads>]
+
+use elsa::infer::{Backend, BatchOptions, Engine};
+use elsa::model::{synthetic_config, Params};
+use elsa::pruners::{magnitude, uniform_alloc};
+use elsa::sparse::{Csr, Macko, SpmmScratch};
+use elsa::tensor::Matrix;
+use elsa::util::bench::{bench, throughput};
+use elsa::util::rng::Rng;
+use elsa::util::timer::Timer;
+
+fn sparse_weight(din: usize, dout: usize, sparsity: f64, seed: u64)
+                 -> Matrix {
+    let mut rng = Rng::new(seed);
+    let mut w = Matrix::randn(din, dout, 1.0, &mut rng);
+    for x in w.data.iter_mut() {
+        if rng.f64() < sparsity {
+            *x = 0.0;
+        }
+    }
+    w
+}
+
+fn kernel_sweep() {
+    let (din, dout) = (768, 768);
+    let sp = 0.9;
+    let w = sparse_weight(din, dout, sp, 42);
+    let nnz = w.nnz() as f64;
+    let csr = Csr::from_weight(&w);
+    let macko = Macko::from_weight(&w);
+    let mut rng = Rng::new(7);
+
+    println!("== SpMM {din}x{dout} sp={sp:.2}: batched vs b x matvec ==");
+    for &b in &[1usize, 2, 4, 8] {
+        let x: Vec<f32> = (0..b * din).map(|_| rng.normal()).collect();
+        let mut y = vec![0.0f32; b * dout];
+
+        let r = bench(&format!("csr    seq    b={b}"), 300, || {
+            for bi in 0..b {
+                let (xs, ys) = (&x[bi * din..(bi + 1) * din],
+                                &mut y[bi * dout..(bi + 1) * dout]);
+                csr.matvec(xs, ys);
+            }
+            std::hint::black_box(&y);
+        });
+        throughput(&r, nnz * 2.0 * b as f64, "flop");
+
+        let mut scratch = SpmmScratch::default();
+        let r = bench(&format!("csr    batch  b={b}"), 300, || {
+            csr.matvec_batch_into(&x, &mut y, b, &mut scratch);
+            std::hint::black_box(&y);
+        });
+        throughput(&r, nnz * 2.0 * b as f64, "flop");
+
+        let r = bench(&format!("macko  seq    b={b}"), 300, || {
+            for bi in 0..b {
+                let (xs, ys) = (&x[bi * din..(bi + 1) * din],
+                                &mut y[bi * dout..(bi + 1) * dout]);
+                macko.matvec(xs, ys);
+            }
+            std::hint::black_box(&y);
+        });
+        throughput(&r, nnz * 2.0 * b as f64, "flop");
+
+        let r = bench(&format!("macko  batch  b={b}"), 300, || {
+            macko.matvec_batch_into(&x, &mut y, b, &mut scratch);
+            std::hint::black_box(&y);
+        });
+        throughput(&r, nnz * 2.0 * b as f64, "flop");
+        println!();
+    }
+}
+
+fn engine_sweep(threads: usize) {
+    // a serving-sized toy model: big enough that weight streaming
+    // dominates, small enough for a bench target
+    let cfg = synthetic_config("bench", 128, 2, 4, 512, 256, 96);
+    let params = Params::init(&cfg, 0);
+    let pruned = magnitude::prune(&cfg, &params.flat,
+                                  &uniform_alloc(&cfg, 0.9))
+        .expect("magnitude prune");
+    let p = Params::new(&cfg, pruned);
+
+    let prompt_len = 8;
+    let n_new = 56;
+    let batch = 8;
+    let mut rng = Rng::new(1);
+    let prompts: Vec<Vec<u32>> = (0..batch)
+        .map(|_| (0..prompt_len)
+             .map(|_| rng.below(cfg.vocab) as u32).collect())
+        .collect();
+
+    println!("== end-to-end decode, d={} L={} sp=0.90, batch={batch}, \
+              {threads} thread(s) ==", cfg.d_model, cfg.n_layers);
+    for backend in [Backend::Dense, Backend::Csr, Backend::Macko] {
+        let engine = Engine::build(&p, backend).expect("engine");
+
+        // sequential baseline: the same prompts one at a time
+        let t = Timer::start();
+        let mut seq_tokens = 0usize;
+        for (s, prompt) in prompts.iter().enumerate() {
+            let (_, stats) = engine.generate(prompt, n_new, 0.8,
+                                             s as u64);
+            seq_tokens += stats.tokens_generated;
+        }
+        let seq_s = t.seconds();
+        let seq_tps = seq_tokens as f64 / seq_s;
+
+        // batched path on identical work
+        let opts = BatchOptions {
+            n_new, temperature: 0.8, seed: 0, threads,
+        };
+        engine.generate_batch(&prompts, &opts); // warmup
+        let t = Timer::start();
+        let (_, stats) = engine.generate_batch(&prompts, &opts);
+        let bat_s = t.seconds();
+        let bat_tps = stats.tokens_generated as f64 / bat_s;
+
+        println!("{:>6}: sequential {seq_tps:9.1} tok/s | batched \
+                  {bat_tps:9.1} tok/s | speedup x{:.2}",
+                 format!("{backend:?}"), bat_tps / seq_tps);
+    }
+}
+
+fn main() {
+    let threads = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(1);
+    kernel_sweep();
+    engine_sweep(threads);
+    if threads == 1 {
+        // show the thread-sharded numbers too
+        engine_sweep(4);
+    }
+}

@@ -5,7 +5,9 @@
 //!   prune     --config tiny --method elsa --sparsity 0.9 [...]
 //!   eval      --config tiny --ckpt ckpt.bin [--dataset synth-c4]
 //!   generate  --config tiny --ckpt ckpt.bin [--sparse] [--prompt-len 8]
-//!   exp       --id fig2|fig3|...|all [--scale quick|full]
+//!   infer     alias of generate; --batch N --threads N serves N
+//!             prompts through the batched engine
+//!   exp       --id fig2|fig3|...|all [--scale quick|full] [--threads N]
 //!   report    --results results/
 
 use std::collections::BTreeMap;
@@ -72,6 +74,19 @@ impl Args {
         }
     }
 
+    /// Comma-separated usize list, e.g. `--batch-sizes 1,2,4,8`.
+    pub fn usize_list_or(&self, key: &str, default: &[usize])
+                         -> Result<Vec<usize>> {
+        match self.get(key) {
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse::<usize>()
+                     .with_context(|| format!("--{key} {v}")))
+                .collect(),
+            None => Ok(default.to_vec()),
+        }
+    }
+
     pub fn bool(&self, key: &str) -> bool {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
@@ -121,5 +136,20 @@ mod tests {
     fn negative_number_values() {
         let a = Args::parse(&argv(&["exp", "--id", "fig2"])).unwrap();
         assert_eq!(a.get("id"), Some("fig2"));
+    }
+
+    #[test]
+    fn usize_list_parsing() {
+        let a = Args::parse(&argv(&[
+            "infer", "--batch-sizes", "1,2, 4,8",
+        ]))
+        .unwrap();
+        assert_eq!(a.usize_list_or("batch-sizes", &[1]).unwrap(),
+                   vec![1, 2, 4, 8]);
+        assert_eq!(a.usize_list_or("missing", &[3, 5]).unwrap(),
+                   vec![3, 5]);
+        let bad = Args::parse(&argv(&["infer", "--batch-sizes", "1,x"]))
+            .unwrap();
+        assert!(bad.usize_list_or("batch-sizes", &[1]).is_err());
     }
 }

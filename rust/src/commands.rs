@@ -20,11 +20,14 @@ pub fn dispatch(args: &Args) -> Result<()> {
         "pretrain" => cmd_pretrain(args),
         "prune" => cmd_prune(args),
         "eval" => cmd_eval(args),
-        "generate" => crate::infer::cmd_generate(args),
+        // `infer` is the serving alias: --batch N --threads N drives
+        // the batched engine
+        "generate" | "infer" => crate::infer::cmd_generate(args),
         "exp" => crate::experiments::cmd_exp(args),
         other => bail!(
             "unknown subcommand '{other}'\n\
-             usage: elsa <pretrain|prune|eval|generate|exp> [--flags]"),
+             usage: elsa <pretrain|prune|eval|generate|infer|exp> \
+             [--flags]"),
     }
 }
 

@@ -6,14 +6,19 @@ use anyhow::Result;
 
 use super::Ctx;
 use crate::cli::Args;
-use crate::infer::{Backend, Engine};
+use crate::infer::{Backend, BatchOptions, Engine};
 use crate::model::Params;
 use crate::report::{f2, Table};
 use crate::util::human_bytes;
 
 const SPARSITIES: [f64; 4] = [0.5, 0.7, 0.9, 0.95];
 
-pub fn run(ctx: &Ctx, _args: &Args) -> Result<()> {
+/// Sparsity used for the batched serving sweep (the paper's headline
+/// extreme-sparsity regime that is also in SPARSITIES, so the pruned
+/// checkpoint is shared with the single-sequence table).
+const BATCH_SWEEP_SPARSITY: f64 = 0.9;
+
+pub fn run(ctx: &Ctx, args: &Args) -> Result<()> {
     // The decode-phase SpMV story needs matrices big enough that weight
     // streaming dominates (tiny's d=64 layers are overhead-bound), so
     // this table always uses the `small` config (d=128).
@@ -74,6 +79,66 @@ pub fn run(ctx: &Ctx, _args: &Args) -> Result<()> {
         ]);
     }
     let path = table.save(&ctx.results, "tab1")?;
+    crate::info!("tab1", "wrote {}", path.display());
+
+    // ----------------------------------------------------------------
+    // Batched serving sweep: aggregate decode throughput per batch size
+    // on the 90%-sparse checkpoint, all three backends. `--threads N`
+    // shards slots across workers; `--batch-sizes 1,2,4,8` overrides
+    // the sweep.
+    // ----------------------------------------------------------------
+    let threads = args.usize_or("threads", 1)?;
+    let batch_sizes = args.usize_list_or("batch-sizes", &[1, 2, 4, 8])?;
+    let pruned = ctx.pruned_cached(&cfg, "elsa", BATCH_SWEEP_SPARSITY,
+                                   "", || {
+        ctx.run_elsa(&cfg, &dense, &c4.train, BATCH_SWEEP_SPARSITY,
+                     |_| {})
+    })?;
+    let p = Params::new(&cfg, pruned);
+
+    let mut bt = Table::new(
+        &format!("Table 1b — batched decode throughput ({model}, \
+                  sparsity {BATCH_SWEEP_SPARSITY}, {threads} threads)"),
+        &["batch", "dense_tok_s", "csr_tok_s", "macko_tok_s",
+          "macko_scaling_x"]);
+
+    let mut macko_base = 0.0f64;
+    // wrap prompt windows so any --batch-sizes value stays in bounds
+    let n_windows = c4.valid.len() / 8;
+    for &bsz in &batch_sizes {
+        let prompts: Vec<Vec<u32>> = (0..bsz)
+            .map(|r| {
+                let s = (r % n_windows) * 8;
+                c4.valid[s..s + 8].to_vec()
+            })
+            .collect();
+        let opts = BatchOptions {
+            n_new, temperature: 0.8, seed: 0, threads,
+        };
+        let mut row = vec![bsz.to_string()];
+        let mut macko_tps = 0.0f64;
+        for backend in [Backend::Dense, Backend::Csr, Backend::Macko] {
+            let engine = Engine::build(&p, backend)?;
+            engine.generate_batch(&prompts, &opts); // warmup
+            let mut best = 0.0f64;
+            for _ in 0..reps.min(3) {
+                let (_, stats) = engine.generate_batch(&prompts, &opts);
+                best = best.max(stats.tokens_per_second);
+            }
+            if backend == Backend::Macko {
+                macko_tps = best;
+            }
+            row.push(f2(best));
+        }
+        if macko_base == 0.0 {
+            macko_base = macko_tps;
+        }
+        row.push(format!("x{:.2}", macko_tps / macko_base.max(1e-9)));
+        crate::info!("tab1", "batch {bsz}: macko {macko_tps:.1} tok/s \
+                      aggregate ({threads} threads)");
+        bt.row(row);
+    }
+    let path = bt.save(&ctx.results, "tab1_batch")?;
     crate::info!("tab1", "wrote {}", path.display());
     Ok(())
 }

@@ -5,6 +5,16 @@
 //! memory-bound SpMV regime the paper's §5.3 targets. The engine shares
 //! numerics with model::forward (tested), so a pruned checkpoint can be
 //! loaded, converted, and served without touching the HLO path.
+//!
+//! Two serving modes:
+//!  - [`Engine::generate`]: one sequence, one matvec per linear per
+//!    token (the original microbenchmark path),
+//!  - [`Engine::generate_batch`]: many sequences with per-slot KV
+//!    caches and slot retirement; each step runs the linears as one
+//!    multi-vector SpMM over the live slots (amortizing index/bitmap
+//!    decode across the batch) and shards slots across worker threads
+//!    (`--threads N`). Batched results are bit-identical to the
+//!    single-sequence path per slot, for any thread count.
 
 use anyhow::Result;
 
@@ -12,7 +22,7 @@ use crate::cli::Args;
 use crate::model::forward::gelu_tanh;
 use crate::model::Params;
 use crate::runtime::ConfigEntry;
-use crate::sparse::{Csr, Macko};
+use crate::sparse::{Csr, Macko, SpmmScratch};
 use crate::tensor::Matrix;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
@@ -42,6 +52,22 @@ impl WeightFmt {
             }
             WeightFmt::Csr(c) => c.matvec(x, y),
             WeightFmt::Macko(m) => m.matvec(x, y),
+        }
+    }
+
+    /// Y = X W for a row-major batch X (b, din), writing Y (b, dout).
+    /// The sparse formats decode their indices/bitmaps once per output
+    /// row and amortize across the batch; every row is bit-exact with
+    /// [`WeightFmt::matvec`] on that row alone. `scratch` is reused
+    /// across calls so the decode loop stays allocation-free.
+    pub fn matvec_batch(&self, x: &[f32], y: &mut [f32], b: usize,
+                        scratch: &mut SpmmScratch) {
+        match self {
+            WeightFmt::Dense(w) => {
+                crate::sparse::dense_matvec_batch(w, x, y, b)
+            }
+            WeightFmt::Csr(c) => c.matvec_batch_into(x, y, b, scratch),
+            WeightFmt::Macko(m) => m.matvec_batch_into(x, y, b, scratch),
         }
     }
 
@@ -92,6 +118,45 @@ struct Kv {
     k: Vec<f32>, // t * d
     v: Vec<f32>,
     len: usize,
+}
+
+/// Causal multi-head attention for one sequence over its KV cache:
+/// reads the query vector `q` (len d), accumulates the weighted values
+/// into `o` (len d, caller-zeroed), using `probs` as softmax scratch.
+/// The single numerics implementation shared by the single-sequence
+/// and batched decode paths — keeping them bit-identical by
+/// construction.
+fn attend_cached(kv: &Kv, q: &[f32], o: &mut [f32], probs: &mut [f32],
+                 h: usize, dh: usize, scale: f32, d: usize) {
+    for hh in 0..h {
+        let c0 = hh * dh;
+        let qh = &q[c0..c0 + dh];
+        let pr = &mut probs[..kv.len];
+        let mut max = f32::NEG_INFINITY;
+        for (j, p) in pr.iter_mut().enumerate() {
+            let krow = &kv.k[j * d + c0..j * d + c0 + dh];
+            let mut acc = 0.0f32;
+            for i in 0..dh {
+                acc += qh[i] * krow[i];
+            }
+            *p = acc * scale;
+            max = max.max(*p);
+        }
+        let mut sum = 0.0f32;
+        for p in pr.iter_mut() {
+            *p = (*p - max).exp();
+            sum += *p;
+        }
+        let inv = 1.0 / sum;
+        for (j, p) in pr.iter().enumerate() {
+            let w = p * inv;
+            let vrow = &kv.v[j * d + c0..j * d + c0 + dh];
+            let orow = &mut o[c0..c0 + dh];
+            for i in 0..dh {
+                orow[i] += w * vrow[i];
+            }
+        }
+    }
 }
 
 pub struct Engine {
@@ -193,35 +258,8 @@ impl Engine {
             // attention over the cache, per head
             let o = &mut scratch.o;
             o.iter_mut().for_each(|v| *v = 0.0);
-            for hh in 0..h {
-                let c0 = hh * dh;
-                let q = &scratch.q[c0..c0 + dh];
-                let probs = &mut scratch.probs[..kv.len];
-                let mut max = f32::NEG_INFINITY;
-                for (j, p) in probs.iter_mut().enumerate() {
-                    let krow = &kv.k[j * d + c0..j * d + c0 + dh];
-                    let mut acc = 0.0f32;
-                    for i in 0..dh {
-                        acc += q[i] * krow[i];
-                    }
-                    *p = acc * scale;
-                    max = max.max(*p);
-                }
-                let mut sum = 0.0f32;
-                for p in probs.iter_mut() {
-                    *p = (*p - max).exp();
-                    sum += *p;
-                }
-                let inv = 1.0 / sum;
-                for (j, p) in probs.iter().enumerate() {
-                    let w = p * inv;
-                    let vrow = &kv.v[j * d + c0..j * d + c0 + dh];
-                    let orow = &mut o[c0..c0 + dh];
-                    for i in 0..dh {
-                        orow[i] += w * vrow[i];
-                    }
-                }
-            }
+            attend_cached(kv, &scratch.q, o, &mut scratch.probs,
+                          h, dh, scale, d);
             l.wo.matvec(o, &mut scratch.tmp_d);
             for c in 0..d {
                 x[c] += scratch.tmp_d[c];
@@ -283,6 +321,301 @@ impl Engine {
             mem_bytes: self.mem_bytes(),
         })
     }
+
+    /// Feed `tokens` through a fresh KV cache and return the logits
+    /// after the last token (test/debug helper for the parity suite).
+    pub fn logits_for(&self, tokens: &[u32]) -> Vec<f32> {
+        let d = self.cfg.d_model;
+        let mut kvs: Vec<Kv> = (0..self.cfg.n_layers)
+            .map(|_| Kv { k: Vec::with_capacity(tokens.len() * d),
+                          v: Vec::with_capacity(tokens.len() * d), len: 0 })
+            .collect();
+        let mut scratch = Scratch::new(&self.cfg);
+        let mut logits = vec![];
+        for (t, &tok) in tokens.iter().enumerate() {
+            logits = self.decode_step(&mut kvs, tok, t, &mut scratch);
+        }
+        logits
+    }
+
+    /// Batched generation over many prompts with per-slot KV caches and
+    /// slot retirement (continuous-batching-lite): every step decodes
+    /// the set of still-live slots in one multi-vector pass, and a slot
+    /// retires as soon as it has produced `n_new` tokens or its sequence
+    /// hits `seq_len`.
+    ///
+    /// Determinism: a slot `s` with a non-empty prompt reproduces
+    /// `generate(&prompts[s], n_new, temperature, seed + s)`
+    /// bit-for-bit, for any batch size and any `threads` value — the
+    /// batched kernels keep each sequence's accumulation order
+    /// identical to the single-vector path, and each slot samples from
+    /// its own seeded RNG.
+    ///
+    /// Prompts may be ragged. The one deliberate divergence from the
+    /// single-sequence path is the degenerate empty prompt: a slot with
+    /// no prompt retires immediately with zero tokens (there is nothing
+    /// to condition on), whereas `generate(&[], ..)` falls back to
+    /// emitting token 0 and continuing from it.
+    pub fn generate_batch(&self, prompts: &[Vec<u32>], opts: &BatchOptions)
+                          -> (Vec<Vec<u32>>, GenStats) {
+        for p in prompts {
+            assert!(p.len() <= self.cfg.seq_len,
+                    "prompt of {} tokens exceeds seq_len {}", p.len(),
+                    self.cfg.seq_len);
+        }
+        let mut slots: Vec<Slot> = prompts
+            .iter()
+            .enumerate()
+            .map(|(s, p)| self.new_slot(p, opts, s as u64))
+            .collect();
+
+        let threads = opts.threads.max(1).min(slots.len().max(1));
+        let (prefill_s, decode_s) = if threads <= 1 {
+            self.run_slots(&mut slots, opts)
+        } else {
+            // slots are fully independent: shard them across workers,
+            // each running the batched decode loop over its shard
+            let chunk = slots.len().div_ceil(threads);
+            let mut prefill = 0.0f64;
+            let mut decode = 0.0f64;
+            std::thread::scope(|sc| {
+                let mut handles = Vec::new();
+                for shard in slots.chunks_mut(chunk) {
+                    handles.push(
+                        sc.spawn(move || self.run_slots(shard, opts)));
+                }
+                for h in handles {
+                    let (p, d) = h.join().expect("worker panicked");
+                    prefill = prefill.max(p);
+                    decode = decode.max(d);
+                }
+            });
+            (prefill, decode)
+        };
+
+        let total: usize = slots.iter().map(|s| s.generated).sum();
+        let outs: Vec<Vec<u32>> =
+            slots.into_iter().map(|s| s.tokens).collect();
+        (outs, GenStats {
+            prefill_seconds: prefill_s,
+            decode_seconds: decode_s,
+            tokens_generated: total,
+            tokens_per_second: total as f64 / decode_s.max(1e-9),
+            mem_bytes: self.mem_bytes(),
+        })
+    }
+
+    fn new_slot(&self, prompt: &[u32], opts: &BatchOptions, idx: u64)
+                -> Slot {
+        let d = self.cfg.d_model;
+        let cap = self.cfg.seq_len * d;
+        Slot {
+            tokens: prompt.to_vec(),
+            prompt_len: prompt.len(),
+            fed: 0,
+            kvs: (0..self.cfg.n_layers)
+                .map(|_| Kv { k: Vec::with_capacity(cap),
+                              v: Vec::with_capacity(cap), len: 0 })
+                .collect(),
+            rng: Rng::new(opts.seed.wrapping_add(idx)),
+            logits: vec![],
+            generated: 0,
+            done: false,
+        }
+    }
+
+    /// Drive one shard of slots to completion: lockstep prefill, then
+    /// sample-and-decode until every slot retires. Returns the shard's
+    /// (prefill, decode) wall seconds.
+    fn run_slots(&self, slots: &mut [Slot], opts: &BatchOptions)
+                 -> (f64, f64) {
+        let mut scratch = BatchScratch::new(&self.cfg, slots.len());
+
+        // prefill: feed prompt tokens in lockstep (ragged prompts simply
+        // drop out of the active set as they finish)
+        let tp = Timer::start();
+        loop {
+            let active: Vec<usize> = slots
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.fed < s.prompt_len)
+                .map(|(i, _)| i)
+                .collect();
+            if active.is_empty() {
+                break;
+            }
+            self.decode_step_batch(slots, &active, &mut scratch);
+        }
+        let prefill_s = tp.seconds();
+
+        // decode: sample one token per live slot, retire exhausted
+        // slots, and batch-decode the freshly appended tokens
+        let td = Timer::start();
+        loop {
+            let mut active = Vec::with_capacity(slots.len());
+            for (i, s) in slots.iter_mut().enumerate() {
+                if s.done {
+                    continue;
+                }
+                if s.logits.is_empty()                 // empty prompt
+                    || s.generated >= opts.n_new       // budget reached
+                    || s.tokens.len() >= self.cfg.seq_len
+                {
+                    s.done = true;
+                    continue;
+                }
+                let next = sample(&s.logits, opts.temperature, &mut s.rng);
+                s.tokens.push(next);
+                s.generated += 1;
+                if s.generated >= opts.n_new
+                    || s.tokens.len() >= self.cfg.seq_len
+                {
+                    // the freshly pushed token's logits would never be
+                    // read — retire now and skip that forward pass
+                    // (tokens are unchanged; only wasted work is cut)
+                    s.done = true;
+                } else {
+                    active.push(i);
+                }
+            }
+            if active.is_empty() {
+                break;
+            }
+            self.decode_step_batch(slots, &active, &mut scratch);
+        }
+        (prefill_s, td.seconds())
+    }
+
+    /// One batched decode step: for every slot index in `active`, feed
+    /// that slot's next unfed token through all layers, appending to its
+    /// KV cache and refreshing its logits. The linears run as one
+    /// multi-vector SpMM over the active set; attention and layernorm
+    /// stay per-slot (each slot has its own cache length/position).
+    fn decode_step_batch(&self, slots: &mut [Slot], active: &[usize],
+                         scratch: &mut BatchScratch) {
+        let b = active.len();
+        let d = self.cfg.d_model;
+        let dff = self.cfg.d_ff;
+        let h = self.cfg.n_heads;
+        let dh = d / h;
+        let scale = 1.0 / (dh as f32).sqrt();
+
+        // embed + positional for each slot's next token
+        for (bi, &si) in active.iter().enumerate() {
+            let s = &slots[si];
+            let t = s.fed;
+            let e = self.embed.row(s.tokens[t] as usize);
+            let pr = self.pos.row(t.min(self.pos.rows - 1));
+            let xrow = &mut scratch.x[bi * d..(bi + 1) * d];
+            for c in 0..d {
+                xrow[c] = e[c] + pr[c];
+            }
+        }
+
+        for (li, l) in self.layers.iter().enumerate() {
+            for bi in 0..b {
+                Self::layernorm_vec(&scratch.x[bi * d..(bi + 1) * d],
+                                    &l.ln1_g, &l.ln1_b,
+                                    &mut scratch.xa[bi * d..(bi + 1) * d]);
+            }
+            l.wq.matvec_batch(&scratch.xa[..b * d],
+                              &mut scratch.q[..b * d], b,
+                              &mut scratch.spmm);
+            l.wk.matvec_batch(&scratch.xa[..b * d],
+                              &mut scratch.k[..b * d], b,
+                              &mut scratch.spmm);
+            l.wv.matvec_batch(&scratch.xa[..b * d],
+                              &mut scratch.v[..b * d], b,
+                              &mut scratch.spmm);
+
+            // per-slot attention over each slot's own cache
+            for (bi, &si) in active.iter().enumerate() {
+                let kv = &mut slots[si].kvs[li];
+                kv.k.extend_from_slice(&scratch.k[bi * d..(bi + 1) * d]);
+                kv.v.extend_from_slice(&scratch.v[bi * d..(bi + 1) * d]);
+                kv.len += 1;
+
+                let orow = &mut scratch.o[bi * d..(bi + 1) * d];
+                orow.iter_mut().for_each(|v| *v = 0.0);
+                attend_cached(kv, &scratch.q[bi * d..(bi + 1) * d],
+                              orow, &mut scratch.probs, h, dh, scale, d);
+            }
+            l.wo.matvec_batch(&scratch.o[..b * d],
+                              &mut scratch.tmp_d[..b * d], b,
+                              &mut scratch.spmm);
+            for i in 0..b * d {
+                scratch.x[i] += scratch.tmp_d[i];
+            }
+
+            for bi in 0..b {
+                Self::layernorm_vec(&scratch.x[bi * d..(bi + 1) * d],
+                                    &l.ln2_g, &l.ln2_b,
+                                    &mut scratch.xa[bi * d..(bi + 1) * d]);
+            }
+            l.w1.matvec_batch(&scratch.xa[..b * d],
+                              &mut scratch.ff[..b * dff], b,
+                              &mut scratch.spmm);
+            for bi in 0..b {
+                let frow = &mut scratch.ff[bi * dff..(bi + 1) * dff];
+                for (f, bias) in frow.iter_mut().zip(l.b1.iter()) {
+                    *f = gelu_tanh(*f + bias);
+                }
+            }
+            l.w2.matvec_batch(&scratch.ff[..b * dff],
+                              &mut scratch.tmp_d[..b * d], b,
+                              &mut scratch.spmm);
+            for bi in 0..b {
+                for c in 0..d {
+                    scratch.x[bi * d + c] +=
+                        scratch.tmp_d[bi * d + c] + l.b2[c];
+                }
+            }
+        }
+
+        // final layernorm + head per slot
+        for (bi, &si) in active.iter().enumerate() {
+            Self::layernorm_vec(&scratch.x[bi * d..(bi + 1) * d],
+                                &self.lnf_g, &self.lnf_b,
+                                &mut scratch.xa[bi * d..(bi + 1) * d]);
+            let s = &mut slots[si];
+            s.logits =
+                self.head.t_matvec(&scratch.xa[bi * d..(bi + 1) * d]);
+            s.fed += 1;
+        }
+    }
+}
+
+/// Options for [`Engine::generate_batch`].
+#[derive(Debug, Clone)]
+pub struct BatchOptions {
+    /// New tokens to generate per slot (capped by `seq_len`).
+    pub n_new: usize,
+    /// Sampling temperature (0 = greedy).
+    pub temperature: f32,
+    /// Slot `s` samples from `Rng::new(seed + s)`, matching a
+    /// single-sequence `generate` call with seed `seed + s`.
+    pub seed: u64,
+    /// Worker threads (slots are sharded across them; 0/1 = inline).
+    pub threads: usize,
+}
+
+impl Default for BatchOptions {
+    fn default() -> BatchOptions {
+        BatchOptions { n_new: 16, temperature: 0.0, seed: 0, threads: 1 }
+    }
+}
+
+/// One in-flight sequence of the batched engine.
+struct Slot {
+    tokens: Vec<u32>,
+    prompt_len: usize,
+    /// Tokens already decoded into the KV cache.
+    fed: usize,
+    kvs: Vec<Kv>,
+    rng: Rng,
+    logits: Vec<f32>,
+    generated: usize,
+    done: bool,
 }
 
 struct Scratch {
@@ -314,7 +647,45 @@ impl Scratch {
     }
 }
 
+/// Scratch for the batched decode path: row-major (b, ·) activation
+/// buffers sized for the shard's slot count; steps with fewer active
+/// slots use prefixes of each buffer.
+struct BatchScratch {
+    x: Vec<f32>,
+    xa: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    o: Vec<f32>,
+    ff: Vec<f32>,
+    tmp_d: Vec<f32>,
+    probs: Vec<f32>,
+    /// Kernel-side scratch shared by every matvec_batch of the step.
+    spmm: SpmmScratch,
+}
+
+impl BatchScratch {
+    fn new(cfg: &ConfigEntry, b: usize) -> BatchScratch {
+        let d = cfg.d_model;
+        BatchScratch {
+            x: vec![0.0; b * d],
+            xa: vec![0.0; b * d],
+            q: vec![0.0; b * d],
+            k: vec![0.0; b * d],
+            v: vec![0.0; b * d],
+            o: vec![0.0; b * d],
+            ff: vec![0.0; b * cfg.d_ff],
+            tmp_d: vec![0.0; b * d],
+            probs: vec![0.0; cfg.seq_len],
+            spmm: SpmmScratch::default(),
+        }
+    }
+}
+
 fn sample(logits: &[f32], temperature: f32, rng: &mut Rng) -> u32 {
+    if logits.is_empty() {
+        return 0;
+    }
     if temperature <= 0.0 {
         return logits
             .iter()
@@ -338,7 +709,9 @@ pub struct GenStats {
     pub mem_bytes: usize,
 }
 
-/// `elsa generate` subcommand.
+/// `elsa generate` / `elsa infer` subcommand. `--batch N` serves N
+/// prompts through the batched engine; `--threads N` shards the batch
+/// across worker threads.
 pub fn cmd_generate(args: &Args) -> Result<()> {
     let rt = crate::commands::open_runtime(args)?;
     let ck = crate::model::checkpoint::Checkpoint::load(
@@ -353,17 +726,43 @@ pub fn cmd_generate(args: &Args) -> Result<()> {
         &args.str_or("dataset", "synth-c4"), cfg.vocab);
     let prompt_len = args.usize_or("prompt-len", 8)?;
     let n_new = args.usize_or("tokens", cfg.seq_len - prompt_len)?;
-    let prompt = g.generate(prompt_len, args.usize_or("seed", 0)? as u64);
+    let seed = args.usize_or("seed", 0)? as u64;
+    let temperature = args.f32_or("temp", 0.8)?;
+    let batch = args.usize_or("batch", 1)?;
+    let threads = args.usize_or("threads", 1)?;
 
-    let (tokens, stats) =
-        engine.generate(&prompt, n_new, args.f32_or("temp", 0.8)?, 0);
-    println!("prompt  {:?}", &tokens[..prompt_len]);
-    println!("output  {:?}", &tokens[prompt_len..]);
-    println!("sparsity {:.4}", params.sparsity());
-    println!("backend {:?}", backend);
-    println!("tokens_per_s {:.2}", stats.tokens_per_second);
-    println!("decode_s {:.4}", stats.decode_seconds);
-    println!("mem {}", crate::util::human_bytes(stats.mem_bytes));
+    if batch <= 1 {
+        let prompt = g.generate(prompt_len, seed);
+        // sample with `seed` so --batch 1 and slot 0 of --batch N are
+        // the same request
+        let (tokens, stats) =
+            engine.generate(&prompt, n_new, temperature, seed);
+        println!("prompt  {:?}", &tokens[..prompt_len]);
+        println!("output  {:?}", &tokens[prompt_len..]);
+        println!("sparsity {:.4}", params.sparsity());
+        println!("backend {:?}", backend);
+        println!("tokens_per_s {:.2}", stats.tokens_per_second);
+        println!("decode_s {:.4}", stats.decode_seconds);
+        println!("mem {}", crate::util::human_bytes(stats.mem_bytes));
+    } else {
+        let prompts: Vec<Vec<u32>> = (0..batch)
+            .map(|r| g.generate(prompt_len, seed.wrapping_add(r as u64)))
+            .collect();
+        let opts = BatchOptions { n_new, temperature, seed, threads };
+        let (outs, stats) = engine.generate_batch(&prompts, &opts);
+        for (s, out) in outs.iter().enumerate() {
+            println!("slot {s:3}: prompt {:?} -> {} new tokens",
+                     &out[..prompt_len.min(out.len())],
+                     out.len() - prompt_len.min(out.len()));
+        }
+        println!("sparsity {:.4}", params.sparsity());
+        println!("backend {:?}", backend);
+        println!("batch {batch} threads {threads}");
+        println!("tokens_generated {}", stats.tokens_generated);
+        println!("agg_tokens_per_s {:.2}", stats.tokens_per_second);
+        println!("decode_s {:.4}", stats.decode_seconds);
+        println!("mem {}", crate::util::human_bytes(stats.mem_bytes));
+    }
     Ok(())
 }
 
@@ -438,5 +837,46 @@ mod tests {
         let (out, stats) = engine.generate(&[1, 2], 100, 0.5, 1);
         assert!(out.len() <= p.cfg.seq_len);
         assert_eq!(stats.tokens_generated, out.len() - 2);
+    }
+
+    #[test]
+    fn generate_batch_matches_single_sequence() {
+        let p = toy();
+        let prompts: Vec<Vec<u32>> =
+            vec![vec![1, 2, 3], vec![4, 5], vec![6, 7, 8, 9]];
+        for backend in [Backend::Dense, Backend::Csr, Backend::Macko] {
+            let engine = Engine::build(&p, backend).unwrap();
+            for temp in [0.0f32, 0.9] {
+                let opts = BatchOptions {
+                    n_new: 4, temperature: temp, seed: 7, threads: 1,
+                };
+                let (outs, stats) =
+                    engine.generate_batch(&prompts, &opts);
+                let mut total = 0;
+                for (s, prompt) in prompts.iter().enumerate() {
+                    let (want, _) = engine.generate(
+                        prompt, 4, temp, 7 + s as u64);
+                    assert_eq!(outs[s], want,
+                               "{backend:?} temp={temp} slot {s}");
+                    total += want.len() - prompt.len();
+                }
+                assert_eq!(stats.tokens_generated, total);
+            }
+        }
+    }
+
+    #[test]
+    fn generate_batch_single_slot_is_generate() {
+        let p = toy();
+        let engine = Engine::build(&p, Backend::Macko).unwrap();
+        let prompt = vec![2u32, 3, 4];
+        let opts = BatchOptions {
+            n_new: 5, temperature: 0.7, seed: 11, threads: 1,
+        };
+        let (outs, stats) =
+            engine.generate_batch(std::slice::from_ref(&prompt), &opts);
+        let (want, wstats) = engine.generate(&prompt, 5, 0.7, 11);
+        assert_eq!(outs[0], want);
+        assert_eq!(stats.tokens_generated, wstats.tokens_generated);
     }
 }

@@ -8,11 +8,96 @@
 pub mod checkpoint;
 pub mod forward;
 
+use std::collections::BTreeMap;
+
 use anyhow::Result;
 
 use crate::runtime::{ConfigEntry, Segment};
 use crate::tensor::Matrix;
 use crate::util::rng::Rng;
+
+/// Build a self-contained synthetic `ConfigEntry` (no manifest file):
+/// the standard pre-LN GPT layout with the given shape knobs. Used by
+/// the unit/integration tests and the serving benchmarks, which need a
+/// model config without the AOT artifact pipeline.
+pub fn synthetic_config(name: &str, d_model: usize, n_layers: usize,
+                        n_heads: usize, d_ff: usize, vocab: usize,
+                        seq_len: usize) -> ConfigEntry {
+    assert_eq!(d_model % n_heads, 0, "d_model must divide into heads");
+    let mut segments: Vec<Segment> = vec![];
+    let mut off = 0usize;
+    let mut add = |name: String, shape: Vec<usize>, prunable: bool,
+                   init: &str, segments: &mut Vec<Segment>| {
+        let len: usize = shape.iter().product();
+        segments.push(Segment {
+            name,
+            offset: off,
+            shape,
+            prunable,
+            init: init.into(),
+        });
+        off += len;
+    };
+    add("embed".into(), vec![vocab, d_model], false, "normal",
+        &mut segments);
+    add("pos".into(), vec![seq_len, d_model], false, "normal",
+        &mut segments);
+    for l in 0..n_layers {
+        let p = format!("l{l}.");
+        add(p.clone() + "ln1.g", vec![d_model], false, "ones",
+            &mut segments);
+        add(p.clone() + "ln1.b", vec![d_model], false, "zeros",
+            &mut segments);
+        add(p.clone() + "attn.wq", vec![d_model, d_model], true, "normal",
+            &mut segments);
+        add(p.clone() + "attn.wk", vec![d_model, d_model], true, "normal",
+            &mut segments);
+        add(p.clone() + "attn.wv", vec![d_model, d_model], true, "normal",
+            &mut segments);
+        add(p.clone() + "attn.wo", vec![d_model, d_model], true, "normal",
+            &mut segments);
+        add(p.clone() + "ln2.g", vec![d_model], false, "ones",
+            &mut segments);
+        add(p.clone() + "ln2.b", vec![d_model], false, "zeros",
+            &mut segments);
+        add(p.clone() + "mlp.w1", vec![d_model, d_ff], true, "normal",
+            &mut segments);
+        add(p.clone() + "mlp.b1", vec![d_ff], false, "zeros",
+            &mut segments);
+        add(p.clone() + "mlp.w2", vec![d_ff, d_model], true, "normal",
+            &mut segments);
+        add(p.clone() + "mlp.b2", vec![d_model], false, "zeros",
+            &mut segments);
+    }
+    add("lnf.g".into(), vec![d_model], false, "ones", &mut segments);
+    add("lnf.b".into(), vec![d_model], false, "zeros", &mut segments);
+    add("head".into(), vec![d_model, vocab], false, "normal",
+        &mut segments);
+    let flat_len = off;
+    ConfigEntry {
+        name: name.into(),
+        vocab,
+        d_model,
+        n_layers,
+        n_heads,
+        seq_len,
+        batch: 2,
+        eval_batch: 2,
+        d_ff,
+        lora_rank: 2,
+        lora_alpha: 8.0,
+        flat_len,
+        lora_len: 0,
+        segments,
+        lora_segments: vec![],
+        artifacts: BTreeMap::new(),
+    }
+}
+
+/// The miniature config every unit test uses (d=4, one layer).
+pub fn fake_config() -> ConfigEntry {
+    synthetic_config("fake", 4, 1, 2, 16, 16, 8)
+}
 
 /// A model instance: flat parameters + its manifest config.
 #[derive(Debug, Clone)]
@@ -122,62 +207,6 @@ impl Params {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::manifest::{ArtifactSpec, Segment as Seg};
-    use std::collections::BTreeMap;
-
-    /// Build a miniature fake config for unit tests (no manifest file).
-    pub fn fake_config() -> ConfigEntry {
-        let mut segments = vec![];
-        let mut off = 0usize;
-        let mut add = |name: &str, shape: Vec<usize>, prunable: bool,
-                       init: &str, segments: &mut Vec<Seg>| {
-            let len: usize = shape.iter().product();
-            segments.push(Seg {
-                name: name.into(),
-                offset: off,
-                shape,
-                prunable,
-                init: init.into(),
-            });
-            off += len;
-        };
-        add("embed", vec![16, 4], false, "normal", &mut segments);
-        add("pos", vec![8, 4], false, "normal", &mut segments);
-        add("l0.ln1.g", vec![4], false, "ones", &mut segments);
-        add("l0.ln1.b", vec![4], false, "zeros", &mut segments);
-        add("l0.attn.wq", vec![4, 4], true, "normal", &mut segments);
-        add("l0.attn.wk", vec![4, 4], true, "normal", &mut segments);
-        add("l0.attn.wv", vec![4, 4], true, "normal", &mut segments);
-        add("l0.attn.wo", vec![4, 4], true, "normal", &mut segments);
-        add("l0.ln2.g", vec![4], false, "ones", &mut segments);
-        add("l0.ln2.b", vec![4], false, "zeros", &mut segments);
-        add("l0.mlp.w1", vec![4, 16], true, "normal", &mut segments);
-        add("l0.mlp.b1", vec![16], false, "zeros", &mut segments);
-        add("l0.mlp.w2", vec![16, 4], true, "normal", &mut segments);
-        add("l0.mlp.b2", vec![4], false, "zeros", &mut segments);
-        add("lnf.g", vec![4], false, "ones", &mut segments);
-        add("lnf.b", vec![4], false, "zeros", &mut segments);
-        add("head", vec![4, 16], false, "normal", &mut segments);
-        let flat_len = off;
-        ConfigEntry {
-            name: "fake".into(),
-            vocab: 16,
-            d_model: 4,
-            n_layers: 1,
-            n_heads: 2,
-            seq_len: 8,
-            batch: 2,
-            eval_batch: 2,
-            d_ff: 16,
-            lora_rank: 2,
-            lora_alpha: 8.0,
-            flat_len,
-            lora_len: 0,
-            segments,
-            lora_segments: vec![],
-            artifacts: BTreeMap::<String, ArtifactSpec>::new(),
-        }
-    }
 
     #[test]
     fn init_respects_segment_kinds() {
@@ -223,7 +252,24 @@ mod tests {
         p.apply_mask(&mask);
         assert_eq!(p.flat[0], 0.0);
     }
-}
 
-#[cfg(test)]
-pub use tests::fake_config;
+    #[test]
+    fn synthetic_config_tiles_contiguously() {
+        let cfg = synthetic_config("t", 8, 2, 2, 32, 64, 16);
+        let mut off = 0usize;
+        for seg in &cfg.segments {
+            assert_eq!(seg.offset, off, "segment '{}'", seg.name);
+            off = seg.end();
+        }
+        assert_eq!(off, cfg.flat_len);
+        assert!(cfg.prunable_len() > 0);
+        // every prunable matrix present per layer
+        for l in 0..2 {
+            for t in ["attn.wq", "attn.wk", "attn.wv", "attn.wo",
+                      "mlp.w1", "mlp.w2"] {
+                let seg = cfg.segment(&format!("l{l}.{t}")).unwrap();
+                assert!(seg.prunable);
+            }
+        }
+    }
+}

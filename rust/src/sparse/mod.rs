@@ -62,6 +62,59 @@ impl Csr {
         }
     }
 
+    /// Multi-vector SpMM: Y = X W for a row-major batch X of shape
+    /// (b, din), writing Y (b, dout). Decodes each output row's index
+    /// list once and amortizes it across the whole batch — the classic
+    /// SpMM win in the memory-bound decode regime. Per sequence the
+    /// accumulation order is identical to [`Csr::matvec`], so results
+    /// are bit-exact with the single-vector path. Allocates scratch per
+    /// call; hot loops should hold a [`SpmmScratch`] and use
+    /// [`Csr::matvec_batch_into`].
+    pub fn matvec_batch(&self, x: &[f32], y: &mut [f32], b: usize) {
+        self.matvec_batch_into(x, y, b, &mut SpmmScratch::default());
+    }
+
+    /// [`Csr::matvec_batch`] with caller-owned scratch (no per-call
+    /// heap allocation once the scratch has warmed up).
+    pub fn matvec_batch_into(&self, x: &[f32], y: &mut [f32], b: usize,
+                             scratch: &mut SpmmScratch) {
+        debug_assert_eq!(x.len(), b * self.n_in);
+        debug_assert_eq!(y.len(), b * self.n_out);
+        if b == 1 {
+            return self.matvec(x, y);
+        }
+        // stage the batch as (din, b) so the inner loop is contiguous
+        transpose_batch_into(x, b, self.n_in, &mut scratch.xt);
+        scratch.acc.resize(b, 0.0);
+        let xt = &scratch.xt[..];
+        let acc = &mut scratch.acc;
+        for o in 0..self.n_out {
+            acc.fill(0.0);
+            let lo = self.row_ptr[o] as usize;
+            let hi = self.row_ptr[o + 1] as usize;
+            for k in lo..hi {
+                let v = self.values[k];
+                let c = self.col_idx[k] as usize;
+                let xrow = &xt[c * b..c * b + b];
+                for (a, xv) in acc.iter_mut().zip(xrow.iter()) {
+                    *a += v * xv;
+                }
+            }
+            for (bi, &a) in acc.iter().enumerate() {
+                y[bi * self.n_out + o] = a;
+            }
+        }
+    }
+
+    /// Matrix convenience wrapper over [`Csr::matvec_batch`]:
+    /// returns X @ W for X of shape (b, din).
+    pub fn matmat(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols, self.n_in, "matmat shape mismatch");
+        let mut y = Matrix::zeros(x.rows, self.n_out);
+        self.matvec_batch(&x.data, &mut y.data, x.rows);
+        y
+    }
+
     pub fn nnz(&self) -> usize {
         self.values.len()
     }
@@ -69,6 +122,29 @@ impl Csr {
     pub fn mem_bytes(&self) -> usize {
         self.row_ptr.len() * 4 + self.col_idx.len() * 4
             + self.values.len() * 4
+    }
+}
+
+/// Reusable scratch for the batched kernels: the (n, b) re-layout of
+/// the input batch plus the per-row accumulator. Hold one per decode
+/// loop so repeated `matvec_batch_into` calls stop hitting the
+/// allocator.
+#[derive(Debug, Default)]
+pub struct SpmmScratch {
+    xt: Vec<f32>,
+    acc: Vec<f32>,
+}
+
+/// Re-layout a row-major (b, n) batch as (n, b) into `xt` so batched
+/// kernels get unit-stride access across the batch in their inner
+/// loops. Every element of `xt[..b * n]` is overwritten.
+fn transpose_batch_into(x: &[f32], b: usize, n: usize, xt: &mut Vec<f32>) {
+    xt.resize(b * n, 0.0);
+    for bi in 0..b {
+        let row = &x[bi * n..(bi + 1) * n];
+        for (c, &v) in row.iter().enumerate() {
+            xt[c * b + bi] = v;
+        }
     }
 }
 
@@ -131,6 +207,64 @@ impl Macko {
         }
     }
 
+    /// Multi-vector SpMM over the bitmap format: Y = X W for row-major
+    /// X (b, din), writing Y (b, dout). Each output row's bitmap is
+    /// scanned once per step instead of once per sequence — the decode
+    /// cost MACKO pays for its 1-bit indices is amortized across the
+    /// batch. Bit-exact with [`Macko::matvec`] per sequence. Allocates
+    /// scratch per call; hot loops should hold a [`SpmmScratch`] and
+    /// use [`Macko::matvec_batch_into`].
+    pub fn matvec_batch(&self, x: &[f32], y: &mut [f32], b: usize) {
+        self.matvec_batch_into(x, y, b, &mut SpmmScratch::default());
+    }
+
+    /// [`Macko::matvec_batch`] with caller-owned scratch (no per-call
+    /// heap allocation once the scratch has warmed up).
+    pub fn matvec_batch_into(&self, x: &[f32], y: &mut [f32], b: usize,
+                             scratch: &mut SpmmScratch) {
+        debug_assert_eq!(x.len(), b * self.n_in);
+        debug_assert_eq!(y.len(), b * self.n_out);
+        if b == 1 {
+            return self.matvec(x, y);
+        }
+        transpose_batch_into(x, b, self.n_in, &mut scratch.xt);
+        scratch.acc.resize(b, 0.0);
+        let xt = &scratch.xt[..];
+        let acc = &mut scratch.acc;
+        for o in 0..self.n_out {
+            acc.fill(0.0);
+            let mut k = self.row_ptr[o] as usize;
+            let base = o * self.words_per_row;
+            for wi in 0..self.words_per_row {
+                let mut word = self.bitmap[base + wi];
+                let col0 = wi * 64;
+                while word != 0 {
+                    let bit = word.trailing_zeros() as usize;
+                    let v = self.values[k];
+                    let c = col0 + bit;
+                    let xrow = &xt[c * b..c * b + b];
+                    for (a, xv) in acc.iter_mut().zip(xrow.iter()) {
+                        *a += v * xv;
+                    }
+                    k += 1;
+                    word &= word - 1;
+                }
+            }
+            for (bi, &a) in acc.iter().enumerate() {
+                y[bi * self.n_out + o] = a;
+            }
+        }
+    }
+
+    /// Matrix convenience wrapper over [`Macko::matvec_batch`]:
+    /// returns X @ W for X of shape (b, din).
+    pub fn matmat(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols, self.n_in, "matmat shape mismatch");
+        let mut y = Matrix::zeros(x.rows, self.n_out);
+        self.matvec_batch(&x.data, &mut y.data, x.rows);
+        y
+    }
+
     pub fn nnz(&self) -> usize {
         self.values.len()
     }
@@ -145,6 +279,24 @@ impl Macko {
 pub fn dense_matvec(w: &Matrix, x: &[f32], y: &mut [f32]) {
     let t = w.t_matvec(x);
     y.copy_from_slice(&t);
+}
+
+/// Dense batched baseline: Y = X W for row-major X (b, din). Loops the
+/// skip-zero GEMV per row, so each row is bit-exact with
+/// [`dense_matvec`].
+pub fn dense_matvec_batch(w: &Matrix, x: &[f32], y: &mut [f32], b: usize) {
+    debug_assert_eq!(x.len(), b * w.rows);
+    debug_assert_eq!(y.len(), b * w.cols);
+    for bi in 0..b {
+        let t = w.t_matvec(&x[bi * w.rows..(bi + 1) * w.rows]);
+        y[bi * w.cols..(bi + 1) * w.cols].copy_from_slice(&t);
+    }
+}
+
+/// Dense matrix wrapper: returns X @ W (same accumulation order as
+/// [`dense_matvec`] per row, via the skip-zero ikj GEMM).
+pub fn dense_matmat(w: &Matrix, x: &Matrix) -> Matrix {
+    x.matmul(w)
 }
 
 #[cfg(test)]
@@ -221,6 +373,119 @@ mod tests {
         assert!(y.iter().all(|&v| v == 0.0));
         let mut y2 = vec![7.0f32; 16];
         Macko::from_weight(&w).matvec(&x, &mut y2);
+        assert!(y2.iter().all(|&v| v == 0.0));
+    }
+
+    fn batch_input(b: usize, din: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..b * din).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn matvec_batch_b1_is_bitwise_matvec() {
+        let (din, dout) = (96, 80);
+        let w = sparse_weight(din, dout, 0.8, 11);
+        let x = batch_input(1, din, 12);
+        let csr = Csr::from_weight(&w);
+        let mck = Macko::from_weight(&w);
+
+        let mut y1 = vec![0.0f32; dout];
+        let mut yb = vec![0.0f32; dout];
+        csr.matvec(&x, &mut y1);
+        csr.matvec_batch(&x, &mut yb, 1);
+        assert_eq!(y1, yb, "csr batch=1 must be bit-exact");
+
+        mck.matvec(&x, &mut y1);
+        mck.matvec_batch(&x, &mut yb, 1);
+        assert_eq!(y1, yb, "macko batch=1 must be bit-exact");
+
+        dense_matvec(&w, &x, &mut y1);
+        dense_matvec_batch(&w, &x, &mut yb, 1);
+        assert_eq!(y1, yb, "dense batch=1 must be bit-exact");
+    }
+
+    #[test]
+    fn matvec_batch_matches_per_sequence() {
+        // ragged-ish dims across formats; batched rows must equal the
+        // per-sequence kernels bit-for-bit (batch 2, 4, 7)
+        let (din, dout) = (100, 72);
+        let w = sparse_weight(din, dout, 0.75, 21);
+        let csr = Csr::from_weight(&w);
+        let mck = Macko::from_weight(&w);
+        for b in [2usize, 4, 7] {
+            let x = batch_input(b, din, 100 + b as u64);
+            let mut yc = vec![0.0f32; b * dout];
+            let mut ym = vec![0.0f32; b * dout];
+            let mut yd = vec![0.0f32; b * dout];
+            csr.matvec_batch(&x, &mut yc, b);
+            mck.matvec_batch(&x, &mut ym, b);
+            dense_matvec_batch(&w, &x, &mut yd, b);
+            for bi in 0..b {
+                let xi = &x[bi * din..(bi + 1) * din];
+                let mut want = vec![0.0f32; dout];
+                csr.matvec(xi, &mut want);
+                assert_eq!(&yc[bi * dout..(bi + 1) * dout], &want[..],
+                           "csr b={b} row {bi}");
+                mck.matvec(xi, &mut want);
+                assert_eq!(&ym[bi * dout..(bi + 1) * dout], &want[..],
+                           "macko b={b} row {bi}");
+                dense_matvec(&w, xi, &mut want);
+                assert_eq!(&yd[bi * dout..(bi + 1) * dout], &want[..],
+                           "dense b={b} row {bi}");
+            }
+        }
+    }
+
+    #[test]
+    fn matmat_agrees_with_dense() {
+        let (din, dout, b) = (64, 48, 5);
+        let w = sparse_weight(din, dout, 0.7, 31);
+        let x = Matrix::from_vec(b, din, batch_input(b, din, 32));
+        let expect = dense_matmat(&w, &x);
+        let yc = Csr::from_weight(&w).matmat(&x);
+        let ym = Macko::from_weight(&w).matmat(&x);
+        assert_eq!((yc.rows, yc.cols), (b, dout));
+        assert_eq!((ym.rows, ym.cols), (b, dout));
+        for (a, b) in expect.data.iter().zip(yc.data.iter()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+        for (a, b) in expect.data.iter().zip(ym.data.iter()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn matvec_batch_into_reuses_scratch_across_batch_sizes() {
+        // the engine shrinks b as slots retire; one scratch must serve
+        // every size (and the results must stay bit-exact)
+        let (din, dout) = (80, 40);
+        let w = sparse_weight(din, dout, 0.8, 41);
+        let csr = Csr::from_weight(&w);
+        let mck = Macko::from_weight(&w);
+        let mut scratch = SpmmScratch::default();
+        for &b in &[5usize, 3, 7, 1] {
+            let x = batch_input(b, din, 200 + b as u64);
+            let mut got = vec![0.0f32; b * dout];
+            let mut want = vec![0.0f32; b * dout];
+            csr.matvec_batch_into(&x, &mut got, b, &mut scratch);
+            csr.matvec_batch(&x, &mut want, b);
+            assert_eq!(got, want, "csr b={b}");
+            mck.matvec_batch_into(&x, &mut got, b, &mut scratch);
+            mck.matvec_batch(&x, &mut want, b);
+            assert_eq!(got, want, "macko b={b}");
+        }
+    }
+
+    #[test]
+    fn matvec_batch_empty_matrix_ok() {
+        let w = Matrix::zeros(24, 10);
+        let b = 3;
+        let x = vec![1.0f32; b * 24];
+        let mut y = vec![5.0f32; b * 10];
+        Csr::from_weight(&w).matvec_batch(&x, &mut y, b);
+        assert!(y.iter().all(|&v| v == 0.0));
+        let mut y2 = vec![5.0f32; b * 10];
+        Macko::from_weight(&w).matvec_batch(&x, &mut y2, b);
         assert!(y2.iter().all(|&v| v == 0.0));
     }
 }

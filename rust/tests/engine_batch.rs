@@ -1,0 +1,142 @@
+//! Batched-engine behaviour: determinism under threading, slot
+//! retirement edge cases, and GenStats token accounting (ISSUE 1
+//! satellite tests).
+
+use elsa::infer::{Backend, BatchOptions, Engine};
+use elsa::model::{synthetic_config, Params};
+use elsa::pruners::{magnitude, uniform_alloc};
+
+fn engine(backend: Backend) -> (Engine, usize) {
+    // d=40 (attention heads of 10), vocab 48, seq_len 20
+    let cfg = synthetic_config("batch_t", 40, 2, 4, 64, 48, 20);
+    let dense = Params::init(&cfg, 1);
+    let pruned = magnitude::prune(&cfg, &dense.flat,
+                                  &uniform_alloc(&cfg, 0.75))
+        .expect("prune");
+    let p = Params::new(&cfg, pruned);
+    let seq_len = cfg.seq_len;
+    (Engine::build(&p, backend).expect("engine"), seq_len)
+}
+
+fn opts(n_new: usize, threads: usize) -> BatchOptions {
+    BatchOptions { n_new, temperature: 0.8, seed: 3, threads }
+}
+
+#[test]
+fn batched_matches_per_sequence_for_batch_2_4_7() {
+    for backend in [Backend::Csr, Backend::Macko] {
+        let (engine, _) = engine(backend);
+        for b in [2usize, 4, 7] {
+            let prompts: Vec<Vec<u32>> = (0..b)
+                .map(|s| (0..4).map(|i| ((s * 7 + i * 3) % 48) as u32)
+                     .collect())
+                .collect();
+            let o = opts(8, 1);
+            let (outs, stats) = engine.generate_batch(&prompts, &o);
+            let mut total = 0usize;
+            for (s, prompt) in prompts.iter().enumerate() {
+                let (want, _) =
+                    engine.generate(prompt, 8, 0.8, 3 + s as u64);
+                assert_eq!(outs[s], want, "{backend:?} b={b} slot {s}");
+                total += want.len() - prompt.len();
+            }
+            assert_eq!(stats.tokens_generated, total, "{backend:?} b={b}");
+        }
+    }
+}
+
+#[test]
+fn threads_1_vs_4_identical() {
+    for backend in [Backend::Csr, Backend::Macko, Backend::Dense] {
+        let (engine, _) = engine(backend);
+        let prompts: Vec<Vec<u32>> = (0..6)
+            .map(|s| (0..3 + s % 3).map(|i| ((s + i * 5) % 48) as u32)
+                 .collect())
+            .collect();
+        let (out1, st1) = engine.generate_batch(&prompts, &opts(9, 1));
+        let (out4, st4) = engine.generate_batch(&prompts, &opts(9, 4));
+        assert_eq!(out1, out4, "{backend:?}: thread count changed output");
+        assert_eq!(st1.tokens_generated, st4.tokens_generated);
+        // oversubscribed: more threads than slots must also be safe
+        let (out9, _) = engine.generate_batch(&prompts, &opts(9, 9));
+        assert_eq!(out1, out9, "{backend:?}: oversubscription changed output");
+    }
+}
+
+#[test]
+fn ragged_prompts_account_consistently() {
+    let (engine, seq_len) = engine(Backend::Macko);
+    let prompts: Vec<Vec<u32>> = vec![
+        vec![1],
+        vec![2, 3, 4],
+        vec![5, 6, 7, 8, 9],
+        (0..8).map(|i| (i * 2 % 48) as u32).collect(),
+    ];
+    let n_new = 6;
+    let (outs, stats) = engine.generate_batch(&prompts, &opts(n_new, 2));
+    let mut total = 0usize;
+    for (s, prompt) in prompts.iter().enumerate() {
+        assert_eq!(&outs[s][..prompt.len()], &prompt[..],
+                   "slot {s} lost its prompt");
+        let gen = outs[s].len() - prompt.len();
+        let expect = n_new.min(seq_len - prompt.len());
+        assert_eq!(gen, expect, "slot {s}");
+        total += gen;
+    }
+    assert_eq!(stats.tokens_generated, total);
+}
+
+#[test]
+fn slot_hitting_seq_len_retires_mid_batch() {
+    let (engine, seq_len) = engine(Backend::Csr);
+    // slot 0 can only fit 2 new tokens; slot 1 has room for all 5
+    let long: Vec<u32> = (0..seq_len - 2).map(|i| (i % 48) as u32).collect();
+    let prompts = vec![long.clone(), vec![1, 2, 3]];
+    let n_new = 5;
+    let (outs, stats) = engine.generate_batch(&prompts, &opts(n_new, 1));
+    assert_eq!(outs[0].len(), seq_len, "slot 0 must stop at seq_len");
+    assert_eq!(outs[0].len() - long.len(), 2);
+    assert_eq!(outs[1].len() - 3, n_new);
+    assert_eq!(stats.tokens_generated, 2 + n_new);
+    // and the capped slot still matches its single-sequence twin
+    let (want, _) = engine.generate(&long, n_new, 0.8, 3);
+    assert_eq!(outs[0], want);
+}
+
+#[test]
+fn empty_prompt_retires_with_zero_tokens() {
+    let (engine, _) = engine(Backend::Macko);
+    let prompts: Vec<Vec<u32>> = vec![vec![], vec![4, 5, 6], vec![]];
+    let n_new = 4;
+    let (outs, stats) = engine.generate_batch(&prompts, &opts(n_new, 2));
+    assert_eq!(outs[0], Vec::<u32>::new());
+    assert_eq!(outs[2], Vec::<u32>::new());
+    assert_eq!(outs[1].len(), 3 + n_new);
+    assert_eq!(stats.tokens_generated, n_new,
+               "accounting must count only real tokens");
+}
+
+#[test]
+fn zero_new_tokens_and_empty_batch_are_noops() {
+    let (engine, _) = engine(Backend::Csr);
+    let prompts = vec![vec![1u32, 2], vec![3, 4, 5]];
+    let (outs, stats) = engine.generate_batch(&prompts, &opts(0, 2));
+    assert_eq!(outs[0], vec![1, 2]);
+    assert_eq!(outs[1], vec![3, 4, 5]);
+    assert_eq!(stats.tokens_generated, 0);
+
+    let (outs, stats) = engine.generate_batch(&[], &opts(4, 4));
+    assert!(outs.is_empty());
+    assert_eq!(stats.tokens_generated, 0);
+}
+
+#[test]
+fn prompt_filling_seq_len_generates_nothing() {
+    let (engine, seq_len) = engine(Backend::Macko);
+    let full: Vec<u32> = (0..seq_len).map(|i| (i % 48) as u32).collect();
+    let prompts = vec![full.clone(), vec![1, 2]];
+    let (outs, stats) = engine.generate_batch(&prompts, &opts(3, 1));
+    assert_eq!(outs[0], full);
+    assert_eq!(outs[1].len(), 2 + 3);
+    assert_eq!(stats.tokens_generated, 3);
+}

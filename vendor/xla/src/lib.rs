@@ -1,0 +1,270 @@
+//! Offline stub of the `xla` PJRT bindings (vendored).
+//!
+//! The native `xla_extension` closure is not in the offline vendor set,
+//! so this crate provides just enough of the API surface for the
+//! workspace to compile and for the non-runtime test suite to run:
+//!
+//!  - [`Literal`] is a real, functional host-side tensor value
+//!    (`vec1`, `scalar`, `reshape`, `to_vec`, `get_first_element`,
+//!    `to_tuple` all work),
+//!  - [`PjRtClient::cpu`] succeeds (so manifest-only flows like the
+//!    sparse serving CLI keep working), while the paths that genuinely
+//!    need native XLA — [`HloModuleProto::from_text_file`],
+//!    [`PjRtClient::compile`], [`PjRtLoadedExecutable::execute`] —
+//!    return [`Error`] at runtime, reporting that the native backend
+//!    is unavailable in this build.
+//!
+//! The runtime integration tests skip themselves when `artifacts/` is
+//! absent, so a fresh checkout stays green; anything that actually
+//! needs XLA execution fails loudly with a clear message instead of
+//! failing to link.
+
+use std::fmt;
+
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Error {
+        Error(format!(
+            "xla backend unavailable in this offline build (wanted: {what}); \
+             rebuild against the native xla_extension closure to enable \
+             PJRT execution"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy {
+    fn lit_from_slice(xs: &[Self]) -> Literal;
+    fn lit_to_vec(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+#[derive(Debug, Clone)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// A host-side tensor value (rank tracked via `dims`).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl NativeType for f32 {
+    fn lit_from_slice(xs: &[Self]) -> Literal {
+        Literal { data: Data::F32(xs.to_vec()), dims: vec![xs.len() as i64] }
+    }
+
+    fn lit_to_vec(lit: &Literal) -> Result<Vec<Self>> {
+        match &lit.data {
+            Data::F32(v) => Ok(v.clone()),
+            _ => Err(Error("literal is not f32".to_string())),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn lit_from_slice(xs: &[Self]) -> Literal {
+        Literal { data: Data::I32(xs.to_vec()), dims: vec![xs.len() as i64] }
+    }
+
+    fn lit_to_vec(lit: &Literal) -> Result<Vec<Self>> {
+        match &lit.data {
+            Data::I32(v) => Ok(v.clone()),
+            _ => Err(Error("literal is not i32".to_string())),
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(xs: &[T]) -> Literal {
+        T::lit_from_slice(xs)
+    }
+
+    /// Rank-0 f32 literal.
+    pub fn scalar(x: f32) -> Literal {
+        Literal { data: Data::F32(vec![x]), dims: vec![] }
+    }
+
+    fn numel(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::Tuple(t) => t.len(),
+        }
+    }
+
+    /// Same data, new shape (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.numel() {
+            return Err(Error(format!(
+                "reshape {:?} -> {dims:?}: element count mismatch",
+                self.dims
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Flattened element vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::lit_to_vec(self)
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        T::lit_to_vec(self)?
+            .first()
+            .copied()
+            .ok_or_else(|| Error("empty literal".to_string()))
+    }
+
+    /// Unpack a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            Data::Tuple(t) => Ok(t),
+            _ => Err(Error("literal is not a tuple".to_string())),
+        }
+    }
+
+    /// Build a tuple literal (used by tests of the stub itself).
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        let n = elems.len() as i64;
+        Literal { data: Data::Tuple(elems), dims: vec![n] }
+    }
+}
+
+/// Parsed HLO module (stub: construction always fails offline).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable(&format!("parse HLO text {path}")))
+    }
+}
+
+/// A computation handle (stub).
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client handle. The stub client constructs successfully so
+/// manifest-only paths (checkpoint serving, the batched engine CLI,
+/// experiment plumbing) stay alive; only `compile`/`execute` — the
+/// points that genuinely need native XLA — fail.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub-offline".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation)
+                   -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("compile"))
+    }
+}
+
+/// Types accepted as positional arguments by `execute`.
+pub trait ExecuteInput {}
+
+impl ExecuteInput for Literal {}
+
+/// Compiled executable handle (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: ExecuteInput>(&self, _args: &[T])
+                                    -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("execute"))
+    }
+}
+
+/// Device buffer handle (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0]);
+        assert_eq!(l.get_first_element::<f32>().unwrap(), 1.0);
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn reshape_checks_numel() {
+        let l = Literal::vec1(&[1i32, 2, 3, 4, 5, 6]);
+        let m = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(m.to_vec::<i32>().unwrap().len(), 6);
+        assert!(l.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn tuple_unpacks() {
+        let t = Literal::tuple(vec![Literal::scalar(1.0),
+                                    Literal::scalar(2.0)]);
+        let elems = t.to_tuple().unwrap();
+        assert_eq!(elems.len(), 2);
+        assert!(Literal::scalar(0.0).to_tuple().is_err());
+    }
+
+    #[test]
+    fn pjrt_client_constructs_but_execution_paths_fail_loudly() {
+        let client = PjRtClient::cpu().expect("stub client must build");
+        assert_eq!(client.device_count(), 0);
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let comp = XlaComputation { _private: () };
+        assert!(client.compile(&comp).is_err());
+    }
+}
