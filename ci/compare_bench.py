@@ -1,0 +1,79 @@
+#!/usr/bin/env python3
+"""Bench regression gate for the CI bench-smoke job.
+
+Usage: compare_bench.py BENCH_scheduler.json ci/bench_baseline.json
+
+Fails (exit 1) when any policy's throughput in the current bench run
+drops below (1 - tolerance) of the committed baseline floor, or when the
+continuous-vs-static speedup falls below the baseline's min_speedup_x
+(continuous admission must keep beating static batching).
+
+Latency percentiles are reported for the record but not gated: on the
+shared CI fleet they are far noisier than aggregate throughput.
+"""
+
+import json
+import sys
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 2
+    with open(sys.argv[1]) as f:
+        current = json.load(f)
+    with open(sys.argv[2]) as f:
+        baseline = json.load(f)
+
+    tolerance = float(baseline.get("tolerance", 0.15))
+    failures = []
+
+    print(f"{'policy':<12} {'baseline':>10} {'floor':>10} "
+          f"{'current':>10}  status")
+    gated = [k for k, v in baseline.items()
+             if isinstance(v, dict) and "tok_s" in v]
+    for policy in gated:
+        base = float(baseline[policy]["tok_s"])
+        floor = base * (1.0 - tolerance)
+        if policy not in current:
+            # a gated policy vanishing from the bench output is itself
+            # a regression, not a free pass
+            print(f"{policy:<12} {base:>10.1f} {floor:>10.1f} "
+                  f"{'MISSING':>10}  REGRESSION")
+            failures.append(f"{policy}: missing from bench output")
+            continue
+        got = float(current[policy]["tok_s"])
+        ok = got >= floor
+        print(f"{policy:<12} {base:>10.1f} {floor:>10.1f} {got:>10.1f}  "
+              f"{'ok' if ok else 'REGRESSION'}")
+        if not ok:
+            failures.append(
+                f"{policy}: {got:.1f} tok/s < floor {floor:.1f} "
+                f"(baseline {base:.1f}, tolerance {tolerance:.0%})")
+
+    min_speedup = float(baseline.get("min_speedup_x", 1.0))
+    speedup = float(current.get("speedup_x", 0.0))
+    ok = speedup >= min_speedup
+    print(f"{'speedup_x':<12} {min_speedup:>10.2f} {min_speedup:>10.2f} "
+          f"{speedup:>10.2f}  {'ok' if ok else 'REGRESSION'}")
+    if not ok:
+        failures.append(
+            f"continuous/static speedup {speedup:.2f}x < {min_speedup:.2f}x")
+
+    for policy in ("static", "continuous"):
+        if policy in current:
+            p = current[policy]
+            print(f"  {policy} latency: p50 {p.get('p50_ms', 0):.2f} ms, "
+                  f"p95 {p.get('p95_ms', 0):.2f} ms (not gated)")
+
+    if failures:
+        print("\nbench regression gate FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("\nbench regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

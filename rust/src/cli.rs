@@ -7,6 +7,10 @@
 //!   generate  --config tiny --ckpt ckpt.bin [--sparse] [--prompt-len 8]
 //!   infer     alias of generate; --batch N --threads N serves N
 //!             prompts through the batched engine
+//!   serve     --config tiny --ckpt ckpt.bin --requests 32
+//!             --max-slots 8 --threads 4 [--arrival-gap 2.0]
+//!             [--deadline STEPS] [--verbose] — continuous-batching
+//!             scheduler over a seeded Poisson-ish request stream
 //!   exp       --id fig2|fig3|...|all [--scale quick|full] [--threads N]
 //!   report    --results results/
 
@@ -24,8 +28,8 @@ pub struct Args {
 impl Args {
     pub fn parse(argv: &[String]) -> Result<Args> {
         if argv.is_empty() {
-            bail!("usage: elsa <pretrain|prune|eval|generate|exp|report> \
-                   [--key value ...]");
+            bail!("usage: elsa <pretrain|prune|eval|generate|serve|exp|\
+                   report> [--key value ...]");
         }
         let mut a = Args { cmd: argv[0].clone(), ..Default::default() };
         let mut i = 1;

@@ -23,10 +23,12 @@ pub fn dispatch(args: &Args) -> Result<()> {
         // `infer` is the serving alias: --batch N --threads N drives
         // the batched engine
         "generate" | "infer" => crate::infer::cmd_generate(args),
+        // continuous-batching scheduler over a seeded request stream
+        "serve" => crate::infer::scheduler::cmd_serve(args),
         "exp" => crate::experiments::cmd_exp(args),
         other => bail!(
             "unknown subcommand '{other}'\n\
-             usage: elsa <pretrain|prune|eval|generate|infer|exp> \
+             usage: elsa <pretrain|prune|eval|generate|infer|serve|exp> \
              [--flags]"),
     }
 }

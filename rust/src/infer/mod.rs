@@ -6,7 +6,7 @@
 //! numerics with model::forward (tested), so a pruned checkpoint can be
 //! loaded, converted, and served without touching the HLO path.
 //!
-//! Two serving modes:
+//! Three serving modes:
 //!  - [`Engine::generate`]: one sequence, one matvec per linear per
 //!    token (the original microbenchmark path),
 //!  - [`Engine::generate_batch`]: many sequences with per-slot KV
@@ -15,6 +15,12 @@
 //!    decode across the batch) and shards slots across worker threads
 //!    (`--threads N`). Batched results are bit-identical to the
 //!    single-sequence path per slot, for any thread count.
+//!  - [`scheduler`]: the continuous-batching layer (`elsa serve`) — a
+//!    request queue with mid-decode slot admission and pooled KV
+//!    caches. `generate_batch` is a thin fixed-admission wrapper over
+//!    it.
+
+pub mod scheduler;
 
 use anyhow::Result;
 
@@ -339,10 +345,12 @@ impl Engine {
     }
 
     /// Batched generation over many prompts with per-slot KV caches and
-    /// slot retirement (continuous-batching-lite): every step decodes
-    /// the set of still-live slots in one multi-vector pass, and a slot
-    /// retires as soon as it has produced `n_new` tokens or its sequence
-    /// hits `seq_len`.
+    /// slot retirement: a thin wrapper over the continuous-batching
+    /// [`scheduler`] with *fixed admission* — every prompt becomes a
+    /// request arriving at step 0 with `max_slots == prompts.len()`, so
+    /// the whole batch is admitted up front (the pre-scheduler
+    /// behavior). A slot retires as soon as it has produced `n_new`
+    /// tokens or its sequence hits `seq_len`.
     ///
     /// Determinism: a slot `s` with a non-empty prompt reproduces
     /// `generate(&prompts[s], n_new, temperature, seed + s)`
@@ -363,127 +371,33 @@ impl Engine {
                     "prompt of {} tokens exceeds seq_len {}", p.len(),
                     self.cfg.seq_len);
         }
-        let mut slots: Vec<Slot> = prompts
-            .iter()
-            .enumerate()
-            .map(|(s, p)| self.new_slot(p, opts, s as u64))
-            .collect();
-
-        let threads = opts.threads.max(1).min(slots.len().max(1));
-        let (prefill_s, decode_s) = if threads <= 1 {
-            self.run_slots(&mut slots, opts)
-        } else {
-            // slots are fully independent: shard them across workers,
-            // each running the batched decode loop over its shard
-            let chunk = slots.len().div_ceil(threads);
-            let mut prefill = 0.0f64;
-            let mut decode = 0.0f64;
-            std::thread::scope(|sc| {
-                let mut handles = Vec::new();
-                for shard in slots.chunks_mut(chunk) {
-                    handles.push(
-                        sc.spawn(move || self.run_slots(shard, opts)));
-                }
-                for h in handles {
-                    let (p, d) = h.join().expect("worker panicked");
-                    prefill = prefill.max(p);
-                    decode = decode.max(d);
-                }
+        let mut queue = scheduler::RequestQueue::new();
+        for (s, p) in prompts.iter().enumerate() {
+            queue.push(scheduler::Request {
+                id: s as u64,
+                prompt: p.clone(),
+                n_new: opts.n_new,
+                seed: opts.seed.wrapping_add(s as u64),
+                deadline: None,
             });
-            (prefill, decode)
-        };
-
-        let total: usize = slots.iter().map(|s| s.generated).sum();
+        }
+        let sched = scheduler::Scheduler::new(self, scheduler::SchedOptions {
+            max_slots: prompts.len().max(1),
+            temperature: opts.temperature,
+            threads: opts.threads,
+        });
+        // run() returns finished requests sorted by id == slot index
+        let (finished, st) = sched.run(queue);
         let outs: Vec<Vec<u32>> =
-            slots.into_iter().map(|s| s.tokens).collect();
+            finished.into_iter().map(|f| f.tokens).collect();
         (outs, GenStats {
-            prefill_seconds: prefill_s,
-            decode_seconds: decode_s,
-            tokens_generated: total,
-            tokens_per_second: total as f64 / decode_s.max(1e-9),
+            prefill_seconds: st.prefill_seconds,
+            decode_seconds: st.decode_seconds,
+            tokens_generated: st.tokens_generated,
+            tokens_per_second: st.tokens_generated as f64
+                / st.decode_seconds.max(1e-9),
             mem_bytes: self.mem_bytes(),
         })
-    }
-
-    fn new_slot(&self, prompt: &[u32], opts: &BatchOptions, idx: u64)
-                -> Slot {
-        let d = self.cfg.d_model;
-        let cap = self.cfg.seq_len * d;
-        Slot {
-            tokens: prompt.to_vec(),
-            prompt_len: prompt.len(),
-            fed: 0,
-            kvs: (0..self.cfg.n_layers)
-                .map(|_| Kv { k: Vec::with_capacity(cap),
-                              v: Vec::with_capacity(cap), len: 0 })
-                .collect(),
-            rng: Rng::new(opts.seed.wrapping_add(idx)),
-            logits: vec![],
-            generated: 0,
-            done: false,
-        }
-    }
-
-    /// Drive one shard of slots to completion: lockstep prefill, then
-    /// sample-and-decode until every slot retires. Returns the shard's
-    /// (prefill, decode) wall seconds.
-    fn run_slots(&self, slots: &mut [Slot], opts: &BatchOptions)
-                 -> (f64, f64) {
-        let mut scratch = BatchScratch::new(&self.cfg, slots.len());
-
-        // prefill: feed prompt tokens in lockstep (ragged prompts simply
-        // drop out of the active set as they finish)
-        let tp = Timer::start();
-        loop {
-            let active: Vec<usize> = slots
-                .iter()
-                .enumerate()
-                .filter(|(_, s)| s.fed < s.prompt_len)
-                .map(|(i, _)| i)
-                .collect();
-            if active.is_empty() {
-                break;
-            }
-            self.decode_step_batch(slots, &active, &mut scratch);
-        }
-        let prefill_s = tp.seconds();
-
-        // decode: sample one token per live slot, retire exhausted
-        // slots, and batch-decode the freshly appended tokens
-        let td = Timer::start();
-        loop {
-            let mut active = Vec::with_capacity(slots.len());
-            for (i, s) in slots.iter_mut().enumerate() {
-                if s.done {
-                    continue;
-                }
-                if s.logits.is_empty()                 // empty prompt
-                    || s.generated >= opts.n_new       // budget reached
-                    || s.tokens.len() >= self.cfg.seq_len
-                {
-                    s.done = true;
-                    continue;
-                }
-                let next = sample(&s.logits, opts.temperature, &mut s.rng);
-                s.tokens.push(next);
-                s.generated += 1;
-                if s.generated >= opts.n_new
-                    || s.tokens.len() >= self.cfg.seq_len
-                {
-                    // the freshly pushed token's logits would never be
-                    // read — retire now and skip that forward pass
-                    // (tokens are unchanged; only wasted work is cut)
-                    s.done = true;
-                } else {
-                    active.push(i);
-                }
-            }
-            if active.is_empty() {
-                break;
-            }
-            self.decode_step_batch(slots, &active, &mut scratch);
-        }
-        (prefill_s, td.seconds())
     }
 
     /// One batched decode step: for every slot index in `active`, feed
@@ -595,7 +509,8 @@ pub struct BatchOptions {
     /// Slot `s` samples from `Rng::new(seed + s)`, matching a
     /// single-sequence `generate` call with seed `seed + s`.
     pub seed: u64,
-    /// Worker threads (slots are sharded across them; 0/1 = inline).
+    /// Scheduler worker threads (batch capacity is split across them;
+    /// 0/1 = inline).
     pub threads: usize,
 }
 
@@ -605,7 +520,9 @@ impl Default for BatchOptions {
     }
 }
 
-/// One in-flight sequence of the batched engine.
+/// One in-flight sequence of the batched engine. Created by the
+/// [`scheduler`] at admission time, with KV buffers drawn from its
+/// [`scheduler::KvPool`]; retirement hands the buffers back.
 struct Slot {
     tokens: Vec<u32>,
     prompt_len: usize,
@@ -615,7 +532,8 @@ struct Slot {
     rng: Rng,
     logits: Vec<f32>,
     generated: usize,
-    done: bool,
+    /// This request's token budget (the slot retires once reached).
+    n_new: usize,
 }
 
 struct Scratch {

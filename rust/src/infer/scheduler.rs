@@ -1,0 +1,778 @@
+//! Continuous-batching request scheduler with pooled KV caches.
+//!
+//! The serving layer above [`Engine`]: a [`RequestQueue`] of ragged
+//! generation requests (prompt, `n_new`, seed, admission deadline), a
+//! [`Scheduler`] that admits queued requests into freed slots
+//! *mid-decode* — instead of waiting for the whole batch to retire the
+//! way static batching (`Engine::generate_batch`) does — and a
+//! [`KvPool`] that recycles per-slot KV-cache buffers across requests
+//! so steady-state decode does not touch the allocator.
+//!
+//! ## Time model
+//!
+//! The scheduler runs on a deterministic *step clock*: one tick per
+//! batched decode step (summed across workers when `threads > 1`).
+//! Request arrivals and admission deadlines are expressed in steps, so
+//! a queue built with [`RequestQueue::with_poisson_arrivals`] replays
+//! the exact same arrival pattern on every run — load generation is
+//! seeded through `util::rng`, never wall-clock. When every worker is
+//! idle and the next arrival is in the future, the clock fast-forwards
+//! to it instead of spinning through empty steps.
+//!
+//! ## Determinism guarantee
+//!
+//! Request `r` with seed `s` reproduces `Engine::generate(&prompt, n_new,
+//! temperature, s)` bit-for-bit **regardless of admission order, batch
+//! composition, `max_slots`, or `threads`**: the batched kernels keep
+//! each sequence's accumulation order identical to the single-vector
+//! path, attention/layernorm stay per-slot, and each request samples
+//! from its own seeded RNG. Scheduling policy only decides *when* a
+//! request runs, never *what* it produces. (`Engine::generate_batch` is
+//! a thin wrapper over this module with fixed admission.)
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::{sample, BatchScratch, Engine, Kv, Slot};
+use crate::cli::Args;
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+use crate::util::timer::Timer;
+
+/// One generation request. Prompts may be ragged across a queue; every
+/// request carries its own token budget and sampling seed.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    /// New tokens to generate (capped by the model's `seq_len`).
+    pub n_new: usize,
+    /// Sampling seed: the request reproduces
+    /// `generate(&prompt, n_new, temperature, seed)` bit-for-bit.
+    pub seed: u64,
+    /// Admission deadline in scheduler steps *after arrival*: if the
+    /// request has not been admitted within this many steps of
+    /// arriving, it is dropped as expired (zero tokens). `None` waits
+    /// forever.
+    pub deadline: Option<u64>,
+}
+
+/// A deterministic arrival schedule: requests plus the step at which
+/// each one becomes visible to the scheduler.
+#[derive(Debug, Clone, Default)]
+pub struct RequestQueue {
+    entries: Vec<(u64, Request)>,
+}
+
+impl RequestQueue {
+    pub fn new() -> RequestQueue {
+        RequestQueue::default()
+    }
+
+    /// Enqueue a request that is available from step 0.
+    pub fn push(&mut self, req: Request) {
+        self.push_at(0, req);
+    }
+
+    /// Enqueue a request that arrives at `arrival_step`.
+    pub fn push_at(&mut self, arrival_step: u64, req: Request) {
+        self.entries.push((arrival_step, req));
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Poisson-ish arrivals: exponential inter-arrival gaps with the
+    /// given mean (in steps), drawn from the seeded deterministic RNG.
+    /// `mean_gap_steps <= 0` makes every request arrive at step 0.
+    pub fn with_poisson_arrivals(reqs: Vec<Request>, mean_gap_steps: f64,
+                                 seed: u64) -> RequestQueue {
+        let mut rng = Rng::new(seed);
+        let mut q = RequestQueue::new();
+        let mut t = 0.0f64;
+        for r in reqs {
+            if mean_gap_steps > 0.0 {
+                t += -mean_gap_steps * (1.0 - rng.f64()).ln();
+            }
+            q.push_at(t as u64, r);
+        }
+        q
+    }
+
+    /// Sorted (arrival, id) pop order for the scheduler.
+    fn into_deque(mut self) -> VecDeque<(u64, Request)> {
+        self.entries.sort_by_key(|(a, r)| (*a, r.id));
+        self.entries.into()
+    }
+}
+
+/// Recycles per-slot KV-cache buffer sets across requests. A retiring
+/// slot's buffers (one K + one V per layer, each holding capacity for
+/// `seq_len * d_model` floats) go back to the pool; the next admission
+/// reuses them after a `clear()` that keeps the heap allocation, so
+/// steady-state decode admits and retires requests allocation-free.
+pub struct KvPool {
+    layers: usize,
+    cap: usize,
+    free: Vec<Vec<Kv>>,
+    /// Buffer sets that required a fresh heap allocation.
+    pub allocated: usize,
+    /// Buffer sets served by recycling a retired slot's buffers.
+    pub reused: usize,
+}
+
+impl KvPool {
+    pub(crate) fn new(layers: usize, cap: usize) -> KvPool {
+        KvPool { layers, cap, free: Vec::new(), allocated: 0, reused: 0 }
+    }
+
+    fn acquire(&mut self) -> Vec<Kv> {
+        match self.free.pop() {
+            Some(mut kvs) => {
+                for kv in kvs.iter_mut() {
+                    kv.k.clear();
+                    kv.v.clear();
+                    kv.len = 0;
+                }
+                self.reused += 1;
+                kvs
+            }
+            None => {
+                self.allocated += 1;
+                (0..self.layers)
+                    .map(|_| Kv {
+                        k: Vec::with_capacity(self.cap),
+                        v: Vec::with_capacity(self.cap),
+                        len: 0,
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    fn release(&mut self, kvs: Vec<Kv>) {
+        debug_assert_eq!(kvs.len(), self.layers);
+        self.free.push(kvs);
+    }
+
+    /// Buffer sets currently parked in the pool.
+    pub fn pooled(&self) -> usize {
+        self.free.len()
+    }
+}
+
+/// Scheduler policy knobs.
+#[derive(Debug, Clone)]
+pub struct SchedOptions {
+    /// Maximum concurrently decoding requests (summed across workers).
+    pub max_slots: usize,
+    /// Sampling temperature shared by every request (0 = greedy).
+    pub temperature: f32,
+    /// Worker threads; `max_slots` capacity is split across them and
+    /// each worker admits from the shared queue into its own slots.
+    pub threads: usize,
+}
+
+impl Default for SchedOptions {
+    fn default() -> SchedOptions {
+        SchedOptions { max_slots: 8, temperature: 0.0, threads: 1 }
+    }
+}
+
+/// Terminal record for one request (completed or expired).
+#[derive(Debug, Clone)]
+pub struct FinishedRequest {
+    pub id: u64,
+    /// Prompt + generated tokens (empty for expired requests).
+    pub tokens: Vec<u32>,
+    pub prompt_len: usize,
+    pub generated: usize,
+    /// True if the admission deadline passed before a slot freed up.
+    pub expired: bool,
+    pub arrival_step: u64,
+    /// Step the request entered a slot (`== arrival_step` for requests
+    /// that expired without ever being admitted).
+    pub admitted_step: u64,
+    pub finished_step: u64,
+    /// Wall milliseconds from admission to retirement (0 if expired).
+    pub latency_ms: f64,
+}
+
+/// Aggregate serving metrics for one scheduler run.
+#[derive(Debug, Clone)]
+pub struct SchedStats {
+    pub requests: usize,
+    pub expired: usize,
+    pub tokens_generated: usize,
+    /// Final step-clock value (decode steps summed across workers,
+    /// plus idle fast-forward jumps).
+    pub steps: u64,
+    pub wall_seconds: f64,
+    /// Wall seconds of steps where some slot was still consuming its
+    /// prompt (max across workers).
+    pub prefill_seconds: f64,
+    /// Wall seconds of pure generation steps (max across workers).
+    pub decode_seconds: f64,
+    /// Aggregate serving throughput: generated tokens / wall seconds.
+    pub tokens_per_second: f64,
+    pub p50_latency_ms: f64,
+    pub p95_latency_ms: f64,
+    /// Mean steps a served request waited between arrival and admission.
+    pub mean_wait_steps: f64,
+    pub kv_allocated: usize,
+    pub kv_reused: usize,
+}
+
+/// Continuous-batching scheduler over one [`Engine`].
+pub struct Scheduler<'e> {
+    engine: &'e Engine,
+    opts: SchedOptions,
+}
+
+/// State shared by the scheduler workers.
+struct Shared {
+    /// Pending requests in (arrival, id) order.
+    queue: Mutex<VecDeque<(u64, Request)>>,
+    /// The step clock (see module docs).
+    clock: AtomicU64,
+    /// Requests currently admitted across all workers (idle workers
+    /// fast-forward the clock only when this hits zero).
+    active: AtomicUsize,
+}
+
+/// Per-request bookkeeping the engine-level `Slot` doesn't carry.
+struct Meta {
+    id: u64,
+    arrival_step: u64,
+    admitted_step: u64,
+    admitted_at: Instant,
+}
+
+struct WorkerOut {
+    finished: Vec<FinishedRequest>,
+    prefill_seconds: f64,
+    decode_seconds: f64,
+    kv_allocated: usize,
+    kv_reused: usize,
+}
+
+impl<'e> Scheduler<'e> {
+    pub fn new(engine: &'e Engine, opts: SchedOptions) -> Scheduler<'e> {
+        Scheduler { engine, opts }
+    }
+
+    /// Drain `queue` to completion and return every request's terminal
+    /// record (sorted by request id) plus aggregate stats.
+    pub fn run(&self, queue: RequestQueue)
+               -> (Vec<FinishedRequest>, SchedStats) {
+        let n_requests = queue.len();
+        let max_slots = self.opts.max_slots.max(1);
+        let threads = self.opts.threads.max(1).min(max_slots);
+        let shared = Shared {
+            queue: Mutex::new(queue.into_deque()),
+            clock: AtomicU64::new(0),
+            active: AtomicUsize::new(0),
+        };
+        let t0 = Instant::now();
+        let outs: Vec<WorkerOut> = if threads <= 1 {
+            vec![self.worker(&shared, max_slots)]
+        } else {
+            let shared = &shared;
+            std::thread::scope(|sc| {
+                let mut handles = Vec::new();
+                for w in 0..threads {
+                    let cap = max_slots / threads
+                        + usize::from(w < max_slots % threads);
+                    handles.push(sc.spawn(move || self.worker(shared, cap)));
+                }
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("scheduler worker panicked"))
+                    .collect()
+            })
+        };
+        let wall = t0.elapsed().as_secs_f64();
+
+        let prefill = outs.iter().fold(0.0, |a, o| a.max(o.prefill_seconds));
+        let decode = outs.iter().fold(0.0, |a, o| a.max(o.decode_seconds));
+        let kv_allocated = outs.iter().map(|o| o.kv_allocated).sum();
+        let kv_reused = outs.iter().map(|o| o.kv_reused).sum();
+        let mut finished: Vec<FinishedRequest> =
+            outs.into_iter().flat_map(|o| o.finished).collect();
+        finished.sort_by_key(|f| f.id);
+        debug_assert_eq!(finished.len(), n_requests,
+                         "every request must finish or expire");
+        let stats = summarize(&finished, wall,
+                              shared.clock.load(Ordering::SeqCst), prefill,
+                              decode, kv_allocated, kv_reused);
+        (finished, stats)
+    }
+
+    /// One worker: a batched decode loop over up to `cap` slots that
+    /// samples/retires, admits from the shared queue into freed slots,
+    /// then runs one batched decode step — every iteration, so a
+    /// request admitted mid-decode starts prefilling on the very next
+    /// step while its batch-mates keep generating.
+    fn worker(&self, shared: &Shared, cap: usize) -> WorkerOut {
+        let engine = self.engine;
+        let cfg = &engine.cfg;
+        let mut pool = KvPool::new(cfg.n_layers, cfg.seq_len * cfg.d_model);
+        let mut slots: Vec<Slot> = Vec::with_capacity(cap);
+        let mut meta: Vec<Meta> = Vec::with_capacity(cap);
+        let mut scratch = BatchScratch::new(cfg, cap);
+        let mut indices: Vec<usize> = Vec::with_capacity(cap);
+        let mut out = WorkerOut {
+            finished: Vec::new(),
+            prefill_seconds: 0.0,
+            decode_seconds: 0.0,
+            kv_allocated: 0,
+            kv_reused: 0,
+        };
+
+        loop {
+            let now = shared.clock.load(Ordering::SeqCst);
+
+            // 1. Sample freshly decoded slots; retire exhausted ones.
+            //    (Slots mid-prefill have fed < tokens.len() and skip.)
+            let mut i = 0;
+            while i < slots.len() {
+                let done = {
+                    let s = &mut slots[i];
+                    if s.fed < s.tokens.len() {
+                        false
+                    } else if s.logits.is_empty()
+                        || s.generated >= s.n_new
+                        || s.tokens.len() >= cfg.seq_len
+                    {
+                        true
+                    } else {
+                        let next = sample(&s.logits, self.opts.temperature,
+                                          &mut s.rng);
+                        s.tokens.push(next);
+                        s.generated += 1;
+                        // if that token hit the budget, its logits would
+                        // never be read — retire without the forward pass
+                        s.generated >= s.n_new
+                            || s.tokens.len() >= cfg.seq_len
+                    }
+                };
+                if done {
+                    retire(&mut slots, &mut meta, i, &mut pool, shared,
+                           &mut out.finished, now);
+                } else {
+                    i += 1;
+                }
+            }
+
+            // 2. Admit arrived requests into freed capacity — this is
+            //    the continuous part: admission happens between decode
+            //    steps, not at batch boundaries.
+            if slots.len() < cap {
+                let mut q = shared.queue.lock().unwrap();
+                while slots.len() < cap {
+                    if !q.front().is_some_and(|(a, _)| *a <= now) {
+                        break;
+                    }
+                    let (arrival, req) = q.pop_front().unwrap();
+                    if req.deadline
+                        .is_some_and(|d| now > arrival.saturating_add(d))
+                    {
+                        out.finished.push(FinishedRequest {
+                            id: req.id,
+                            tokens: Vec::new(),
+                            prompt_len: req.prompt.len(),
+                            generated: 0,
+                            expired: true,
+                            arrival_step: arrival,
+                            // never admitted: keep wait = 0 rather than
+                            // fabricating an admission step
+                            admitted_step: arrival,
+                            finished_step: now,
+                            latency_ms: 0.0,
+                        });
+                        continue;
+                    }
+                    if req.prompt.is_empty() {
+                        // nothing to condition on: retires immediately
+                        // with zero tokens (same rule as generate_batch)
+                        out.finished.push(FinishedRequest {
+                            id: req.id,
+                            tokens: Vec::new(),
+                            prompt_len: 0,
+                            generated: 0,
+                            expired: false,
+                            arrival_step: arrival,
+                            admitted_step: now,
+                            finished_step: now,
+                            latency_ms: 0.0,
+                        });
+                        continue;
+                    }
+                    assert!(req.prompt.len() <= cfg.seq_len,
+                            "request {}: prompt of {} tokens exceeds \
+                             seq_len {}", req.id, req.prompt.len(),
+                            cfg.seq_len);
+                    shared.active.fetch_add(1, Ordering::SeqCst);
+                    meta.push(Meta {
+                        id: req.id,
+                        arrival_step: arrival,
+                        admitted_step: now,
+                        admitted_at: Instant::now(),
+                    });
+                    slots.push(Slot {
+                        prompt_len: req.prompt.len(),
+                        tokens: req.prompt,
+                        fed: 0,
+                        kvs: pool.acquire(),
+                        rng: Rng::new(req.seed),
+                        logits: vec![],
+                        generated: 0,
+                        n_new: req.n_new,
+                    });
+                }
+            }
+
+            // 3. Idle / termination.
+            if slots.is_empty() {
+                let q = shared.queue.lock().unwrap();
+                if q.is_empty() {
+                    break;
+                }
+                if shared.active.load(Ordering::SeqCst) == 0 {
+                    // the whole scheduler is idle: fast-forward the
+                    // clock to the next arrival instead of spinning
+                    // through empty steps, and retry admission
+                    // immediately
+                    let next = q.front().unwrap().0;
+                    shared.clock.fetch_max(next, Ordering::SeqCst);
+                    drop(q);
+                } else {
+                    // other workers are still decoding: park briefly
+                    // instead of hot-spinning on their queue mutex
+                    drop(q);
+                    std::thread::sleep(
+                        std::time::Duration::from_micros(50));
+                }
+                continue;
+            }
+
+            // 4. One batched decode step over every live slot (mixed
+            //    prefill + generation; each slot feeds its next unfed
+            //    token). A step counts as prefill only when NO slot is
+            //    generating yet: mixed steps produce tokens, so their
+            //    time must land in decode_seconds or tokens/decode_s
+            //    would overstate throughput for ragged prompts.
+            indices.clear();
+            indices.extend(0..slots.len());
+            let prefilling = slots.iter().all(|s| s.fed < s.prompt_len);
+            let t = Timer::start();
+            engine.decode_step_batch(&mut slots, &indices, &mut scratch);
+            let dt = t.seconds();
+            if prefilling {
+                out.prefill_seconds += dt;
+            } else {
+                out.decode_seconds += dt;
+            }
+            shared.clock.fetch_add(1, Ordering::SeqCst);
+        }
+        out.kv_allocated = pool.allocated;
+        out.kv_reused = pool.reused;
+        out
+    }
+}
+
+fn retire(slots: &mut Vec<Slot>, meta: &mut Vec<Meta>, i: usize,
+          pool: &mut KvPool, shared: &Shared,
+          finished: &mut Vec<FinishedRequest>, now: u64) {
+    let slot = slots.swap_remove(i);
+    let m = meta.swap_remove(i);
+    pool.release(slot.kvs);
+    shared.active.fetch_sub(1, Ordering::SeqCst);
+    finished.push(FinishedRequest {
+        id: m.id,
+        prompt_len: slot.prompt_len,
+        generated: slot.generated,
+        tokens: slot.tokens,
+        expired: false,
+        arrival_step: m.arrival_step,
+        admitted_step: m.admitted_step,
+        finished_step: now,
+        latency_ms: m.admitted_at.elapsed().as_secs_f64() * 1e3,
+    });
+}
+
+fn summarize(finished: &[FinishedRequest], wall: f64, steps: u64,
+             prefill: f64, decode: f64, kv_allocated: usize,
+             kv_reused: usize) -> SchedStats {
+    let tokens: usize = finished.iter().map(|f| f.generated).sum();
+    let expired = finished.iter().filter(|f| f.expired).count();
+    let mut lat = Summary::new();
+    let mut wait = 0u64;
+    let mut served = 0usize;
+    for f in finished.iter().filter(|f| !f.expired && f.prompt_len > 0) {
+        lat.push(f.latency_ms);
+        wait += f.admitted_step - f.arrival_step;
+        served += 1;
+    }
+    SchedStats {
+        requests: finished.len(),
+        expired,
+        tokens_generated: tokens,
+        steps,
+        wall_seconds: wall,
+        prefill_seconds: prefill,
+        decode_seconds: decode,
+        tokens_per_second: tokens as f64 / wall.max(1e-9),
+        p50_latency_ms: if lat.n() == 0 { 0.0 } else { lat.median() },
+        p95_latency_ms: if lat.n() == 0 { 0.0 } else { lat.percentile(95.0) },
+        mean_wait_steps: if served == 0 {
+            0.0
+        } else {
+            wait as f64 / served as f64
+        },
+        kv_allocated,
+        kv_reused,
+    }
+}
+
+/// Seeded ragged token budgets in `[base/3, base)`: the staggered
+/// completion times are what continuous admission exploits, so the
+/// bench, the tab1 table and the serving example all draw their
+/// request budgets from this one distribution (deterministic per
+/// seed).
+pub fn ragged_budgets(base: usize, n: usize, seed: u64) -> Vec<usize> {
+    let mut rng = Rng::new(seed);
+    let lo = (base / 3).max(1);
+    (0..n).map(|_| lo + rng.below((base - lo).max(1))).collect()
+}
+
+/// Static-batching reference policy on the same machinery: admit
+/// requests strictly in id order in groups of `max_slots` and drain
+/// each group completely before the next is admitted (ignoring arrival
+/// steps — the group launches as one fixed batch). Per-request token
+/// streams are bit-identical to the continuous scheduler; only the
+/// admission policy differs, which is exactly what `bench_scheduler`
+/// measures.
+pub fn serve_static_chunks(engine: &Engine, requests: &[Request],
+                           max_slots: usize, temperature: f32,
+                           threads: usize)
+                           -> (Vec<FinishedRequest>, SchedStats) {
+    let max_slots = max_slots.max(1);
+    let t0 = Instant::now();
+    let mut finished = Vec::with_capacity(requests.len());
+    let (mut prefill, mut decode) = (0.0f64, 0.0f64);
+    let mut steps = 0u64;
+    let (mut kv_allocated, mut kv_reused) = (0usize, 0usize);
+    for chunk in requests.chunks(max_slots) {
+        let mut q = RequestQueue::new();
+        for r in chunk {
+            q.push(r.clone());
+        }
+        let sched = Scheduler::new(engine, SchedOptions {
+            max_slots: chunk.len(),
+            temperature,
+            threads,
+        });
+        let (f, st) = sched.run(q);
+        finished.extend(f);
+        prefill += st.prefill_seconds;
+        decode += st.decode_seconds;
+        steps += st.steps;
+        kv_allocated += st.kv_allocated;
+        kv_reused += st.kv_reused;
+    }
+    finished.sort_by_key(|f| f.id);
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = summarize(&finished, wall, steps, prefill, decode,
+                          kv_allocated, kv_reused);
+    (finished, stats)
+}
+
+/// `elsa serve` subcommand: load a checkpoint, synthesize a seeded
+/// request stream with Poisson-ish arrivals, and drain it through the
+/// continuous-batching scheduler.
+pub fn cmd_serve(args: &Args) -> Result<()> {
+    let rt = crate::commands::open_runtime(args)?;
+    let ck = crate::model::checkpoint::Checkpoint::load(
+        &std::path::PathBuf::from(args.require("ckpt")?))?;
+    let cfg = rt.manifest.config(&ck.config)?.clone();
+    let params = crate::model::Params::new(&cfg, ck.get("params")?.clone());
+    let backend = super::Backend::parse(&args.str_or("backend", "macko"))
+        .ok_or_else(|| anyhow::anyhow!("bad --backend"))?;
+    let engine = Engine::build(&params, backend)?;
+
+    let g = crate::data::Grammar::named(
+        &args.str_or("dataset", "synth-c4"), cfg.vocab);
+    let n_requests = args.usize_or("requests", 32)?;
+    let max_slots = args.usize_or("max-slots", 8)?;
+    let threads = args.usize_or("threads", 1)?;
+    let prompt_len = args.usize_or("prompt-len", 8)?;
+    anyhow::ensure!(prompt_len <= cfg.seq_len,
+                    "--prompt-len {prompt_len} exceeds the model's \
+                     seq_len {}", cfg.seq_len);
+    let n_new =
+        args.usize_or("tokens", cfg.seq_len.saturating_sub(prompt_len))?;
+    let seed = args.usize_or("seed", 0)? as u64;
+    let temperature = args.f32_or("temp", 0.8)?;
+    let gap = args.f64_or("arrival-gap", 2.0)?;
+    let deadline = match args.get("deadline") {
+        Some(v) => {
+            Some(v.parse::<u64>().with_context(|| format!("--deadline {v}"))?)
+        }
+        None => None,
+    };
+
+    let reqs: Vec<Request> = (0..n_requests)
+        .map(|r| Request {
+            id: r as u64,
+            prompt: g.generate(prompt_len, seed.wrapping_add(r as u64)),
+            n_new,
+            seed: seed.wrapping_add(r as u64),
+            deadline,
+        })
+        .collect();
+    let queue = RequestQueue::with_poisson_arrivals(
+        reqs, gap, seed.wrapping_add(0x5eed));
+    let sched = Scheduler::new(&engine, SchedOptions {
+        max_slots,
+        temperature,
+        threads,
+    });
+    let (finished, stats) = sched.run(queue);
+
+    if args.bool("verbose") {
+        for f in &finished {
+            if f.expired {
+                println!("req {:4}: arrived {:5} EXPIRED at {:5} \
+                          (never admitted)",
+                         f.id, f.arrival_step, f.finished_step);
+            } else {
+                println!("req {:4}: arrived {:5} admitted {:5} finished \
+                          {:5} | {:3} new tokens | {:8.2} ms",
+                         f.id, f.arrival_step, f.admitted_step,
+                         f.finished_step, f.generated, f.latency_ms);
+            }
+        }
+    }
+    println!("backend {:?}", backend);
+    println!("sparsity {:.4}", params.sparsity());
+    println!("requests {} expired {}", stats.requests, stats.expired);
+    println!("max_slots {max_slots} threads {threads} arrival_gap {gap}");
+    println!("tokens_generated {}", stats.tokens_generated);
+    println!("agg_tokens_per_s {:.2}", stats.tokens_per_second);
+    println!("p50_ms {:.2}", stats.p50_latency_ms);
+    println!("p95_ms {:.2}", stats.p95_latency_ms);
+    println!("mean_wait_steps {:.2}", stats.mean_wait_steps);
+    println!("steps {}", stats.steps);
+    println!("kv_allocated {} kv_reused {}", stats.kv_allocated,
+             stats.kv_reused);
+    println!("mem {}", crate::util::human_bytes(engine.mem_bytes()));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::Backend;
+    use crate::model::{fake_config, Params};
+
+    #[test]
+    fn kvpool_recycles_buffers_without_reallocating() {
+        let mut pool = KvPool::new(2, 64);
+        let mut a = pool.acquire();
+        assert_eq!(pool.allocated, 1);
+        assert_eq!(a.len(), 2);
+        a[0].k.extend_from_slice(&[1.0; 40]);
+        a[0].len = 10;
+        pool.release(a);
+        assert_eq!(pool.pooled(), 1);
+        let b = pool.acquire();
+        assert_eq!(pool.allocated, 1, "release->acquire must not allocate");
+        assert_eq!(pool.reused, 1);
+        assert_eq!(b[0].len, 0, "recycled buffers must come back empty");
+        assert!(b[0].k.is_empty());
+        assert!(b[0].k.capacity() >= 40, "capacity must be retained");
+    }
+
+    #[test]
+    fn poisson_arrivals_are_deterministic_and_sorted() {
+        let reqs = |n: u64| -> Vec<Request> {
+            (0..n)
+                .map(|id| Request {
+                    id,
+                    prompt: vec![1],
+                    n_new: 1,
+                    seed: id,
+                    deadline: None,
+                })
+                .collect()
+        };
+        let a = RequestQueue::with_poisson_arrivals(reqs(16), 3.0, 9)
+            .into_deque();
+        let b = RequestQueue::with_poisson_arrivals(reqs(16), 3.0, 9)
+            .into_deque();
+        let steps_a: Vec<u64> = a.iter().map(|(s, _)| *s).collect();
+        let steps_b: Vec<u64> = b.iter().map(|(s, _)| *s).collect();
+        assert_eq!(steps_a, steps_b, "same seed must replay arrivals");
+        assert!(steps_a.windows(2).all(|w| w[0] <= w[1]));
+        assert!(*steps_a.last().unwrap() > 0, "arrivals should stagger");
+    }
+
+    #[test]
+    fn unsorted_pushes_are_served_in_arrival_order() {
+        let mut q = RequestQueue::new();
+        let req = |id| Request {
+            id,
+            prompt: vec![1],
+            n_new: 1,
+            seed: id,
+            deadline: None,
+        };
+        q.push_at(9, req(0));
+        q.push_at(2, req(1));
+        q.push_at(2, req(2));
+        let d = q.into_deque();
+        let order: Vec<u64> = d.iter().map(|(_, r)| r.id).collect();
+        assert_eq!(order, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn scheduler_smoke_matches_generate() {
+        let p = Params::init(&fake_config(), 4);
+        let engine = Engine::build(&p, Backend::Macko).unwrap();
+        let mut q = RequestQueue::new();
+        for id in 0..3u64 {
+            q.push_at(id, Request {
+                id,
+                prompt: vec![1 + id as u32, 2, 3],
+                n_new: 3,
+                seed: 10 + id,
+                deadline: None,
+            });
+        }
+        let sched = Scheduler::new(&engine, SchedOptions {
+            max_slots: 2,
+            temperature: 0.7,
+            threads: 1,
+        });
+        let (finished, stats) = sched.run(q);
+        assert_eq!(finished.len(), 3);
+        assert_eq!(stats.expired, 0);
+        for f in &finished {
+            let (want, _) = engine.generate(
+                &[1 + f.id as u32, 2, 3], 3, 0.7, 10 + f.id);
+            assert_eq!(f.tokens, want, "req {}", f.id);
+        }
+        assert_eq!(stats.tokens_generated,
+                   finished.iter().map(|f| f.generated).sum::<usize>());
+    }
+}

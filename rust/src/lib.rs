@@ -7,6 +7,15 @@
 //! - L3 is this crate: the ADMM pruning coordinator, baseline pruners,
 //!   sparse inference engine, evaluation + experiment harness.
 
+// Lint policy (CI runs `cargo clippy --all-targets -- -D warnings` as a
+// blocking job): two style lints are allowed crate-wide because they
+// fight deliberate choices — the kernels index in explicit loops so the
+// floating-point accumulation order stays part of the bit-exactness
+// contract, and the engine/coordinator plumb wide argument lists
+// through hot paths instead of bundling short-lived structs.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+
 pub mod cli;
 pub mod commands;
 pub mod coordinator;

@@ -107,12 +107,23 @@ impl Csr {
     }
 
     /// Matrix convenience wrapper over [`Csr::matvec_batch`]:
-    /// returns X @ W for X of shape (b, din).
+    /// returns X @ W for X of shape (b, din). Allocates the output and
+    /// a fresh scratch; hot loops should hold both and call
+    /// [`Csr::matmat_into`].
     pub fn matmat(&self, x: &Matrix) -> Matrix {
-        assert_eq!(x.cols, self.n_in, "matmat shape mismatch");
         let mut y = Matrix::zeros(x.rows, self.n_out);
-        self.matvec_batch(&x.data, &mut y.data, x.rows);
+        self.matmat_into(x, &mut y, &mut SpmmScratch::default());
         y
+    }
+
+    /// [`Csr::matmat`] with caller-owned output and scratch — the
+    /// allocation-free form for repeated calls.
+    pub fn matmat_into(&self, x: &Matrix, y: &mut Matrix,
+                       scratch: &mut SpmmScratch) {
+        assert_eq!(x.cols, self.n_in, "matmat shape mismatch");
+        assert_eq!((y.rows, y.cols), (x.rows, self.n_out),
+                   "matmat output shape mismatch");
+        self.matvec_batch_into(&x.data, &mut y.data, x.rows, scratch);
     }
 
     pub fn nnz(&self) -> usize {
@@ -257,12 +268,23 @@ impl Macko {
     }
 
     /// Matrix convenience wrapper over [`Macko::matvec_batch`]:
-    /// returns X @ W for X of shape (b, din).
+    /// returns X @ W for X of shape (b, din). Allocates the output and
+    /// a fresh scratch; hot loops should hold both and call
+    /// [`Macko::matmat_into`].
     pub fn matmat(&self, x: &Matrix) -> Matrix {
-        assert_eq!(x.cols, self.n_in, "matmat shape mismatch");
         let mut y = Matrix::zeros(x.rows, self.n_out);
-        self.matvec_batch(&x.data, &mut y.data, x.rows);
+        self.matmat_into(x, &mut y, &mut SpmmScratch::default());
         y
+    }
+
+    /// [`Macko::matmat`] with caller-owned output and scratch — the
+    /// allocation-free form for repeated calls.
+    pub fn matmat_into(&self, x: &Matrix, y: &mut Matrix,
+                       scratch: &mut SpmmScratch) {
+        assert_eq!(x.cols, self.n_in, "matmat shape mismatch");
+        assert_eq!((y.rows, y.cols), (x.rows, self.n_out),
+                   "matmat output shape mismatch");
+        self.matvec_batch_into(&x.data, &mut y.data, x.rows, scratch);
     }
 
     pub fn nnz(&self) -> usize {
@@ -473,6 +495,23 @@ mod tests {
             mck.matvec_batch_into(&x, &mut got, b, &mut scratch);
             mck.matvec_batch(&x, &mut want, b);
             assert_eq!(got, want, "macko b={b}");
+        }
+    }
+
+    #[test]
+    fn matmat_into_reuses_scratch_and_matches_matmat() {
+        let (din, dout) = (64, 40);
+        let w = sparse_weight(din, dout, 0.8, 51);
+        let csr = Csr::from_weight(&w);
+        let mck = Macko::from_weight(&w);
+        let mut scratch = SpmmScratch::default();
+        for &b in &[3usize, 6, 2] {
+            let x = Matrix::from_vec(b, din, batch_input(b, din, b as u64));
+            let mut y = Matrix::zeros(b, dout);
+            csr.matmat_into(&x, &mut y, &mut scratch);
+            assert_eq!(y.data, csr.matmat(&x).data, "csr b={b}");
+            mck.matmat_into(&x, &mut y, &mut scratch);
+            assert_eq!(y.data, mck.matmat(&x).data, "macko b={b}");
         }
     }
 
