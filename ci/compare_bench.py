@@ -1,71 +1,175 @@
 #!/usr/bin/env python3
 """Bench regression gate for the CI bench-smoke job.
 
-Usage: compare_bench.py BENCH_scheduler.json ci/bench_baseline.json
+Usage:
+  compare_bench.py CURRENT.json BASELINE.json [--section NAME]
+  compare_bench.py CURRENT.json BASELINE.json [--section NAME] --ratchet
+                   [--write]
 
-Fails (exit 1) when any policy's throughput in the current bench run
-drops below (1 - tolerance) of the committed baseline floor, or when the
-continuous-vs-static speedup falls below the baseline's min_speedup_x
-(continuous admission must keep beating static batching).
+Gating rules, applied against BASELINE (or BASELINE[NAME] when
+--section NAME is given; a section inherits the top-level "tolerance"
+unless it sets its own):
 
-Latency percentiles are reported for the record but not gated: on the
-shared CI fleet they are far noisier than aggregate throughput.
+  * every baseline entry of the form {"<policy>": {"tok_s": <floor>}}
+    requires CURRENT[<policy>]["tok_s"] >= (1 - tolerance) * floor; a
+    gated policy missing from CURRENT fails the gate (a vanished bench
+    is a regression, not a free pass);
+  * "min_speedup_x", when present, requires
+    CURRENT["speedup_x"] >= min_speedup_x;
+  * "min_tiled_untiled_ratio", when present, requires
+    CURRENT["tiled_untiled_ratio"] >= min_tiled_untiled_ratio.
+
+Latency percentiles are reported for the record but never gated: on
+the shared CI fleet they are far noisier than aggregate throughput.
+
+--ratchet emits an updated baseline document (stdout by default,
+rewritten in place with --write) whose tok_s floors are replaced by
+the measured values in CURRENT. Run it on a downloaded BENCH_*
+artifact to tighten the committed floors once a few runs establish
+the fleet's spread. The tolerance and min_* knobs are policy, not
+measurements — ratcheting never touches them.
+
+Exit codes: 0 gate passed / ratchet emitted, 1 regression, 2 usage or
+input error.
 """
 
+import argparse
+import copy
 import json
 import sys
 
 
-def main() -> int:
-    if len(sys.argv) != 3:
-        print(__doc__)
-        return 2
-    with open(sys.argv[1]) as f:
-        current = json.load(f)
-    with open(sys.argv[2]) as f:
-        baseline = json.load(f)
+def gated_policies(baseline):
+    """Baseline keys that carry a tok_s floor (dict entries only)."""
+    return [k for k, v in baseline.items()
+            if isinstance(v, dict) and "tok_s" in v]
 
-    tolerance = float(baseline.get("tolerance", 0.15))
+
+def gate(current, baseline, tolerance=None):
+    """Apply the gating rules; return (report_lines, failures)."""
+    if tolerance is None:
+        tolerance = float(baseline.get("tolerance", 0.15))
+    lines = []
     failures = []
 
-    print(f"{'policy':<12} {'baseline':>10} {'floor':>10} "
-          f"{'current':>10}  status")
-    gated = [k for k, v in baseline.items()
-             if isinstance(v, dict) and "tok_s" in v]
-    for policy in gated:
+    lines.append(f"{'metric':<14} {'baseline':>10} {'floor':>10} "
+                 f"{'current':>10}  status")
+    for policy in gated_policies(baseline):
         base = float(baseline[policy]["tok_s"])
         floor = base * (1.0 - tolerance)
         if policy not in current:
             # a gated policy vanishing from the bench output is itself
             # a regression, not a free pass
-            print(f"{policy:<12} {base:>10.1f} {floor:>10.1f} "
-                  f"{'MISSING':>10}  REGRESSION")
+            lines.append(f"{policy:<14} {base:>10.1f} {floor:>10.1f} "
+                         f"{'MISSING':>10}  REGRESSION")
             failures.append(f"{policy}: missing from bench output")
             continue
         got = float(current[policy]["tok_s"])
         ok = got >= floor
-        print(f"{policy:<12} {base:>10.1f} {floor:>10.1f} {got:>10.1f}  "
-              f"{'ok' if ok else 'REGRESSION'}")
+        lines.append(f"{policy:<14} {base:>10.1f} {floor:>10.1f} "
+                     f"{got:>10.1f}  {'ok' if ok else 'REGRESSION'}")
         if not ok:
             failures.append(
                 f"{policy}: {got:.1f} tok/s < floor {floor:.1f} "
                 f"(baseline {base:.1f}, tolerance {tolerance:.0%})")
 
-    min_speedup = float(baseline.get("min_speedup_x", 1.0))
-    speedup = float(current.get("speedup_x", 0.0))
-    ok = speedup >= min_speedup
-    print(f"{'speedup_x':<12} {min_speedup:>10.2f} {min_speedup:>10.2f} "
-          f"{speedup:>10.2f}  {'ok' if ok else 'REGRESSION'}")
-    if not ok:
-        failures.append(
-            f"continuous/static speedup {speedup:.2f}x < {min_speedup:.2f}x")
+    if "min_speedup_x" in baseline:
+        floor = float(baseline["min_speedup_x"])
+        got = float(current.get("speedup_x", 0.0))
+        ok = got >= floor
+        lines.append(f"{'speedup_x':<14} {floor:>10.2f} {floor:>10.2f} "
+                     f"{got:>10.2f}  {'ok' if ok else 'REGRESSION'}")
+        if not ok:
+            failures.append(
+                f"continuous/static speedup {got:.2f}x < {floor:.2f}x")
 
-    for policy in ("static", "continuous"):
-        if policy in current:
-            p = current[policy]
-            print(f"  {policy} latency: p50 {p.get('p50_ms', 0):.2f} ms, "
-                  f"p95 {p.get('p95_ms', 0):.2f} ms (not gated)")
+    if "min_tiled_untiled_ratio" in baseline:
+        floor = float(baseline["min_tiled_untiled_ratio"])
+        got = float(current.get("tiled_untiled_ratio", 0.0))
+        ok = got >= floor
+        lines.append(f"{'tiled_ratio':<14} {floor:>10.2f} {floor:>10.2f} "
+                     f"{got:>10.2f}  {'ok' if ok else 'REGRESSION'}")
+        if not ok:
+            failures.append(
+                f"tiled/untiled throughput ratio {got:.2f} < {floor:.2f}")
 
+    for policy in gated_policies(baseline):
+        p = current.get(policy)
+        if isinstance(p, dict) and "p50_ms" in p:
+            lines.append(
+                f"  {policy} latency: p50 {p.get('p50_ms', 0):.2f} ms, "
+                f"p95 {p.get('p95_ms', 0):.2f} ms (not gated)")
+
+    return lines, failures
+
+
+def ratchet(current, baseline):
+    """Return a copy of `baseline` whose tok_s floors are replaced by
+    the measured values in `current` (policies absent from `current`
+    keep their old floor; tolerance/min_* knobs are left untouched)."""
+    out = copy.deepcopy(baseline)
+    for policy in gated_policies(baseline):
+        cur = current.get(policy)
+        if isinstance(cur, dict) and "tok_s" in cur:
+            out[policy]["tok_s"] = round(float(cur["tok_s"]), 1)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        prog="compare_bench.py", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("current", help="bench output JSON (BENCH_*.json)")
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("--section", default=None,
+                    help="gate against BASELINE[SECTION] instead of the "
+                         "top level")
+    ap.add_argument("--ratchet", action="store_true",
+                    help="emit an updated baseline from CURRENT instead "
+                         "of gating")
+    ap.add_argument("--write", action="store_true",
+                    help="with --ratchet: rewrite BASELINE in place")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.current) as f:
+            current = json.load(f)
+        with open(args.baseline) as f:
+            baseline_doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"compare_bench: {e}", file=sys.stderr)
+        return 2
+
+    section = baseline_doc
+    if args.section is not None:
+        section = baseline_doc.get(args.section)
+        if not isinstance(section, dict):
+            print(f"compare_bench: baseline has no section "
+                  f"'{args.section}'", file=sys.stderr)
+            return 2
+
+    tolerance = float(section.get(
+        "tolerance", baseline_doc.get("tolerance", 0.15)))
+
+    if args.ratchet:
+        new_section = ratchet(current, section)
+        if args.section is not None:
+            out_doc = dict(baseline_doc)
+            out_doc[args.section] = new_section
+        else:
+            out_doc = new_section
+        text = json.dumps(out_doc, indent=2) + "\n"
+        if args.write:
+            with open(args.baseline, "w") as f:
+                f.write(text)
+            print(f"ratcheted floors written to {args.baseline}")
+        else:
+            print(text, end="")
+        return 0
+
+    lines, failures = gate(current, section, tolerance)
+    for line in lines:
+        print(line)
     if failures:
         print("\nbench regression gate FAILED:")
         for f in failures:

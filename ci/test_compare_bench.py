@@ -1,0 +1,227 @@
+"""Unit tests for the CI bench regression gate (pure stdlib).
+
+Run: python3 -m unittest discover ci
+"""
+
+import contextlib
+import io
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import compare_bench as cb  # noqa: E402
+
+
+def scheduler_baseline():
+    return {
+        "tolerance": 0.15,
+        "min_speedup_x": 0.9,
+        "sequential": {"tok_s": 50.0},
+        "static": {"tok_s": 60.0},
+        "continuous": {"tok_s": 80.0},
+    }
+
+
+def scheduler_current(seq=100.0, stat=120.0, cont=150.0, speedup=1.25):
+    return {
+        "sequential": {"tok_s": seq},
+        "static": {"tok_s": stat, "p50_ms": 1.0, "p95_ms": 2.0},
+        "continuous": {"tok_s": cont, "p50_ms": 1.0, "p95_ms": 2.0},
+        "speedup_x": speedup,
+    }
+
+
+def kernels_baseline():
+    return {
+        "min_tiled_untiled_ratio": 0.95,
+        "dense": {"tok_s": 25.0},
+        "csr": {"tok_s": 40.0},
+        "macko": {"tok_s": 40.0},
+    }
+
+
+def kernels_current(ratio=1.1, dense=80.0, csr=200.0, macko=220.0):
+    return {
+        "tiled_untiled_ratio": ratio,
+        "dense": {"tok_s": dense},
+        "csr": {"tok_s": csr},
+        "macko": {"tok_s": macko},
+    }
+
+
+class GateTests(unittest.TestCase):
+    def test_passes_when_above_floors(self):
+        _, failures = cb.gate(scheduler_current(), scheduler_baseline())
+        self.assertEqual(failures, [])
+
+    def test_detects_throughput_drop(self):
+        # continuous collapses below (1 - 0.15) * 80
+        cur = scheduler_current(cont=10.0)
+        _, failures = cb.gate(cur, scheduler_baseline())
+        self.assertEqual(len(failures), 1)
+        self.assertIn("continuous", failures[0])
+
+    def test_exact_floor_passes_but_just_below_fails(self):
+        floor = 80.0 * 0.85
+        _, failures = cb.gate(scheduler_current(cont=floor),
+                              scheduler_baseline())
+        self.assertEqual(failures, [])
+        _, failures = cb.gate(scheduler_current(cont=floor - 0.01),
+                              scheduler_baseline())
+        self.assertEqual(len(failures), 1)
+
+    def test_missing_gated_policy_fails(self):
+        cur = scheduler_current()
+        del cur["static"]
+        _, failures = cb.gate(cur, scheduler_baseline())
+        self.assertTrue(any("static" in f and "missing" in f
+                            for f in failures))
+
+    def test_speedup_gate(self):
+        cur = scheduler_current(speedup=0.5)
+        _, failures = cb.gate(cur, scheduler_baseline())
+        self.assertTrue(any("speedup" in f for f in failures))
+        # absent speedup_x counts as 0.0 -> also fails
+        cur = scheduler_current()
+        del cur["speedup_x"]
+        _, failures = cb.gate(cur, scheduler_baseline())
+        self.assertTrue(any("speedup" in f for f in failures))
+
+    def test_speedup_not_gated_when_baseline_lacks_knob(self):
+        base = scheduler_baseline()
+        del base["min_speedup_x"]
+        cur = scheduler_current(speedup=0.0)
+        _, failures = cb.gate(cur, base)
+        self.assertEqual(failures, [])
+
+    def test_tiled_ratio_gate(self):
+        _, failures = cb.gate(kernels_current(), kernels_baseline())
+        self.assertEqual(failures, [])
+        _, failures = cb.gate(kernels_current(ratio=0.5),
+                              kernels_baseline())
+        self.assertTrue(any("tiled/untiled" in f for f in failures))
+
+    def test_explicit_tolerance_overrides_baseline(self):
+        # floor becomes 80 * (1 - 0.5) = 40 with the looser tolerance
+        cur = scheduler_current(cont=45.0)
+        _, failures = cb.gate(cur, scheduler_baseline())
+        self.assertEqual(len(failures), 1)
+        _, failures = cb.gate(cur, scheduler_baseline(), tolerance=0.5)
+        self.assertEqual(failures, [])
+
+
+class RatchetTests(unittest.TestCase):
+    def test_ratchet_updates_floors_only(self):
+        base = scheduler_baseline()
+        out = cb.ratchet(scheduler_current(), base)
+        self.assertEqual(out["continuous"]["tok_s"], 150.0)
+        self.assertEqual(out["static"]["tok_s"], 120.0)
+        self.assertEqual(out["sequential"]["tok_s"], 100.0)
+        # policy knobs are untouched, and the input is not mutated
+        self.assertEqual(out["tolerance"], 0.15)
+        self.assertEqual(out["min_speedup_x"], 0.9)
+        self.assertEqual(base["continuous"]["tok_s"], 80.0)
+
+    def test_ratchet_keeps_floor_for_missing_policy(self):
+        cur = scheduler_current()
+        del cur["sequential"]
+        out = cb.ratchet(cur, scheduler_baseline())
+        self.assertEqual(out["sequential"]["tok_s"], 50.0)
+
+
+class MainTests(unittest.TestCase):
+    """End-to-end through main(): files on disk, exit codes, stdout."""
+
+    def setUp(self):
+        self.dir = tempfile.TemporaryDirectory()
+        self.addCleanup(self.dir.cleanup)
+
+    def write(self, name, doc):
+        path = os.path.join(self.dir.name, name)
+        with open(path, "w") as f:
+            json.dump(doc, f)
+        return path
+
+    def run_main(self, argv):
+        out = io.StringIO()
+        with contextlib.redirect_stdout(out):
+            code = cb.main(argv)
+        return code, out.getvalue()
+
+    def full_baseline(self):
+        doc = scheduler_baseline()
+        doc["kernels"] = kernels_baseline()
+        return doc
+
+    def test_gate_pass_and_fail_exit_codes(self):
+        base = self.write("baseline.json", self.full_baseline())
+        ok = self.write("ok.json", scheduler_current())
+        code, out = self.run_main([ok, base])
+        self.assertEqual(code, 0)
+        self.assertIn("gate passed", out)
+        bad = self.write("bad.json", scheduler_current(cont=1.0))
+        code, out = self.run_main([bad, base])
+        self.assertEqual(code, 1)
+        self.assertIn("FAILED", out)
+
+    def test_section_selects_kernel_gates(self):
+        base = self.write("baseline.json", self.full_baseline())
+        cur = self.write("kern.json", kernels_current())
+        code, out = self.run_main([cur, base, "--section", "kernels"])
+        self.assertEqual(code, 0)
+        # the scheduler-only gates must not leak into the section run
+        self.assertNotIn("speedup_x", out)
+        bad = self.write("kern_bad.json", kernels_current(macko=1.0))
+        code, _ = self.run_main([bad, base, "--section", "kernels"])
+        self.assertEqual(code, 1)
+
+    def test_section_inherits_top_level_tolerance(self):
+        doc = self.full_baseline()
+        doc["tolerance"] = 0.5  # kernels section sets none of its own
+        base = self.write("baseline.json", doc)
+        # 40 * (1 - 0.5) = 20: a 21 tok/s macko squeaks by
+        cur = self.write("kern.json", kernels_current(macko=21.0))
+        code, _ = self.run_main([cur, base, "--section", "kernels"])
+        self.assertEqual(code, 0)
+
+    def test_missing_section_is_usage_error(self):
+        base = self.write("baseline.json", scheduler_baseline())
+        cur = self.write("cur.json", scheduler_current())
+        code, _ = self.run_main([cur, base, "--section", "nope"])
+        self.assertEqual(code, 2)
+
+    def test_ratchet_stdout_roundtrips(self):
+        base = self.write("baseline.json", self.full_baseline())
+        cur = self.write("cur.json", scheduler_current())
+        code, out = self.run_main([cur, base, "--ratchet"])
+        self.assertEqual(code, 0)
+        doc = json.loads(out)
+        self.assertEqual(doc["continuous"]["tok_s"], 150.0)
+        # untouched sections survive the ratchet
+        self.assertEqual(doc["kernels"]["macko"]["tok_s"], 40.0)
+
+    def test_ratchet_section_write_rewrites_file(self):
+        base = self.write("baseline.json", self.full_baseline())
+        cur = self.write("kern.json", kernels_current())
+        code, _ = self.run_main(
+            [cur, base, "--section", "kernels", "--ratchet", "--write"])
+        self.assertEqual(code, 0)
+        with open(base) as f:
+            doc = json.load(f)
+        self.assertEqual(doc["kernels"]["macko"]["tok_s"], 220.0)
+        self.assertEqual(doc["kernels"]["min_tiled_untiled_ratio"], 0.95)
+        # scheduler floors outside the section are untouched
+        self.assertEqual(doc["continuous"]["tok_s"], 80.0)
+
+    def test_unreadable_input_is_error_not_crash(self):
+        base = self.write("baseline.json", scheduler_baseline())
+        code, _ = self.run_main(["/nonexistent.json", base])
+        self.assertEqual(code, 2)
+
+
+if __name__ == "__main__":
+    unittest.main()

@@ -12,28 +12,15 @@
 use elsa::infer::{Backend, BatchOptions, Engine};
 use elsa::model::{synthetic_config, Params};
 use elsa::pruners::{magnitude, uniform_alloc};
-use elsa::sparse::{Csr, Macko, SpmmScratch};
-use elsa::tensor::Matrix;
+use elsa::sparse::{random_sparse_weight, Csr, Macko, SpmmScratch};
 use elsa::util::bench::{bench, throughput};
 use elsa::util::rng::Rng;
 use elsa::util::timer::Timer;
 
-fn sparse_weight(din: usize, dout: usize, sparsity: f64, seed: u64)
-                 -> Matrix {
-    let mut rng = Rng::new(seed);
-    let mut w = Matrix::randn(din, dout, 1.0, &mut rng);
-    for x in w.data.iter_mut() {
-        if rng.f64() < sparsity {
-            *x = 0.0;
-        }
-    }
-    w
-}
-
 fn kernel_sweep() {
     let (din, dout) = (768, 768);
     let sp = 0.9;
-    let w = sparse_weight(din, dout, sp, 42);
+    let w = random_sparse_weight(din, dout, sp, 42);
     let nnz = w.nnz() as f64;
     let csr = Csr::from_weight(&w);
     let macko = Macko::from_weight(&w);

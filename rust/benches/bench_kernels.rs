@@ -1,0 +1,275 @@
+//! Row-tiled SpMM kernel bench (ISSUE 3): tiled vs untiled across
+//! {Csr, Macko, dense} x batch {1, 4, 8, 16} x sparsity {0.5, 0.9,
+//! 0.95}, an intra-layer sharding scaling check, and per-backend
+//! end-to-end batched decode tok/s on the serving-sized toy model.
+//!
+//! Every tiled cell is asserted bit-identical to its untiled
+//! counterpart before it is timed — a bench that silently measured a
+//! diverging kernel would be worse than no bench.
+//!
+//! Run: cargo bench --bench bench_kernels [-- <threads> [small]].
+//! Writes a machine-readable summary to `$BENCH_OUT` (default
+//! `BENCH_kernels.json`) for the CI regression gate
+//! (`ci/compare_bench.py --section kernels`): per-backend engine
+//! tok/s floors plus the aggregate tiled/untiled throughput ratio
+//! (batches >= 4; batch 1 delegates to the identical matvec on both
+//! paths, so it would only dilute the signal).
+
+use elsa::infer::{Backend, BatchOptions, Engine};
+use elsa::model::{synthetic_config, Params};
+use elsa::pruners::{magnitude, uniform_alloc};
+use elsa::sparse::{dense_matvec_batch, dense_plan, par_matvec_batch_tiled,
+                   random_sparse_weight, tile, Csr, Macko, SpmmScratch};
+use elsa::util::bench::{bench, throughput};
+use elsa::util::json::{num, obj, s, to_string, Value};
+use elsa::util::rng::Rng;
+use elsa::util::timer::Timer;
+
+const SPARSITIES: [f64; 3] = [0.5, 0.9, 0.95];
+const BATCHES: [usize; 4] = [1, 4, 8, 16];
+
+struct SweepTotals {
+    untiled_ns: f64,
+    tiled_ns: f64,
+}
+
+/// One (format, sparsity, batch) cell: assert tiled == untiled
+/// bitwise, time both, return (untiled_ns, tiled_ns, ratio) and push
+/// a JSON row.
+#[allow(clippy::too_many_arguments)]
+fn cell(fmt: &str, sp: f64, b: usize, flops: f64, budget_ms: u64,
+        rows: &mut Vec<Value>, totals: &mut SweepTotals,
+        mut untiled: impl FnMut(&mut [f32]),
+        mut tiled: impl FnMut(&mut [f32]), dout: usize) {
+    let mut yu = vec![0.0f32; b * dout];
+    let mut yt = vec![0.0f32; b * dout];
+    untiled(&mut yu);
+    tiled(&mut yt);
+    assert_eq!(yu, yt, "{fmt} sp={sp} b={b}: tiled diverged from untiled");
+
+    let ru = bench(&format!("{fmt:<6} untiled sp={sp:.2} b={b:<2}"),
+                   budget_ms, || {
+        untiled(&mut yu);
+        std::hint::black_box(&yu);
+    });
+    throughput(&ru, flops, "flop");
+    let rt = bench(&format!("{fmt:<6} tiled   sp={sp:.2} b={b:<2}"),
+                   budget_ms, || {
+        tiled(&mut yt);
+        std::hint::black_box(&yt);
+    });
+    throughput(&rt, flops, "flop");
+    let ratio = ru.median_ns / rt.median_ns.max(1e-9);
+    println!("  -> tiled/untiled throughput ratio x{ratio:.2}\n");
+    if b > 1 {
+        totals.untiled_ns += ru.median_ns;
+        totals.tiled_ns += rt.median_ns;
+    }
+    rows.push(obj(vec![
+        ("fmt", s(fmt)),
+        ("sparsity", num(sp)),
+        ("batch", num(b as f64)),
+        ("untiled_ns", num(ru.median_ns)),
+        ("tiled_ns", num(rt.median_ns)),
+        ("ratio", num(ratio)),
+    ]));
+}
+
+/// Tiled vs untiled sweep; returns (json rows, per-format ratios,
+/// aggregate sparse-format ratio). Weight matrices are converted once
+/// per sparsity and shared by every (format, batch) cell.
+fn kernel_sweep(dim: usize, budget_ms: u64)
+                -> (Vec<Value>, Vec<(&'static str, f64)>, f64) {
+    let mut rows: Vec<Value> = Vec::new();
+    let mut totals = [
+        ("csr", SweepTotals { untiled_ns: 0.0, tiled_ns: 0.0 }),
+        ("macko", SweepTotals { untiled_ns: 0.0, tiled_ns: 0.0 }),
+        ("dense", SweepTotals { untiled_ns: 0.0, tiled_ns: 0.0 }),
+    ];
+    println!("== row-tiled SpMM sweep, {dim}x{dim} ==");
+    for &sp in &SPARSITIES {
+        let w = random_sparse_weight(dim, dim, sp, 42);
+        let flops1 = w.nnz() as f64 * 2.0;
+        let csr = Csr::from_weight(&w);
+        let macko = Macko::from_weight(&w);
+        let dplan = dense_plan(&w);
+        let mut su = SpmmScratch::default();
+        let mut st = SpmmScratch::default();
+        let mut rng = Rng::new(7);
+        for &b in &BATCHES {
+            let x: Vec<f32> =
+                (0..b * dim).map(|_| rng.normal()).collect();
+            let flops = flops1 * b as f64;
+            cell("csr", sp, b, flops, budget_ms, &mut rows,
+                 &mut totals[0].1,
+                 |y| csr.matvec_batch_into(&x, y, b, &mut su),
+                 |y| csr.matvec_batch_tiled_into(&x, y, b, &mut st),
+                 dim);
+            cell("macko", sp, b, flops, budget_ms, &mut rows,
+                 &mut totals[1].1,
+                 |y| macko.matvec_batch_into(&x, y, b, &mut su),
+                 |y| macko.matvec_batch_tiled_into(&x, y, b, &mut st),
+                 dim);
+            cell("dense", sp, b, flops, budget_ms, &mut rows,
+                 &mut totals[2].1,
+                 |y| dense_matvec_batch(&w, &x, y, b),
+                 |y| tile::matvec_batch_tiled(&w, &dplan, &x, y, b,
+                                              &mut st),
+                 dim);
+        }
+    }
+    let mut per_fmt: Vec<(&'static str, f64)> = Vec::new();
+    let mut sparse_totals = SweepTotals { untiled_ns: 0.0, tiled_ns: 0.0 };
+    for (fmt, t) in &totals {
+        let ratio = t.untiled_ns / t.tiled_ns.max(1e-9);
+        println!("-- {fmt}: aggregate tiled/untiled x{ratio:.2} \
+                  (batches > 1) --");
+        let rkey = match *fmt {
+            "csr" => "csr_tiled_ratio",
+            "macko" => "macko_tiled_ratio",
+            _ => "dense_tiled_ratio",
+        };
+        per_fmt.push((rkey, ratio));
+        if *fmt != "dense" {
+            sparse_totals.untiled_ns += t.untiled_ns;
+            sparse_totals.tiled_ns += t.tiled_ns;
+        }
+    }
+    let agg = sparse_totals.untiled_ns / sparse_totals.tiled_ns.max(1e-9);
+    println!("== aggregate sparse tiled/untiled ratio x{agg:.2} ==\n");
+    (rows, per_fmt, agg)
+}
+
+/// Intra-layer row-range sharding on one big layer: the tile plan is
+/// split into byte-balanced shards across scoped threads — the
+/// complementary axis to the scheduler's slot sharding (useful when
+/// one huge layer dominates and the live slot count is small).
+fn shard_sweep(dim: usize, threads: usize, budget_ms: u64) {
+    let b = 8usize;
+    let sp = 0.9;
+    let w = random_sparse_weight(dim, dim, sp, 11);
+    let csr = Csr::from_weight(&w);
+    let flops = csr.nnz() as f64 * 2.0 * b as f64;
+    let mut rng = Rng::new(3);
+    let x: Vec<f32> = (0..b * dim).map(|_| rng.normal()).collect();
+    let mut y1 = vec![0.0f32; b * dim];
+    let mut yn = vec![0.0f32; b * dim];
+    let mut s1 = SpmmScratch::default();
+    let mut sn = SpmmScratch::default();
+
+    println!("== intra-layer sharding, csr {dim}x{dim} sp={sp:.2} \
+              b={b} ({} tiles) ==", csr.plan.tiles.len());
+    par_matvec_batch_tiled(&csr, &csr.plan, &x, &mut y1, b, 1, &mut s1);
+    par_matvec_batch_tiled(&csr, &csr.plan, &x, &mut yn, b, threads,
+                           &mut sn);
+    assert_eq!(y1, yn, "sharded kernel diverged from serial tiled");
+
+    let r = bench(&format!("csr tiled   1 shard        b={b}"),
+                  budget_ms, || {
+        par_matvec_batch_tiled(&csr, &csr.plan, &x, &mut y1, b, 1,
+                               &mut s1);
+        std::hint::black_box(&y1);
+    });
+    throughput(&r, flops, "flop");
+    let serial_ns = r.median_ns;
+    let r = bench(&format!("csr tiled   {threads} shards       b={b}"),
+                  budget_ms, || {
+        par_matvec_batch_tiled(&csr, &csr.plan, &x, &mut yn, b, threads,
+                               &mut sn);
+        std::hint::black_box(&yn);
+    });
+    throughput(&r, flops, "flop");
+    println!("  -> intra-layer scaling x{:.2} at {threads} threads \
+              (bit-identical output)\n", serial_ns / r.median_ns.max(1e-9));
+}
+
+/// End-to-end batched decode per backend (tiled engine): the tok/s
+/// numbers the CI gate floors. Also reports macko with tiling off so
+/// regressions in the *dispatch* show up, not just in the kernels.
+fn engine_sweep(n_new: usize) -> Vec<(&'static str, f64)> {
+    let cfg = synthetic_config("kern_bench", 128, 2, 4, 512, 256, 96);
+    let params = Params::init(&cfg, 0);
+    let pruned = magnitude::prune(&cfg, &params.flat,
+                                  &uniform_alloc(&cfg, 0.9))
+        .expect("magnitude prune");
+    let p = Params::new(&cfg, pruned);
+    let batch = 8usize;
+    let prompt_len = 8usize;
+    let mut rng = Rng::new(1);
+    let prompts: Vec<Vec<u32>> = (0..batch)
+        .map(|_| (0..prompt_len)
+             .map(|_| rng.below(cfg.vocab) as u32).collect())
+        .collect();
+    let opts = BatchOptions {
+        n_new, temperature: 0.8, seed: 0, threads: 1,
+    };
+
+    println!("== end-to-end decode, d={} L={} sp=0.90, batch={batch}, \
+              tiled kernels ==", cfg.d_model, cfg.n_layers);
+    let mut out = Vec::new();
+    for backend in [Backend::Dense, Backend::Csr, Backend::Macko] {
+        let mut engine = Engine::build(&p, backend).expect("engine");
+        engine.generate_batch(&prompts, &opts); // warmup
+        let t = Timer::start();
+        let (_, stats) = engine.generate_batch(&prompts, &opts);
+        let tps = stats.tokens_generated as f64 / t.seconds().max(1e-9);
+        println!("{:>6}: {tps:9.1} tok/s aggregate",
+                 format!("{backend:?}"));
+        let key = match backend {
+            Backend::Dense => "dense",
+            Backend::Csr => "csr",
+            Backend::Macko => "macko",
+        };
+        out.push((key, tps));
+        if backend == Backend::Macko {
+            engine.tiled = false;
+            engine.generate_batch(&prompts, &opts); // warmup untiled
+            let t = Timer::start();
+            let (_, stats) = engine.generate_batch(&prompts, &opts);
+            let utps =
+                stats.tokens_generated as f64 / t.seconds().max(1e-9);
+            println!("{:>6}: {utps:9.1} tok/s aggregate (untiled)",
+                     "macko");
+            out.push(("macko_untiled", utps));
+        }
+    }
+    println!();
+    out
+}
+
+fn main() {
+    let threads = std::env::args()
+        .nth(1)
+        .and_then(|a| a.parse::<usize>().ok())
+        .unwrap_or(2);
+    let small = std::env::args().nth(2).as_deref() == Some("small");
+    let (dim, budget_ms, n_new) =
+        if small { (512, 60, 24) } else { (768, 200, 56) };
+
+    let (rows, per_fmt, agg_ratio) = kernel_sweep(dim, budget_ms);
+    shard_sweep(if small { dim } else { 1024 }, threads, budget_ms);
+    let engine = engine_sweep(n_new);
+
+    // machine-readable summary for the CI regression gate
+    let mut top: Vec<(&str, Value)> = vec![
+        ("config", obj(vec![
+            ("dim", num(dim as f64)),
+            ("small", num(if small { 1.0 } else { 0.0 })),
+            ("threads", num(threads as f64)),
+        ])),
+        ("kernels", Value::Arr(rows)),
+        ("tiled_untiled_ratio", num(agg_ratio)),
+    ];
+    for &(key, ratio) in &per_fmt {
+        top.push((key, num(ratio)));
+    }
+    for &(key, tps) in &engine {
+        top.push((key, obj(vec![("tok_s", num(tps))])));
+    }
+    let j = obj(top);
+    let path = std::env::var("BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_kernels.json".to_string());
+    std::fs::write(&path, to_string(&j) + "\n")
+        .expect("write bench summary");
+    println!("wrote {path}");
+}

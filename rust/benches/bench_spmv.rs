@@ -3,22 +3,9 @@
 //!
 //! Run: cargo bench --bench bench_spmv
 
-use elsa::sparse::{dense_matvec, Csr, Macko};
-use elsa::tensor::Matrix;
+use elsa::sparse::{dense_matvec, random_sparse_weight, Csr, Macko};
 use elsa::util::bench::{bench, throughput};
 use elsa::util::rng::Rng;
-
-fn sparse_weight(din: usize, dout: usize, sparsity: f64, seed: u64)
-                 -> Matrix {
-    let mut rng = Rng::new(seed);
-    let mut w = Matrix::randn(din, dout, 1.0, &mut rng);
-    for x in w.data.iter_mut() {
-        if rng.f64() < sparsity {
-            *x = 0.0;
-        }
-    }
-    w
-}
 
 fn main() {
     let (din, dout) = (768, 768);
@@ -28,7 +15,7 @@ fn main() {
 
     println!("== SpMV {din}x{dout}, y = W^T x ==");
     for &sp in &[0.0, 0.5, 0.7, 0.9, 0.95, 0.99] {
-        let w = sparse_weight(din, dout, sp, 42);
+        let w = random_sparse_weight(din, dout, sp, 42);
         let nnz = w.nnz() as f64;
 
         let r = bench(&format!("dense   sp={sp:.2}"), 300, || {

@@ -103,7 +103,7 @@ pub fn run(ctx: &Ctx, args: &Args) -> Result<()> {
         &format!("Table 1b — batched decode throughput ({model}, \
                   sparsity {BATCH_SWEEP_SPARSITY}, {threads} threads)"),
         &["batch", "dense_tok_s", "csr_tok_s", "macko_tok_s",
-          "macko_scaling_x"]);
+          "macko_untiled_tok_s", "macko_scaling_x"]);
 
     let mut macko_base = 0.0f64;
     // wrap prompt windows so any --batch-sizes value stays in bounds
@@ -120,8 +120,9 @@ pub fn run(ctx: &Ctx, args: &Args) -> Result<()> {
         };
         let mut row = vec![bsz.to_string()];
         let mut macko_tps = 0.0f64;
+        let mut macko_untiled_tps = 0.0f64;
         for backend in [Backend::Dense, Backend::Csr, Backend::Macko] {
-            let engine = Engine::build(&p, backend)?;
+            let mut engine = Engine::build(&p, backend)?;
             engine.generate_batch(&prompts, &opts); // warmup
             let mut best = 0.0f64;
             for _ in 0..reps.min(3) {
@@ -130,12 +131,24 @@ pub fn run(ctx: &Ctx, args: &Args) -> Result<()> {
             }
             if backend == Backend::Macko {
                 macko_tps = best;
+                // per-kernel comparison: same engine with the untiled
+                // SpMM traversal (token streams are bit-identical, so
+                // only the walk differs)
+                engine.tiled = false;
+                engine.generate_batch(&prompts, &opts); // warmup
+                for _ in 0..reps.min(3) {
+                    let (_, stats) =
+                        engine.generate_batch(&prompts, &opts);
+                    macko_untiled_tps =
+                        macko_untiled_tps.max(stats.tokens_per_second);
+                }
             }
             row.push(f2(best));
         }
         if macko_base == 0.0 {
             macko_base = macko_tps;
         }
+        row.push(f2(macko_untiled_tps));
         row.push(format!("x{:.2}", macko_tps / macko_base.max(1e-9)));
         crate::info!("tab1", "batch {bsz}: macko {macko_tps:.1} tok/s \
                       aggregate ({threads} threads)");

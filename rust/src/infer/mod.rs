@@ -12,9 +12,13 @@
 //!  - [`Engine::generate_batch`]: many sequences with per-slot KV
 //!    caches and slot retirement; each step runs the linears as one
 //!    multi-vector SpMM over the live slots (amortizing index/bitmap
-//!    decode across the batch) and shards slots across worker threads
+//!    decode across the batch, and — with [`Engine::tiled`], the
+//!    default — walking each cache-sized weight tile once per step),
+//!    finishes with a single batched head projection regardless of
+//!    slot count, and shards slots across worker threads
 //!    (`--threads N`). Batched results are bit-identical to the
-//!    single-sequence path per slot, for any thread count.
+//!    single-sequence path per slot, for any thread count and either
+//!    kernel traversal.
 //!  - [`scheduler`]: the continuous-batching layer (`elsa serve`) — a
 //!    request queue with mid-decode slot admission and pooled KV
 //!    caches. `generate_batch` is a thin fixed-admission wrapper over
@@ -28,14 +32,17 @@ use crate::cli::Args;
 use crate::model::forward::gelu_tanh;
 use crate::model::Params;
 use crate::runtime::ConfigEntry;
-use crate::sparse::{Csr, Macko, SpmmScratch};
+use crate::sparse::{tile, Csr, Macko, SpmmScratch, TilePlan};
 use crate::tensor::Matrix;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
 
-/// Weight storage backend for one linear layer.
+/// Weight storage backend for one linear layer. Every variant carries
+/// a row-tiled execution plan built once at conversion time (the
+/// sparse formats embed theirs; dense pairs the matrix with a
+/// column-tile plan).
 pub enum WeightFmt {
-    Dense(Matrix),
+    Dense(Matrix, TilePlan),
     Csr(Csr),
     Macko(Macko),
 }
@@ -43,7 +50,10 @@ pub enum WeightFmt {
 impl WeightFmt {
     pub fn build(w: Matrix, kind: Backend) -> WeightFmt {
         match kind {
-            Backend::Dense => WeightFmt::Dense(w),
+            Backend::Dense => {
+                let plan = tile::dense_plan(&w);
+                WeightFmt::Dense(w, plan)
+            }
             Backend::Csr => WeightFmt::Csr(Csr::from_weight(&w)),
             Backend::Macko => WeightFmt::Macko(Macko::from_weight(&w)),
         }
@@ -52,7 +62,7 @@ impl WeightFmt {
     /// y = W^T x (x: din, y: dout).
     pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
         match self {
-            WeightFmt::Dense(w) => {
+            WeightFmt::Dense(w, _) => {
                 let t = w.t_matvec(x);
                 y.copy_from_slice(&t);
             }
@@ -69,7 +79,7 @@ impl WeightFmt {
     pub fn matvec_batch(&self, x: &[f32], y: &mut [f32], b: usize,
                         scratch: &mut SpmmScratch) {
         match self {
-            WeightFmt::Dense(w) => {
+            WeightFmt::Dense(w, _) => {
                 crate::sparse::dense_matvec_batch(w, x, y, b)
             }
             WeightFmt::Csr(c) => c.matvec_batch_into(x, y, b, scratch),
@@ -77,9 +87,48 @@ impl WeightFmt {
         }
     }
 
+    /// Tiled variant of [`WeightFmt::matvec_batch`]: the kernel walks
+    /// the format's construction-time row-tile plan, so each
+    /// cache-sized weight tile is streamed once per step and applied
+    /// across every live slot. Bit-identical to the untiled path for
+    /// every format and batch size (see [`crate::sparse::tile`]).
+    pub fn matvec_batch_tiled(&self, x: &[f32], y: &mut [f32], b: usize,
+                              scratch: &mut SpmmScratch) {
+        match self {
+            WeightFmt::Dense(w, plan) => {
+                if b == 1 {
+                    // same batch-1 delegation as the sparse formats:
+                    // both traversals are the identical matvec
+                    let t = w.t_matvec(x);
+                    y.copy_from_slice(&t);
+                    return;
+                }
+                tile::matvec_batch_tiled(w, plan, x, y, b, scratch)
+            }
+            WeightFmt::Csr(c) => {
+                c.matvec_batch_tiled_into(x, y, b, scratch)
+            }
+            WeightFmt::Macko(m) => {
+                m.matvec_batch_tiled_into(x, y, b, scratch)
+            }
+        }
+    }
+
+    /// Dispatch for the engine's [`Engine::tiled`] toggle — the two
+    /// paths produce bit-identical output, so the toggle only selects
+    /// the traversal.
+    pub fn matvec_batch_exec(&self, x: &[f32], y: &mut [f32], b: usize,
+                             scratch: &mut SpmmScratch, tiled: bool) {
+        if tiled {
+            self.matvec_batch_tiled(x, y, b, scratch);
+        } else {
+            self.matvec_batch(x, y, b, scratch);
+        }
+    }
+
     pub fn mem_bytes(&self) -> usize {
         match self {
-            WeightFmt::Dense(w) => w.data.len() * 4,
+            WeightFmt::Dense(w, _) => w.data.len() * 4,
             WeightFmt::Csr(c) => c.mem_bytes(),
             WeightFmt::Macko(m) => m.mem_bytes(),
         }
@@ -174,6 +223,11 @@ pub struct Engine {
     lnf_b: Vec<f32>,
     head: Matrix, // non-prunable, always dense
     pub backend: Backend,
+    /// Batched decode runs the row-tiled kernels (default). The tiled
+    /// and untiled paths are bit-identical, so flipping this only
+    /// changes the traversal — `rust/tests/kernels.rs` asserts token
+    /// streams match either way.
+    pub tiled: bool,
 }
 
 impl Engine {
@@ -211,6 +265,7 @@ impl Engine {
             head: params.matrix("head")?,
             cfg,
             backend,
+            tiled: true,
         })
     }
 
@@ -432,15 +487,15 @@ impl Engine {
                                     &l.ln1_g, &l.ln1_b,
                                     &mut scratch.xa[bi * d..(bi + 1) * d]);
             }
-            l.wq.matvec_batch(&scratch.xa[..b * d],
-                              &mut scratch.q[..b * d], b,
-                              &mut scratch.spmm);
-            l.wk.matvec_batch(&scratch.xa[..b * d],
-                              &mut scratch.k[..b * d], b,
-                              &mut scratch.spmm);
-            l.wv.matvec_batch(&scratch.xa[..b * d],
-                              &mut scratch.v[..b * d], b,
-                              &mut scratch.spmm);
+            l.wq.matvec_batch_exec(&scratch.xa[..b * d],
+                                   &mut scratch.q[..b * d], b,
+                                   &mut scratch.spmm, self.tiled);
+            l.wk.matvec_batch_exec(&scratch.xa[..b * d],
+                                   &mut scratch.k[..b * d], b,
+                                   &mut scratch.spmm, self.tiled);
+            l.wv.matvec_batch_exec(&scratch.xa[..b * d],
+                                   &mut scratch.v[..b * d], b,
+                                   &mut scratch.spmm, self.tiled);
 
             // per-slot attention over each slot's own cache
             for (bi, &si) in active.iter().enumerate() {
@@ -454,9 +509,9 @@ impl Engine {
                 attend_cached(kv, &scratch.q[bi * d..(bi + 1) * d],
                               orow, &mut scratch.probs, h, dh, scale, d);
             }
-            l.wo.matvec_batch(&scratch.o[..b * d],
-                              &mut scratch.tmp_d[..b * d], b,
-                              &mut scratch.spmm);
+            l.wo.matvec_batch_exec(&scratch.o[..b * d],
+                                   &mut scratch.tmp_d[..b * d], b,
+                                   &mut scratch.spmm, self.tiled);
             for i in 0..b * d {
                 scratch.x[i] += scratch.tmp_d[i];
             }
@@ -466,18 +521,18 @@ impl Engine {
                                     &l.ln2_g, &l.ln2_b,
                                     &mut scratch.xa[bi * d..(bi + 1) * d]);
             }
-            l.w1.matvec_batch(&scratch.xa[..b * d],
-                              &mut scratch.ff[..b * dff], b,
-                              &mut scratch.spmm);
+            l.w1.matvec_batch_exec(&scratch.xa[..b * d],
+                                   &mut scratch.ff[..b * dff], b,
+                                   &mut scratch.spmm, self.tiled);
             for bi in 0..b {
                 let frow = &mut scratch.ff[bi * dff..(bi + 1) * dff];
                 for (f, bias) in frow.iter_mut().zip(l.b1.iter()) {
                     *f = gelu_tanh(*f + bias);
                 }
             }
-            l.w2.matvec_batch(&scratch.ff[..b * dff],
-                              &mut scratch.tmp_d[..b * d], b,
-                              &mut scratch.spmm);
+            l.w2.matvec_batch_exec(&scratch.ff[..b * dff],
+                                   &mut scratch.tmp_d[..b * d], b,
+                                   &mut scratch.spmm, self.tiled);
             for bi in 0..b {
                 for c in 0..d {
                     scratch.x[bi * d + c] +=
@@ -486,14 +541,25 @@ impl Engine {
             }
         }
 
-        // final layernorm + head per slot
-        for (bi, &si) in active.iter().enumerate() {
+        // final layernorm per slot, then ONE batched head projection
+        // over the packed activations: the head matrix is streamed
+        // once per step via `t_matmat` regardless of how many slots
+        // are live (it used to be one `t_matvec` per slot per step).
+        // Row bi of the batched GEMM is bit-identical to
+        // `t_matvec(xa_bi)`, so every slot's logits are unchanged.
+        for bi in 0..b {
             Self::layernorm_vec(&scratch.x[bi * d..(bi + 1) * d],
                                 &self.lnf_g, &self.lnf_b,
                                 &mut scratch.xa[bi * d..(bi + 1) * d]);
+        }
+        let vocab = self.head.cols;
+        self.head.t_matmat(&scratch.xa[..b * d],
+                           &mut scratch.logits[..b * vocab], b);
+        for (bi, &si) in active.iter().enumerate() {
             let s = &mut slots[si];
-            s.logits =
-                self.head.t_matvec(&scratch.xa[bi * d..(bi + 1) * d]);
+            s.logits.resize(vocab, 0.0);
+            s.logits.copy_from_slice(
+                &scratch.logits[bi * vocab..(bi + 1) * vocab]);
             s.fed += 1;
         }
     }
@@ -578,6 +644,9 @@ struct BatchScratch {
     ff: Vec<f32>,
     tmp_d: Vec<f32>,
     probs: Vec<f32>,
+    /// Staging for the step's single batched head projection
+    /// ((b, vocab), written by `t_matmat`, copied out per slot).
+    logits: Vec<f32>,
     /// Kernel-side scratch shared by every matvec_batch of the step.
     spmm: SpmmScratch,
 }
@@ -595,6 +664,7 @@ impl BatchScratch {
             ff: vec![0.0; b * cfg.d_ff],
             tmp_d: vec![0.0; b * d],
             probs: vec![0.0; cfg.seq_len],
+            logits: vec![0.0; b * cfg.vocab],
             spmm: SpmmScratch::default(),
         }
     }
@@ -629,7 +699,8 @@ pub struct GenStats {
 
 /// `elsa generate` / `elsa infer` subcommand. `--batch N` serves N
 /// prompts through the batched engine; `--threads N` shards the batch
-/// across worker threads.
+/// across worker threads; `--untiled` falls back to the untiled SpMM
+/// kernels (bit-identical output, for perf comparisons).
 pub fn cmd_generate(args: &Args) -> Result<()> {
     let rt = crate::commands::open_runtime(args)?;
     let ck = crate::model::checkpoint::Checkpoint::load(
@@ -638,7 +709,8 @@ pub fn cmd_generate(args: &Args) -> Result<()> {
     let params = Params::new(&cfg, ck.get("params")?.clone());
     let backend = Backend::parse(&args.str_or("backend", "macko"))
         .ok_or_else(|| anyhow::anyhow!("bad --backend"))?;
-    let engine = Engine::build(&params, backend)?;
+    let mut engine = Engine::build(&params, backend)?;
+    engine.tiled = !args.bool("untiled");
 
     let g = crate::data::Grammar::named(
         &args.str_or("dataset", "synth-c4"), cfg.vocab);

@@ -322,6 +322,13 @@ impl<'e> Scheduler<'e> {
     /// then runs one batched decode step — every iteration, so a
     /// request admitted mid-decode starts prefilling on the very next
     /// step while its batch-mates keep generating.
+    ///
+    /// The live set is packed in slot order (`indices = 0..slots.len()`
+    /// after swap-remove retirement), and the engine's kernels —
+    /// row-tiled or not, batched head projection included — are
+    /// bit-exact per lane regardless of how the set is packed, so the
+    /// determinism guarantee in the module docs is independent of
+    /// retirement/admission interleaving.
     fn worker(&self, shared: &Shared, cap: usize) -> WorkerOut {
         let engine = self.engine;
         let cfg = &engine.cfg;
@@ -608,7 +615,8 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let params = crate::model::Params::new(&cfg, ck.get("params")?.clone());
     let backend = super::Backend::parse(&args.str_or("backend", "macko"))
         .ok_or_else(|| anyhow::anyhow!("bad --backend"))?;
-    let engine = Engine::build(&params, backend)?;
+    let mut engine = Engine::build(&params, backend)?;
+    engine.tiled = !args.bool("untiled");
 
     let g = crate::data::Grammar::named(
         &args.str_or("dataset", "synth-c4"), cfg.vocab);

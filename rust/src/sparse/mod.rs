@@ -13,6 +13,11 @@
 //! Memory accounting is real (`mem_bytes` sums the actual buffers), so
 //! the Table-1 memory column reflects genuine storage.
 
+pub mod tile;
+
+pub use tile::{dense_plan, matvec_batch_tiled, par_matvec_batch_tiled,
+               RowTiled, Tile, TilePlan};
+
 use crate::tensor::Matrix;
 
 /// CSR over W^T: row r holds the non-zeros of output neuron r.
@@ -23,6 +28,10 @@ pub struct Csr {
     pub row_ptr: Vec<u32>,
     pub col_idx: Vec<u32>,
     pub values: Vec<f32>,
+    /// Row-tiled execution plan, built once here at construction time
+    /// (see [`tile`]); traversal metadata only, excluded from
+    /// [`Csr::mem_bytes`].
+    pub plan: TilePlan,
 }
 
 impl Csr {
@@ -43,7 +52,11 @@ impl Csr {
             }
             row_ptr.push(col_idx.len() as u32);
         }
-        Csr { n_out: dout, n_in: din, row_ptr, col_idx, values }
+        // 8 bytes per nonzero: a 4-byte value + a 4-byte column index
+        let plan = TilePlan::from_row_bytes(dout, |o| {
+            (row_ptr[o + 1] - row_ptr[o]) as usize * 8
+        });
+        Csr { n_out: dout, n_in: din, row_ptr, col_idx, values, plan }
     }
 
     /// y = W^T x  i.e. y[c] = sum_r W[r, c] * x[r].
@@ -106,6 +119,19 @@ impl Csr {
         }
     }
 
+    /// Tiled variant of [`Csr::matvec_batch_into`]: walks each
+    /// cache-sized row tile of the construction-time [`TilePlan`] once
+    /// per step and applies it across all `b` sequences while the
+    /// tile's index/value slices are cache-resident. Bit-identical to
+    /// the untiled path for every batch size (see [`tile`]).
+    pub fn matvec_batch_tiled_into(&self, x: &[f32], y: &mut [f32],
+                                   b: usize, scratch: &mut SpmmScratch) {
+        if b == 1 {
+            return self.matvec(x, y);
+        }
+        tile::matvec_batch_tiled(self, &self.plan, x, y, b, scratch);
+    }
+
     /// Matrix convenience wrapper over [`Csr::matvec_batch`]:
     /// returns X @ W for X of shape (b, din). Allocates the output and
     /// a fresh scratch; hot loops should hold both and call
@@ -137,13 +163,15 @@ impl Csr {
 }
 
 /// Reusable scratch for the batched kernels: the (n, b) re-layout of
-/// the input batch plus the per-row accumulator. Hold one per decode
-/// loop so repeated `matvec_batch_into` calls stop hitting the
-/// allocator.
+/// the input batch, the per-row accumulator, and the tiled kernels'
+/// (n_out, b) staging buffer. Hold one per decode loop so repeated
+/// `matvec_batch_into` / `matvec_batch_tiled_into` calls stop hitting
+/// the allocator.
 #[derive(Debug, Default)]
 pub struct SpmmScratch {
     xt: Vec<f32>,
     acc: Vec<f32>,
+    yt: Vec<f32>,
 }
 
 /// Re-layout a row-major (b, n) batch as (n, b) into `xt` so batched
@@ -169,6 +197,10 @@ pub struct Macko {
     pub bitmap: Vec<u64>,
     pub row_ptr: Vec<u32>,
     pub values: Vec<f32>,
+    /// Row-tiled execution plan, built once here at construction time
+    /// (see [`tile`]); traversal metadata only, excluded from
+    /// [`Macko::mem_bytes`].
+    pub plan: TilePlan,
 }
 
 impl Macko {
@@ -189,8 +221,12 @@ impl Macko {
             }
             row_ptr.push(values.len() as u32);
         }
+        // per row: the din-bit bitmap words plus the packed values
+        let plan = TilePlan::from_row_bytes(dout, |o| {
+            wpr * 8 + (row_ptr[o + 1] - row_ptr[o]) as usize * 4
+        });
         Macko { n_out: dout, n_in: din, words_per_row: wpr, bitmap,
-                row_ptr, values }
+                row_ptr, values, plan }
     }
 
     /// y = W^T x via bitmap scan: iterate set bits word by word.
@@ -267,6 +303,19 @@ impl Macko {
         }
     }
 
+    /// Tiled variant of [`Macko::matvec_batch_into`]: walks each
+    /// cache-sized row tile of the construction-time [`TilePlan`] once
+    /// per step and applies it across all `b` sequences while the
+    /// tile's bitmap/value slices are cache-resident. Bit-identical to
+    /// the untiled path for every batch size (see [`tile`]).
+    pub fn matvec_batch_tiled_into(&self, x: &[f32], y: &mut [f32],
+                                   b: usize, scratch: &mut SpmmScratch) {
+        if b == 1 {
+            return self.matvec(x, y);
+        }
+        tile::matvec_batch_tiled(self, &self.plan, x, y, b, scratch);
+    }
+
     /// Matrix convenience wrapper over [`Macko::matvec_batch`]:
     /// returns X @ W for X of shape (b, din). Allocates the output and
     /// a fresh scratch; hot loops should hold both and call
@@ -321,6 +370,21 @@ pub fn dense_matmat(w: &Matrix, x: &Matrix) -> Matrix {
     x.matmul(w)
 }
 
+/// Seeded random (din, dout) weight with i.i.d. zeroing at `sparsity`
+/// — the one weight ensemble shared by the kernel benches and the
+/// bit-identity test suites, so they all measure the same matrices.
+pub fn random_sparse_weight(din: usize, dout: usize, sparsity: f64,
+                            seed: u64) -> Matrix {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let mut w = Matrix::randn(din, dout, 1.0, &mut rng);
+    for x in w.data.iter_mut() {
+        if rng.f64() < sparsity {
+            *x = 0.0;
+        }
+    }
+    w
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -328,14 +392,7 @@ mod tests {
 
     fn sparse_weight(din: usize, dout: usize, sparsity: f64, seed: u64)
                      -> Matrix {
-        let mut rng = Rng::new(seed);
-        let mut w = Matrix::randn(din, dout, 1.0, &mut rng);
-        for x in w.data.iter_mut() {
-            if (rng.f64()) < sparsity {
-                *x = 0.0;
-            }
-        }
-        w
+        random_sparse_weight(din, dout, sparsity, seed)
     }
 
     #[test]

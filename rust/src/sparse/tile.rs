@@ -1,0 +1,422 @@
+//! Row-tiled execution plans for the SpMM kernels (ISSUE 3 tentpole).
+//!
+//! The batched kernels in [`crate::sparse`] already amortize
+//! index/bitmap decode across the batch; this module adds the
+//! *weight-traffic* half of the cross-request reuse story. A [`TilePlan`] groups a format's
+//! output rows into cache-sized tiles at `from_weight` time (both
+//! `Csr` and `Macko` pack their per-row nonzero payloads row-major, so
+//! every tile's value/index/bitmap slices are already contiguous in
+//! storage — the plan records boundaries and byte costs, it never
+//! copies). The tiled kernels then walk each weight tile **once** per
+//! decode step and apply it across all live slots while the tile's
+//! payload is L1/L2-resident, instead of streaming the whole matrix
+//! once per output row's working set.
+//!
+//! Tiles are also the sharding unit: [`TilePlan::shard_ranges`] splits
+//! the plan into contiguous, byte-balanced row ranges, and
+//! [`par_matvec_batch_tiled`] fans those shards across scoped threads
+//! so one big layer can use every core even at batch 1 slot-count
+//! (intra-layer parallelism, vs. the scheduler's slot sharding).
+//!
+//! ## Bit-exactness contract
+//!
+//! Tiling is a pure traversal re-grouping: for every output row and
+//! every sequence in the batch, the accumulation order over that row's
+//! nonzeros is identical to the format's single-vector `matvec` (and
+//! therefore to the untiled `matvec_batch_into`). Tiled output is
+//! bit-identical to the untiled path for every format, batch size,
+//! tile geometry, and shard count — all PR 1/2 determinism guarantees
+//! carry over unchanged. The tests in `rust/tests/kernels.rs` assert
+//! exactly this.
+
+use super::{transpose_batch_into, Csr, Macko, SpmmScratch};
+use crate::tensor::Matrix;
+
+/// One contiguous row range of a [`TilePlan`] plus the estimated bytes
+/// of weight payload the kernel streams when walking it.
+#[derive(Debug, Clone)]
+pub struct Tile {
+    pub row0: usize,
+    pub row1: usize,
+    /// Estimated weight payload (values + indices / bitmap words) in
+    /// bytes — the tile-sizing and shard-balancing cost measure.
+    pub bytes: usize,
+}
+
+/// A row-tiled execution plan: output rows grouped into cache-sized
+/// tiles, built once per weight matrix at `from_weight`/load time.
+/// The plan is traversal metadata only — it is excluded from the
+/// formats' `mem_bytes` weight-storage accounting.
+#[derive(Debug, Clone, Default)]
+pub struct TilePlan {
+    pub n_rows: usize,
+    pub tiles: Vec<Tile>,
+}
+
+impl TilePlan {
+    /// Default per-tile payload budget: half a typical 32 KiB L1d, so
+    /// a tile's weight slices and the (b-wide) accumulator rows fit
+    /// together.
+    pub const TARGET_TILE_BYTES: usize = 16 * 1024;
+
+    /// Row cap per tile, so extremely sparse (or all-zero) matrices
+    /// still split into enough tiles to shard across threads.
+    pub const MAX_TILE_ROWS: usize = 512;
+
+    /// Build a plan from a per-row payload-size function with the
+    /// default cache budget.
+    pub fn from_row_bytes(n_rows: usize,
+                          row_bytes: impl Fn(usize) -> usize) -> TilePlan {
+        Self::with_budget(n_rows, row_bytes, Self::TARGET_TILE_BYTES,
+                          Self::MAX_TILE_ROWS)
+    }
+
+    /// Build a plan with an explicit byte budget and row cap: rows are
+    /// appended to the current tile until adding the next row would
+    /// exceed `target_bytes` (or the tile holds `max_rows`), then the
+    /// tile is closed. Every tile is non-empty and the tiles cover
+    /// `0..n_rows` contiguously; a single row larger than the budget
+    /// gets a tile of its own.
+    pub fn with_budget(n_rows: usize, row_bytes: impl Fn(usize) -> usize,
+                       target_bytes: usize, max_rows: usize) -> TilePlan {
+        let max_rows = max_rows.max(1);
+        let mut tiles = Vec::new();
+        let mut row0 = 0usize;
+        let mut bytes = 0usize;
+        for r in 0..n_rows {
+            let rb = row_bytes(r);
+            let rows = r - row0;
+            if rows > 0 && (bytes + rb > target_bytes || rows >= max_rows) {
+                tiles.push(Tile { row0, row1: r, bytes });
+                row0 = r;
+                bytes = 0;
+            }
+            bytes += rb;
+        }
+        if row0 < n_rows {
+            tiles.push(Tile { row0, row1: n_rows, bytes });
+        }
+        TilePlan { n_rows, tiles }
+    }
+
+    /// Fixed geometry: exactly `tile_rows` rows per tile with a ragged
+    /// last tile. Test/bench helper for exercising tile boundaries
+    /// independently of payload sizes.
+    pub fn fixed(n_rows: usize, tile_rows: usize) -> TilePlan {
+        let tile_rows = tile_rows.max(1);
+        let mut tiles = Vec::new();
+        let mut row0 = 0usize;
+        while row0 < n_rows {
+            let row1 = (row0 + tile_rows).min(n_rows);
+            tiles.push(Tile { row0, row1, bytes: 0 });
+            row0 = row1;
+        }
+        TilePlan { n_rows, tiles }
+    }
+
+    /// Split the plan into at most `n` contiguous shards of tiles with
+    /// roughly equal byte cost (each shard gets at least one tile).
+    /// Returns tile-index ranges `[lo, hi)` covering every tile in
+    /// order — the unit [`par_matvec_batch_tiled`] hands to each
+    /// worker thread.
+    pub fn shard_ranges(&self, n: usize) -> Vec<(usize, usize)> {
+        let n_tiles = self.tiles.len();
+        if n_tiles == 0 {
+            return Vec::new();
+        }
+        let n = n.clamp(1, n_tiles);
+        let total: usize = self.tiles.iter().map(|t| t.bytes.max(1)).sum();
+        let mut out: Vec<(usize, usize)> = Vec::with_capacity(n);
+        let mut lo = 0usize;
+        let mut acc = 0usize;
+        let mut closed = 0usize;
+        for i in 0..n_tiles {
+            acc += self.tiles[i].bytes.max(1);
+            let shards_left = n - out.len();
+            let tiles_after = n_tiles - (i + 1);
+            if shards_left > 1 {
+                let fair = (total - closed).div_ceil(shards_left);
+                // close when the shard reached its fair share, or when
+                // every remaining shard needs one of the leftover tiles
+                if acc >= fair || tiles_after == shards_left - 1 {
+                    out.push((lo, i + 1));
+                    lo = i + 1;
+                    closed += acc;
+                    acc = 0;
+                }
+            }
+        }
+        out.push((lo, n_tiles));
+        out
+    }
+}
+
+/// A weight format whose output rows can be computed tile-by-tile into
+/// a `(rows, b)` staging layout. The one contract that matters: for
+/// every output row and batch lane, `exec_tiles` must replay the exact
+/// accumulation order of the format's single-vector `matvec`.
+pub trait RowTiled {
+    fn n_in(&self) -> usize;
+    fn n_out(&self) -> usize;
+
+    /// Compute output rows `tiles[0].row0 .. tiles.last().row1` into
+    /// `yt`, laid out `yt[(row - tiles[0].row0) * b + bi]`, reading the
+    /// `(n_in, b)` batch re-layout `xt`. Rows in the range are fully
+    /// overwritten (zeroed first), so callers never pre-clear.
+    fn exec_tiles(&self, tiles: &[Tile], xt: &[f32], yt: &mut [f32],
+                  b: usize);
+}
+
+impl RowTiled for Csr {
+    fn n_in(&self) -> usize {
+        self.n_in
+    }
+
+    fn n_out(&self) -> usize {
+        self.n_out
+    }
+
+    fn exec_tiles(&self, tiles: &[Tile], xt: &[f32], yt: &mut [f32],
+                  b: usize) {
+        let Some(first) = tiles.first() else { return };
+        let base = first.row0;
+        for t in tiles {
+            // this tile's col_idx/values live in the contiguous slice
+            // row_ptr[t.row0]..row_ptr[t.row1]; walking it row by row
+            // keeps the payload cache-resident across all b lanes
+            for o in t.row0..t.row1 {
+                let yrow = &mut yt[(o - base) * b..(o - base) * b + b];
+                yrow.fill(0.0);
+                let lo = self.row_ptr[o] as usize;
+                let hi = self.row_ptr[o + 1] as usize;
+                for k in lo..hi {
+                    let v = self.values[k];
+                    let c = self.col_idx[k] as usize;
+                    let xrow = &xt[c * b..c * b + b];
+                    for (a, xv) in yrow.iter_mut().zip(xrow.iter()) {
+                        *a += v * xv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl RowTiled for Macko {
+    fn n_in(&self) -> usize {
+        self.n_in
+    }
+
+    fn n_out(&self) -> usize {
+        self.n_out
+    }
+
+    fn exec_tiles(&self, tiles: &[Tile], xt: &[f32], yt: &mut [f32],
+                  b: usize) {
+        let Some(first) = tiles.first() else { return };
+        let base = first.row0;
+        let wpr = self.words_per_row;
+        for t in tiles {
+            for o in t.row0..t.row1 {
+                let yrow = &mut yt[(o - base) * b..(o - base) * b + b];
+                yrow.fill(0.0);
+                let mut k = self.row_ptr[o] as usize;
+                let word_base = o * wpr;
+                for wi in 0..wpr {
+                    let mut word = self.bitmap[word_base + wi];
+                    let col0 = wi * 64;
+                    while word != 0 {
+                        let bit = word.trailing_zeros() as usize;
+                        let v = self.values[k];
+                        let c = col0 + bit;
+                        let xrow = &xt[c * b..c * b + b];
+                        for (a, xv) in yrow.iter_mut().zip(xrow.iter()) {
+                            *a += v * xv;
+                        }
+                        k += 1;
+                        word &= word - 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Dense weights tile over output *columns* of the (din, dout) matrix:
+/// a tile's payload is the `w[·, row0..row1]` column band. The r-outer
+/// loop streams each weight row segment once per step across every
+/// batch lane — and per (column, lane) the accumulation runs r
+/// ascending with the same skip-zero rule as [`Matrix::t_matvec`], so
+/// rows are bit-exact with the untiled dense path.
+impl RowTiled for Matrix {
+    fn n_in(&self) -> usize {
+        self.rows
+    }
+
+    fn n_out(&self) -> usize {
+        self.cols
+    }
+
+    fn exec_tiles(&self, tiles: &[Tile], xt: &[f32], yt: &mut [f32],
+                  b: usize) {
+        let Some(first) = tiles.first() else { return };
+        let base = first.row0;
+        for t in tiles {
+            let span = t.row1 - t.row0;
+            let off = t.row0 - base;
+            yt[off * b..(off + span) * b].fill(0.0);
+            for r in 0..self.rows {
+                let wseg = &self.data[r * self.cols + t.row0
+                                      ..r * self.cols + t.row1];
+                let xrow = &xt[r * b..r * b + b];
+                for (bi, &xv) in xrow.iter().enumerate() {
+                    if xv == 0.0 {
+                        continue; // same skip rule as t_matvec
+                    }
+                    for (j, &wv) in wseg.iter().enumerate() {
+                        yt[(off + j) * b + bi] += xv * wv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Build the column-tile plan for a dense (din, dout) weight matrix.
+pub fn dense_plan(w: &Matrix) -> TilePlan {
+    TilePlan::from_row_bytes(w.cols, |_| w.rows * 4)
+}
+
+/// Tiled batched SpMM: Y = X W for row-major X (b, n_in), writing Y
+/// (b, n_out) — the generic driver behind
+/// `Csr::matvec_batch_tiled_into` / `Macko::matvec_batch_tiled_into`
+/// and the dense tiled path. Bit-identical to the untiled
+/// `matvec_batch_into` for every batch size and plan geometry.
+pub fn matvec_batch_tiled<T: RowTiled>(t: &T, plan: &TilePlan, x: &[f32],
+                                       y: &mut [f32], b: usize,
+                                       scratch: &mut SpmmScratch) {
+    debug_assert_eq!(x.len(), b * t.n_in());
+    debug_assert_eq!(y.len(), b * t.n_out());
+    debug_assert_eq!(plan.n_rows, t.n_out(), "plan built for another shape");
+    transpose_batch_into(x, b, t.n_in(), &mut scratch.xt);
+    scratch.yt.resize(t.n_out() * b, 0.0);
+    t.exec_tiles(&plan.tiles, &scratch.xt, &mut scratch.yt, b);
+    scatter_rows(&scratch.yt, y, b, t.n_out());
+}
+
+/// Intra-layer sharded variant of [`matvec_batch_tiled`]: the plan's
+/// tiles are split into byte-balanced contiguous shards and executed
+/// on `threads` scoped workers, each writing its own disjoint row band
+/// of the `(n_out, b)` staging buffer. One big layer can therefore
+/// use every core even when the live slot count is 1 — the
+/// complementary axis to the scheduler's slot sharding. Output is
+/// bit-identical to the serial tiled (and untiled) paths for any
+/// thread count; `threads <= 1` runs inline.
+pub fn par_matvec_batch_tiled<T: RowTiled + Sync>(
+    t: &T, plan: &TilePlan, x: &[f32], y: &mut [f32], b: usize,
+    threads: usize, scratch: &mut SpmmScratch) {
+    let shards = plan.shard_ranges(threads);
+    if shards.len() <= 1 {
+        return matvec_batch_tiled(t, plan, x, y, b, scratch);
+    }
+    debug_assert_eq!(x.len(), b * t.n_in());
+    debug_assert_eq!(y.len(), b * t.n_out());
+    transpose_batch_into(x, b, t.n_in(), &mut scratch.xt);
+    scratch.yt.resize(t.n_out() * b, 0.0);
+    let xt = &scratch.xt[..];
+
+    // carve the staging buffer into one disjoint row band per shard
+    let mut bands: Vec<&mut [f32]> = Vec::with_capacity(shards.len());
+    let mut rest = scratch.yt.as_mut_slice();
+    for &(t0, t1) in &shards {
+        let rows = plan.tiles[t1 - 1].row1 - plan.tiles[t0].row0;
+        let (band, tail) = rest.split_at_mut(rows * b);
+        bands.push(band);
+        rest = tail;
+    }
+    std::thread::scope(|sc| {
+        for (&(t0, t1), band) in shards.iter().zip(bands) {
+            let tiles = &plan.tiles[t0..t1];
+            sc.spawn(move || t.exec_tiles(tiles, xt, band, b));
+        }
+    });
+    scatter_rows(&scratch.yt, y, b, t.n_out());
+}
+
+/// Re-layout the (n_out, b) staging buffer back to the engine's
+/// row-major (b, n_out) output.
+fn scatter_rows(yt: &[f32], y: &mut [f32], b: usize, n_out: usize) {
+    for o in 0..n_out {
+        let yrow = &yt[o * b..o * b + b];
+        for (bi, &v) in yrow.iter().enumerate() {
+            y[bi * n_out + o] = v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn with_budget_covers_all_rows_contiguously() {
+        let plan = TilePlan::with_budget(100, |_| 100, 256, 512);
+        assert_eq!(plan.n_rows, 100);
+        assert!(!plan.tiles.is_empty());
+        assert_eq!(plan.tiles[0].row0, 0);
+        assert_eq!(plan.tiles.last().unwrap().row1, 100);
+        for w in plan.tiles.windows(2) {
+            assert_eq!(w[0].row1, w[1].row0, "tiles must be contiguous");
+        }
+        for t in &plan.tiles {
+            assert!(t.row1 > t.row0, "tiles must be non-empty");
+            // 100-byte rows under a 256-byte budget: 2 rows per tile
+            assert!(t.row1 - t.row0 <= 2);
+        }
+    }
+
+    #[test]
+    fn with_budget_handles_oversized_and_zero_rows() {
+        // a row bigger than the budget still gets (its own) tile
+        let plan = TilePlan::with_budget(3, |_| 1 << 20, 1024, 512);
+        assert_eq!(plan.tiles.len(), 3);
+        // all-zero rows: the row cap bounds tile length
+        let plan = TilePlan::with_budget(1000, |_| 0, 1024, 512);
+        assert_eq!(plan.tiles.last().unwrap().row1, 1000);
+        assert!(plan.tiles.len() >= 2, "row cap must split zero-byte rows");
+        assert!(plan.tiles.iter().all(|t| t.row1 - t.row0 <= 512));
+    }
+
+    #[test]
+    fn fixed_is_ragged_at_the_end() {
+        let plan = TilePlan::fixed(45, 7);
+        assert_eq!(plan.tiles.len(), 7);
+        assert_eq!(plan.tiles.last().unwrap().row1 -
+                   plan.tiles.last().unwrap().row0, 3);
+        assert_eq!(plan.tiles.last().unwrap().row1, 45);
+    }
+
+    #[test]
+    fn shard_ranges_cover_and_balance() {
+        let plan = TilePlan::with_budget(64, |_| 512, 1024, 512);
+        for n in [1usize, 2, 3, 5, 100] {
+            let shards = plan.shard_ranges(n);
+            assert!(!shards.is_empty());
+            assert!(shards.len() <= n.min(plan.tiles.len()));
+            assert_eq!(shards[0].0, 0);
+            assert_eq!(shards.last().unwrap().1, plan.tiles.len());
+            for w in shards.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "shards must be contiguous");
+            }
+            for &(lo, hi) in &shards {
+                assert!(hi > lo, "shards must be non-empty");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_ranges_empty_plan() {
+        let plan = TilePlan::default();
+        assert!(plan.shard_ranges(4).is_empty());
+    }
+}

@@ -1,4 +1,6 @@
-//! Cholesky factorization + solves (f64 accumulation for stability).
+//! Cholesky factorization + solves (f64 accumulation for stability),
+//! plus the dense batched transpose-GEMM (`t_matmat`) used by the
+//! engine's head projection.
 //!
 //! SparseGPT and ALPS both need `H^{-1}` of the damped layer Hessian
 //! `H = X^T X + eps I`; we factor once and reuse triangular solves.
@@ -6,6 +8,39 @@
 use anyhow::{bail, Result};
 
 use super::Matrix;
+
+impl Matrix {
+    /// Batched transpose-GEMM: Y = X A for A = self (n, m) and a
+    /// row-major batch X (b, n), writing Y (b, m). The r-outer loop
+    /// streams every weight row of A exactly **once** per call and
+    /// applies it across all b lanes — so the engine's per-step head
+    /// projection costs one pass over the head matrix regardless of
+    /// how many slots are live.
+    ///
+    /// Bit-exactness: for each lane `bi`, the accumulation over rows r
+    /// runs in the same ascending order with the same skip-zero rule
+    /// as [`Matrix::t_matvec`], so row `bi` of Y is bit-identical to
+    /// `self.t_matvec(&x[bi * n..(bi + 1) * n])`.
+    pub fn t_matmat(&self, x: &[f32], y: &mut [f32], b: usize) {
+        let (n, m) = (self.rows, self.cols);
+        debug_assert_eq!(x.len(), b * n);
+        debug_assert_eq!(y.len(), b * m);
+        y.fill(0.0);
+        for r in 0..n {
+            let wrow = &self.data[r * m..(r + 1) * m];
+            for bi in 0..b {
+                let xv = x[bi * n + r];
+                if xv == 0.0 {
+                    continue;
+                }
+                let yrow = &mut y[bi * m..(bi + 1) * m];
+                for (yj, &a) in yrow.iter_mut().zip(wrow.iter()) {
+                    *yj += xv * a;
+                }
+            }
+        }
+    }
+}
 
 /// Lower-triangular Cholesky factor L with H = L L^T.
 #[derive(Debug, Clone)]
@@ -192,5 +227,30 @@ mod tests {
     fn rejects_indefinite() {
         let h = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]);
         assert!(Cholesky::factor(&h).is_err());
+    }
+
+    #[test]
+    fn t_matmat_rows_are_bitwise_t_matvec() {
+        let mut rng = Rng::new(5);
+        let mut a = Matrix::randn(9, 6, 1.0, &mut rng);
+        // zero a few entries so the skip-zero rule is exercised on
+        // both the weight and the activation side
+        a.data[3] = 0.0;
+        a.data[20] = 0.0;
+        for b in [1usize, 3, 8] {
+            let mut x: Vec<f32> =
+                (0..b * 9).map(|_| rng.normal()).collect();
+            x[0] = 0.0;
+            if b > 1 {
+                x[9 + 4] = 0.0;
+            }
+            let mut y = vec![7.0f32; b * 6];
+            a.t_matmat(&x, &mut y, b);
+            for bi in 0..b {
+                let want = a.t_matvec(&x[bi * 9..(bi + 1) * 9]);
+                assert_eq!(&y[bi * 6..(bi + 1) * 6], &want[..],
+                           "b={b} row {bi}");
+            }
+        }
     }
 }

@@ -1,0 +1,243 @@
+//! Row-tiled kernel bit-identity suite (ISSUE 3): the tiled SpMM
+//! paths must be bit-identical to the untiled `matvec_batch_into`
+//! kernels for every format, batch size, tile geometry (including
+//! ragged boundaries and all-zero rows), and shard count — and the
+//! engine/scheduler token streams must be unchanged with tiling on vs
+//! off, so the PR 1/2 determinism guarantees carry over.
+
+use elsa::infer::scheduler::{Request, RequestQueue, SchedOptions,
+                             Scheduler};
+use elsa::infer::{Backend, BatchOptions, Engine};
+use elsa::model::{synthetic_config, Params};
+use elsa::pruners::{magnitude, uniform_alloc};
+use elsa::sparse::{dense_matvec_batch, dense_plan, par_matvec_batch_tiled,
+                   random_sparse_weight, tile, Csr, Macko, SpmmScratch,
+                   TilePlan};
+use elsa::tensor::Matrix;
+use elsa::util::rng::Rng;
+
+fn batch_input(b: usize, din: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..b * din).map(|_| rng.normal()).collect()
+}
+
+#[test]
+fn tiled_matches_untiled_bit_exact_all_formats() {
+    // ragged-ish dims so the default (byte-budget) plans end ragged too
+    let (din, dout) = (100, 72);
+    for &sp in &[0.5f64, 0.9] {
+        let w = random_sparse_weight(din, dout, sp, 7);
+        let csr = Csr::from_weight(&w);
+        let mck = Macko::from_weight(&w);
+        let dplan = dense_plan(&w);
+        let mut su = SpmmScratch::default();
+        let mut st = SpmmScratch::default();
+        for &b in &[1usize, 3, 8] {
+            let x = batch_input(b, din, 40 + b as u64);
+            let mut want = vec![0.0f32; b * dout];
+            let mut got = vec![0.0f32; b * dout];
+
+            csr.matvec_batch_into(&x, &mut want, b, &mut su);
+            csr.matvec_batch_tiled_into(&x, &mut got, b, &mut st);
+            assert_eq!(got, want, "csr sp={sp} b={b}");
+
+            mck.matvec_batch_into(&x, &mut want, b, &mut su);
+            mck.matvec_batch_tiled_into(&x, &mut got, b, &mut st);
+            assert_eq!(got, want, "macko sp={sp} b={b}");
+
+            dense_matvec_batch(&w, &x, &mut want, b);
+            tile::matvec_batch_tiled(&w, &dplan, &x, &mut got, b,
+                                     &mut st);
+            assert_eq!(got, want, "dense sp={sp} b={b}");
+        }
+    }
+}
+
+#[test]
+fn ragged_tile_boundaries_bit_exact() {
+    // 45 output rows: tile_rows 7 leaves a ragged 3-row tail, 1 is the
+    // degenerate row-per-tile plan, 64 collapses to a single tile
+    let (din, dout, b) = (64, 45, 5);
+    let w = random_sparse_weight(din, dout, 0.8, 13);
+    let csr = Csr::from_weight(&w);
+    let mck = Macko::from_weight(&w);
+    let x = batch_input(b, din, 99);
+    let mut su = SpmmScratch::default();
+    let mut st = SpmmScratch::default();
+    let mut want = vec![0.0f32; b * dout];
+    let mut got = vec![0.0f32; b * dout];
+    for &tile_rows in &[7usize, 1, 64] {
+        let plan = TilePlan::fixed(dout, tile_rows);
+        assert_eq!(plan.tiles.last().unwrap().row1, dout);
+
+        csr.matvec_batch_into(&x, &mut want, b, &mut su);
+        tile::matvec_batch_tiled(&csr, &plan, &x, &mut got, b, &mut st);
+        assert_eq!(got, want, "csr tile_rows={tile_rows}");
+
+        mck.matvec_batch_into(&x, &mut want, b, &mut su);
+        tile::matvec_batch_tiled(&mck, &plan, &x, &mut got, b, &mut st);
+        assert_eq!(got, want, "macko tile_rows={tile_rows}");
+    }
+}
+
+#[test]
+fn all_zero_rows_bit_exact_and_zero() {
+    // zero out a band of output columns (rows of W^T) spanning tile
+    // boundaries, plus the fully-zero matrix
+    let (din, dout, b) = (48, 40, 4);
+    let mut w = random_sparse_weight(din, dout, 0.6, 21);
+    for r in 0..din {
+        for c in 10..25 {
+            *w.at_mut(r, c) = 0.0;
+        }
+    }
+    let x = batch_input(b, din, 5);
+    let mut su = SpmmScratch::default();
+    let mut st = SpmmScratch::default();
+    let mut want = vec![0.0f32; b * dout];
+    let mut got = vec![7.0f32; b * dout];
+    let csr = Csr::from_weight(&w);
+    csr.matvec_batch_into(&x, &mut want, b, &mut su);
+    tile::matvec_batch_tiled(&csr, &TilePlan::fixed(dout, 6), &x,
+                             &mut got, b, &mut st);
+    assert_eq!(got, want);
+    for bi in 0..b {
+        for c in 10..25 {
+            assert_eq!(got[bi * dout + c], 0.0, "zero row must stay 0");
+        }
+    }
+
+    let z = Matrix::zeros(din, dout);
+    let mck = Macko::from_weight(&z);
+    let mut got = vec![7.0f32; b * dout];
+    mck.matvec_batch_tiled_into(&x, &mut got, b, &mut st);
+    assert!(got.iter().all(|&v| v == 0.0));
+}
+
+#[test]
+fn construction_plans_cover_all_rows() {
+    let w = random_sparse_weight(130, 97, 0.9, 3);
+    for plan in [&Csr::from_weight(&w).plan, &Macko::from_weight(&w).plan,
+                 &dense_plan(&w)] {
+        assert_eq!(plan.n_rows, 97);
+        assert_eq!(plan.tiles[0].row0, 0);
+        assert_eq!(plan.tiles.last().unwrap().row1, 97);
+        for pair in plan.tiles.windows(2) {
+            assert_eq!(pair[0].row1, pair[1].row0);
+        }
+    }
+}
+
+#[test]
+fn sharded_tiled_matches_serial_any_thread_count() {
+    let (din, dout, b) = (96, 88, 6);
+    let w = random_sparse_weight(din, dout, 0.85, 31);
+    let csr = Csr::from_weight(&w);
+    let mck = Macko::from_weight(&w);
+    // a fine-grained plan so every thread count gets real shards
+    let plan = TilePlan::fixed(dout, 5);
+    let x = batch_input(b, din, 17);
+    let mut su = SpmmScratch::default();
+    let mut st = SpmmScratch::default();
+    let mut want = vec![0.0f32; b * dout];
+    let mut got = vec![0.0f32; b * dout];
+    for &threads in &[1usize, 2, 5, 64] {
+        csr.matvec_batch_into(&x, &mut want, b, &mut su);
+        par_matvec_batch_tiled(&csr, &plan, &x, &mut got, b, threads,
+                               &mut st);
+        assert_eq!(got, want, "csr threads={threads}");
+
+        mck.matvec_batch_into(&x, &mut want, b, &mut su);
+        par_matvec_batch_tiled(&mck, &plan, &x, &mut got, b, threads,
+                               &mut st);
+        assert_eq!(got, want, "macko threads={threads}");
+    }
+}
+
+fn toy_engine(backend: Backend) -> Engine {
+    // d=40 (heads of 10), vocab 48, seq_len 20 — the same toy model as
+    // the engine_batch / scheduler suites
+    let cfg = synthetic_config("kern_t", 40, 2, 4, 64, 48, 20);
+    let dense = Params::init(&cfg, 1);
+    let pruned = magnitude::prune(&cfg, &dense.flat,
+                                  &uniform_alloc(&cfg, 0.75))
+        .expect("prune");
+    Engine::build(&Params::new(&cfg, pruned), backend).expect("engine")
+}
+
+#[test]
+fn engine_streams_identical_tiled_vs_untiled() {
+    let prompts: Vec<Vec<u32>> =
+        vec![vec![1, 2, 3], vec![4, 5], vec![6, 7, 8, 9], vec![10]];
+    for backend in [Backend::Dense, Backend::Csr, Backend::Macko] {
+        let mut engine = toy_engine(backend);
+        assert!(engine.tiled, "tiling must be the default");
+        for temp in [0.0f32, 0.9] {
+            let opts = BatchOptions {
+                n_new: 5, temperature: temp, seed: 3, threads: 1,
+            };
+            engine.tiled = true;
+            let (tiled, _) = engine.generate_batch(&prompts, &opts);
+            engine.tiled = false;
+            let (untiled, _) = engine.generate_batch(&prompts, &opts);
+            assert_eq!(tiled, untiled,
+                       "{backend:?} temp={temp}: tiling changed tokens");
+            // and both still reproduce the single-sequence engine
+            for (s, prompt) in prompts.iter().enumerate() {
+                let (want, _) =
+                    engine.generate(prompt, 5, temp, 3 + s as u64);
+                assert_eq!(tiled[s], want,
+                           "{backend:?} temp={temp} slot {s}");
+            }
+        }
+    }
+}
+
+#[test]
+fn scheduler_streams_unchanged_with_tiling_on_vs_off() {
+    // end-to-end continuous batching: staggered arrivals, ragged
+    // budgets, mid-decode admission — the token streams must not
+    // depend on the kernel traversal, for any worker count
+    let reqs: Vec<Request> = (0..9u64)
+        .map(|id| Request {
+            id,
+            prompt: (0..1 + (id as usize % 4))
+                .map(|i| ((id as usize * 5 + i) % 48) as u32)
+                .collect(),
+            n_new: 2 + (id as usize % 5),
+            seed: 50 + id,
+            deadline: None,
+        })
+        .collect();
+    for backend in [Backend::Csr, Backend::Macko] {
+        let mut engine = toy_engine(backend);
+        for threads in [1usize, 3] {
+            let run = |engine: &Engine| {
+                let queue = RequestQueue::with_poisson_arrivals(
+                    reqs.clone(), 1.5, 11);
+                let sched = Scheduler::new(engine, SchedOptions {
+                    max_slots: 3,
+                    temperature: 0.8,
+                    threads,
+                });
+                let (finished, _) = sched.run(queue);
+                finished.into_iter().map(|f| (f.id, f.tokens))
+                    .collect::<Vec<_>>()
+            };
+            engine.tiled = true;
+            let tiled = run(&engine);
+            engine.tiled = false;
+            let untiled = run(&engine);
+            assert_eq!(tiled, untiled,
+                       "{backend:?} threads={threads}: tiling changed \
+                        scheduler streams");
+            for (id, tokens) in &tiled {
+                let r = &reqs[*id as usize];
+                let (want, _) = engine.generate(&r.prompt, r.n_new, 0.8,
+                                                r.seed);
+                assert_eq!(tokens, &want,
+                           "{backend:?} threads={threads} req {id}");
+            }
+        }
+    }
+}
