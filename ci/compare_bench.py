@@ -16,8 +16,10 @@ unless it sets its own):
     is a regression, not a free pass);
   * "min_speedup_x", when present, requires
     CURRENT["speedup_x"] >= min_speedup_x;
-  * "min_tiled_untiled_ratio", when present, requires
-    CURRENT["tiled_untiled_ratio"] >= min_tiled_untiled_ratio.
+  * every "min_<name>_ratio" knob requires
+    CURRENT["<name>_ratio"] >= the floor (e.g. min_tiled_untiled_ratio
+    gates tiled_untiled_ratio, min_pooled_serial_ratio gates
+    pooled_serial_ratio); an absent metric counts as 0.0 and fails.
 
 Latency percentiles are reported for the record but never gated: on
 the shared CI fleet they are far noisier than aggregate throughput.
@@ -83,15 +85,18 @@ def gate(current, baseline, tolerance=None):
             failures.append(
                 f"continuous/static speedup {got:.2f}x < {floor:.2f}x")
 
-    if "min_tiled_untiled_ratio" in baseline:
-        floor = float(baseline["min_tiled_untiled_ratio"])
-        got = float(current.get("tiled_untiled_ratio", 0.0))
+    # generic ratio knobs: min_<name>_ratio gates CURRENT["<name>_ratio"]
+    for knob in sorted(k for k in baseline
+                       if k.startswith("min_") and k.endswith("_ratio")):
+        metric = knob[len("min_"):]
+        floor = float(baseline[knob])
+        got = float(current.get(metric, 0.0))
         ok = got >= floor
-        lines.append(f"{'tiled_ratio':<14} {floor:>10.2f} {floor:>10.2f} "
+        lines.append(f"{metric:<14} {floor:>10.2f} {floor:>10.2f} "
                      f"{got:>10.2f}  {'ok' if ok else 'REGRESSION'}")
         if not ok:
             failures.append(
-                f"tiled/untiled throughput ratio {got:.2f} < {floor:.2f}")
+                f"{metric} {got:.2f} < floor {floor:.2f}")
 
     for policy in gated_policies(baseline):
         p = current.get(policy)

@@ -23,14 +23,18 @@ def scheduler_baseline():
         "sequential": {"tok_s": 50.0},
         "static": {"tok_s": 60.0},
         "continuous": {"tok_s": 80.0},
+        "continuous_pooled": {"tok_s": 80.0},
     }
 
 
-def scheduler_current(seq=100.0, stat=120.0, cont=150.0, speedup=1.25):
+def scheduler_current(seq=100.0, stat=120.0, cont=150.0, pooled=150.0,
+                      speedup=1.25):
     return {
         "sequential": {"tok_s": seq},
         "static": {"tok_s": stat, "p50_ms": 1.0, "p95_ms": 2.0},
         "continuous": {"tok_s": cont, "p50_ms": 1.0, "p95_ms": 2.0},
+        "continuous_pooled": {"tok_s": pooled, "p50_ms": 1.0,
+                              "p95_ms": 2.0},
         "speedup_x": speedup,
     }
 
@@ -38,18 +42,23 @@ def scheduler_current(seq=100.0, stat=120.0, cont=150.0, speedup=1.25):
 def kernels_baseline():
     return {
         "min_tiled_untiled_ratio": 0.95,
+        "min_pooled_serial_ratio": 0.95,
         "dense": {"tok_s": 25.0},
         "csr": {"tok_s": 40.0},
         "macko": {"tok_s": 40.0},
+        "macko_pooled": {"tok_s": 40.0},
     }
 
 
-def kernels_current(ratio=1.1, dense=80.0, csr=200.0, macko=220.0):
+def kernels_current(ratio=1.1, pooled_ratio=1.0, dense=80.0, csr=200.0,
+                    macko=220.0, macko_pooled=240.0):
     return {
         "tiled_untiled_ratio": ratio,
+        "pooled_serial_ratio": pooled_ratio,
         "dense": {"tok_s": dense},
         "csr": {"tok_s": csr},
         "macko": {"tok_s": macko},
+        "macko_pooled": {"tok_s": macko_pooled},
     }
 
 
@@ -103,7 +112,32 @@ class GateTests(unittest.TestCase):
         self.assertEqual(failures, [])
         _, failures = cb.gate(kernels_current(ratio=0.5),
                               kernels_baseline())
-        self.assertTrue(any("tiled/untiled" in f for f in failures))
+        self.assertTrue(any("tiled_untiled_ratio" in f for f in failures))
+
+    def test_pooled_serial_ratio_gate(self):
+        # the generic min_<name>_ratio machinery: pooled dispatch at
+        # shard-workers=1 regressing >5% vs serial must fail
+        _, failures = cb.gate(kernels_current(pooled_ratio=0.96),
+                              kernels_baseline())
+        self.assertEqual(failures, [])
+        _, failures = cb.gate(kernels_current(pooled_ratio=0.5),
+                              kernels_baseline())
+        self.assertTrue(any("pooled_serial_ratio" in f for f in failures))
+        # an absent ratio metric counts as 0.0 -> fails, not skips
+        cur = kernels_current()
+        del cur["pooled_serial_ratio"]
+        _, failures = cb.gate(cur, kernels_baseline())
+        self.assertTrue(any("pooled_serial_ratio" in f for f in failures))
+
+    def test_pooled_policy_floor_gated(self):
+        cur = scheduler_current(pooled=1.0)
+        _, failures = cb.gate(cur, scheduler_baseline())
+        self.assertTrue(any("continuous_pooled" in f for f in failures))
+        cur = scheduler_current()
+        del cur["continuous_pooled"]
+        _, failures = cb.gate(cur, scheduler_baseline())
+        self.assertTrue(any("continuous_pooled" in f and "missing" in f
+                            for f in failures))
 
     def test_explicit_tolerance_overrides_baseline(self):
         # floor becomes 80 * (1 - 0.5) = 40 with the looser tolerance

@@ -19,6 +19,10 @@
 //! `KvPool`. Per-request outputs stay bit-identical to the
 //! one-at-a-time path; a static-chunked run of the same stream is
 //! reported alongside for the throughput comparison.
+//!
+//! `-- --shard-workers M` additionally splits every layer's linears
+//! into M byte-balanced row-band shards executed on a persistent
+//! per-worker pool (slot × band parallelism; still bit-identical).
 
 use std::path::Path;
 
@@ -70,6 +74,7 @@ fn main() -> Result<()> {
     let n_requests = args.usize_or("requests", 16)?;
     let batch = args.usize_or("batch", 1)?.max(1);
     let threads = args.usize_or("threads", 1)?;
+    let shard_workers = args.usize_or("shard-workers", 1)?;
     let max_slots = args.usize_or("max-slots", 0)?;
     let prompt_len = 8;
     let n_new = cfg.seq_len - prompt_len;
@@ -88,24 +93,25 @@ fn main() -> Result<()> {
                 deadline: None,
             })
             .collect();
+        let sopts = SchedOptions {
+            max_slots,
+            temperature: 0.8,
+            threads,
+            shard_workers,
+        };
         for backend in [Backend::Dense, Backend::Csr, Backend::Macko] {
             let engine = Engine::build(&params, backend)?;
             // warmup + static reference on the identical stream
-            serve_static_chunks(&engine, &reqs, max_slots, 0.8, threads);
-            let (_, st) =
-                serve_static_chunks(&engine, &reqs, max_slots, 0.8,
-                                    threads);
+            serve_static_chunks(&engine, &reqs, &sopts);
+            let (_, st) = serve_static_chunks(&engine, &reqs, &sopts);
             let queue = RequestQueue::with_poisson_arrivals(
                 reqs.clone(), gap, 11);
-            let sched = Scheduler::new(&engine, SchedOptions {
-                max_slots,
-                temperature: 0.8,
-                threads,
-            });
+            let sched = Scheduler::new(&engine, sopts.clone());
             let (finished, sc) = sched.run(queue);
             assert_eq!(finished.len(), n_requests);
             println!(
-                "{:>6}: {:4} reqs ({max_slots} slots, {threads} thr) | \
+                "{:>6}: {:4} reqs ({max_slots} slots, {threads} thr, \
+                 {shard_workers} bands) | \
                  sched {:8.1} tok/s | p50 {:7.2} ms | p95 {:7.2} ms | \
                  static {:8.1} tok/s | x{:.2} | kv reuse {}/{}",
                 format!("{backend:?}"), n_requests,
@@ -144,6 +150,7 @@ fn main() -> Result<()> {
                     .collect();
                 let opts = BatchOptions {
                     n_new, temperature: 0.8, seed: r as u64, threads,
+                    shard_workers,
                 };
                 let (_, stats) = engine.generate_batch(&prompts, &opts);
                 // per-batch decode wall, amortized per request

@@ -105,6 +105,7 @@ fn engine_sweep(threads: usize) {
         // batched path on identical work
         let opts = BatchOptions {
             n_new, temperature: 0.8, seed: 0, threads,
+            ..BatchOptions::default()
         };
         engine.generate_batch(&prompts, &opts); // warmup
         let t = Timer::start();

@@ -1,9 +1,11 @@
-//! Row-tiled SpMM kernel bench (ISSUE 3): tiled vs untiled across
+//! Row-tiled SpMM kernel bench (ISSUE 3/4): tiled vs untiled across
 //! {Csr, Macko, dense} x batch {1, 4, 8, 16} x sparsity {0.5, 0.9,
-//! 0.95}, an intra-layer sharding scaling check, and per-backend
-//! end-to-end batched decode tok/s on the serving-sized toy model.
+//! 0.95}, an intra-layer sharding scaling check (per-call scoped
+//! spawns vs the persistent decode pool), and per-backend end-to-end
+//! batched decode tok/s on the serving-sized toy model — including
+//! pooled row-band decode (`--shard-workers`).
 //!
-//! Every tiled cell is asserted bit-identical to its untiled
+//! Every tiled/pooled cell is asserted bit-identical to its untiled
 //! counterpart before it is timed — a bench that silently measured a
 //! diverging kernel would be worse than no bench.
 //!
@@ -11,15 +13,23 @@
 //! Writes a machine-readable summary to `$BENCH_OUT` (default
 //! `BENCH_kernels.json`) for the CI regression gate
 //! (`ci/compare_bench.py --section kernels`): per-backend engine
-//! tok/s floors plus the aggregate tiled/untiled throughput ratio
-//! (batches >= 4; batch 1 delegates to the identical matvec on both
-//! paths, so it would only dilute the signal).
+//! tok/s floors (now including `macko_pooled`), the aggregate
+//! tiled/untiled throughput ratio (batches >= 4; batch 1 delegates to
+//! the identical matvec on both paths, so it would only dilute the
+//! signal), and `pooled_serial_ratio` — best-of-3 pooled row-band
+//! decode (`shard-workers = threads`) over the best-of-3 serial
+//! engine, which pins that band-parallel serving never collapses
+//! against the serial path. (At shard-workers=1 the dispatch takes
+//! the serial branch structurally, so no runtime gate is needed
+//! there.)
 
+use elsa::infer::pool::WorkerPool;
 use elsa::infer::{Backend, BatchOptions, Engine};
 use elsa::model::{synthetic_config, Params};
 use elsa::pruners::{magnitude, uniform_alloc};
 use elsa::sparse::{dense_matvec_batch, dense_plan, par_matvec_batch_tiled,
-                   random_sparse_weight, tile, Csr, Macko, SpmmScratch};
+                   pool_matvec_batch_tiled, random_sparse_weight, tile,
+                   Csr, Macko, SpmmScratch};
 use elsa::util::bench::{bench, throughput};
 use elsa::util::json::{num, obj, s, to_string, Value};
 use elsa::util::rng::Rng;
@@ -172,21 +182,49 @@ fn shard_sweep(dim: usize, threads: usize, budget_ms: u64) {
     });
     throughput(&r, flops, "flop");
     let serial_ns = r.median_ns;
-    let r = bench(&format!("csr tiled   {threads} shards       b={b}"),
+    let r = bench(&format!("csr tiled   {threads} shards (spawn) b={b}"),
                   budget_ms, || {
         par_matvec_batch_tiled(&csr, &csr.plan, &x, &mut yn, b, threads,
                                &mut sn);
         std::hint::black_box(&yn);
     });
     throughput(&r, flops, "flop");
+    let spawn_ns = r.median_ns;
     println!("  -> intra-layer scaling x{:.2} at {threads} threads \
-              (bit-identical output)\n", serial_ns / r.median_ns.max(1e-9));
+              (bit-identical output)\n", serial_ns / spawn_ns.max(1e-9));
+
+    // the same shards on the persistent pool: no thread::scope per
+    // call — this is the dispatch the engine's decode loop pays, so
+    // the pool-vs-spawn ratio is the whole point of ISSUE 4
+    let pool = WorkerPool::new(threads);
+    let mut yp = vec![0.0f32; b * dim];
+    let mut sp = SpmmScratch::default();
+    pool_matvec_batch_tiled(&csr, &csr.plan, &x, &mut yp, b, &pool,
+                            &mut sp);
+    assert_eq!(y1, yp, "pooled kernel diverged from serial tiled");
+    let r = bench(&format!("csr tiled   {threads} shards (pool)  b={b}"),
+                  budget_ms, || {
+        pool_matvec_batch_tiled(&csr, &csr.plan, &x, &mut yp, b, &pool,
+                                &mut sp);
+        std::hint::black_box(&yp);
+    });
+    throughput(&r, flops, "flop");
+    println!("  -> pool vs per-call spawn x{:.2}, pool vs serial \
+              x{:.2} (bit-identical output)\n",
+             spawn_ns / r.median_ns.max(1e-9),
+             serial_ns / r.median_ns.max(1e-9));
 }
 
 /// End-to-end batched decode per backend (tiled engine): the tok/s
 /// numbers the CI gate floors. Also reports macko with tiling off so
-/// regressions in the *dispatch* show up, not just in the kernels.
-fn engine_sweep(n_new: usize) -> Vec<(&'static str, f64)> {
+/// regressions in the *dispatch* show up, not just in the kernels,
+/// plus a pooled macko cell (`shard_workers = threads`, floored as
+/// `macko_pooled`) whose best-of-3 ratio against the best-of-3 serial
+/// run is the CI `pooled_serial_ratio` gate — row-band decode must
+/// never collapse versus the serial engine. (shard-workers=1 needs no
+/// runtime gate: the dispatch takes the serial branch structurally.)
+fn engine_sweep(n_new: usize, threads: usize)
+                -> (Vec<(&'static str, f64)>, f64) {
     let cfg = synthetic_config("kern_bench", 128, 2, 4, 512, 256, 96);
     let params = Params::init(&cfg, 0);
     let pruned = magnitude::prune(&cfg, &params.flat,
@@ -202,11 +240,13 @@ fn engine_sweep(n_new: usize) -> Vec<(&'static str, f64)> {
         .collect();
     let opts = BatchOptions {
         n_new, temperature: 0.8, seed: 0, threads: 1,
+        shard_workers: 1,
     };
 
     println!("== end-to-end decode, d={} L={} sp=0.90, batch={batch}, \
               tiled kernels ==", cfg.d_model, cfg.n_layers);
     let mut out = Vec::new();
+    let mut pooled_serial_ratio = 0.0f64;
     for backend in [Backend::Dense, Backend::Csr, Backend::Macko] {
         let mut engine = Engine::build(&p, backend).expect("engine");
         engine.generate_batch(&prompts, &opts); // warmup
@@ -231,10 +271,52 @@ fn engine_sweep(n_new: usize) -> Vec<(&'static str, f64)> {
             println!("{:>6}: {utps:9.1} tok/s aggregate (untiled)",
                      "macko");
             out.push(("macko_untiled", utps));
+            engine.tiled = true;
+
+            // pooled vs serial: shard-workers=1 neutrality needs no
+            // runtime gate — `matvec_batch_exec` takes the serial
+            // branch structurally when the pool is single-lane — so
+            // the ratio that CAN regress is multi-lane row-band decode
+            // against the serial engine. Both sides are best-of-3 so
+            // the gate compares throughput plateaus, not single-run
+            // jitter on a shared runner.
+            let best_of = |engine: &Engine, o: &BatchOptions| -> f64 {
+                let mut best = 0.0f64;
+                for _ in 0..3 {
+                    let t = Timer::start();
+                    let (_, stats) = engine.generate_batch(&prompts, o);
+                    best = best.max(stats.tokens_generated as f64
+                                    / t.seconds().max(1e-9));
+                }
+                best
+            };
+            let reference: Vec<Vec<u32>> =
+                engine.generate_batch(&prompts, &opts).0; // warmup
+            let stps = best_of(&engine, &opts);
+
+            // row-band pooling: one scheduler worker fanning each
+            // linear across `threads` persistent lanes
+            let popts = BatchOptions {
+                shard_workers: threads.max(2),
+                ..opts.clone()
+            };
+            let (outs, stats) =
+                engine.generate_batch(&prompts, &popts); // warmup
+            assert_eq!(outs, reference,
+                       "pooled decode changed the streams");
+            let mtps = best_of(&engine, &popts);
+            pooled_serial_ratio = mtps / stps.max(1e-9);
+            println!("{:>6}: {mtps:9.1} tok/s aggregate \
+                      ({} shard-workers, x{pooled_serial_ratio:.2} vs \
+                      serial best-of-3 {stps:.1}, busy/idle \
+                      {:.3}s/{:.3}s)",
+                     "macko", popts.shard_workers,
+                     stats.shard_busy_seconds, stats.shard_idle_seconds);
+            out.push(("macko_pooled", mtps));
         }
     }
     println!();
-    out
+    (out, pooled_serial_ratio)
 }
 
 fn main() {
@@ -248,7 +330,7 @@ fn main() {
 
     let (rows, per_fmt, agg_ratio) = kernel_sweep(dim, budget_ms);
     shard_sweep(if small { dim } else { 1024 }, threads, budget_ms);
-    let engine = engine_sweep(n_new);
+    let (engine, pooled_serial_ratio) = engine_sweep(n_new, threads);
 
     // machine-readable summary for the CI regression gate
     let mut top: Vec<(&str, Value)> = vec![
@@ -259,6 +341,7 @@ fn main() {
         ])),
         ("kernels", Value::Arr(rows)),
         ("tiled_untiled_ratio", num(agg_ratio)),
+        ("pooled_serial_ratio", num(pooled_serial_ratio)),
     ];
     for &(key, ratio) in &per_fmt {
         top.push((key, num(ratio)));

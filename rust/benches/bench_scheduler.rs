@@ -10,16 +10,22 @@
 //!    completely before the next is admitted (what
 //!    `Engine::generate_batch` does),
 //!  - continuous: the `Scheduler` — freed slots are refilled from the
-//!    queue mid-decode, KV buffers recycled through the `KvPool`.
+//!    queue mid-decode, KV buffers recycled through the `KvPool`,
+//!  - continuous_pooled: the same scheduler with each worker fanning
+//!    every layer's linears across a persistent row-band pool
+//!    (`--shard-workers`) — ISSUE 4's slot × band end-to-end cell.
 //!
 //! The claim under test (ISSUE 2): continuous admission beats static
 //! batching on aggregate tok/s because ragged budgets leave static
 //! groups running mostly-empty tails, while the scheduler keeps
-//! occupancy (and therefore SpMM amortization) high.
+//! occupancy (and therefore SpMM amortization) high. ISSUE 4 adds:
+//! pooled decode serves the identical streams, with per-lane busy/idle
+//! accounting in the log.
 //!
 //! Run: cargo bench --bench bench_scheduler [-- <threads> <requests>
-//! <max_slots>]. Writes a machine-readable summary to `$BENCH_OUT`
-//! (default `BENCH_scheduler.json`) for the CI regression gate.
+//! <max_slots> <shard_workers>]. Writes a machine-readable summary to
+//! `$BENCH_OUT` (default `BENCH_scheduler.json`) for the CI regression
+//! gate.
 
 use elsa::infer::scheduler::{ragged_budgets, serve_static_chunks,
                              Request, RequestQueue, SchedOptions,
@@ -44,6 +50,7 @@ fn main() {
     let threads = argn(1, 1);
     let n_requests = argn(2, 24);
     let max_slots = argn(3, 6);
+    let shard_workers = argn(4, 2).max(1);
 
     // serving-sized toy model, 90% sparse (same shape as bench_batch)
     let cfg = synthetic_config("sched_bench", 128, 2, 4, 512, 256, 96);
@@ -94,9 +101,13 @@ fn main() {
               in {seq_s:.3}s)");
 
     // static batching: admit in fixed groups, drain each fully
-    let (fin, st) =
-        serve_static_chunks(&engine, &reqs, max_slots, TEMPERATURE,
-                            threads);
+    let sopts = SchedOptions {
+        max_slots,
+        temperature: TEMPERATURE,
+        threads,
+        ..SchedOptions::default()
+    };
+    let (fin, st) = serve_static_chunks(&engine, &reqs, &sopts);
     for f in &fin {
         assert_eq!(f.tokens, reference[f.id as usize],
                    "static policy diverged from generate on req {}",
@@ -111,11 +122,7 @@ fn main() {
     let queue =
         RequestQueue::with_poisson_arrivals(reqs.clone(),
                                             ARRIVAL_GAP_STEPS, 7);
-    let sched = Scheduler::new(&engine, SchedOptions {
-        max_slots,
-        temperature: TEMPERATURE,
-        threads,
-    });
+    let sched = Scheduler::new(&engine, sopts.clone());
     let (fin, sc) = sched.run(queue);
     for f in &fin {
         assert!(!f.expired, "no deadlines given, nothing may expire");
@@ -130,6 +137,33 @@ fn main() {
              sc.kv_reused + sc.kv_allocated);
     println!("continuous vs static: x{speedup:.2} aggregate tok/s \
               (bit-identical streams)");
+
+    // continuous + pooled row-band decode: each scheduler worker fans
+    // every linear across `shard_workers` persistent lanes — same
+    // queue, same streams, ISSUE 4's end-to-end serve-path cell
+    let queue =
+        RequestQueue::with_poisson_arrivals(reqs.clone(),
+                                            ARRIVAL_GAP_STEPS, 7);
+    let sched = Scheduler::new(&engine, SchedOptions {
+        shard_workers,
+        ..sopts.clone()
+    });
+    let (fin, sp) = sched.run(queue);
+    for f in &fin {
+        assert_eq!(f.tokens, reference[f.id as usize],
+                   "pooled scheduler diverged from generate on req {}",
+                   f.id);
+    }
+    let busy: f64 = sp.shard_busy_seconds.iter().sum();
+    let idle: f64 = sp.shard_idle_seconds.iter().sum();
+    println!("cont+pooled: {:9.1} tok/s | p50 {:7.2} ms | p95 {:7.2} ms \
+              | {} steps | {shard_workers} bands | busy {busy:.3}s \
+              idle {idle:.3}s",
+             sp.tokens_per_second, sp.p50_latency_ms, sp.p95_latency_ms,
+             sp.steps);
+    println!("pooled vs continuous: x{:.2} aggregate tok/s \
+              (bit-identical streams)",
+             sp.tokens_per_second / sc.tokens_per_second.max(1e-9));
 
     // machine-readable summary for the CI regression gate
     let policy = |tps: f64, p50: f64, p95: f64, steps: u64| {
@@ -154,6 +188,12 @@ fn main() {
                           st.p95_latency_ms, st.steps)),
         ("continuous", policy(sc.tokens_per_second, sc.p50_latency_ms,
                               sc.p95_latency_ms, sc.steps)),
+        ("continuous_pooled",
+         policy(sp.tokens_per_second, sp.p50_latency_ms,
+                sp.p95_latency_ms, sp.steps)),
+        ("shard_workers", num(shard_workers as f64)),
+        ("shard_busy_s", num(busy)),
+        ("shard_idle_s", num(idle)),
         ("kv_reused", num(sc.kv_reused as f64)),
         ("kv_allocated", num(sc.kv_allocated as f64)),
         ("speedup_x", num(speedup)),

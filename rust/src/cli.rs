@@ -7,10 +7,13 @@
 //!   generate  --config tiny --ckpt ckpt.bin [--sparse] [--prompt-len 8]
 //!   infer     alias of generate; --batch N --threads N serves N
 //!             prompts through the batched engine
+//!             [--shard-workers M] splits each layer's linears across
+//!             M persistent row-band workers per thread
 //!   serve     --config tiny --ckpt ckpt.bin --requests 32
-//!             --max-slots 8 --threads 4 [--arrival-gap 2.0]
-//!             [--deadline STEPS] [--verbose] — continuous-batching
-//!             scheduler over a seeded Poisson-ish request stream
+//!             --max-slots 8 --threads 4 [--shard-workers M]
+//!             [--arrival-gap 2.0] [--deadline STEPS] [--verbose] —
+//!             continuous-batching scheduler over a seeded Poisson-ish
+//!             request stream (slots × row bands)
 //!   exp       --id fig2|fig3|...|all [--scale quick|full] [--threads N]
 //!   report    --results results/
 

@@ -117,6 +117,7 @@ pub fn run(ctx: &Ctx, args: &Args) -> Result<()> {
             .collect();
         let opts = BatchOptions {
             n_new, temperature: 0.8, seed: 0, threads,
+            ..BatchOptions::default()
         };
         let mut row = vec![bsz.to_string()];
         let mut macko_tps = 0.0f64;
@@ -190,19 +191,20 @@ pub fn run(ctx: &Ctx, args: &Args) -> Result<()> {
                   {max_slots} slots, {threads} threads)"),
         &["backend", "sched_tok_s", "p50_ms", "p95_ms", "wait_steps",
           "kv_reused", "static_tok_s", "speedup_x"]);
+    let sopts = SchedOptions {
+        max_slots,
+        temperature: 0.8,
+        threads,
+        ..SchedOptions::default()
+    };
     for backend in [Backend::Dense, Backend::Csr, Backend::Macko] {
         let engine = Engine::build(&p, backend)?;
         // warm caches with the static policy, then measure both
-        serve_static_chunks(&engine, &reqs, max_slots, 0.8, threads);
-        let (_, stat) =
-            serve_static_chunks(&engine, &reqs, max_slots, 0.8, threads);
+        serve_static_chunks(&engine, &reqs, &sopts);
+        let (_, stat) = serve_static_chunks(&engine, &reqs, &sopts);
         let queue =
             RequestQueue::with_poisson_arrivals(reqs.clone(), 2.0, 7);
-        let sched = Scheduler::new(&engine, SchedOptions {
-            max_slots,
-            temperature: 0.8,
-            threads,
-        });
+        let sched = Scheduler::new(&engine, sopts.clone());
         let (_, sc) = sched.run(queue);
         crate::info!("tab1", "{backend:?}: scheduler {:.1} tok/s vs \
                       static {:.1} tok/s (x{:.2})",

@@ -16,14 +16,18 @@
 //!    default — walking each cache-sized weight tile once per step),
 //!    finishes with a single batched head projection regardless of
 //!    slot count, and shards slots across worker threads
-//!    (`--threads N`). Batched results are bit-identical to the
-//!    single-sequence path per slot, for any thread count and either
-//!    kernel traversal.
+//!    (`--threads N`). Each worker can additionally fan every layer's
+//!    linears out across the row-band lanes of a persistent
+//!    [`pool::WorkerPool`] (`--shard-workers M` — slot × band
+//!    parallelism). Batched results are bit-identical to the
+//!    single-sequence path per slot, for any thread count, any
+//!    shard-worker count, and either kernel traversal.
 //!  - [`scheduler`]: the continuous-batching layer (`elsa serve`) — a
 //!    request queue with mid-decode slot admission and pooled KV
 //!    caches. `generate_batch` is a thin fixed-admission wrapper over
 //!    it.
 
+pub mod pool;
 pub mod scheduler;
 
 use anyhow::Result;
@@ -36,6 +40,8 @@ use crate::sparse::{tile, Csr, Macko, SpmmScratch, TilePlan};
 use crate::tensor::Matrix;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
+
+use pool::WorkerPool;
 
 /// Weight storage backend for one linear layer. Every variant carries
 /// a row-tiled execution plan built once at conversion time (the
@@ -114,15 +120,42 @@ impl WeightFmt {
         }
     }
 
-    /// Dispatch for the engine's [`Engine::tiled`] toggle — the two
-    /// paths produce bit-identical output, so the toggle only selects
-    /// the traversal.
+    /// Dispatch for the engine's decode loop. With a multi-lane `pool`
+    /// (`--shard-workers > 1`) the layer's tile plan is split into
+    /// byte-balanced row-band shards and executed on the pool's
+    /// persistent workers ([`tile::pool_matvec_batch_tiled`]); the
+    /// [`Engine::tiled`] toggle then only selects the serial traversal
+    /// used when the pool is single-lane. Every path produces
+    /// bit-identical output, so neither knob can change a token.
     pub fn matvec_batch_exec(&self, x: &[f32], y: &mut [f32], b: usize,
-                             scratch: &mut SpmmScratch, tiled: bool) {
-        if tiled {
+                             scratch: &mut SpmmScratch, tiled: bool,
+                             pool: &WorkerPool) {
+        if pool.width() > 1 {
+            match self {
+                WeightFmt::Dense(w, plan) => tile::pool_matvec_batch_tiled(
+                    w, plan, x, y, b, pool, scratch),
+                WeightFmt::Csr(c) => tile::pool_matvec_batch_tiled(
+                    c, &c.plan, x, y, b, pool, scratch),
+                WeightFmt::Macko(m) => tile::pool_matvec_batch_tiled(
+                    m, &m.plan, x, y, b, pool, scratch),
+            }
+        } else if tiled {
             self.matvec_batch_tiled(x, y, b, scratch);
         } else {
             self.matvec_batch(x, y, b, scratch);
+        }
+    }
+
+    /// Rebuild this weight's tile plan with an explicit byte budget
+    /// and row cap — see [`Engine::retile`].
+    pub fn retile(&mut self, target_bytes: usize, max_rows: usize) {
+        match self {
+            WeightFmt::Dense(w, plan) => {
+                *plan = TilePlan::with_budget(w.cols, |_| w.rows * 4,
+                                              target_bytes, max_rows);
+            }
+            WeightFmt::Csr(c) => c.retile(target_bytes, max_rows),
+            WeightFmt::Macko(m) => m.retile(target_bytes, max_rows),
         }
     }
 
@@ -269,6 +302,24 @@ impl Engine {
         })
     }
 
+    /// Rebuild every layer's tile plan with an explicit byte budget
+    /// and row cap ([`TilePlan::with_budget`]). The default plans
+    /// target half an L1d; deployments with different cache geometry —
+    /// and toy-sized test models whose whole layer fits one default
+    /// tile — use this to pick the shard granularity the
+    /// `--shard-workers` pool splits over. Plans are traversal
+    /// metadata only: any geometry produces bit-identical tokens.
+    pub fn retile(&mut self, target_bytes: usize, max_rows: usize) {
+        for l in &mut self.layers {
+            l.wq.retile(target_bytes, max_rows);
+            l.wk.retile(target_bytes, max_rows);
+            l.wv.retile(target_bytes, max_rows);
+            l.wo.retile(target_bytes, max_rows);
+            l.w1.retile(target_bytes, max_rows);
+            l.w2.retile(target_bytes, max_rows);
+        }
+    }
+
     /// Total weight storage (the Table-1 "Memory" column).
     pub fn mem_bytes(&self) -> usize {
         let mut total = (self.embed.data.len() + self.pos.data.len()
@@ -380,6 +431,8 @@ impl Engine {
             tokens_generated: generated,
             tokens_per_second: generated as f64 / decode_s.max(1e-9),
             mem_bytes: self.mem_bytes(),
+            shard_busy_seconds: 0.0,
+            shard_idle_seconds: 0.0,
         })
     }
 
@@ -409,10 +462,11 @@ impl Engine {
     ///
     /// Determinism: a slot `s` with a non-empty prompt reproduces
     /// `generate(&prompts[s], n_new, temperature, seed + s)`
-    /// bit-for-bit, for any batch size and any `threads` value — the
-    /// batched kernels keep each sequence's accumulation order
-    /// identical to the single-vector path, and each slot samples from
-    /// its own seeded RNG.
+    /// bit-for-bit, for any batch size and any `threads` /
+    /// `shard_workers` value — the batched kernels keep each sequence's
+    /// accumulation order identical to the single-vector path (pooled
+    /// row-band shards are disjoint, so lane count cannot reorder an
+    /// accumulation), and each slot samples from its own seeded RNG.
     ///
     /// Prompts may be ragged. The one deliberate divergence from the
     /// single-sequence path is the degenerate empty prompt: a slot with
@@ -440,6 +494,7 @@ impl Engine {
             max_slots: prompts.len().max(1),
             temperature: opts.temperature,
             threads: opts.threads,
+            shard_workers: opts.shard_workers,
         });
         // run() returns finished requests sorted by id == slot index
         let (finished, st) = sched.run(queue);
@@ -452,16 +507,21 @@ impl Engine {
             tokens_per_second: st.tokens_generated as f64
                 / st.decode_seconds.max(1e-9),
             mem_bytes: self.mem_bytes(),
+            shard_busy_seconds: st.shard_busy_seconds.iter().sum(),
+            shard_idle_seconds: st.shard_idle_seconds.iter().sum(),
         })
     }
 
     /// One batched decode step: for every slot index in `active`, feed
     /// that slot's next unfed token through all layers, appending to its
     /// KV cache and refreshing its logits. The linears run as one
-    /// multi-vector SpMM over the active set; attention and layernorm
+    /// multi-vector SpMM over the active set — dispatched to `pool`'s
+    /// persistent row-band workers when it has more than one lane
+    /// (`--shard-workers`), so a step is parallel *within* each layer
+    /// on top of the scheduler's slot sharding; attention and layernorm
     /// stay per-slot (each slot has its own cache length/position).
     fn decode_step_batch(&self, slots: &mut [Slot], active: &[usize],
-                         scratch: &mut BatchScratch) {
+                         scratch: &mut BatchScratch, pool: &WorkerPool) {
         let b = active.len();
         let d = self.cfg.d_model;
         let dff = self.cfg.d_ff;
@@ -489,13 +549,13 @@ impl Engine {
             }
             l.wq.matvec_batch_exec(&scratch.xa[..b * d],
                                    &mut scratch.q[..b * d], b,
-                                   &mut scratch.spmm, self.tiled);
+                                   &mut scratch.spmm, self.tiled, pool);
             l.wk.matvec_batch_exec(&scratch.xa[..b * d],
                                    &mut scratch.k[..b * d], b,
-                                   &mut scratch.spmm, self.tiled);
+                                   &mut scratch.spmm, self.tiled, pool);
             l.wv.matvec_batch_exec(&scratch.xa[..b * d],
                                    &mut scratch.v[..b * d], b,
-                                   &mut scratch.spmm, self.tiled);
+                                   &mut scratch.spmm, self.tiled, pool);
 
             // per-slot attention over each slot's own cache
             for (bi, &si) in active.iter().enumerate() {
@@ -511,7 +571,7 @@ impl Engine {
             }
             l.wo.matvec_batch_exec(&scratch.o[..b * d],
                                    &mut scratch.tmp_d[..b * d], b,
-                                   &mut scratch.spmm, self.tiled);
+                                   &mut scratch.spmm, self.tiled, pool);
             for i in 0..b * d {
                 scratch.x[i] += scratch.tmp_d[i];
             }
@@ -523,7 +583,7 @@ impl Engine {
             }
             l.w1.matvec_batch_exec(&scratch.xa[..b * d],
                                    &mut scratch.ff[..b * dff], b,
-                                   &mut scratch.spmm, self.tiled);
+                                   &mut scratch.spmm, self.tiled, pool);
             for bi in 0..b {
                 let frow = &mut scratch.ff[bi * dff..(bi + 1) * dff];
                 for (f, bias) in frow.iter_mut().zip(l.b1.iter()) {
@@ -532,7 +592,7 @@ impl Engine {
             }
             l.w2.matvec_batch_exec(&scratch.ff[..b * dff],
                                    &mut scratch.tmp_d[..b * d], b,
-                                   &mut scratch.spmm, self.tiled);
+                                   &mut scratch.spmm, self.tiled, pool);
             for bi in 0..b {
                 for c in 0..d {
                     scratch.x[bi * d + c] +=
@@ -578,11 +638,23 @@ pub struct BatchOptions {
     /// Scheduler worker threads (batch capacity is split across them;
     /// 0/1 = inline).
     pub threads: usize,
+    /// Row-band shard workers *per scheduler worker*: each worker owns
+    /// a persistent [`pool::WorkerPool`] of this many lanes and fans
+    /// every layer's linears out across byte-balanced tile shards
+    /// (0/1 = serial decode, no pool threads spawned). Composes with
+    /// `threads` — slots × bands — and never changes a token.
+    pub shard_workers: usize,
 }
 
 impl Default for BatchOptions {
     fn default() -> BatchOptions {
-        BatchOptions { n_new: 16, temperature: 0.0, seed: 0, threads: 1 }
+        BatchOptions {
+            n_new: 16,
+            temperature: 0.0,
+            seed: 0,
+            threads: 1,
+            shard_workers: 1,
+        }
     }
 }
 
@@ -695,12 +767,21 @@ pub struct GenStats {
     pub tokens_generated: usize,
     pub tokens_per_second: f64,
     pub mem_bytes: usize,
+    /// Seconds the decode pool's shard lanes spent executing row-band
+    /// jobs, summed over lanes and scheduler workers (0 when
+    /// `shard_workers <= 1` — the pool is never dispatched).
+    pub shard_busy_seconds: f64,
+    /// Seconds shard lanes sat idle while a dispatch was in flight —
+    /// the plan-imbalance signal (0 without a multi-lane pool).
+    pub shard_idle_seconds: f64,
 }
 
 /// `elsa generate` / `elsa infer` subcommand. `--batch N` serves N
 /// prompts through the batched engine; `--threads N` shards the batch
-/// across worker threads; `--untiled` falls back to the untiled SpMM
-/// kernels (bit-identical output, for perf comparisons).
+/// across worker threads; `--shard-workers M` additionally shards each
+/// layer's linears across M persistent row-band workers per thread;
+/// `--untiled` falls back to the untiled SpMM kernels (bit-identical
+/// output, for perf comparisons).
 pub fn cmd_generate(args: &Args) -> Result<()> {
     let rt = crate::commands::open_runtime(args)?;
     let ck = crate::model::checkpoint::Checkpoint::load(
@@ -720,6 +801,7 @@ pub fn cmd_generate(args: &Args) -> Result<()> {
     let temperature = args.f32_or("temp", 0.8)?;
     let batch = args.usize_or("batch", 1)?;
     let threads = args.usize_or("threads", 1)?;
+    let shard_workers = args.usize_or("shard-workers", 1)?;
 
     if batch <= 1 {
         let prompt = g.generate(prompt_len, seed);
@@ -738,7 +820,9 @@ pub fn cmd_generate(args: &Args) -> Result<()> {
         let prompts: Vec<Vec<u32>> = (0..batch)
             .map(|r| g.generate(prompt_len, seed.wrapping_add(r as u64)))
             .collect();
-        let opts = BatchOptions { n_new, temperature, seed, threads };
+        let opts = BatchOptions {
+            n_new, temperature, seed, threads, shard_workers,
+        };
         let (outs, stats) = engine.generate_batch(&prompts, &opts);
         for (s, out) in outs.iter().enumerate() {
             println!("slot {s:3}: prompt {:?} -> {} new tokens",
@@ -747,7 +831,12 @@ pub fn cmd_generate(args: &Args) -> Result<()> {
         }
         println!("sparsity {:.4}", params.sparsity());
         println!("backend {:?}", backend);
-        println!("batch {batch} threads {threads}");
+        println!("batch {batch} threads {threads} \
+                  shard_workers {shard_workers}");
+        if shard_workers > 1 {
+            println!("shard_busy_s {:.4} shard_idle_s {:.4}",
+                     stats.shard_busy_seconds, stats.shard_idle_seconds);
+        }
         println!("tokens_generated {}", stats.tokens_generated);
         println!("agg_tokens_per_s {:.2}", stats.tokens_per_second);
         println!("decode_s {:.4}", stats.decode_seconds);
@@ -838,7 +927,8 @@ mod tests {
             let engine = Engine::build(&p, backend).unwrap();
             for temp in [0.0f32, 0.9] {
                 let opts = BatchOptions {
-                    n_new: 4, temperature: temp, seed: 7, threads: 1,
+                    n_new: 4, temperature: temp, seed: 7,
+                    ..BatchOptions::default()
                 };
                 let (outs, stats) =
                     engine.generate_batch(&prompts, &opts);
@@ -861,7 +951,8 @@ mod tests {
         let engine = Engine::build(&p, Backend::Macko).unwrap();
         let prompt = vec![2u32, 3, 4];
         let opts = BatchOptions {
-            n_new: 5, temperature: 0.7, seed: 11, threads: 1,
+            n_new: 5, temperature: 0.7, seed: 11,
+            ..BatchOptions::default()
         };
         let (outs, stats) =
             engine.generate_batch(std::slice::from_ref(&prompt), &opts);

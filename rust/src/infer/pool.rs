@@ -1,0 +1,477 @@
+//! Persistent decode worker pool (ISSUE 4 tentpole).
+//!
+//! [`par_matvec_batch_tiled`](crate::sparse::par_matvec_batch_tiled)
+//! proved that one layer's tile plan can be sharded across threads with
+//! bit-identical output — but it pays a `thread::scope` spawn/join per
+//! call, which is ruinous at decode granularity (a decode step runs six
+//! linears per layer, each a few microseconds of kernel work). This
+//! module provides the serving-grade version: a [`WorkerPool`] of
+//! long-lived workers that park between dispatches, so
+//! `decode_step_batch` can fan every linear's row-band shards out to
+//! the same threads step after step with **zero spawns in steady
+//! state**.
+//!
+//! ## Dispatch protocol
+//!
+//! [`WorkerPool::run`] publishes one job (a `Fn(usize)` over shard
+//! indices) and a task count, then participates as lane 0 while the
+//! workers claim indices from a shared atomic counter. Workers
+//! spin briefly on the epoch counter before parking on a condvar, so
+//! back-to-back decode steps are dispatched in nanoseconds while an
+//! idle scheduler costs no CPU. `run` returns only once every task has
+//! executed — the per-step barrier that makes it safe to hand workers
+//! borrowed slices (the borrow outlives every use by construction).
+//!
+//! ## Determinism
+//!
+//! The pool executes each shard exactly once, and the tiled kernels
+//! give every shard a disjoint output row band whose per-row
+//! accumulation order replays the single-vector `matvec` (see
+//! [`crate::sparse::tile`]). Which lane runs which shard, and in what
+//! order, therefore cannot affect a single output bit — all PR 1–3
+//! bit-exactness guarantees survive pooled decode unchanged.
+//!
+//! ## Accounting
+//!
+//! Per-lane busy nanoseconds (time inside shard jobs) and the wall time
+//! spent under `run` are accumulated into [`PoolStats`]; the scheduler
+//! surfaces them as `shard_busy_seconds` / `shard_idle_seconds` in
+//! `SchedStats`/`GenStats` so a misbalanced plan shows up in the
+//! serving metrics, not just in a profiler.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Lifetime-erased shard job. Only dereferenced by tasks claimed while
+/// the owning [`WorkerPool::run`] call is still blocked on the barrier,
+/// which is what makes the erasure sound.
+#[derive(Clone, Copy)]
+struct Job(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (it is in the type), and `run` does not
+// return until every claimed task has finished executing, so the
+// borrow behind the raw pointer outlives every dereference.
+unsafe impl Send for Job {}
+
+/// State a worker must take the mutex for: the published job and the
+/// park/wake protocol. The hot-path counters live outside as atomics.
+struct Slot {
+    job: Option<Job>,
+}
+
+struct Shared {
+    /// Bumped once per `run` dispatch; spinning workers watch it.
+    epoch: AtomicU64,
+    /// Claim word of the current dispatch: `n_tasks` in the high 32
+    /// bits, the next unclaimed index in the low 32. A claim is one
+    /// `fetch_add(1)`, and the returned value self-describes its
+    /// bound — so a straggler claiming against a *stale* word (its
+    /// counter already exhausted) or a *fresh* word (it simply helps
+    /// with the new dispatch) can never double-claim or run past the
+    /// end. `run` installs a fresh word per dispatch.
+    claims: AtomicU64,
+    /// Tasks not yet finished; `run` returns when this hits zero.
+    remaining: AtomicUsize,
+    panicked: AtomicBool,
+    shutdown: AtomicBool,
+    /// Park/wake for workers that exhausted their spin budget.
+    slot: Mutex<Slot>,
+    work: Condvar,
+    /// Wakes the `run` caller when the last task of a dispatch lands.
+    done: Condvar,
+    /// Busy nanoseconds per lane (lane 0 = the dispatching caller).
+    busy_ns: Vec<AtomicU64>,
+    /// Wall nanoseconds spent inside `run` (dispatch + barrier).
+    wall_ns: AtomicU64,
+    runs: AtomicU64,
+}
+
+/// Iterations to spin on the epoch/remaining atomics before parking.
+/// Decode steps dispatch every few tens of microseconds, so a short
+/// spin catches the next step without a futex round trip; an idle
+/// scheduler parks and costs nothing.
+const SPIN_LIMIT: u32 = 4096;
+
+/// A pool of `width - 1` persistent worker threads plus the calling
+/// thread (lane 0). `width <= 1` spawns nothing and [`WorkerPool::run`]
+/// executes inline — the zero-cost configuration the engine uses when
+/// `--shard-workers` is 1.
+///
+/// One pool belongs to one dispatching thread: concurrent `run` calls
+/// on the same pool are not supported (each scheduler worker owns its
+/// own pool).
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    width: usize,
+}
+
+impl WorkerPool {
+    /// Build a pool with `width.max(1)` lanes (the caller plus
+    /// `width - 1` spawned workers, parked until the first dispatch).
+    pub fn new(width: usize) -> WorkerPool {
+        let width = width.max(1);
+        let shared = Arc::new(Shared {
+            epoch: AtomicU64::new(0),
+            claims: AtomicU64::new(0),
+            remaining: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+            shutdown: AtomicBool::new(false),
+            slot: Mutex::new(Slot { job: None }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            busy_ns: (0..width).map(|_| AtomicU64::new(0)).collect(),
+            wall_ns: AtomicU64::new(0),
+            runs: AtomicU64::new(0),
+        });
+        let handles = (1..width)
+            .map(|lane| {
+                let sh = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&sh, lane))
+            })
+            .collect();
+        WorkerPool { shared, handles, width }
+    }
+
+    /// Shard lanes available to a dispatch (caller included). The
+    /// engine splits each layer's tile plan into up to this many
+    /// shards.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Execute `f(0..n_tasks)` across the pool's lanes and block until
+    /// every task has run (the per-step barrier). Tasks are claimed
+    /// dynamically, each runs exactly once, and the caller participates
+    /// as lane 0. With one lane (or one task) everything runs inline on
+    /// the caller — no synchronization at all.
+    ///
+    /// Panics (after draining the dispatch) if a task panicked on a
+    /// worker lane.
+    pub fn run(&self, n_tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n_tasks == 0 {
+            return;
+        }
+        let t0 = Instant::now();
+        if self.width <= 1 || n_tasks == 1 {
+            let tb = Instant::now();
+            for i in 0..n_tasks {
+                f(i);
+            }
+            self.shared.busy_ns[0].fetch_add(
+                tb.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            self.finish_run(t0);
+            return;
+        }
+
+        let sh = &*self.shared;
+        debug_assert_eq!(sh.remaining.load(Ordering::Acquire), 0,
+                         "concurrent run() on one pool");
+        assert!((n_tasks as u64) < (1u64 << 32), "dispatch too large");
+        {
+            // publish the job, then open the claim window: a worker's
+            // claim RMW on `claims` synchronizes with the release
+            // store below, so a valid claim always sees the current
+            // job and `remaining`.
+            let mut slot = sh.slot.lock().unwrap();
+            slot.job = Some(Job(f as *const (dyn Fn(usize) + Sync)));
+            sh.remaining.store(n_tasks, Ordering::Release);
+            sh.claims.store((n_tasks as u64) << 32, Ordering::Release);
+            sh.epoch.fetch_add(1, Ordering::Release);
+        }
+        sh.work.notify_all();
+
+        // lane 0: claim and execute alongside the workers
+        drain(sh, 0);
+
+        // barrier: spin briefly (shards are microseconds), then park
+        let mut spins = 0u32;
+        while sh.remaining.load(Ordering::Acquire) > 0 {
+            spins += 1;
+            if spins > SPIN_LIMIT {
+                let slot = sh.slot.lock().unwrap();
+                let _guard = sh
+                    .done
+                    .wait_timeout_while(
+                        slot,
+                        std::time::Duration::from_millis(10),
+                        |_| sh.remaining.load(Ordering::Acquire) > 0,
+                    )
+                    .unwrap();
+                spins = 0;
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+        self.finish_run(t0);
+        if sh.panicked.swap(false, Ordering::AcqRel) {
+            panic!("decode pool worker panicked");
+        }
+    }
+
+    fn finish_run(&self, t0: Instant) {
+        self.shared
+            .wall_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.shared.runs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot the pool's accounting counters.
+    pub fn stats(&self) -> PoolStats {
+        let busy_seconds: Vec<f64> = self
+            .shared
+            .busy_ns
+            .iter()
+            .map(|ns| ns.load(Ordering::Relaxed) as f64 * 1e-9)
+            .collect();
+        PoolStats {
+            lanes: self.width,
+            busy_seconds,
+            wall_seconds: self.shared.wall_ns.load(Ordering::Relaxed)
+                as f64
+                * 1e-9,
+            runs: self.shared.runs.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        // take the park mutex so no worker is between its shutdown
+        // check and the wait when we notify
+        drop(self.shared.slot.lock().unwrap());
+        self.shared.work.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Claim and execute tasks of the current dispatch until none are
+/// left. Called by workers after waking and by the `run` caller as
+/// lane 0.
+///
+/// Every claim is one `fetch_add` on the packed claim word, and the
+/// value read back carries both the index and that dispatch's task
+/// count — so the bound check can never mix one dispatch's index with
+/// another's count, and a valid claim implies the dispatching `run`
+/// call is still blocked on the barrier (its `remaining` cannot reach
+/// zero until this claim executes and decrements it).
+fn drain(sh: &Shared, lane: usize) {
+    loop {
+        let v = sh.claims.fetch_add(1, Ordering::AcqRel);
+        let i = (v & 0xFFFF_FFFF) as usize;
+        let n_tasks = (v >> 32) as usize;
+        if i >= n_tasks {
+            return;
+        }
+        // the claim is valid, so `run` is still parked on the barrier
+        // and the job read here is the one it published
+        let job = sh.slot.lock().unwrap().job.expect("claimed with no job");
+        let tb = Instant::now();
+        // SAFETY: see `Job` — the dispatching `run` call is blocked on
+        // `remaining` until this task (and every other claimed task)
+        // has finished, so the erased borrow is live for the whole
+        // call.
+        let r = catch_unwind(AssertUnwindSafe(|| unsafe { (&*job.0)(i) }));
+        sh.busy_ns[lane]
+            .fetch_add(tb.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        if r.is_err() {
+            sh.panicked.store(true, Ordering::Release);
+        }
+        if sh.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // last task of the dispatch: wake a parked `run` caller
+            drop(sh.slot.lock().unwrap());
+            sh.done.notify_all();
+        }
+    }
+}
+
+/// Worker thread body: spin on the epoch for fresh dispatches, park on
+/// the condvar once the spin budget is spent, drain tasks when work
+/// appears, exit on shutdown.
+fn worker_loop(sh: &Shared, lane: usize) {
+    let mut seen = 0u64;
+    loop {
+        let mut spins = 0u32;
+        loop {
+            if sh.shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            let e = sh.epoch.load(Ordering::Acquire);
+            if e != seen {
+                seen = e;
+                break;
+            }
+            spins += 1;
+            if spins > SPIN_LIMIT {
+                let slot = sh.slot.lock().unwrap();
+                let _guard = sh
+                    .work
+                    .wait_timeout_while(
+                        slot,
+                        std::time::Duration::from_millis(50),
+                        |_| {
+                            !sh.shutdown.load(Ordering::Acquire)
+                                && sh.epoch.load(Ordering::Acquire) == seen
+                        },
+                    )
+                    .unwrap();
+                spins = 0;
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+        drain(sh, lane);
+    }
+}
+
+/// Accounting snapshot of one [`WorkerPool`].
+#[derive(Debug, Clone)]
+pub struct PoolStats {
+    /// Shard lanes (caller + spawned workers).
+    pub lanes: usize,
+    /// Seconds each lane spent executing shard jobs.
+    pub busy_seconds: Vec<f64>,
+    /// Wall seconds spent inside `run` (dispatch + barrier), i.e. the
+    /// window in which a lane *could* have been busy.
+    pub wall_seconds: f64,
+    /// Number of `run` dispatches.
+    pub runs: u64,
+}
+
+impl PoolStats {
+    /// Seconds a lane sat idle while a dispatch was in flight
+    /// (clamped at zero — lane 0 overlaps dispatch bookkeeping).
+    pub fn idle_seconds(&self) -> Vec<f64> {
+        self.busy_seconds
+            .iter()
+            .map(|&b| (self.wall_seconds - b).max(0.0))
+            .collect()
+    }
+
+    pub fn busy_total(&self) -> f64 {
+        self.busy_seconds.iter().sum()
+    }
+
+    pub fn idle_total(&self) -> f64 {
+        self.idle_seconds().iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn every_task_runs_exactly_once() {
+        let pool = WorkerPool::new(4);
+        for n in [1usize, 2, 3, 7, 64] {
+            let hits: Vec<AtomicUsize> =
+                (0..n).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(n, &|i| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1,
+                           "n={n} task {i} ran a wrong number of times");
+            }
+        }
+        let st = pool.stats();
+        assert_eq!(st.lanes, 4);
+        assert_eq!(st.runs, 5);
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_dispatches() {
+        // the steady-state shape: one pool, thousands of tiny runs
+        let pool = WorkerPool::new(3);
+        let total = AtomicUsize::new(0);
+        for _ in 0..2000 {
+            pool.run(5, &|_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 10_000);
+        assert_eq!(pool.stats().runs, 2000);
+    }
+
+    #[test]
+    fn width_one_runs_inline() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.width(), 1);
+        let sum = AtomicUsize::new(0);
+        pool.run(8, &|i| {
+            sum.fetch_add(i, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 28);
+        let st = pool.stats();
+        assert_eq!(st.lanes, 1);
+        assert!(st.busy_seconds[0] >= 0.0);
+    }
+
+    #[test]
+    fn zero_width_clamps_to_one() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.width(), 1);
+        pool.run(2, &|_| {});
+    }
+
+    #[test]
+    fn tasks_see_borrowed_state_and_write_disjointly() {
+        // the exact usage shape of the pooled kernels: tasks write
+        // disjoint bands of one buffer borrowed from the caller
+        let pool = WorkerPool::new(4);
+        let n = 16usize;
+        let band = 32usize;
+        let mut buf = vec![0.0f32; n * band];
+        struct SendPtr(*mut f32);
+        unsafe impl Send for SendPtr {}
+        unsafe impl Sync for SendPtr {}
+        let p = SendPtr(buf.as_mut_ptr());
+        pool.run(n, &|i| {
+            // SAFETY: band `i` is written by exactly one task
+            let s = unsafe {
+                std::slice::from_raw_parts_mut(p.0.add(i * band), band)
+            };
+            for (j, v) in s.iter_mut().enumerate() {
+                *v = (i * band + j) as f32;
+            }
+        });
+        for (k, &v) in buf.iter().enumerate() {
+            assert_eq!(v, k as f32);
+        }
+    }
+
+    #[test]
+    fn busy_and_idle_accounting_are_consistent() {
+        let pool = WorkerPool::new(2);
+        pool.run(4, &|_| {
+            // enough work to register on the clock
+            let mut acc = 0.0f64;
+            for i in 0..20_000 {
+                acc += (i as f64).sqrt();
+            }
+            std::hint::black_box(acc);
+        });
+        let st = pool.stats();
+        assert!(st.busy_total() > 0.0);
+        assert!(st.wall_seconds > 0.0);
+        assert_eq!(st.idle_seconds().len(), 2);
+        for idle in st.idle_seconds() {
+            assert!(idle >= 0.0);
+        }
+    }
+
+    #[test]
+    fn zero_tasks_is_a_noop() {
+        let pool = WorkerPool::new(3);
+        pool.run(0, &|_| panic!("must not be called"));
+        assert_eq!(pool.stats().runs, 0);
+    }
+}

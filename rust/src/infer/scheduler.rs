@@ -37,6 +37,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use super::pool::WorkerPool;
 use super::{sample, BatchScratch, Engine, Kv, Slot};
 use crate::cli::Args;
 use crate::util::rng::Rng;
@@ -180,11 +181,23 @@ pub struct SchedOptions {
     /// Worker threads; `max_slots` capacity is split across them and
     /// each worker admits from the shared queue into its own slots.
     pub threads: usize,
+    /// Row-band shard workers per scheduler worker: each worker owns a
+    /// persistent [`WorkerPool`] of this many lanes and dispatches
+    /// every layer's linears to it as byte-balanced tile shards
+    /// (`--shard-workers`; 0/1 = serial decode, no pool threads).
+    /// Orthogonal to `threads` — slots × bands — and, like every other
+    /// knob here, incapable of changing a token.
+    pub shard_workers: usize,
 }
 
 impl Default for SchedOptions {
     fn default() -> SchedOptions {
-        SchedOptions { max_slots: 8, temperature: 0.0, threads: 1 }
+        SchedOptions {
+            max_slots: 8,
+            temperature: 0.0,
+            threads: 1,
+            shard_workers: 1,
+        }
     }
 }
 
@@ -230,6 +243,16 @@ pub struct SchedStats {
     pub mean_wait_steps: f64,
     pub kv_allocated: usize,
     pub kv_reused: usize,
+    /// Row-band shard lanes per scheduler worker (1 = serial decode).
+    pub shard_workers: usize,
+    /// Per-lane seconds spent executing row-band shard jobs, summed
+    /// lane-wise across scheduler workers (all zeros when
+    /// `shard_workers <= 1` — the pool is never dispatched).
+    pub shard_busy_seconds: Vec<f64>,
+    /// Per-lane seconds spent idle while a dispatch was in flight —
+    /// the shard-imbalance signal (same layout as
+    /// `shard_busy_seconds`).
+    pub shard_idle_seconds: Vec<f64>,
 }
 
 /// Continuous-batching scheduler over one [`Engine`].
@@ -263,6 +286,9 @@ struct WorkerOut {
     decode_seconds: f64,
     kv_allocated: usize,
     kv_reused: usize,
+    /// Per-lane busy/idle seconds of this worker's decode pool.
+    shard_busy: Vec<f64>,
+    shard_idle: Vec<f64>,
 }
 
 impl<'e> Scheduler<'e> {
@@ -306,6 +332,19 @@ impl<'e> Scheduler<'e> {
         let decode = outs.iter().fold(0.0, |a, o| a.max(o.decode_seconds));
         let kv_allocated = outs.iter().map(|o| o.kv_allocated).sum();
         let kv_reused = outs.iter().map(|o| o.kv_reused).sum();
+        // lane-wise sums across workers (every worker's pool has the
+        // same lane count)
+        let lanes = self.opts.shard_workers.max(1);
+        let mut shard_busy = vec![0.0f64; lanes];
+        let mut shard_idle = vec![0.0f64; lanes];
+        for o in &outs {
+            for (acc, v) in shard_busy.iter_mut().zip(&o.shard_busy) {
+                *acc += v;
+            }
+            for (acc, v) in shard_idle.iter_mut().zip(&o.shard_idle) {
+                *acc += v;
+            }
+        }
         let mut finished: Vec<FinishedRequest> =
             outs.into_iter().flat_map(|o| o.finished).collect();
         finished.sort_by_key(|f| f.id);
@@ -313,7 +352,9 @@ impl<'e> Scheduler<'e> {
                          "every request must finish or expire");
         let stats = summarize(&finished, wall,
                               shared.clock.load(Ordering::SeqCst), prefill,
-                              decode, kv_allocated, kv_reused);
+                              decode, kv_allocated, kv_reused,
+                              ShardTimes { lanes, busy: shard_busy,
+                                           idle: shard_idle });
         (finished, stats)
     }
 
@@ -333,6 +374,10 @@ impl<'e> Scheduler<'e> {
         let engine = self.engine;
         let cfg = &engine.cfg;
         let mut pool = KvPool::new(cfg.n_layers, cfg.seq_len * cfg.d_model);
+        // this worker's persistent row-band shard pool: created once,
+        // workers park between decode steps — no spawns in steady
+        // state (a 1-lane pool spawns nothing and decode runs serial)
+        let shard_pool = WorkerPool::new(self.opts.shard_workers.max(1));
         let mut slots: Vec<Slot> = Vec::with_capacity(cap);
         let mut meta: Vec<Meta> = Vec::with_capacity(cap);
         let mut scratch = BatchScratch::new(cfg, cap);
@@ -343,6 +388,8 @@ impl<'e> Scheduler<'e> {
             decode_seconds: 0.0,
             kv_allocated: 0,
             kv_reused: 0,
+            shard_busy: Vec::new(),
+            shard_idle: Vec::new(),
         };
 
         loop {
@@ -482,7 +529,8 @@ impl<'e> Scheduler<'e> {
             indices.extend(0..slots.len());
             let prefilling = slots.iter().all(|s| s.fed < s.prompt_len);
             let t = Timer::start();
-            engine.decode_step_batch(&mut slots, &indices, &mut scratch);
+            engine.decode_step_batch(&mut slots, &indices, &mut scratch,
+                                     &shard_pool);
             let dt = t.seconds();
             if prefilling {
                 out.prefill_seconds += dt;
@@ -493,8 +541,19 @@ impl<'e> Scheduler<'e> {
         }
         out.kv_allocated = pool.allocated;
         out.kv_reused = pool.reused;
+        let ps = shard_pool.stats();
+        out.shard_idle = ps.idle_seconds();
+        out.shard_busy = ps.busy_seconds;
         out
     }
+}
+
+/// Lane-wise shard-pool times aggregated across scheduler workers —
+/// carried into [`SchedStats`] by [`summarize`].
+struct ShardTimes {
+    lanes: usize,
+    busy: Vec<f64>,
+    idle: Vec<f64>,
 }
 
 fn retire(slots: &mut Vec<Slot>, meta: &mut Vec<Meta>, i: usize,
@@ -519,7 +578,7 @@ fn retire(slots: &mut Vec<Slot>, meta: &mut Vec<Meta>, i: usize,
 
 fn summarize(finished: &[FinishedRequest], wall: f64, steps: u64,
              prefill: f64, decode: f64, kv_allocated: usize,
-             kv_reused: usize) -> SchedStats {
+             kv_reused: usize, shard: ShardTimes) -> SchedStats {
     let tokens: usize = finished.iter().map(|f| f.generated).sum();
     let expired = finished.iter().filter(|f| f.expired).count();
     let mut lat = Summary::new();
@@ -548,6 +607,9 @@ fn summarize(finished: &[FinishedRequest], wall: f64, steps: u64,
         },
         kv_allocated,
         kv_reused,
+        shard_workers: shard.lanes,
+        shard_busy_seconds: shard.busy,
+        shard_idle_seconds: shard.idle,
     }
 }
 
@@ -563,22 +625,28 @@ pub fn ragged_budgets(base: usize, n: usize, seed: u64) -> Vec<usize> {
 }
 
 /// Static-batching reference policy on the same machinery: admit
-/// requests strictly in id order in groups of `max_slots` and drain
-/// each group completely before the next is admitted (ignoring arrival
-/// steps — the group launches as one fixed batch). Per-request token
-/// streams are bit-identical to the continuous scheduler; only the
-/// admission policy differs, which is exactly what `bench_scheduler`
-/// measures.
+/// requests strictly in id order in groups of `opts.max_slots` and
+/// drain each group completely before the next is admitted (ignoring
+/// arrival steps — the group launches as one fixed batch). Per-request
+/// token streams are bit-identical to the continuous scheduler; only
+/// the admission policy differs, which is exactly what
+/// `bench_scheduler` measures. The `threads` / `shard_workers` knobs
+/// in `opts` apply to each group.
 pub fn serve_static_chunks(engine: &Engine, requests: &[Request],
-                           max_slots: usize, temperature: f32,
-                           threads: usize)
+                           opts: &SchedOptions)
                            -> (Vec<FinishedRequest>, SchedStats) {
-    let max_slots = max_slots.max(1);
+    let max_slots = opts.max_slots.max(1);
+    let lanes = opts.shard_workers.max(1);
     let t0 = Instant::now();
     let mut finished = Vec::with_capacity(requests.len());
     let (mut prefill, mut decode) = (0.0f64, 0.0f64);
     let mut steps = 0u64;
     let (mut kv_allocated, mut kv_reused) = (0usize, 0usize);
+    let mut shard = ShardTimes {
+        lanes,
+        busy: vec![0.0; lanes],
+        idle: vec![0.0; lanes],
+    };
     for chunk in requests.chunks(max_slots) {
         let mut q = RequestQueue::new();
         for r in chunk {
@@ -586,8 +654,7 @@ pub fn serve_static_chunks(engine: &Engine, requests: &[Request],
         }
         let sched = Scheduler::new(engine, SchedOptions {
             max_slots: chunk.len(),
-            temperature,
-            threads,
+            ..opts.clone()
         });
         let (f, st) = sched.run(q);
         finished.extend(f);
@@ -596,11 +663,19 @@ pub fn serve_static_chunks(engine: &Engine, requests: &[Request],
         steps += st.steps;
         kv_allocated += st.kv_allocated;
         kv_reused += st.kv_reused;
+        for (acc, v) in shard.busy.iter_mut()
+            .zip(&st.shard_busy_seconds) {
+            *acc += v;
+        }
+        for (acc, v) in shard.idle.iter_mut()
+            .zip(&st.shard_idle_seconds) {
+            *acc += v;
+        }
     }
     finished.sort_by_key(|f| f.id);
     let wall = t0.elapsed().as_secs_f64();
     let stats = summarize(&finished, wall, steps, prefill, decode,
-                          kv_allocated, kv_reused);
+                          kv_allocated, kv_reused, shard);
     (finished, stats)
 }
 
@@ -623,6 +698,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let n_requests = args.usize_or("requests", 32)?;
     let max_slots = args.usize_or("max-slots", 8)?;
     let threads = args.usize_or("threads", 1)?;
+    let shard_workers = args.usize_or("shard-workers", 1)?;
     let prompt_len = args.usize_or("prompt-len", 8)?;
     anyhow::ensure!(prompt_len <= cfg.seq_len,
                     "--prompt-len {prompt_len} exceeds the model's \
@@ -654,6 +730,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         max_slots,
         temperature,
         threads,
+        shard_workers,
     });
     let (finished, stats) = sched.run(queue);
 
@@ -674,7 +751,8 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     println!("backend {:?}", backend);
     println!("sparsity {:.4}", params.sparsity());
     println!("requests {} expired {}", stats.requests, stats.expired);
-    println!("max_slots {max_slots} threads {threads} arrival_gap {gap}");
+    println!("max_slots {max_slots} threads {threads} \
+              shard_workers {shard_workers} arrival_gap {gap}");
     println!("tokens_generated {}", stats.tokens_generated);
     println!("agg_tokens_per_s {:.2}", stats.tokens_per_second);
     println!("p50_ms {:.2}", stats.p50_latency_ms);
@@ -683,6 +761,15 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     println!("steps {}", stats.steps);
     println!("kv_allocated {} kv_reused {}", stats.kv_allocated,
              stats.kv_reused);
+    if shard_workers > 1 {
+        let busy: f64 = stats.shard_busy_seconds.iter().sum();
+        let idle: f64 = stats.shard_idle_seconds.iter().sum();
+        println!("shard_busy_s {busy:.4} shard_idle_s {idle:.4} \
+                  (per lane: {:?})",
+                 stats.shard_busy_seconds.iter()
+                     .map(|s| (s * 1e3).round() / 1e3)
+                     .collect::<Vec<_>>());
+    }
     println!("mem {}", crate::util::human_bytes(engine.mem_bytes()));
     Ok(())
 }
@@ -770,7 +857,7 @@ mod tests {
         let sched = Scheduler::new(&engine, SchedOptions {
             max_slots: 2,
             temperature: 0.7,
-            threads: 1,
+            ..SchedOptions::default()
         });
         let (finished, stats) = sched.run(q);
         assert_eq!(finished.len(), 3);

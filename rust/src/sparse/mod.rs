@@ -16,7 +16,7 @@
 pub mod tile;
 
 pub use tile::{dense_plan, matvec_batch_tiled, par_matvec_batch_tiled,
-               RowTiled, Tile, TilePlan};
+               pool_matvec_batch_tiled, RowTiled, Tile, TilePlan};
 
 use crate::tensor::Matrix;
 
@@ -150,6 +150,19 @@ impl Csr {
         assert_eq!((y.rows, y.cols), (x.rows, self.n_out),
                    "matmat output shape mismatch");
         self.matvec_batch_into(&x.data, &mut y.data, x.rows, scratch);
+    }
+
+    /// Rebuild the row-tile plan with an explicit byte budget and row
+    /// cap ([`TilePlan::with_budget`]): the deployment tuning knob for
+    /// cache sizes other than the default, and the stress knob the
+    /// integration suites use to force multi-tile plans on toy-sized
+    /// layers. Traversal metadata only — output is bit-identical for
+    /// any geometry.
+    pub fn retile(&mut self, target_bytes: usize, max_rows: usize) {
+        let plan = TilePlan::with_budget(self.n_out, |o| {
+            (self.row_ptr[o + 1] - self.row_ptr[o]) as usize * 8
+        }, target_bytes, max_rows);
+        self.plan = plan;
     }
 
     pub fn nnz(&self) -> usize {
@@ -334,6 +347,16 @@ impl Macko {
         assert_eq!((y.rows, y.cols), (x.rows, self.n_out),
                    "matmat output shape mismatch");
         self.matvec_batch_into(&x.data, &mut y.data, x.rows, scratch);
+    }
+
+    /// Rebuild the row-tile plan with an explicit byte budget and row
+    /// cap — the [`Csr::retile`] counterpart for the bitmap format.
+    pub fn retile(&mut self, target_bytes: usize, max_rows: usize) {
+        let wpr = self.words_per_row;
+        let plan = TilePlan::with_budget(self.n_out, |o| {
+            wpr * 8 + (self.row_ptr[o + 1] - self.row_ptr[o]) as usize * 4
+        }, target_bytes, max_rows);
+        self.plan = plan;
     }
 
     pub fn nnz(&self) -> usize {

@@ -30,6 +30,7 @@
 //! exactly this.
 
 use super::{transpose_batch_into, Csr, Macko, SpmmScratch};
+use crate::infer::pool::WorkerPool;
 use crate::tensor::Matrix;
 
 /// One contiguous row range of a [`TilePlan`] plus the estimated bytes
@@ -343,6 +344,55 @@ pub fn par_matvec_batch_tiled<T: RowTiled + Sync>(
     scatter_rows(&scratch.yt, y, b, t.n_out());
 }
 
+/// [`par_matvec_batch_tiled`] on a persistent [`WorkerPool`] instead
+/// of a per-call `thread::scope`: the plan's tiles are split into
+/// byte-balanced contiguous shards (one per pool lane) and dispatched
+/// to the pool's parked workers — the engine's decode loop calls this
+/// for every linear of every layer of every step, so the spawn-free
+/// steady state is what makes intra-layer sharding pay off at decode
+/// granularity. Each shard writes its own disjoint row band of the
+/// `(n_out, b)` staging buffer with the same per-row accumulation
+/// order as the serial kernels, so output is bit-identical to the
+/// serial tiled (and untiled) paths for any pool width. A single-lane
+/// pool (or single-shard plan) runs the serial tiled kernel inline.
+pub fn pool_matvec_batch_tiled<T: RowTiled + Sync>(
+    t: &T, plan: &TilePlan, x: &[f32], y: &mut [f32], b: usize,
+    pool: &WorkerPool, scratch: &mut SpmmScratch) {
+    let shards = plan.shard_ranges(pool.width());
+    if shards.len() <= 1 {
+        return matvec_batch_tiled(t, plan, x, y, b, scratch);
+    }
+    debug_assert_eq!(x.len(), b * t.n_in());
+    debug_assert_eq!(y.len(), b * t.n_out());
+    transpose_batch_into(x, b, t.n_in(), &mut scratch.xt);
+    scratch.yt.resize(t.n_out() * b, 0.0);
+    let xt = &scratch.xt[..];
+    let tiles = &plan.tiles[..];
+
+    /// Raw staging-buffer base shared by the shard tasks; sound
+    /// because every shard writes a disjoint row band.
+    struct StagingPtr(*mut f32);
+    unsafe impl Send for StagingPtr {}
+    unsafe impl Sync for StagingPtr {}
+    let yt_base = StagingPtr(scratch.yt.as_mut_ptr());
+
+    pool.run(shards.len(), &|s| {
+        let (t0, t1) = shards[s];
+        let row0 = tiles[t0].row0;
+        let rows = tiles[t1 - 1].row1 - row0;
+        // SAFETY: shard `s` owns rows `row0..row0 + rows` exclusively —
+        // shard ranges are contiguous and non-overlapping — and the
+        // buffer was sized to n_out * b above, so this band is in
+        // bounds and written by exactly one task.
+        let band = unsafe {
+            std::slice::from_raw_parts_mut(yt_base.0.add(row0 * b),
+                                           rows * b)
+        };
+        t.exec_tiles(&tiles[t0..t1], xt, band, b);
+    });
+    scatter_rows(&scratch.yt, y, b, t.n_out());
+}
+
 /// Re-layout the (n_out, b) staging buffer back to the engine's
 /// row-major (b, n_out) output.
 fn scatter_rows(yt: &[f32], y: &mut [f32], b: usize, n_out: usize) {
@@ -418,5 +468,78 @@ mod tests {
     fn shard_ranges_empty_plan() {
         let plan = TilePlan::default();
         assert!(plan.shard_ranges(4).is_empty());
+    }
+
+    #[test]
+    fn shard_ranges_more_shards_than_tiles_degrades_to_one_per_tile() {
+        // 3 tiles, 64 requested shards: every tile becomes its own
+        // shard and nothing is empty or dropped
+        let plan = TilePlan::fixed(30, 10);
+        assert_eq!(plan.tiles.len(), 3);
+        let shards = plan.shard_ranges(64);
+        assert_eq!(shards, vec![(0, 1), (1, 2), (2, 3)]);
+    }
+
+    #[test]
+    fn shard_ranges_single_row_plan() {
+        // a 1-row weight has one tile; any shard request yields the
+        // one full-coverage shard
+        let plan = TilePlan::from_row_bytes(1, |_| 12);
+        assert_eq!(plan.tiles.len(), 1);
+        for n in [1usize, 2, 8] {
+            assert_eq!(plan.shard_ranges(n), vec![(0, 1)]);
+        }
+    }
+
+    #[test]
+    fn shard_ranges_all_zero_weight_splits_by_row_cap() {
+        // an all-zero weight has zero-byte rows: the row cap still
+        // produces enough tiles to shard, and the byte-balancer
+        // (which clamps each tile to >= 1 byte) covers all of them
+        let w = Matrix::zeros(16, 1200);
+        let csr = Csr::from_weight(&w);
+        assert!(csr.plan.tiles.len() >= 2,
+                "row cap must split an all-zero plan");
+        for n in [1usize, 2, 5] {
+            let shards = csr.plan.shard_ranges(n);
+            assert_eq!(shards.len(), n.min(csr.plan.tiles.len()));
+            assert_eq!(shards[0].0, 0);
+            assert_eq!(shards.last().unwrap().1, csr.plan.tiles.len());
+            for w2 in shards.windows(2) {
+                assert_eq!(w2[0].1, w2[1].0);
+            }
+        }
+    }
+
+    #[test]
+    fn shard_ranges_zero_request_clamps_to_one() {
+        let plan = TilePlan::fixed(20, 5);
+        assert_eq!(plan.shard_ranges(0), vec![(0, plan.tiles.len())]);
+    }
+
+    #[test]
+    fn pooled_tiled_matches_serial_for_any_pool_width() {
+        use crate::sparse::random_sparse_weight;
+        let (din, dout, b) = (72, 60, 4);
+        let w = random_sparse_weight(din, dout, 0.8, 23);
+        let csr = Csr::from_weight(&w);
+        let plan = TilePlan::fixed(dout, 4);
+        let mut rng = crate::util::rng::Rng::new(9);
+        let x: Vec<f32> = (0..b * din).map(|_| rng.normal()).collect();
+        let mut want = vec![0.0f32; b * dout];
+        let mut s0 = SpmmScratch::default();
+        matvec_batch_tiled(&csr, &plan, &x, &mut want, b, &mut s0);
+        for width in [1usize, 2, 3, 16] {
+            let pool = WorkerPool::new(width);
+            let mut got = vec![0.0f32; b * dout];
+            let mut sp = SpmmScratch::default();
+            // twice per pool: the second dispatch exercises the parked
+            // steady state, not the cold start
+            for _ in 0..2 {
+                pool_matvec_batch_tiled(&csr, &plan, &x, &mut got, b,
+                                        &pool, &mut sp);
+                assert_eq!(got, want, "pool width {width}");
+            }
+        }
     }
 }

@@ -1,0 +1,80 @@
+//! Shared fixtures for the integration suites (ISSUE 4 satellite):
+//! the toy serving model, pruned-parameter builders, and request
+//! factories that used to be copy-pasted across `scheduler.rs`,
+//! `engine_batch.rs`, `engine_parity.rs` and `kernels.rs`. Every suite
+//! builds the *same* toy engine from here, so a numerics change shows
+//! up consistently instead of in whichever suite happened to share the
+//! seed.
+
+// each test crate compiles its own copy and uses a subset
+#![allow(dead_code)]
+
+use elsa::infer::scheduler::Request;
+use elsa::infer::{Backend, Engine};
+use elsa::model::{synthetic_config, Params};
+use elsa::pruners::{magnitude, uniform_alloc};
+use elsa::runtime::ConfigEntry;
+
+/// Vocab of the toy serving model — prompt token streams index modulo
+/// this.
+pub const TOY_VOCAB: usize = 48;
+
+/// The toy serving model every integration suite decodes on: d=40
+/// (attention heads of 10), 2 layers, vocab 48, seq_len 20 — big
+/// enough for multi-word MACKO bitmaps per head, small enough that a
+/// full determinism sweep stays fast.
+pub fn toy_cfg() -> ConfigEntry {
+    synthetic_config("toy_t", 40, 2, 4, 64, TOY_VOCAB, 20)
+}
+
+/// Init `cfg` at `seed` and magnitude-prune it to `sparsity`.
+pub fn pruned_params(cfg: &ConfigEntry, sparsity: f64, seed: u64)
+                     -> Params {
+    let dense = Params::init(cfg, seed);
+    let pruned = magnitude::prune(cfg, &dense.flat,
+                                  &uniform_alloc(cfg, sparsity))
+        .expect("magnitude prune");
+    Params::new(cfg, pruned)
+}
+
+/// The standard 75%-sparse toy engine plus its `seq_len`.
+pub fn engine(backend: Backend) -> (Engine, usize) {
+    let cfg = toy_cfg();
+    let seq_len = cfg.seq_len;
+    let p = pruned_params(&cfg, 0.75, 1);
+    (Engine::build(&p, backend).expect("engine"), seq_len)
+}
+
+/// The toy engine with deliberately tiny tile plans (64-byte budget,
+/// 8-row cap): at toy scale the default 16 KiB budget puts a whole
+/// layer in one tile, so pooled `--shard-workers` decode would never
+/// actually shard. Retiling forces multi-tile plans so the pool, the
+/// ragged tile boundaries, and the shard balancer are all genuinely
+/// exercised — tokens are bit-identical to [`engine`] regardless
+/// (plans are traversal metadata only).
+pub fn banded_engine(backend: Backend) -> (Engine, usize) {
+    let (mut e, seq_len) = engine(backend);
+    e.retile(64, 8);
+    (e, seq_len)
+}
+
+/// A request with the suites' conventional seed (`100 + id`) and no
+/// deadline.
+pub fn req(id: u64, prompt: Vec<u32>, n_new: usize) -> Request {
+    Request { id, prompt, n_new, seed: 100 + id, deadline: None }
+}
+
+/// Ragged prompts (1–5 tokens) + ragged budgets (2–7 tokens) for
+/// determinism sweeps — deterministic in `id`, so every suite replays
+/// the identical stream.
+pub fn ragged_requests(n: u64) -> Vec<Request> {
+    (0..n)
+        .map(|id| {
+            let plen = 1 + (id as usize % 5);
+            let prompt = (0..plen)
+                .map(|i| ((id as usize * 7 + i * 3) % TOY_VOCAB) as u32)
+                .collect();
+            req(id, prompt, 2 + (id as usize % 6))
+        })
+        .collect()
+}

@@ -2,24 +2,19 @@
 //! retirement edge cases, and GenStats token accounting (ISSUE 1
 //! satellite tests).
 
-use elsa::infer::{Backend, BatchOptions, Engine};
-use elsa::model::{synthetic_config, Params};
-use elsa::pruners::{magnitude, uniform_alloc};
+mod common;
 
-fn engine(backend: Backend) -> (Engine, usize) {
-    // d=40 (attention heads of 10), vocab 48, seq_len 20
-    let cfg = synthetic_config("batch_t", 40, 2, 4, 64, 48, 20);
-    let dense = Params::init(&cfg, 1);
-    let pruned = magnitude::prune(&cfg, &dense.flat,
-                                  &uniform_alloc(&cfg, 0.75))
-        .expect("prune");
-    let p = Params::new(&cfg, pruned);
-    let seq_len = cfg.seq_len;
-    (Engine::build(&p, backend).expect("engine"), seq_len)
-}
+use common::engine;
+use elsa::infer::{Backend, BatchOptions};
 
 fn opts(n_new: usize, threads: usize) -> BatchOptions {
-    BatchOptions { n_new, temperature: 0.8, seed: 3, threads }
+    BatchOptions {
+        n_new,
+        temperature: 0.8,
+        seed: 3,
+        threads,
+        ..BatchOptions::default()
+    }
 }
 
 #[test]
@@ -60,6 +55,37 @@ fn threads_1_vs_4_identical() {
         // oversubscribed: more threads than slots must also be safe
         let (out9, _) = engine.generate_batch(&prompts, &opts(9, 9));
         assert_eq!(out1, out9, "{backend:?}: oversubscription changed output");
+    }
+}
+
+#[test]
+fn shard_workers_do_not_change_output_and_report_busy_time() {
+    // slot sharding x band sharding: every combination must reproduce
+    // the single-threaded streams, and a multi-lane pool must account
+    // busy time once it actually decoded something (banded_engine
+    // forces multi-tile plans, so the pool really dispatches)
+    for backend in [Backend::Csr, Backend::Macko, Backend::Dense] {
+        let (engine, _) = common::banded_engine(backend);
+        let prompts: Vec<Vec<u32>> = (0..5)
+            .map(|s| (0..2 + s % 3).map(|i| ((s * 3 + i) % 48) as u32)
+                 .collect())
+            .collect();
+        let (want, st0) = engine.generate_batch(&prompts, &opts(7, 1));
+        assert_eq!(st0.shard_busy_seconds, 0.0,
+                   "serial decode must not dispatch the pool");
+        for (threads, shard_workers) in
+            [(1usize, 2usize), (1, 8), (2, 2), (4, 3)] {
+            let o = BatchOptions {
+                shard_workers,
+                ..opts(7, threads)
+            };
+            let (got, st) = engine.generate_batch(&prompts, &o);
+            assert_eq!(got, want,
+                       "{backend:?} threads={threads} \
+                        shard_workers={shard_workers} changed output");
+            assert!(st.shard_busy_seconds > 0.0,
+                    "{backend:?}: pooled decode must account busy time");
+        }
     }
 }
 

@@ -6,25 +6,24 @@
 //! checkpoint format first, so the test covers the full deployment
 //! path: prune -> checkpoint -> load -> convert -> serve.
 
+mod common;
+
 use std::path::PathBuf;
 
 use elsa::infer::{Backend, Engine};
 use elsa::model::checkpoint::Checkpoint;
 use elsa::model::{fake_config, synthetic_config, Params};
-use elsa::pruners::{magnitude, uniform_alloc};
 
-/// Prune `cfg` at `sparsity` and round-trip through a checkpoint file.
+/// Prune `cfg` at `sparsity` (via the shared fixture builder) and
+/// round-trip through a checkpoint file.
 fn pruned_via_checkpoint(cfg: &elsa::runtime::ConfigEntry, sparsity: f64,
                          seed: u64, tag: &str) -> Params {
-    let dense = Params::init(cfg, seed);
-    let pruned = magnitude::prune(cfg, &dense.flat,
-                                  &uniform_alloc(cfg, sparsity))
-        .expect("magnitude prune");
+    let pruned = common::pruned_params(cfg, sparsity, seed);
 
     let path: PathBuf = std::env::temp_dir().join(format!(
         "elsa_parity_{}_{}.bin", std::process::id(), tag));
     let mut ck = Checkpoint::new(&cfg.name);
-    ck.insert("params", pruned);
+    ck.insert("params", pruned.flat);
     ck.save(&path).expect("checkpoint save");
     let loaded = Checkpoint::load(&path).expect("checkpoint load");
     let p = Params::new(cfg, loaded.get("params").unwrap().clone());
@@ -87,7 +86,10 @@ fn batched_streams_identical_across_backends() {
     let prompts: Vec<Vec<u32>> =
         vec![vec![1, 2, 3], vec![7, 8], vec![4, 5, 6, 9, 10]];
     let opts = elsa::infer::BatchOptions {
-        n_new: 6, temperature: 0.0, seed: 0, threads: 1,
+        n_new: 6,
+        temperature: 0.0,
+        seed: 0,
+        ..elsa::infer::BatchOptions::default()
     };
     let reference = Engine::build(&p, Backend::Dense).unwrap()
         .generate_batch(&prompts, &opts).0;

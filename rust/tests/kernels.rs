@@ -1,18 +1,22 @@
 //! Row-tiled kernel bit-identity suite (ISSUE 3): the tiled SpMM
 //! paths must be bit-identical to the untiled `matvec_batch_into`
 //! kernels for every format, batch size, tile geometry (including
-//! ragged boundaries and all-zero rows), and shard count — and the
+//! ragged boundaries and all-zero rows), and shard count — whether the
+//! shards run on per-call scoped threads (`par_matvec_batch_tiled`) or
+//! on the persistent decode pool (`pool_matvec_batch_tiled`) — and the
 //! engine/scheduler token streams must be unchanged with tiling on vs
 //! off, so the PR 1/2 determinism guarantees carry over.
 
+mod common;
+
+use common::{banded_engine, engine, TOY_VOCAB};
+use elsa::infer::pool::WorkerPool;
 use elsa::infer::scheduler::{Request, RequestQueue, SchedOptions,
                              Scheduler};
 use elsa::infer::{Backend, BatchOptions, Engine};
-use elsa::model::{synthetic_config, Params};
-use elsa::pruners::{magnitude, uniform_alloc};
 use elsa::sparse::{dense_matvec_batch, dense_plan, par_matvec_batch_tiled,
-                   random_sparse_weight, tile, Csr, Macko, SpmmScratch,
-                   TilePlan};
+                   pool_matvec_batch_tiled, random_sparse_weight, tile,
+                   Csr, Macko, SpmmScratch, TilePlan};
 use elsa::tensor::Matrix;
 use elsa::util::rng::Rng;
 
@@ -129,6 +133,35 @@ fn construction_plans_cover_all_rows() {
 }
 
 #[test]
+fn retile_covers_all_rows_and_stays_bit_exact() {
+    // the shard-granularity knob: any explicit budget/row-cap must
+    // still cover every row contiguously and cannot change a bit
+    let (din, dout, b) = (80, 56, 4);
+    let w = random_sparse_weight(din, dout, 0.8, 37);
+    let x = batch_input(b, din, 3);
+    let mut su = SpmmScratch::default();
+    let mut st = SpmmScratch::default();
+    let mut want = vec![0.0f32; b * dout];
+    let mut got = vec![0.0f32; b * dout];
+    let mut csr = Csr::from_weight(&w);
+    let mut mck = Macko::from_weight(&w);
+    csr.matvec_batch_into(&x, &mut want, b, &mut su);
+    for &(budget, cap) in &[(64usize, 8usize), (1, 1), (1 << 20, 512)] {
+        csr.retile(budget, cap);
+        assert_eq!(csr.plan.tiles[0].row0, 0);
+        assert_eq!(csr.plan.tiles.last().unwrap().row1, dout);
+        csr.matvec_batch_tiled_into(&x, &mut got, b, &mut st);
+        assert_eq!(got, want, "csr retile({budget}, {cap})");
+
+        mck.retile(budget, cap);
+        mck.matvec_batch_into(&x, &mut want, b, &mut su);
+        mck.matvec_batch_tiled_into(&x, &mut got, b, &mut st);
+        assert_eq!(got, want, "macko retile({budget}, {cap})");
+        csr.matvec_batch_into(&x, &mut want, b, &mut su);
+    }
+}
+
+#[test]
 fn sharded_tiled_matches_serial_any_thread_count() {
     let (din, dout, b) = (96, 88, 6);
     let w = random_sparse_weight(din, dout, 0.85, 31);
@@ -154,15 +187,49 @@ fn sharded_tiled_matches_serial_any_thread_count() {
     }
 }
 
-fn toy_engine(backend: Backend) -> Engine {
-    // d=40 (heads of 10), vocab 48, seq_len 20 — the same toy model as
-    // the engine_batch / scheduler suites
-    let cfg = synthetic_config("kern_t", 40, 2, 4, 64, 48, 20);
-    let dense = Params::init(&cfg, 1);
-    let pruned = magnitude::prune(&cfg, &dense.flat,
-                                  &uniform_alloc(&cfg, 0.75))
-        .expect("prune");
-    Engine::build(&Params::new(&cfg, pruned), backend).expect("engine")
+#[test]
+fn persistent_pool_matches_serial_across_formats_and_batches() {
+    // the engine's exact usage shape: ONE pool dispatched for many
+    // different plans, formats and batch sizes, steady-state, with
+    // bit-identical results every time
+    let (din, dout) = (96, 88);
+    let w = random_sparse_weight(din, dout, 0.85, 31);
+    let csr = Csr::from_weight(&w);
+    let mck = Macko::from_weight(&w);
+    let plan = TilePlan::fixed(dout, 5);
+    let dplan = dense_plan(&w);
+    let mut su = SpmmScratch::default();
+    let mut st = SpmmScratch::default();
+    for &width in &[2usize, 5] {
+        let pool = WorkerPool::new(width);
+        for round in 0..3u64 {
+            for &b in &[1usize, 4, 6] {
+                let x = batch_input(b, din, 17 + round + b as u64);
+                let mut want = vec![0.0f32; b * dout];
+                let mut got = vec![0.0f32; b * dout];
+
+                csr.matvec_batch_into(&x, &mut want, b, &mut su);
+                pool_matvec_batch_tiled(&csr, &plan, &x, &mut got, b,
+                                        &pool, &mut st);
+                assert_eq!(got, want,
+                           "csr width={width} b={b} round={round}");
+
+                mck.matvec_batch_into(&x, &mut want, b, &mut su);
+                pool_matvec_batch_tiled(&mck, &plan, &x, &mut got, b,
+                                        &pool, &mut st);
+                assert_eq!(got, want,
+                           "macko width={width} b={b} round={round}");
+
+                dense_matvec_batch(&w, &x, &mut want, b);
+                pool_matvec_batch_tiled(&w, &dplan, &x, &mut got, b,
+                                        &pool, &mut st);
+                assert_eq!(got, want,
+                           "dense width={width} b={b} round={round}");
+            }
+        }
+        let ps = pool.stats();
+        assert!(ps.runs > 0, "multi-tile plans must dispatch the pool");
+    }
 }
 
 #[test]
@@ -170,11 +237,12 @@ fn engine_streams_identical_tiled_vs_untiled() {
     let prompts: Vec<Vec<u32>> =
         vec![vec![1, 2, 3], vec![4, 5], vec![6, 7, 8, 9], vec![10]];
     for backend in [Backend::Dense, Backend::Csr, Backend::Macko] {
-        let mut engine = toy_engine(backend);
+        let (mut engine, _) = engine(backend);
         assert!(engine.tiled, "tiling must be the default");
         for temp in [0.0f32, 0.9] {
             let opts = BatchOptions {
-                n_new: 5, temperature: temp, seed: 3, threads: 1,
+                n_new: 5, temperature: temp, seed: 3,
+                ..BatchOptions::default()
             };
             engine.tiled = true;
             let (tiled, _) = engine.generate_batch(&prompts, &opts);
@@ -197,12 +265,14 @@ fn engine_streams_identical_tiled_vs_untiled() {
 fn scheduler_streams_unchanged_with_tiling_on_vs_off() {
     // end-to-end continuous batching: staggered arrivals, ragged
     // budgets, mid-decode admission — the token streams must not
-    // depend on the kernel traversal, for any worker count
+    // depend on the kernel traversal, for any worker or shard-worker
+    // count (banded_engine forces multi-tile plans so shard_workers=2
+    // really pools)
     let reqs: Vec<Request> = (0..9u64)
         .map(|id| Request {
             id,
             prompt: (0..1 + (id as usize % 4))
-                .map(|i| ((id as usize * 5 + i) % 48) as u32)
+                .map(|i| ((id as usize * 5 + i) % TOY_VOCAB) as u32)
                 .collect(),
             n_new: 2 + (id as usize % 5),
             seed: 50 + id,
@@ -210,8 +280,8 @@ fn scheduler_streams_unchanged_with_tiling_on_vs_off() {
         })
         .collect();
     for backend in [Backend::Csr, Backend::Macko] {
-        let mut engine = toy_engine(backend);
-        for threads in [1usize, 3] {
+        let (mut engine, _) = banded_engine(backend);
+        for (threads, shard_workers) in [(1usize, 1usize), (3, 1), (1, 2)] {
             let run = |engine: &Engine| {
                 let queue = RequestQueue::with_poisson_arrivals(
                     reqs.clone(), 1.5, 11);
@@ -219,6 +289,7 @@ fn scheduler_streams_unchanged_with_tiling_on_vs_off() {
                     max_slots: 3,
                     temperature: 0.8,
                     threads,
+                    shard_workers,
                 });
                 let (finished, _) = sched.run(queue);
                 finished.into_iter().map(|f| (f.id, f.tokens))
@@ -229,14 +300,16 @@ fn scheduler_streams_unchanged_with_tiling_on_vs_off() {
             engine.tiled = false;
             let untiled = run(&engine);
             assert_eq!(tiled, untiled,
-                       "{backend:?} threads={threads}: tiling changed \
+                       "{backend:?} threads={threads} \
+                        shard_workers={shard_workers}: tiling changed \
                         scheduler streams");
             for (id, tokens) in &tiled {
                 let r = &reqs[*id as usize];
                 let (want, _) = engine.generate(&r.prompt, r.n_new, 0.8,
                                                 r.seed);
                 assert_eq!(tokens, &want,
-                           "{backend:?} threads={threads} req {id}");
+                           "{backend:?} threads={threads} \
+                            shard_workers={shard_workers} req {id}");
             }
         }
     }

@@ -1,43 +1,15 @@
 //! Continuous-batching scheduler edge cases (ISSUE 2 satellite tests):
 //! mid-decode admission into just-retired slots, queue drain, empty
-//! prompts, deadline expiry, KvPool reuse bit-identity, and
-//! determinism across thread counts and admission orders.
+//! prompts, deadline expiry, KvPool reuse bit-identity, determinism
+//! across thread counts and admission orders, and KvPool counter
+//! invariance under pooled row-band decode (`shard_workers`).
 
-use elsa::infer::scheduler::{serve_static_chunks, Request, RequestQueue,
+mod common;
+
+use common::{engine, ragged_requests, req};
+use elsa::infer::scheduler::{serve_static_chunks, RequestQueue,
                              SchedOptions, Scheduler};
-use elsa::infer::{Backend, Engine};
-use elsa::model::{synthetic_config, Params};
-use elsa::pruners::{magnitude, uniform_alloc};
-
-fn engine(backend: Backend) -> (Engine, usize) {
-    // d=40 (heads of 10), vocab 48, seq_len 20 — same toy model as the
-    // engine_batch suite
-    let cfg = synthetic_config("sched_t", 40, 2, 4, 64, 48, 20);
-    let dense = Params::init(&cfg, 1);
-    let pruned = magnitude::prune(&cfg, &dense.flat,
-                                  &uniform_alloc(&cfg, 0.75))
-        .expect("prune");
-    let p = Params::new(&cfg, pruned);
-    let seq_len = cfg.seq_len;
-    (Engine::build(&p, backend).expect("engine"), seq_len)
-}
-
-fn req(id: u64, prompt: Vec<u32>, n_new: usize) -> Request {
-    Request { id, prompt, n_new, seed: 100 + id, deadline: None }
-}
-
-/// Ragged prompts + ragged budgets for determinism sweeps.
-fn ragged_requests(n: u64) -> Vec<Request> {
-    (0..n)
-        .map(|id| {
-            let plen = 1 + (id as usize % 5);
-            let prompt = (0..plen)
-                .map(|i| ((id as usize * 7 + i * 3) % 48) as u32)
-                .collect();
-            req(id, prompt, 2 + (id as usize % 6))
-        })
-        .collect()
-}
+use elsa::infer::Backend;
 
 #[test]
 fn continuous_admission_matches_per_sequence_generate() {
@@ -49,7 +21,7 @@ fn continuous_admission_matches_per_sequence_generate() {
         let sched = Scheduler::new(&engine, SchedOptions {
             max_slots: 2,
             temperature: 0.8,
-            threads: 1,
+            ..SchedOptions::default()
         });
         let (finished, stats) = sched.run(queue);
         assert_eq!(finished.len(), reqs.len());
@@ -74,7 +46,7 @@ fn admission_reuses_just_retired_slot() {
     let (engine, _) = engine(Backend::Macko);
     // one slot, three requests: every retirement must hand its KV
     // buffers to the next admission (two reuses, one fresh allocation)
-    let reqs: Vec<Request> = (0..3)
+    let reqs: Vec<_> = (0..3)
         .map(|id| req(id, vec![1 + id as u32, 2, 3], 4))
         .collect();
     let mut queue = RequestQueue::new();
@@ -84,7 +56,7 @@ fn admission_reuses_just_retired_slot() {
     let sched = Scheduler::new(&engine, SchedOptions {
         max_slots: 1,
         temperature: 0.8,
-        threads: 1,
+        ..SchedOptions::default()
     });
     let (finished, stats) = sched.run(queue);
     assert_eq!(finished.len(), 3);
@@ -112,7 +84,7 @@ fn kv_pool_reuse_is_bit_identical_to_fresh_buffers() {
         let sched = Scheduler::new(&engine, SchedOptions {
             max_slots,
             temperature: 0.8,
-            threads: 1,
+            ..SchedOptions::default()
         });
         sched.run(queue)
     };
@@ -131,6 +103,44 @@ fn kv_pool_reuse_is_bit_identical_to_fresh_buffers() {
 }
 
 #[test]
+fn kv_pool_counters_unchanged_by_shard_workers() {
+    // pooled row-band decode parallelizes *within* a step; it must not
+    // perturb slot admission/retirement, so the KvPool counters are
+    // invariant in `shard_workers` (and the streams identical)
+    let (engine, _) = engine(Backend::Macko);
+    let reqs = ragged_requests(6);
+    let run = |shard_workers: usize| {
+        let queue =
+            RequestQueue::with_poisson_arrivals(reqs.clone(), 1.0, 4);
+        let sched = Scheduler::new(&engine, SchedOptions {
+            max_slots: 2,
+            temperature: 0.8,
+            shard_workers,
+            ..SchedOptions::default()
+        });
+        sched.run(queue)
+    };
+    let (f1, s1) = run(1);
+    for sw in [2usize, 8] {
+        let (fsw, ssw) = run(sw);
+        assert_eq!(ssw.kv_allocated, s1.kv_allocated,
+                   "shard_workers={sw} changed kv_allocated");
+        assert_eq!(ssw.kv_reused, s1.kv_reused,
+                   "shard_workers={sw} changed kv_reused");
+        assert_eq!(ssw.shard_workers, sw);
+        for (a, b) in f1.iter().zip(fsw.iter()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens,
+                       "shard_workers={sw} changed req {}'s stream",
+                       a.id);
+        }
+    }
+    // the serial run never dispatches the pool
+    assert_eq!(s1.shard_workers, 1);
+    assert!(s1.shard_busy_seconds.iter().all(|&b| b == 0.0));
+}
+
+#[test]
 fn empty_queue_drains_immediately() {
     let (engine, _) = engine(Backend::Macko);
     for threads in [1usize, 4] {
@@ -138,6 +148,7 @@ fn empty_queue_drains_immediately() {
             max_slots: 4,
             temperature: 0.8,
             threads,
+            ..SchedOptions::default()
         });
         let (finished, stats) = sched.run(RequestQueue::new());
         assert!(finished.is_empty());
@@ -155,7 +166,7 @@ fn empty_prompt_request_finishes_with_zero_tokens() {
     let sched = Scheduler::new(&engine, SchedOptions {
         max_slots: 2,
         temperature: 0.8,
-        threads: 1,
+        ..SchedOptions::default()
     });
     let (finished, stats) = sched.run(queue);
     assert_eq!(finished.len(), 2);
@@ -179,7 +190,7 @@ fn deadline_expires_unadmitted_request() {
     let sched = Scheduler::new(&engine, SchedOptions {
         max_slots: 1,
         temperature: 0.8,
-        threads: 1,
+        ..SchedOptions::default()
     });
     let (finished, stats) = sched.run(queue);
     assert_eq!(finished.len(), 2);
@@ -206,6 +217,7 @@ fn thread_count_does_not_change_streams() {
                 max_slots: 4,
                 temperature: 0.8,
                 threads,
+                ..SchedOptions::default()
             });
             sched.run(queue)
         };
@@ -233,16 +245,16 @@ fn thread_count_does_not_change_streams() {
 fn static_chunks_match_continuous_streams() {
     let (engine, _) = engine(Backend::Macko);
     let reqs = ragged_requests(6);
-    let (stat, st) =
-        serve_static_chunks(&engine, &reqs, 2, 0.8, 1);
+    let sopts = SchedOptions {
+        max_slots: 2,
+        temperature: 0.8,
+        ..SchedOptions::default()
+    };
+    let (stat, st) = serve_static_chunks(&engine, &reqs, &sopts);
     assert_eq!(stat.len(), reqs.len());
     assert_eq!(st.expired, 0);
     let queue = RequestQueue::with_poisson_arrivals(reqs.clone(), 1.0, 2);
-    let sched = Scheduler::new(&engine, SchedOptions {
-        max_slots: 2,
-        temperature: 0.8,
-        threads: 1,
-    });
+    let sched = Scheduler::new(&engine, sopts);
     let (cont, _) = sched.run(queue);
     for (a, b) in stat.iter().zip(cont.iter()) {
         assert_eq!(a.id, b.id);
