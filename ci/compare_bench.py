@@ -19,7 +19,15 @@ unless it sets its own):
   * every "min_<name>_ratio" knob requires
     CURRENT["<name>_ratio"] >= the floor (e.g. min_tiled_untiled_ratio
     gates tiled_untiled_ratio, min_pooled_serial_ratio gates
-    pooled_serial_ratio); an absent metric counts as 0.0 and fails.
+    pooled_serial_ratio, min_chunked_pertoken_ratio gates the
+    chunked-vs-per-token prefill ratio chunked_pertoken_ratio); an
+    absent metric counts as 0.0 and fails.
+
+The tok_s rule covers the chunked-prefill cells too: a baseline entry
+like {"macko_prefill": {"tok_s": <floor>}} floors the chunked prefill
+rate the same way the decode policies are floored (extra keys in the
+current cell, e.g. pertoken_tok_s, are informational and ignored by
+the gate), and --ratchet updates its tok_s like any other policy.
 
 Latency percentiles are reported for the record but never gated: on
 the shared CI fleet they are far noisier than aggregate throughput.

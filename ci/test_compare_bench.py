@@ -43,22 +43,28 @@ def kernels_baseline():
     return {
         "min_tiled_untiled_ratio": 0.95,
         "min_pooled_serial_ratio": 0.95,
+        "min_chunked_pertoken_ratio": 1.0,
         "dense": {"tok_s": 25.0},
         "csr": {"tok_s": 40.0},
         "macko": {"tok_s": 40.0},
         "macko_pooled": {"tok_s": 40.0},
+        "macko_prefill": {"tok_s": 50.0},
     }
 
 
-def kernels_current(ratio=1.1, pooled_ratio=1.0, dense=80.0, csr=200.0,
-                    macko=220.0, macko_pooled=240.0):
+def kernels_current(ratio=1.1, pooled_ratio=1.0, chunked_ratio=1.6,
+                    dense=80.0, csr=200.0, macko=220.0,
+                    macko_pooled=240.0, macko_prefill=300.0):
     return {
         "tiled_untiled_ratio": ratio,
         "pooled_serial_ratio": pooled_ratio,
+        "chunked_pertoken_ratio": chunked_ratio,
         "dense": {"tok_s": dense},
         "csr": {"tok_s": csr},
         "macko": {"tok_s": macko},
         "macko_pooled": {"tok_s": macko_pooled},
+        "macko_prefill": {"tok_s": macko_prefill,
+                          "pertoken_tok_s": macko_prefill / 1.6},
     }
 
 
@@ -128,6 +134,41 @@ class GateTests(unittest.TestCase):
         del cur["pooled_serial_ratio"]
         _, failures = cb.gate(cur, kernels_baseline())
         self.assertTrue(any("pooled_serial_ratio" in f for f in failures))
+
+    def test_chunked_pertoken_ratio_gate(self):
+        # chunked prefill must never lose to per-token prefill: the
+        # 1.0 floor fails a ratio just below it and an absent metric
+        _, failures = cb.gate(kernels_current(chunked_ratio=1.0),
+                              kernels_baseline())
+        self.assertEqual(failures, [])
+        _, failures = cb.gate(kernels_current(chunked_ratio=0.99),
+                              kernels_baseline())
+        self.assertTrue(any("chunked_pertoken_ratio" in f
+                            for f in failures))
+        cur = kernels_current()
+        del cur["chunked_pertoken_ratio"]
+        _, failures = cb.gate(cur, kernels_baseline())
+        self.assertTrue(any("chunked_pertoken_ratio" in f
+                            for f in failures))
+
+    def test_prefill_cell_floor_gated_like_any_policy(self):
+        # the {backend}_prefill cells ride the ordinary tok_s floor
+        # machinery; extra keys (pertoken_tok_s) are ignored by the gate
+        _, failures = cb.gate(kernels_current(), kernels_baseline())
+        self.assertEqual(failures, [])
+        _, failures = cb.gate(kernels_current(macko_prefill=1.0),
+                              kernels_baseline())
+        self.assertTrue(any("macko_prefill" in f for f in failures))
+        cur = kernels_current()
+        del cur["macko_prefill"]
+        _, failures = cb.gate(cur, kernels_baseline())
+        self.assertTrue(any("macko_prefill" in f and "missing" in f
+                            for f in failures))
+
+    def test_ratchet_covers_prefill_cells_and_keeps_ratio_knob(self):
+        out = cb.ratchet(kernels_current(), kernels_baseline())
+        self.assertEqual(out["macko_prefill"]["tok_s"], 300.0)
+        self.assertEqual(out["min_chunked_pertoken_ratio"], 1.0)
 
     def test_pooled_policy_floor_gated(self):
         cur = scheduler_current(pooled=1.0)

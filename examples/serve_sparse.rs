@@ -23,6 +23,11 @@
 //! `-- --shard-workers M` additionally splits every layer's linears
 //! into M byte-balanced row-band shards executed on a persistent
 //! per-worker pool (slot × band parallelism; still bit-identical).
+//!
+//! `-- --prefill-chunk C` sets the prompt window of the chunked
+//! prefill pass (default 16; every value is bit-identical — prompts
+//! just share one weight walk per window and skip the head projection
+//! until their final position).
 
 use std::path::Path;
 
@@ -76,6 +81,9 @@ fn main() -> Result<()> {
     let threads = args.usize_or("threads", 1)?;
     let shard_workers = args.usize_or("shard-workers", 1)?;
     let max_slots = args.usize_or("max-slots", 0)?;
+    let prefill_chunk = args
+        .usize_or("prefill-chunk", elsa::infer::DEFAULT_PREFILL_CHUNK)?
+        .max(1);
     let prompt_len = 8;
     let n_new = cfg.seq_len - prompt_len;
 
@@ -100,7 +108,8 @@ fn main() -> Result<()> {
             shard_workers,
         };
         for backend in [Backend::Dense, Backend::Csr, Backend::Macko] {
-            let engine = Engine::build(&params, backend)?;
+            let mut engine = Engine::build(&params, backend)?;
+            engine.prefill_chunk = prefill_chunk;
             // warmup + static reference on the identical stream
             serve_static_chunks(&engine, &reqs, &sopts);
             let (_, st) = serve_static_chunks(&engine, &reqs, &sopts);
@@ -124,7 +133,8 @@ fn main() -> Result<()> {
     }
 
     for backend in [Backend::Dense, Backend::Csr, Backend::Macko] {
-        let engine = Engine::build(&params, backend)?;
+        let mut engine = Engine::build(&params, backend)?;
+        engine.prefill_chunk = prefill_chunk;
         // warmup
         engine.generate(&g.generate(prompt_len, 0), n_new, 0.8, 0);
         let mut lat = Summary::new();

@@ -13,15 +13,20 @@
 //! Writes a machine-readable summary to `$BENCH_OUT` (default
 //! `BENCH_kernels.json`) for the CI regression gate
 //! (`ci/compare_bench.py --section kernels`): per-backend engine
-//! tok/s floors (now including `macko_pooled`), the aggregate
+//! tok/s floors (now including `macko_pooled` and the
+//! `{backend}_prefill` chunked-prefill cells), the aggregate
 //! tiled/untiled throughput ratio (batches >= 4; batch 1 delegates to
 //! the identical matvec on both paths, so it would only dilute the
-//! signal), and `pooled_serial_ratio` — best-of-3 pooled row-band
+//! signal), `pooled_serial_ratio` — best-of-3 pooled row-band
 //! decode (`shard-workers = threads`) over the best-of-3 serial
 //! engine, which pins that band-parallel serving never collapses
-//! against the serial path. (At shard-workers=1 the dispatch takes
+//! against the serial path (at shard-workers=1 the dispatch takes
 //! the serial branch structurally, so no runtime gate is needed
-//! there.)
+//! there) — and `chunked_pertoken_ratio`, the aggregate chunked-vs-
+//! per-token prefill throughput ratio, gated >= 1.0: the chunked pass
+//! shares one weight walk per window and skips the head projection
+//! for every prompt position but the last, so it must never lose to
+//! the one-position-at-a-time cadence.
 
 use elsa::infer::pool::WorkerPool;
 use elsa::infer::{Backend, BatchOptions, Engine};
@@ -215,6 +220,81 @@ fn shard_sweep(dim: usize, threads: usize, budget_ms: u64) {
              serial_ns / r.median_ns.max(1e-9));
 }
 
+/// The serving-sized toy model (d=128, L=2, 90% sparse) shared by the
+/// end-to-end and prefill sweeps.
+fn bench_model() -> (elsa::runtime::ConfigEntry, Params) {
+    let cfg = synthetic_config("kern_bench", 128, 2, 4, 512, 256, 96);
+    let params = Params::init(&cfg, 0);
+    let pruned = magnitude::prune(&cfg, &params.flat,
+                                  &uniform_alloc(&cfg, 0.9))
+        .expect("magnitude prune");
+    (cfg.clone(), Params::new(&cfg, pruned))
+}
+
+/// Chunked vs per-token prefill, per backend: a near-seq_len prompt is
+/// consumed with `prefill_chunk = 1` (the old one-position-at-a-time
+/// cadence, head projection skipped all the same) and with the default
+/// window, after asserting the token streams are identical. The
+/// chunked rate must never fall below the per-token rate — prompt
+/// positions share one pass over each weight and the index/bitmap
+/// decode amortizes across the window — which is what the CI
+/// `min_chunked_pertoken_ratio` gate pins (aggregate over the sparse
+/// and dense backends).
+fn prefill_sweep(chunk: usize) -> (Vec<(&'static str, Value)>, f64) {
+    let (cfg, p) = bench_model();
+    let prompt_len = cfg.seq_len - 1;
+    let mut rng = Rng::new(5);
+    let prompt: Vec<u32> = (0..prompt_len)
+        .map(|_| rng.below(cfg.vocab) as u32)
+        .collect();
+    println!("== chunked prefill, {prompt_len}-token prompt, \
+              chunk {chunk} vs 1 ==");
+    // best-of-3 prefill seconds for the engine's current chunk setting
+    let best_prefill_s = |engine: &Engine| -> f64 {
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            let (_, stats) = engine.generate(&prompt, 1, 0.0, 0);
+            best = best.min(stats.prefill_seconds);
+        }
+        best
+    };
+    let mut cells: Vec<(&'static str, Value)> = Vec::new();
+    let (mut pertoken_total_s, mut chunked_total_s) = (0.0f64, 0.0f64);
+    for backend in [Backend::Dense, Backend::Csr, Backend::Macko] {
+        let mut engine = Engine::build(&p, backend).expect("engine");
+        engine.prefill_chunk = 1;
+        let (reference, _) = engine.generate(&prompt, 1, 0.0, 0); // warmup
+        let pertoken_s = best_prefill_s(&engine);
+        engine.prefill_chunk = chunk;
+        let (got, _) = engine.generate(&prompt, 1, 0.0, 0); // warmup
+        assert_eq!(got, reference,
+                   "{backend:?}: prefill chunking changed the stream");
+        let chunked_s = best_prefill_s(&engine);
+        pertoken_total_s += pertoken_s;
+        chunked_total_s += chunked_s;
+        let pertoken_tps = prompt_len as f64 / pertoken_s.max(1e-9);
+        let chunked_tps = prompt_len as f64 / chunked_s.max(1e-9);
+        println!("{:>6}: chunked {chunked_tps:9.1} prefill tok/s vs \
+                  per-token {pertoken_tps:9.1} (x{:.2}, identical \
+                  stream)",
+                 format!("{backend:?}"),
+                 chunked_tps / pertoken_tps.max(1e-9));
+        let key = match backend {
+            Backend::Dense => "dense_prefill",
+            Backend::Csr => "csr_prefill",
+            Backend::Macko => "macko_prefill",
+        };
+        cells.push((key, obj(vec![
+            ("tok_s", num(chunked_tps)),
+            ("pertoken_tok_s", num(pertoken_tps)),
+        ])));
+    }
+    let ratio = pertoken_total_s / chunked_total_s.max(1e-9);
+    println!("== aggregate chunked/per-token prefill ratio \
+              x{ratio:.2} ==\n");
+    (cells, ratio)
+}
+
 /// End-to-end batched decode per backend (tiled engine): the tok/s
 /// numbers the CI gate floors. Also reports macko with tiling off so
 /// regressions in the *dispatch* show up, not just in the kernels,
@@ -225,12 +305,7 @@ fn shard_sweep(dim: usize, threads: usize, budget_ms: u64) {
 /// runtime gate: the dispatch takes the serial branch structurally.)
 fn engine_sweep(n_new: usize, threads: usize)
                 -> (Vec<(&'static str, f64)>, f64) {
-    let cfg = synthetic_config("kern_bench", 128, 2, 4, 512, 256, 96);
-    let params = Params::init(&cfg, 0);
-    let pruned = magnitude::prune(&cfg, &params.flat,
-                                  &uniform_alloc(&cfg, 0.9))
-        .expect("magnitude prune");
-    let p = Params::new(&cfg, pruned);
+    let (cfg, p) = bench_model();
     let batch = 8usize;
     let prompt_len = 8usize;
     let mut rng = Rng::new(1);
@@ -330,6 +405,8 @@ fn main() {
 
     let (rows, per_fmt, agg_ratio) = kernel_sweep(dim, budget_ms);
     shard_sweep(if small { dim } else { 1024 }, threads, budget_ms);
+    let (prefill_cells, chunked_pertoken_ratio) =
+        prefill_sweep(elsa::infer::DEFAULT_PREFILL_CHUNK);
     let (engine, pooled_serial_ratio) = engine_sweep(n_new, threads);
 
     // machine-readable summary for the CI regression gate
@@ -342,9 +419,13 @@ fn main() {
         ("kernels", Value::Arr(rows)),
         ("tiled_untiled_ratio", num(agg_ratio)),
         ("pooled_serial_ratio", num(pooled_serial_ratio)),
+        ("chunked_pertoken_ratio", num(chunked_pertoken_ratio)),
     ];
     for &(key, ratio) in &per_fmt {
         top.push((key, num(ratio)));
+    }
+    for (key, cell) in prefill_cells {
+        top.push((key, cell));
     }
     for &(key, tps) in &engine {
         top.push((key, obj(vec![("tok_s", num(tps))])));

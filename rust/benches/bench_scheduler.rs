@@ -20,7 +20,10 @@
 //! groups running mostly-empty tails, while the scheduler keeps
 //! occupancy (and therefore SpMM amortization) high. ISSUE 4 adds:
 //! pooled decode serves the identical streams, with per-lane busy/idle
-//! accounting in the log.
+//! accounting in the log. ISSUE 5 adds: chunked vs per-token prefill
+//! rates on the serve path (`prefill_chunked_tok_s` /
+//! `prefill_pertoken_tok_s` in the summary; identical streams either
+//! way — the >= 1.0 ratio gate lives in the kernels section).
 //!
 //! Run: cargo bench --bench bench_scheduler [-- <threads> <requests>
 //! <max_slots> <shard_workers>]. Writes a machine-readable summary to
@@ -59,7 +62,7 @@ fn main() {
                                   &uniform_alloc(&cfg, 0.9))
         .expect("magnitude prune");
     let p = Params::new(&cfg, pruned);
-    let engine = Engine::build(&p, Backend::Macko).expect("engine");
+    let mut engine = Engine::build(&p, Backend::Macko).expect("engine");
 
     // the request stream: ragged budgets are what continuous admission
     // exploits (static groups idle through their longest member's tail)
@@ -165,6 +168,32 @@ fn main() {
               (bit-identical streams)",
              sp.tokens_per_second / sc.tokens_per_second.max(1e-9));
 
+    // chunked vs per-token prefill on the serve path: the same
+    // continuous queue drained with prefill_chunk = 1 (one prompt
+    // position per scheduler iteration) — streams must be identical;
+    // the headless-token rates go in the summary (the >= 1.0 ratio
+    // gate lives in the kernels section, on the isolated sweep)
+    let prefill_rate = |st: &elsa::infer::scheduler::SchedStats| {
+        st.prefill_tokens as f64 / st.prefill_seconds.max(1e-9)
+    };
+    let chunked_rate = prefill_rate(&sc);
+    engine.prefill_chunk = 1;
+    let queue =
+        RequestQueue::with_poisson_arrivals(reqs.clone(),
+                                            ARRIVAL_GAP_STEPS, 7);
+    let sched = Scheduler::new(&engine, sopts.clone());
+    let (fin, s1) = sched.run(queue);
+    for f in &fin {
+        assert_eq!(f.tokens, reference[f.id as usize],
+                   "per-token prefill diverged from generate on req {}",
+                   f.id);
+    }
+    let pertoken_rate = prefill_rate(&s1);
+    println!("prefill    : chunked {chunked_rate:9.1} tok/s \
+              ({} tokens, {} passes) vs per-token \
+              {pertoken_rate:9.1} tok/s (identical streams)",
+             sc.prefill_tokens, sc.prefill_chunks);
+
     // machine-readable summary for the CI regression gate
     let policy = |tps: f64, p50: f64, p95: f64, steps: u64| {
         obj(vec![
@@ -194,6 +223,9 @@ fn main() {
         ("shard_workers", num(shard_workers as f64)),
         ("shard_busy_s", num(busy)),
         ("shard_idle_s", num(idle)),
+        ("prefill_chunked_tok_s", num(chunked_rate)),
+        ("prefill_pertoken_tok_s", num(pertoken_rate)),
+        ("prefill_chunks", num(sc.prefill_chunks as f64)),
         ("kv_reused", num(sc.kv_reused as f64)),
         ("kv_allocated", num(sc.kv_allocated as f64)),
         ("speedup_x", num(speedup)),

@@ -8,12 +8,15 @@
 //!   infer     alias of generate; --batch N --threads N serves N
 //!             prompts through the batched engine
 //!             [--shard-workers M] splits each layer's linears across
-//!             M persistent row-band workers per thread
+//!             M persistent row-band workers per thread (batch 1 rides
+//!             the same pool); [--prefill-chunk C] sets the prompt
+//!             window of the chunked prefill pass (default 16)
 //!   serve     --config tiny --ckpt ckpt.bin --requests 32
 //!             --max-slots 8 --threads 4 [--shard-workers M]
-//!             [--arrival-gap 2.0] [--deadline STEPS] [--verbose] —
-//!             continuous-batching scheduler over a seeded Poisson-ish
-//!             request stream (slots × row bands)
+//!             [--prefill-chunk C] [--arrival-gap 2.0]
+//!             [--deadline STEPS] [--verbose] — continuous-batching
+//!             scheduler over a seeded Poisson-ish request stream
+//!             (slots × row bands, chunked prompt prefill)
 //!   exp       --id fig2|fig3|...|all [--scale quick|full] [--threads N]
 //!   report    --results results/
 

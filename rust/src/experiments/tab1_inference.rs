@@ -35,7 +35,7 @@ pub fn run(ctx: &Ctx, args: &Args) -> Result<()> {
         &format!("Table 1 — latency / throughput / memory ({model}, \
                   MACKO backend)"),
         &["sparsity", "latency_ms_per_tok", "speedup", "tokens_per_s",
-          "throughput_x", "memory", "compression_x"]);
+          "prefill_tok_s", "throughput_x", "memory", "compression_x"]);
 
     let n_new = cfg.seq_len - 8;
     let reps = match ctx.scale {
@@ -44,39 +44,46 @@ pub fn run(ctx: &Ctx, args: &Args) -> Result<()> {
     };
     let prompt: Vec<u32> = c4.valid[..8].to_vec();
 
-    let bench = |params: &Params, backend: Backend| -> Result<(f64, f64,
-                                                               usize)> {
+    let bench = |params: &Params, backend: Backend|
+                 -> Result<(f64, f64, f64, usize)> {
         let engine = Engine::build(params, backend)?;
         // warmup
         engine.generate(&prompt, n_new, 0.8, 0);
         let mut lat = crate::util::stats::Summary::new();
         let mut tps = crate::util::stats::Summary::new();
+        let mut pre = crate::util::stats::Summary::new();
         for r in 0..reps {
             let (_, stats) = engine.generate(&prompt, n_new, 0.8, r as u64);
             lat.push(stats.decode_seconds * 1e3
                      / stats.tokens_generated as f64);
             tps.push(stats.tokens_per_second);
+            // whole-prompt rate: chunked headless passes + the one
+            // head-projecting step, all timed as prefill
+            pre.push(prompt.len() as f64
+                     / stats.prefill_seconds.max(1e-9));
         }
-        Ok((lat.median(), tps.median(), engine.mem_bytes()))
+        Ok((lat.median(), tps.median(), pre.median(),
+            engine.mem_bytes()))
     };
 
     // dense reference uses the dense backend (what you'd actually deploy)
     let dense_params = Params::new(&cfg, dense.clone());
-    let (lat0, tps0, mem0) = bench(&dense_params, Backend::Dense)?;
+    let (lat0, tps0, pre0, mem0) = bench(&dense_params, Backend::Dense)?;
     table.row(vec!["dense".into(), f2(lat0), "x1.00".into(), f2(tps0),
-                   "x1.00".into(), human_bytes(mem0), "x1.00".into()]);
+                   f2(pre0), "x1.00".into(), human_bytes(mem0),
+                   "x1.00".into()]);
 
     for &sp in &SPARSITIES {
         let pruned = ctx.pruned_cached(&cfg, "elsa", sp, "", || {
             ctx.run_elsa(&cfg, &dense, &c4.train, sp, |_| {})
         })?;
         let p = Params::new(&cfg, pruned);
-        let (lat, tps, mem) = bench(&p, Backend::Macko)?;
+        let (lat, tps, pre, mem) = bench(&p, Backend::Macko)?;
         crate::info!("tab1", "{sp:.2}: {lat:.2} ms/tok ({:.2}x), \
                       {tps:.1} tok/s, {}", lat0 / lat, human_bytes(mem));
         table.row(vec![
             format!("{sp:.2}"), f2(lat),
-            format!("x{:.2}", lat0 / lat), f2(tps),
+            format!("x{:.2}", lat0 / lat), f2(tps), f2(pre),
             format!("x{:.2}", tps / tps0), human_bytes(mem),
             format!("x{:.2}", mem0 as f64 / mem as f64),
         ]);

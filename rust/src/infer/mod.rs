@@ -6,9 +6,14 @@
 //! numerics with model::forward (tested), so a pruned checkpoint can be
 //! loaded, converted, and served without touching the HLO path.
 //!
-//! Three serving modes:
-//!  - [`Engine::generate`]: one sequence, one matvec per linear per
-//!    token (the original microbenchmark path),
+//! There is exactly ONE forward implementation: the chunked prefill
+//! pass (`Engine::prefill_pass`) plus the batched decode step
+//! (`Engine::decode_step_batch`, both private). Every serving mode
+//! drives it:
+//!  - [`Engine::generate`] / [`Engine::generate_pooled`]: one
+//!    sequence, driven as a batch of 1 — so single-sequence decode
+//!    inherits the tiled kernels, the batched head projection, and
+//!    (via `generate_pooled`) the persistent row-band pool,
 //!  - [`Engine::generate_batch`]: many sequences with per-slot KV
 //!    caches and slot retirement; each step runs the linears as one
 //!    multi-vector SpMM over the live slots (amortizing index/bitmap
@@ -26,9 +31,27 @@
 //!    request queue with mid-decode slot admission and pooled KV
 //!    caches. `generate_batch` is a thin fixed-admission wrapper over
 //!    it.
+//!
+//! ## Chunked prefill
+//!
+//! Prompt positions are fed through the layers in windows of
+//! [`Engine::prefill_chunk`] positions (time-as-batch through the same
+//! batched kernels the decode step uses), with per-position causal
+//! attention over the growing cache — and the head projection (the
+//! single largest dense GEMV in the model, d_model × vocab) is skipped
+//! for every prompt position except the last: prefill costs exactly
+//! ONE head projection per request regardless of prompt length, where
+//! it used to cost one per prompt token. Chunking is a pure traversal
+//! change: each window row is bit-exact with the per-token path, and
+//! attending position `t` over the first `t + 1` cache entries replays
+//! the per-token accumulation order exactly, so token streams are
+//! bit-identical for every `prefill_chunk` value
+//! (`rust/tests/determinism.rs` sweeps the axis).
 
 pub mod pool;
 pub mod scheduler;
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::Result;
 
@@ -208,18 +231,22 @@ struct Kv {
     len: usize,
 }
 
-/// Causal multi-head attention for one sequence over its KV cache:
-/// reads the query vector `q` (len d), accumulates the weighted values
-/// into `o` (len d, caller-zeroed), using `probs` as softmax scratch.
-/// The single numerics implementation shared by the single-sequence
-/// and batched decode paths — keeping them bit-identical by
-/// construction.
-fn attend_cached(kv: &Kv, q: &[f32], o: &mut [f32], probs: &mut [f32],
-                 h: usize, dh: usize, scale: f32, d: usize) {
+/// Causal multi-head attention for one sequence over the first `upto`
+/// entries of its KV cache: reads the query vector `q` (len d),
+/// accumulates the weighted values into `o` (len d, caller-zeroed),
+/// using `probs` as softmax scratch. The single numerics
+/// implementation shared by the prefill and decode paths — keeping
+/// them bit-identical by construction: a chunked-prefill position `t`
+/// passes `upto = t + 1` and replays exactly the accumulation the
+/// per-token path would have run when the cache held `t + 1` entries.
+fn attend_cached(kv: &Kv, upto: usize, q: &[f32], o: &mut [f32],
+                 probs: &mut [f32], h: usize, dh: usize, scale: f32,
+                 d: usize) {
+    debug_assert!(upto <= kv.len);
     for hh in 0..h {
         let c0 = hh * dh;
         let qh = &q[c0..c0 + dh];
-        let pr = &mut probs[..kv.len];
+        let pr = &mut probs[..upto];
         let mut max = f32::NEG_INFINITY;
         for (j, p) in pr.iter_mut().enumerate() {
             let krow = &kv.k[j * d + c0..j * d + c0 + dh];
@@ -261,7 +288,23 @@ pub struct Engine {
     /// changes the traversal — `rust/tests/kernels.rs` asserts token
     /// streams match either way.
     pub tiled: bool,
+    /// Prompt positions fed per prefill window (`--prefill-chunk`,
+    /// default [`DEFAULT_PREFILL_CHUNK`]; clamped to >= 1 at use).
+    /// A pure traversal knob: every value produces bit-identical
+    /// token streams — chunking only changes how many positions share
+    /// one pass through the weights.
+    pub prefill_chunk: usize,
+    /// Rows projected through the dense head since construction (one
+    /// per (slot, step) of [`Engine::decode_step_batch`]; the chunked
+    /// prefill pass never projects). The prefill-efficiency probe:
+    /// serving a request must cost exactly one head row per generated
+    /// token — and in particular one per request for its whole prompt
+    /// — regardless of prompt length or chunk size.
+    head_rows: AtomicU64,
 }
+
+/// Default prompt window for the chunked prefill pass.
+pub const DEFAULT_PREFILL_CHUNK: usize = 16;
 
 impl Engine {
     /// Convert params: prunable matrices go to `backend` storage.
@@ -289,9 +332,18 @@ impl Engine {
                 b2: vec("mlp.b2")?,
             });
         }
+        let pos = params.matrix("pos")?;
+        // a positional table shorter than seq_len would silently
+        // recycle its last row mid-sequence; fail loudly at load time
+        // instead (the decode paths debug_assert the same invariant)
+        anyhow::ensure!(
+            pos.rows >= cfg.seq_len,
+            "checkpoint/config mismatch: positional table has {} rows \
+             but config '{}' declares seq_len {}",
+            pos.rows, cfg.name, cfg.seq_len);
         Ok(Engine {
             embed: params.matrix("embed")?,
-            pos: params.matrix("pos")?,
+            pos,
             layers,
             lnf_g: params.vector("lnf.g")?.to_vec(),
             lnf_b: params.vector("lnf.b")?.to_vec(),
@@ -299,7 +351,17 @@ impl Engine {
             cfg,
             backend,
             tiled: true,
+            prefill_chunk: DEFAULT_PREFILL_CHUNK,
+            head_rows: AtomicU64::new(0),
         })
+    }
+
+    /// Total rows projected through the dense head since this engine
+    /// was built (monotonic; shared across threads). Tests use deltas
+    /// of this counter to pin the chunked-prefill contract: exactly
+    /// one head projection per request for its whole prompt.
+    pub fn head_rows_projected(&self) -> u64 {
+        self.head_rows.load(Ordering::Relaxed)
     }
 
     /// Rebuild every layer's tile plan with an explicit byte budget
@@ -343,113 +405,289 @@ impl Engine {
         }
     }
 
-    /// One decode step: append `token` at position `t`, return logits.
-    fn decode_step(&self, kvs: &mut [Kv], token: u32, t: usize,
-                   scratch: &mut Scratch) -> Vec<f32> {
+    /// First half of one layer for `b` packed rows of `scratch.x`:
+    /// ln1 into `scratch.xa`, then the Q/K/V projections. Shared
+    /// verbatim by the prefill pass and the decode step — the two
+    /// drivers differ only in how rows map onto KV caches, so the
+    /// projection halves live here exactly once.
+    fn layer_qkv(&self, l: &Layer, b: usize, scratch: &mut BatchScratch,
+                 pool: &WorkerPool) {
+        let d = self.cfg.d_model;
+        for r in 0..b {
+            Self::layernorm_vec(&scratch.x[r * d..(r + 1) * d],
+                                &l.ln1_g, &l.ln1_b,
+                                &mut scratch.xa[r * d..(r + 1) * d]);
+        }
+        l.wq.matvec_batch_exec(&scratch.xa[..b * d],
+                               &mut scratch.q[..b * d], b,
+                               &mut scratch.spmm, self.tiled, pool);
+        l.wk.matvec_batch_exec(&scratch.xa[..b * d],
+                               &mut scratch.k[..b * d], b,
+                               &mut scratch.spmm, self.tiled, pool);
+        l.wv.matvec_batch_exec(&scratch.xa[..b * d],
+                               &mut scratch.v[..b * d], b,
+                               &mut scratch.spmm, self.tiled, pool);
+    }
+
+    /// Second half of one layer for `b` packed rows: O-projection of
+    /// `scratch.o` + residual into `scratch.x`, then ln2 / W1 / gelu /
+    /// W2 + residual. Shared verbatim by the prefill pass and the
+    /// decode step (see [`Engine::layer_qkv`]).
+    fn layer_ffn(&self, l: &Layer, b: usize, scratch: &mut BatchScratch,
+                 pool: &WorkerPool) {
+        let d = self.cfg.d_model;
+        let dff = self.cfg.d_ff;
+        l.wo.matvec_batch_exec(&scratch.o[..b * d],
+                               &mut scratch.tmp_d[..b * d], b,
+                               &mut scratch.spmm, self.tiled, pool);
+        for i in 0..b * d {
+            scratch.x[i] += scratch.tmp_d[i];
+        }
+
+        for r in 0..b {
+            Self::layernorm_vec(&scratch.x[r * d..(r + 1) * d],
+                                &l.ln2_g, &l.ln2_b,
+                                &mut scratch.xa[r * d..(r + 1) * d]);
+        }
+        l.w1.matvec_batch_exec(&scratch.xa[..b * d],
+                               &mut scratch.ff[..b * dff], b,
+                               &mut scratch.spmm, self.tiled, pool);
+        for r in 0..b {
+            let frow = &mut scratch.ff[r * dff..(r + 1) * dff];
+            for (f, bias) in frow.iter_mut().zip(l.b1.iter()) {
+                *f = gelu_tanh(*f + bias);
+            }
+        }
+        l.w2.matvec_batch_exec(&scratch.ff[..b * dff],
+                               &mut scratch.tmp_d[..b * d], b,
+                               &mut scratch.spmm, self.tiled, pool);
+        for r in 0..b {
+            for c in 0..d {
+                scratch.x[r * d + c] +=
+                    scratch.tmp_d[r * d + c] + l.b2[c];
+            }
+        }
+    }
+
+    /// Headless chunked prefill: feed the next `n` prompt positions of
+    /// `slot` through every layer as ONE pass — the window is the
+    /// batch dimension of the same [`WeightFmt::matvec_batch_exec`]
+    /// kernels the decode step uses, so prompt projections get the
+    /// tiled/pooled traversals for free — with per-position causal
+    /// attention over the cache prefix. No final layernorm and no head
+    /// projection: the caller feeds the *last* prompt position through
+    /// [`Engine::decode_step_batch`], which projects the head exactly
+    /// once for the whole prompt. The layer math itself is the shared
+    /// [`Engine::layer_qkv`]/[`Engine::layer_ffn`] halves — only the
+    /// row→KV mapping (one slot, window rows, prefix attention) lives
+    /// here.
+    ///
+    /// Bit-exactness: row `r` of every batched linear is bit-exact
+    /// with the single-vector matvec on that position alone, and
+    /// position `t` attends over the first `t + 1` cache entries in
+    /// the per-token accumulation order — so the residual stream (and
+    /// therefore every downstream token) is bit-identical for any
+    /// window size.
+    ///
+    /// Requires `slot.fed + n < slot.tokens.len()` (the final prompt
+    /// position is the unified step's job) and `n <= prefill_chunk`
+    /// capacity of `scratch`.
+    fn prefill_pass(&self, slot: &mut Slot, n: usize,
+                    scratch: &mut BatchScratch, pool: &WorkerPool) {
+        debug_assert!(n >= 1);
+        debug_assert!(slot.fed + n < slot.tokens.len(),
+                      "prefill window must leave the final prompt \
+                       position for the head-projecting step");
+        let b = n; // time-as-batch
         let d = self.cfg.d_model;
         let h = self.cfg.n_heads;
         let dh = d / h;
         let scale = 1.0 / (dh as f32).sqrt();
+        let t0 = slot.fed;
 
-        let e = self.embed.row(token as usize);
-        let pr = self.pos.row(t.min(self.pos.rows - 1));
-        let x = &mut scratch.x;
-        for c in 0..d {
-            x[c] = e[c] + pr[c];
-        }
-
-        for (l, kv) in self.layers.iter().zip(kvs.iter_mut()) {
-            Self::layernorm_vec(x, &l.ln1_g, &l.ln1_b, &mut scratch.xa);
-            l.wq.matvec(&scratch.xa, &mut scratch.q);
-            l.wk.matvec(&scratch.xa, &mut scratch.k);
-            l.wv.matvec(&scratch.xa, &mut scratch.v);
-            kv.k.extend_from_slice(&scratch.k);
-            kv.v.extend_from_slice(&scratch.v);
-            kv.len += 1;
-
-            // attention over the cache, per head
-            let o = &mut scratch.o;
-            o.iter_mut().for_each(|v| *v = 0.0);
-            attend_cached(kv, &scratch.q, o, &mut scratch.probs,
-                          h, dh, scale, d);
-            l.wo.matvec(o, &mut scratch.tmp_d);
+        // embed + positional for each window position
+        for r in 0..n {
+            let t = t0 + r;
+            // unreachable once the seq_len prompt guards hold; the
+            // loud mismatch error lives in Engine::build
+            debug_assert!(t < self.pos.rows);
+            let e = self.embed.row(slot.tokens[t] as usize);
+            let pr = self.pos.row(t);
+            let xrow = &mut scratch.x[r * d..(r + 1) * d];
             for c in 0..d {
-                x[c] += scratch.tmp_d[c];
-            }
-
-            Self::layernorm_vec(x, &l.ln2_g, &l.ln2_b, &mut scratch.xa);
-            l.w1.matvec(&scratch.xa, &mut scratch.ff);
-            for (f, b) in scratch.ff.iter_mut().zip(l.b1.iter()) {
-                *f = gelu_tanh(*f + b);
-            }
-            l.w2.matvec(&scratch.ff, &mut scratch.tmp_d);
-            for c in 0..d {
-                x[c] += scratch.tmp_d[c] + l.b2[c];
+                xrow[c] = e[c] + pr[c];
             }
         }
 
-        Self::layernorm_vec(x, &self.lnf_g, &self.lnf_b, &mut scratch.xa);
-        self.head.t_matvec(&scratch.xa)
+        for (li, l) in self.layers.iter().enumerate() {
+            self.layer_qkv(l, b, scratch, pool);
+
+            // append the whole window's K/V, then attend each position
+            // causally over its own prefix of the cache
+            let kv = &mut slot.kvs[li];
+            kv.k.extend_from_slice(&scratch.k[..n * d]);
+            kv.v.extend_from_slice(&scratch.v[..n * d]);
+            kv.len += n;
+            for r in 0..n {
+                let orow = &mut scratch.o[r * d..(r + 1) * d];
+                orow.iter_mut().for_each(|v| *v = 0.0);
+                attend_cached(kv, t0 + r + 1,
+                              &scratch.q[r * d..(r + 1) * d], orow,
+                              &mut scratch.probs, h, dh, scale, d);
+            }
+
+            self.layer_ffn(l, b, scratch, pool);
+        }
+        // no lnf, no head: prompt logits before the last position are
+        // never read, so computing them would be pure waste
+        slot.fed += n;
+    }
+
+    /// Drive `slot`'s whole prompt: chunked headless passes over
+    /// positions `0..len-1`, then the final position through the
+    /// unified decode step (ONE head projection). Leaves the slot with
+    /// logits for its last prompt token. Returns the number of chunked
+    /// passes run. `slot.tokens` must be non-empty.
+    fn prefill_slot(&self, slot: &mut Slot, scratch: &mut BatchScratch,
+                    pool: &WorkerPool) -> usize {
+        let last = slot.tokens.len() - 1;
+        let chunk = self.prefill_chunk.max(1);
+        let mut chunks = 0usize;
+        while slot.fed < last {
+            let n = chunk.min(last - slot.fed);
+            self.prefill_pass(slot, n, scratch, pool);
+            chunks += 1;
+        }
+        self.decode_step_batch(std::slice::from_mut(slot), &[0],
+                               scratch, pool);
+        chunks
     }
 
     /// Greedy/temperature generation. Returns (tokens, decode stats).
+    /// A thin batch-of-1 driver over the unified forward
+    /// implementation (chunked prefill + batched decode step) — see
+    /// [`Engine::generate_pooled`], which this calls with a
+    /// single-lane (inline, spawn-free) pool.
+    ///
+    /// An empty prompt returns zero tokens — the same rule as
+    /// [`Engine::generate_batch`] (there is nothing to condition on).
     pub fn generate(&self, prompt: &[u32], n_new: usize, temperature: f32,
                     seed: u64) -> (Vec<u32>, GenStats) {
-        let d = self.cfg.d_model;
-        let max_t = self.cfg.seq_len;
-        let mut kvs: Vec<Kv> = (0..self.cfg.n_layers)
-            .map(|_| Kv { k: Vec::with_capacity(max_t * d),
-                          v: Vec::with_capacity(max_t * d), len: 0 })
-            .collect();
-        let mut scratch = Scratch::new(&self.cfg);
-        let mut rng = Rng::new(seed);
-        let mut out = prompt.to_vec();
+        self.generate_pooled(prompt, n_new, temperature, seed,
+                             &WorkerPool::new(1))
+    }
 
-        // prefill (timed separately)
-        let tp = Timer::start();
-        let mut logits = vec![];
-        for (t, &tok) in prompt.iter().enumerate() {
-            logits = self.decode_step(&mut kvs, tok, t, &mut scratch);
-        }
-        let prefill_s = tp.seconds();
-
-        let td = Timer::start();
-        for i in 0..n_new {
-            let t = prompt.len() + i;
-            if t >= max_t {
-                break;
-            }
-            let next = sample(&logits, temperature, &mut rng);
-            out.push(next);
-            logits = self.decode_step(&mut kvs, next, t, &mut scratch);
-        }
-        let decode_s = td.seconds();
-        let generated = out.len() - prompt.len();
-        (out, GenStats {
-            prefill_seconds: prefill_s,
-            decode_seconds: decode_s,
-            tokens_generated: generated,
-            tokens_per_second: generated as f64 / decode_s.max(1e-9),
+    /// [`Engine::generate`] with an explicit row-band shard pool:
+    /// single-sequence decode fans every linear — and the head
+    /// projection — across the pool's persistent lanes when it has
+    /// more than one (`elsa infer --shard-workers M`). Tokens are
+    /// bit-identical for any pool width; the pool is only a traversal.
+    pub fn generate_pooled(&self, prompt: &[u32], n_new: usize,
+                           temperature: f32, seed: u64,
+                           pool: &WorkerPool) -> (Vec<u32>, GenStats) {
+        assert!(prompt.len() <= self.cfg.seq_len,
+                "prompt of {} tokens exceeds seq_len {}", prompt.len(),
+                self.cfg.seq_len);
+        let mut stats = GenStats {
+            prefill_seconds: 0.0,
+            decode_seconds: 0.0,
+            tokens_generated: 0,
+            tokens_per_second: 0.0,
             mem_bytes: self.mem_bytes(),
+            prefill_tokens: 0,
+            prefill_chunks: 0,
             shard_busy_seconds: 0.0,
             shard_idle_seconds: 0.0,
-        })
+        };
+        if prompt.is_empty() {
+            return (Vec::new(), stats);
+        }
+        let d = self.cfg.d_model;
+        let cap = self.cfg.seq_len * d;
+        let mut slot = Slot {
+            tokens: prompt.to_vec(),
+            prompt_len: prompt.len(),
+            fed: 0,
+            kvs: (0..self.cfg.n_layers)
+                .map(|_| Kv { k: Vec::with_capacity(cap),
+                              v: Vec::with_capacity(cap), len: 0 })
+                .collect(),
+            rng: Rng::new(seed),
+            logits: vec![],
+            generated: 0,
+            n_new,
+        };
+        let mut scratch =
+            BatchScratch::new(&self.cfg, 1, self.prefill_chunk.max(1));
+        let p0 = pool.stats();
+
+        let tp = Timer::start();
+        stats.prefill_chunks = self.prefill_slot(&mut slot, &mut scratch,
+                                                 pool);
+        // same semantics as SchedStats: positions fed headless (the
+        // final prompt position rides the head-projecting step)
+        stats.prefill_tokens = prompt.len() - 1;
+        stats.prefill_seconds = tp.seconds();
+
+        let td = Timer::start();
+        while slot.generated < slot.n_new
+            && slot.tokens.len() < self.cfg.seq_len
+        {
+            let next = sample(&slot.logits, temperature, &mut slot.rng);
+            slot.tokens.push(next);
+            slot.generated += 1;
+            if slot.generated >= slot.n_new
+                || slot.tokens.len() >= self.cfg.seq_len
+            {
+                // budget hit: its logits would never be read, so skip
+                // the forward pass (same rule as the scheduler)
+                break;
+            }
+            self.decode_step_batch(std::slice::from_mut(&mut slot), &[0],
+                                   &mut scratch, pool);
+        }
+        stats.decode_seconds = td.seconds();
+        stats.tokens_generated = slot.generated;
+        stats.tokens_per_second =
+            slot.generated as f64 / stats.decode_seconds.max(1e-9);
+        if pool.width() > 1 {
+            let p1 = pool.stats();
+            stats.shard_busy_seconds = p1.busy_total() - p0.busy_total();
+            stats.shard_idle_seconds = p1.idle_total() - p0.idle_total();
+        }
+        (slot.tokens, stats)
     }
 
     /// Feed `tokens` through a fresh KV cache and return the logits
     /// after the last token (test/debug helper for the parity suite).
+    /// Rides the same chunked prefill + unified step as every other
+    /// path: one head projection total, regardless of `tokens.len()`.
     pub fn logits_for(&self, tokens: &[u32]) -> Vec<f32> {
-        let d = self.cfg.d_model;
-        let mut kvs: Vec<Kv> = (0..self.cfg.n_layers)
-            .map(|_| Kv { k: Vec::with_capacity(tokens.len() * d),
-                          v: Vec::with_capacity(tokens.len() * d), len: 0 })
-            .collect();
-        let mut scratch = Scratch::new(&self.cfg);
-        let mut logits = vec![];
-        for (t, &tok) in tokens.iter().enumerate() {
-            logits = self.decode_step(&mut kvs, tok, t, &mut scratch);
+        assert!(tokens.len() <= self.cfg.seq_len,
+                "prompt of {} tokens exceeds seq_len {}", tokens.len(),
+                self.cfg.seq_len);
+        if tokens.is_empty() {
+            return Vec::new();
         }
-        logits
+        let d = self.cfg.d_model;
+        let cap = tokens.len() * d;
+        let mut slot = Slot {
+            tokens: tokens.to_vec(),
+            prompt_len: tokens.len(),
+            fed: 0,
+            kvs: (0..self.cfg.n_layers)
+                .map(|_| Kv { k: Vec::with_capacity(cap),
+                              v: Vec::with_capacity(cap), len: 0 })
+                .collect(),
+            rng: Rng::new(0),
+            logits: vec![],
+            generated: 0,
+            n_new: 0,
+        };
+        let mut scratch =
+            BatchScratch::new(&self.cfg, 1, self.prefill_chunk.max(1));
+        self.prefill_slot(&mut slot, &mut scratch, &WorkerPool::new(1));
+        slot.logits
     }
 
     /// Batched generation over many prompts with per-slot KV caches and
@@ -468,11 +706,10 @@ impl Engine {
     /// row-band shards are disjoint, so lane count cannot reorder an
     /// accumulation), and each slot samples from its own seeded RNG.
     ///
-    /// Prompts may be ragged. The one deliberate divergence from the
-    /// single-sequence path is the degenerate empty prompt: a slot with
-    /// no prompt retires immediately with zero tokens (there is nothing
-    /// to condition on), whereas `generate(&[], ..)` falls back to
-    /// emitting token 0 and continuing from it.
+    /// Prompts may be ragged. A slot with an empty prompt retires
+    /// immediately with zero tokens (there is nothing to condition
+    /// on) — the same rule `generate(&[], ..)` follows, so the two
+    /// paths agree on every input.
     pub fn generate_batch(&self, prompts: &[Vec<u32>], opts: &BatchOptions)
                           -> (Vec<Vec<u32>>, GenStats) {
         for p in prompts {
@@ -507,6 +744,8 @@ impl Engine {
             tokens_per_second: st.tokens_generated as f64
                 / st.decode_seconds.max(1e-9),
             mem_bytes: self.mem_bytes(),
+            prefill_tokens: st.prefill_tokens,
+            prefill_chunks: st.prefill_chunks,
             shard_busy_seconds: st.shard_busy_seconds.iter().sum(),
             shard_idle_seconds: st.shard_idle_seconds.iter().sum(),
         })
@@ -524,7 +763,6 @@ impl Engine {
                          scratch: &mut BatchScratch, pool: &WorkerPool) {
         let b = active.len();
         let d = self.cfg.d_model;
-        let dff = self.cfg.d_ff;
         let h = self.cfg.n_heads;
         let dh = d / h;
         let scale = 1.0 / (dh as f32).sqrt();
@@ -533,8 +771,11 @@ impl Engine {
         for (bi, &si) in active.iter().enumerate() {
             let s = &slots[si];
             let t = s.fed;
+            // unreachable once the seq_len prompt guards hold; the
+            // loud mismatch error lives in Engine::build
+            debug_assert!(t < self.pos.rows);
             let e = self.embed.row(s.tokens[t] as usize);
-            let pr = self.pos.row(t.min(self.pos.rows - 1));
+            let pr = self.pos.row(t);
             let xrow = &mut scratch.x[bi * d..(bi + 1) * d];
             for c in 0..d {
                 xrow[c] = e[c] + pr[c];
@@ -542,20 +783,7 @@ impl Engine {
         }
 
         for (li, l) in self.layers.iter().enumerate() {
-            for bi in 0..b {
-                Self::layernorm_vec(&scratch.x[bi * d..(bi + 1) * d],
-                                    &l.ln1_g, &l.ln1_b,
-                                    &mut scratch.xa[bi * d..(bi + 1) * d]);
-            }
-            l.wq.matvec_batch_exec(&scratch.xa[..b * d],
-                                   &mut scratch.q[..b * d], b,
-                                   &mut scratch.spmm, self.tiled, pool);
-            l.wk.matvec_batch_exec(&scratch.xa[..b * d],
-                                   &mut scratch.k[..b * d], b,
-                                   &mut scratch.spmm, self.tiled, pool);
-            l.wv.matvec_batch_exec(&scratch.xa[..b * d],
-                                   &mut scratch.v[..b * d], b,
-                                   &mut scratch.spmm, self.tiled, pool);
+            self.layer_qkv(l, b, scratch, pool);
 
             // per-slot attention over each slot's own cache
             for (bi, &si) in active.iter().enumerate() {
@@ -566,55 +794,38 @@ impl Engine {
 
                 let orow = &mut scratch.o[bi * d..(bi + 1) * d];
                 orow.iter_mut().for_each(|v| *v = 0.0);
-                attend_cached(kv, &scratch.q[bi * d..(bi + 1) * d],
+                attend_cached(kv, kv.len,
+                              &scratch.q[bi * d..(bi + 1) * d],
                               orow, &mut scratch.probs, h, dh, scale, d);
             }
-            l.wo.matvec_batch_exec(&scratch.o[..b * d],
-                                   &mut scratch.tmp_d[..b * d], b,
-                                   &mut scratch.spmm, self.tiled, pool);
-            for i in 0..b * d {
-                scratch.x[i] += scratch.tmp_d[i];
-            }
 
-            for bi in 0..b {
-                Self::layernorm_vec(&scratch.x[bi * d..(bi + 1) * d],
-                                    &l.ln2_g, &l.ln2_b,
-                                    &mut scratch.xa[bi * d..(bi + 1) * d]);
-            }
-            l.w1.matvec_batch_exec(&scratch.xa[..b * d],
-                                   &mut scratch.ff[..b * dff], b,
-                                   &mut scratch.spmm, self.tiled, pool);
-            for bi in 0..b {
-                let frow = &mut scratch.ff[bi * dff..(bi + 1) * dff];
-                for (f, bias) in frow.iter_mut().zip(l.b1.iter()) {
-                    *f = gelu_tanh(*f + bias);
-                }
-            }
-            l.w2.matvec_batch_exec(&scratch.ff[..b * dff],
-                                   &mut scratch.tmp_d[..b * d], b,
-                                   &mut scratch.spmm, self.tiled, pool);
-            for bi in 0..b {
-                for c in 0..d {
-                    scratch.x[bi * d + c] +=
-                        scratch.tmp_d[bi * d + c] + l.b2[c];
-                }
-            }
+            self.layer_ffn(l, b, scratch, pool);
         }
 
         // final layernorm per slot, then ONE batched head projection
         // over the packed activations: the head matrix is streamed
         // once per step via `t_matmat` regardless of how many slots
         // are live (it used to be one `t_matvec` per slot per step).
-        // Row bi of the batched GEMM is bit-identical to
-        // `t_matvec(xa_bi)`, so every slot's logits are unchanged.
+        // With a multi-lane pool the projection's output columns are
+        // fanned across the persistent lanes instead
+        // (`tile::pool_t_matmat`). Row bi of either GEMM is
+        // bit-identical to `t_matvec(xa_bi)`, so every slot's logits
+        // are unchanged.
         for bi in 0..b {
             Self::layernorm_vec(&scratch.x[bi * d..(bi + 1) * d],
                                 &self.lnf_g, &self.lnf_b,
                                 &mut scratch.xa[bi * d..(bi + 1) * d]);
         }
         let vocab = self.head.cols;
-        self.head.t_matmat(&scratch.xa[..b * d],
-                           &mut scratch.logits[..b * vocab], b);
+        self.head_rows.fetch_add(b as u64, Ordering::Relaxed);
+        if pool.width() > 1 {
+            tile::pool_t_matmat(&self.head, &scratch.xa[..b * d],
+                                &mut scratch.logits[..b * vocab], b,
+                                pool);
+        } else {
+            self.head.t_matmat(&scratch.xa[..b * d],
+                               &mut scratch.logits[..b * vocab], b);
+        }
         for (bi, &si) in active.iter().enumerate() {
             let s = &mut slots[si];
             s.logits.resize(vocab, 0.0);
@@ -674,38 +885,12 @@ struct Slot {
     n_new: usize,
 }
 
-struct Scratch {
-    x: Vec<f32>,
-    xa: Vec<f32>,
-    q: Vec<f32>,
-    k: Vec<f32>,
-    v: Vec<f32>,
-    o: Vec<f32>,
-    ff: Vec<f32>,
-    tmp_d: Vec<f32>,
-    probs: Vec<f32>,
-}
-
-impl Scratch {
-    fn new(cfg: &ConfigEntry) -> Scratch {
-        let d = cfg.d_model;
-        Scratch {
-            x: vec![0.0; d],
-            xa: vec![0.0; d],
-            q: vec![0.0; d],
-            k: vec![0.0; d],
-            v: vec![0.0; d],
-            o: vec![0.0; d],
-            ff: vec![0.0; cfg.d_ff],
-            tmp_d: vec![0.0; d],
-            probs: vec![0.0; cfg.seq_len],
-        }
-    }
-}
-
-/// Scratch for the batched decode path: row-major (b, ·) activation
-/// buffers sized for the shard's slot count; steps with fewer active
-/// slots use prefixes of each buffer.
+/// Scratch for the unified forward implementation: row-major (rows, ·)
+/// activation buffers sized for `max(slot count, prefill window)` —
+/// the decode step batches over slots, the prefill pass batches over
+/// prompt positions, and both use prefixes of the same buffers. The
+/// logits staging is sized for the slot count only: prefill never
+/// projects the head.
 struct BatchScratch {
     x: Vec<f32>,
     xa: Vec<f32>,
@@ -724,19 +909,23 @@ struct BatchScratch {
 }
 
 impl BatchScratch {
-    fn new(cfg: &ConfigEntry, b: usize) -> BatchScratch {
+    /// `slots` bounds the decode step's batch; `chunk` bounds the
+    /// prefill window (a window never exceeds `seq_len - 1` positions,
+    /// so an oversized `--prefill-chunk` costs nothing extra here).
+    fn new(cfg: &ConfigEntry, slots: usize, chunk: usize) -> BatchScratch {
         let d = cfg.d_model;
+        let rows = slots.max(chunk.min(cfg.seq_len)).max(1);
         BatchScratch {
-            x: vec![0.0; b * d],
-            xa: vec![0.0; b * d],
-            q: vec![0.0; b * d],
-            k: vec![0.0; b * d],
-            v: vec![0.0; b * d],
-            o: vec![0.0; b * d],
-            ff: vec![0.0; b * cfg.d_ff],
-            tmp_d: vec![0.0; b * d],
+            x: vec![0.0; rows * d],
+            xa: vec![0.0; rows * d],
+            q: vec![0.0; rows * d],
+            k: vec![0.0; rows * d],
+            v: vec![0.0; rows * d],
+            o: vec![0.0; rows * d],
+            ff: vec![0.0; rows * cfg.d_ff],
+            tmp_d: vec![0.0; rows * d],
             probs: vec![0.0; cfg.seq_len],
-            logits: vec![0.0; b * cfg.vocab],
+            logits: vec![0.0; slots.max(1) * cfg.vocab],
             spmm: SpmmScratch::default(),
         }
     }
@@ -767,6 +956,13 @@ pub struct GenStats {
     pub tokens_generated: usize,
     pub tokens_per_second: f64,
     pub mem_bytes: usize,
+    /// Prompt positions fed through the headless chunked prefill pass
+    /// (the final prompt position of each request rides the unified
+    /// decode step instead — that is its one head projection).
+    pub prefill_tokens: usize,
+    /// Chunked prefill passes run (`ceil((len - 1) / prefill_chunk)`
+    /// per non-empty prompt).
+    pub prefill_chunks: usize,
     /// Seconds the decode pool's shard lanes spent executing row-band
     /// jobs, summed over lanes and scheduler workers (0 when
     /// `shard_workers <= 1` — the pool is never dispatched).
@@ -779,9 +975,12 @@ pub struct GenStats {
 /// `elsa generate` / `elsa infer` subcommand. `--batch N` serves N
 /// prompts through the batched engine; `--threads N` shards the batch
 /// across worker threads; `--shard-workers M` additionally shards each
-/// layer's linears across M persistent row-band workers per thread;
-/// `--untiled` falls back to the untiled SpMM kernels (bit-identical
-/// output, for perf comparisons).
+/// layer's linears across M persistent row-band workers per thread
+/// (single-sequence decode uses the same pool via
+/// [`Engine::generate_pooled`]); `--prefill-chunk C` sets the prompt
+/// window of the chunked prefill pass; `--untiled` falls back to the
+/// untiled SpMM kernels (every knob is bit-identical output, for perf
+/// comparisons).
 pub fn cmd_generate(args: &Args) -> Result<()> {
     let rt = crate::commands::open_runtime(args)?;
     let ck = crate::model::checkpoint::Checkpoint::load(
@@ -792,6 +991,8 @@ pub fn cmd_generate(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow::anyhow!("bad --backend"))?;
     let mut engine = Engine::build(&params, backend)?;
     engine.tiled = !args.bool("untiled");
+    engine.prefill_chunk =
+        args.usize_or("prefill-chunk", DEFAULT_PREFILL_CHUNK)?.max(1);
 
     let g = crate::data::Grammar::named(
         &args.str_or("dataset", "synth-c4"), cfg.vocab);
@@ -806,15 +1007,26 @@ pub fn cmd_generate(args: &Args) -> Result<()> {
     if batch <= 1 {
         let prompt = g.generate(prompt_len, seed);
         // sample with `seed` so --batch 1 and slot 0 of --batch N are
-        // the same request
+        // the same request; single-sequence decode owns its own
+        // row-band pool (bands are the only sharding axis here)
+        let pool = WorkerPool::new(shard_workers.max(1));
         let (tokens, stats) =
-            engine.generate(&prompt, n_new, temperature, seed);
+            engine.generate_pooled(&prompt, n_new, temperature, seed,
+                                   &pool);
         println!("prompt  {:?}", &tokens[..prompt_len]);
         println!("output  {:?}", &tokens[prompt_len..]);
         println!("sparsity {:.4}", params.sparsity());
         println!("backend {:?}", backend);
         println!("tokens_per_s {:.2}", stats.tokens_per_second);
         println!("decode_s {:.4}", stats.decode_seconds);
+        println!("prefill_s {:.4} ({} tokens, {} chunk passes, \
+                  chunk {})",
+                 stats.prefill_seconds, stats.prefill_tokens,
+                 stats.prefill_chunks, engine.prefill_chunk);
+        if shard_workers > 1 {
+            println!("shard_busy_s {:.4} shard_idle_s {:.4}",
+                     stats.shard_busy_seconds, stats.shard_idle_seconds);
+        }
         println!("mem {}", crate::util::human_bytes(stats.mem_bytes));
     } else {
         let prompts: Vec<Vec<u32>> = (0..batch)
@@ -840,6 +1052,10 @@ pub fn cmd_generate(args: &Args) -> Result<()> {
         println!("tokens_generated {}", stats.tokens_generated);
         println!("agg_tokens_per_s {:.2}", stats.tokens_per_second);
         println!("decode_s {:.4}", stats.decode_seconds);
+        println!("prefill_s {:.4} ({} tokens, {} chunk passes, \
+                  chunk {})",
+                 stats.prefill_seconds, stats.prefill_tokens,
+                 stats.prefill_chunks, engine.prefill_chunk);
         println!("mem {}", crate::util::human_bytes(stats.mem_bytes));
     }
     Ok(())
@@ -861,20 +1077,100 @@ mod tests {
         let tokens = [1u32, 5, 9, 2, 7];
         let expect = forward_seq(&p, &tokens, None).unwrap();
         for backend in [Backend::Dense, Backend::Csr, Backend::Macko] {
-            let engine = Engine::build(&p, backend).unwrap();
-            let mut kvs: Vec<Kv> = (0..p.cfg.n_layers)
-                .map(|_| Kv { k: vec![], v: vec![], len: 0 })
-                .collect();
-            let mut scratch = Scratch::new(&p.cfg);
-            let mut logits = vec![];
-            for (t, &tok) in tokens.iter().enumerate() {
-                logits = engine.decode_step(&mut kvs, tok, t, &mut scratch);
+            // sweep the chunk axis through the one forward
+            // implementation: logits must match the HLO-path reference
+            // for every window size
+            for chunk in [1usize, 2, 16] {
+                let mut engine = Engine::build(&p, backend).unwrap();
+                engine.prefill_chunk = chunk;
+                let logits = engine.logits_for(&tokens);
+                let last = expect.row(tokens.len() - 1);
+                for (a, b) in logits.iter().zip(last.iter()) {
+                    assert!((a - b).abs() < 1e-4,
+                            "{backend:?} chunk={chunk}: {a} vs {b}");
+                }
             }
-            let last = expect.row(tokens.len() - 1);
-            for (a, b) in logits.iter().zip(last.iter()) {
-                assert!((a - b).abs() < 1e-4,
-                        "{backend:?}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn prefill_chunk_cannot_change_tokens_or_logits() {
+        let mut p = toy();
+        let alloc = crate::pruners::uniform_alloc(&p.cfg, 0.7);
+        p.flat = crate::pruners::magnitude::prune(&p.cfg, &p.flat, &alloc)
+            .unwrap();
+        let prompt = [1u32, 5, 9, 2, 7, 3];
+        for backend in [Backend::Dense, Backend::Csr, Backend::Macko] {
+            let mut engine = Engine::build(&p, backend).unwrap();
+            engine.prefill_chunk = 1;
+            let (want, _) = engine.generate(&prompt, 4, 0.9, 11);
+            let want_logits = engine.logits_for(&prompt);
+            for chunk in [2usize, 3, 16] {
+                engine.prefill_chunk = chunk;
+                let (got, _) = engine.generate(&prompt, 4, 0.9, 11);
+                assert_eq!(got, want, "{backend:?} chunk={chunk}");
+                assert_eq!(engine.logits_for(&prompt), want_logits,
+                           "{backend:?} chunk={chunk} logits");
             }
+        }
+    }
+
+    #[test]
+    fn empty_prompt_generate_matches_batch_rule() {
+        let p = toy();
+        let engine = Engine::build(&p, Backend::Macko).unwrap();
+        let (out, stats) = engine.generate(&[], 5, 0.8, 3);
+        assert!(out.is_empty(),
+                "empty prompt must produce zero tokens, like the batch \
+                 path");
+        assert_eq!(stats.tokens_generated, 0);
+        assert!(engine.logits_for(&[]).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds seq_len")]
+    fn generate_rejects_oversized_prompt() {
+        let p = toy();
+        let engine = Engine::build(&p, Backend::Dense).unwrap();
+        let long: Vec<u32> = (0..p.cfg.seq_len + 1)
+            .map(|i| (i % p.cfg.vocab) as u32)
+            .collect();
+        engine.generate(&long, 1, 0.0, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds seq_len")]
+    fn logits_for_rejects_oversized_prompt() {
+        let p = toy();
+        let engine = Engine::build(&p, Backend::Dense).unwrap();
+        let long: Vec<u32> = (0..p.cfg.seq_len + 1)
+            .map(|i| (i % p.cfg.vocab) as u32)
+            .collect();
+        engine.logits_for(&long);
+    }
+
+    #[test]
+    fn prefill_projects_the_head_exactly_once_per_request() {
+        let p = toy();
+        let seq_len = p.cfg.seq_len;
+        let engine = Engine::build(&p, Backend::Macko).unwrap();
+        let n_new = 3usize;
+        // head rows per request = 1 (final prompt position) +
+        // (n_new - 1) generation forwards = n_new — independent of
+        // prompt length
+        for plen in [1usize, 2, 7, seq_len - n_new] {
+            let prompt: Vec<u32> =
+                (0..plen).map(|i| (i % p.cfg.vocab) as u32).collect();
+            let before = engine.head_rows_projected();
+            let (_, stats) = engine.generate(&prompt, n_new, 0.7, 5);
+            assert_eq!(stats.tokens_generated, n_new);
+            assert_eq!(engine.head_rows_projected() - before,
+                       n_new as u64,
+                       "prompt of {plen} tokens must cost exactly one \
+                        head projection beyond the generated tokens");
+            assert_eq!(stats.prefill_tokens, plen - 1,
+                       "all but the final prompt position are fed \
+                        headless");
         }
     }
 

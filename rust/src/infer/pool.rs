@@ -9,7 +9,12 @@
 //! long-lived workers that park between dispatches, so
 //! `decode_step_batch` can fan every linear's row-band shards out to
 //! the same threads step after step with **zero spawns in steady
-//! state**.
+//! state**. The same lanes also run the dense head projection as
+//! per-lane output-column bands (`tile::pool_t_matmat`) and the
+//! chunked prefill pass's window-batched linears — every dispatch in
+//! the unified forward implementation shares one pool per scheduler
+//! worker (and single-sequence decode gets its own via
+//! `Engine::generate_pooled`).
 //!
 //! ## Dispatch protocol
 //!

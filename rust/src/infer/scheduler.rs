@@ -8,6 +8,13 @@
 //! [`KvPool`] that recycles per-slot KV-cache buffers across requests
 //! so steady-state decode does not touch the allocator.
 //!
+//! Newly admitted slots consume their prompts through the engine's
+//! chunked prefill pass — up to [`Engine::prefill_chunk`] positions per
+//! scheduler iteration, headless (zero head projections until the
+//! final prompt position rides the shared decode step) — so a long
+//! prompt costs `ceil((len-1)/chunk)` passes instead of `len` one-token
+//! steps while its batch-mates keep generating every iteration.
+//!
 //! ## Time model
 //!
 //! The scheduler runs on a deterministic *step clock*: one tick per
@@ -230,11 +237,19 @@ pub struct SchedStats {
     /// plus idle fast-forward jumps).
     pub steps: u64,
     pub wall_seconds: f64,
-    /// Wall seconds of steps where some slot was still consuming its
-    /// prompt (max across workers).
+    /// Wall seconds of chunked prefill passes plus steps where no slot
+    /// was generating yet (max across workers).
     pub prefill_seconds: f64,
     /// Wall seconds of pure generation steps (max across workers).
     pub decode_seconds: f64,
+    /// Prompt positions fed via the headless chunked prefill passes
+    /// (summed across workers; each admitted request additionally
+    /// feeds its final prompt position through the head-projecting
+    /// decode step).
+    pub prefill_tokens: usize,
+    /// Chunked prefill passes run (summed across workers) —
+    /// `ceil((prompt_len - 1) / prefill_chunk)` per admitted request.
+    pub prefill_chunks: usize,
     /// Aggregate serving throughput: generated tokens / wall seconds.
     pub tokens_per_second: f64,
     pub p50_latency_ms: f64,
@@ -284,6 +299,10 @@ struct WorkerOut {
     finished: Vec<FinishedRequest>,
     prefill_seconds: f64,
     decode_seconds: f64,
+    /// Prompt positions fed via headless chunked prefill passes.
+    prefill_tokens: usize,
+    /// Chunked prefill passes run.
+    prefill_chunks: usize,
     kv_allocated: usize,
     kv_reused: usize,
     /// Per-lane busy/idle seconds of this worker's decode pool.
@@ -330,6 +349,8 @@ impl<'e> Scheduler<'e> {
 
         let prefill = outs.iter().fold(0.0, |a, o| a.max(o.prefill_seconds));
         let decode = outs.iter().fold(0.0, |a, o| a.max(o.decode_seconds));
+        let prefill_tokens = outs.iter().map(|o| o.prefill_tokens).sum();
+        let prefill_chunks = outs.iter().map(|o| o.prefill_chunks).sum();
         let kv_allocated = outs.iter().map(|o| o.kv_allocated).sum();
         let kv_reused = outs.iter().map(|o| o.kv_reused).sum();
         // lane-wise sums across workers (every worker's pool has the
@@ -352,7 +373,10 @@ impl<'e> Scheduler<'e> {
                          "every request must finish or expire");
         let stats = summarize(&finished, wall,
                               shared.clock.load(Ordering::SeqCst), prefill,
-                              decode, kv_allocated, kv_reused,
+                              decode,
+                              PrefillCounts { tokens: prefill_tokens,
+                                              chunks: prefill_chunks },
+                              kv_allocated, kv_reused,
                               ShardTimes { lanes, busy: shard_busy,
                                            idle: shard_idle });
         (finished, stats)
@@ -360,9 +384,11 @@ impl<'e> Scheduler<'e> {
 
     /// One worker: a batched decode loop over up to `cap` slots that
     /// samples/retires, admits from the shared queue into freed slots,
-    /// then runs one batched decode step — every iteration, so a
-    /// request admitted mid-decode starts prefilling on the very next
-    /// step while its batch-mates keep generating.
+    /// chunk-prefills every slot still consuming its prompt, then runs
+    /// one batched decode step over the slots with one unfed token
+    /// left — every iteration, so a request admitted mid-decode starts
+    /// prefilling on the very next iteration while its batch-mates
+    /// keep generating.
     ///
     /// The live set is packed in slot order (`indices = 0..slots.len()`
     /// after swap-remove retirement), and the engine's kernels —
@@ -373,6 +399,7 @@ impl<'e> Scheduler<'e> {
     fn worker(&self, shared: &Shared, cap: usize) -> WorkerOut {
         let engine = self.engine;
         let cfg = &engine.cfg;
+        let chunk = engine.prefill_chunk.max(1);
         let mut pool = KvPool::new(cfg.n_layers, cfg.seq_len * cfg.d_model);
         // this worker's persistent row-band shard pool: created once,
         // workers park between decode steps — no spawns in steady
@@ -380,12 +407,14 @@ impl<'e> Scheduler<'e> {
         let shard_pool = WorkerPool::new(self.opts.shard_workers.max(1));
         let mut slots: Vec<Slot> = Vec::with_capacity(cap);
         let mut meta: Vec<Meta> = Vec::with_capacity(cap);
-        let mut scratch = BatchScratch::new(cfg, cap);
+        let mut scratch = BatchScratch::new(cfg, cap, chunk);
         let mut indices: Vec<usize> = Vec::with_capacity(cap);
         let mut out = WorkerOut {
             finished: Vec::new(),
             prefill_seconds: 0.0,
             decode_seconds: 0.0,
+            prefill_tokens: 0,
+            prefill_chunks: 0,
             kv_allocated: 0,
             kv_reused: 0,
             shard_busy: Vec::new(),
@@ -519,23 +548,49 @@ impl<'e> Scheduler<'e> {
                 continue;
             }
 
-            // 4. One batched decode step over every live slot (mixed
-            //    prefill + generation; each slot feeds its next unfed
-            //    token). A step counts as prefill only when NO slot is
-            //    generating yet: mixed steps produce tokens, so their
-            //    time must land in decode_seconds or tokens/decode_s
-            //    would overstate throughput for ragged prompts.
+            // 4. Chunked prefill: every slot still holding more than
+            //    one unfed prompt token advances by one headless
+            //    window of up to `prefill_chunk` positions — so a
+            //    long prompt costs ceil((len-1)/chunk) passes instead
+            //    of len-1 steps, with zero head projections, while
+            //    generating batch-mates keep stepping every iteration.
+            for s in slots.iter_mut() {
+                let last = s.tokens.len() - 1;
+                if s.fed < last {
+                    let n = chunk.min(last - s.fed);
+                    let t = Timer::start();
+                    engine.prefill_pass(s, n, &mut scratch, &shard_pool);
+                    out.prefill_seconds += t.seconds();
+                    out.prefill_tokens += n;
+                    out.prefill_chunks += 1;
+                }
+            }
+
+            // 5. One batched decode step over every slot with exactly
+            //    one unfed token left (its final prompt position —
+            //    the request's single head projection — or its freshly
+            //    sampled token). Slots still mid-prefill after their
+            //    window sit this step out. A step counts as prefill
+            //    only when NO slot is generating yet: mixed steps
+            //    produce tokens, so their time must land in
+            //    decode_seconds or tokens/decode_s would overstate
+            //    throughput for ragged prompts.
             indices.clear();
-            indices.extend(0..slots.len());
-            let prefilling = slots.iter().all(|s| s.fed < s.prompt_len);
-            let t = Timer::start();
-            engine.decode_step_batch(&mut slots, &indices, &mut scratch,
-                                     &shard_pool);
-            let dt = t.seconds();
-            if prefilling {
-                out.prefill_seconds += dt;
-            } else {
-                out.decode_seconds += dt;
+            indices.extend(slots.iter().enumerate()
+                .filter(|(_, s)| s.fed + 1 == s.tokens.len())
+                .map(|(i, _)| i));
+            if !indices.is_empty() {
+                let prefilling =
+                    slots.iter().all(|s| s.fed < s.prompt_len);
+                let t = Timer::start();
+                engine.decode_step_batch(&mut slots, &indices,
+                                         &mut scratch, &shard_pool);
+                let dt = t.seconds();
+                if prefilling {
+                    out.prefill_seconds += dt;
+                } else {
+                    out.decode_seconds += dt;
+                }
             }
             shared.clock.fetch_add(1, Ordering::SeqCst);
         }
@@ -554,6 +609,12 @@ struct ShardTimes {
     lanes: usize,
     busy: Vec<f64>,
     idle: Vec<f64>,
+}
+
+/// Chunked-prefill counters aggregated across scheduler workers.
+struct PrefillCounts {
+    tokens: usize,
+    chunks: usize,
 }
 
 fn retire(slots: &mut Vec<Slot>, meta: &mut Vec<Meta>, i: usize,
@@ -577,8 +638,9 @@ fn retire(slots: &mut Vec<Slot>, meta: &mut Vec<Meta>, i: usize,
 }
 
 fn summarize(finished: &[FinishedRequest], wall: f64, steps: u64,
-             prefill: f64, decode: f64, kv_allocated: usize,
-             kv_reused: usize, shard: ShardTimes) -> SchedStats {
+             prefill: f64, decode: f64, pre: PrefillCounts,
+             kv_allocated: usize, kv_reused: usize,
+             shard: ShardTimes) -> SchedStats {
     let tokens: usize = finished.iter().map(|f| f.generated).sum();
     let expired = finished.iter().filter(|f| f.expired).count();
     let mut lat = Summary::new();
@@ -597,6 +659,8 @@ fn summarize(finished: &[FinishedRequest], wall: f64, steps: u64,
         wall_seconds: wall,
         prefill_seconds: prefill,
         decode_seconds: decode,
+        prefill_tokens: pre.tokens,
+        prefill_chunks: pre.chunks,
         tokens_per_second: tokens as f64 / wall.max(1e-9),
         p50_latency_ms: if lat.n() == 0 { 0.0 } else { lat.median() },
         p95_latency_ms: if lat.n() == 0 { 0.0 } else { lat.percentile(95.0) },
@@ -640,6 +704,7 @@ pub fn serve_static_chunks(engine: &Engine, requests: &[Request],
     let t0 = Instant::now();
     let mut finished = Vec::with_capacity(requests.len());
     let (mut prefill, mut decode) = (0.0f64, 0.0f64);
+    let mut pre = PrefillCounts { tokens: 0, chunks: 0 };
     let mut steps = 0u64;
     let (mut kv_allocated, mut kv_reused) = (0usize, 0usize);
     let mut shard = ShardTimes {
@@ -660,6 +725,8 @@ pub fn serve_static_chunks(engine: &Engine, requests: &[Request],
         finished.extend(f);
         prefill += st.prefill_seconds;
         decode += st.decode_seconds;
+        pre.tokens += st.prefill_tokens;
+        pre.chunks += st.prefill_chunks;
         steps += st.steps;
         kv_allocated += st.kv_allocated;
         kv_reused += st.kv_reused;
@@ -674,7 +741,7 @@ pub fn serve_static_chunks(engine: &Engine, requests: &[Request],
     }
     finished.sort_by_key(|f| f.id);
     let wall = t0.elapsed().as_secs_f64();
-    let stats = summarize(&finished, wall, steps, prefill, decode,
+    let stats = summarize(&finished, wall, steps, prefill, decode, pre,
                           kv_allocated, kv_reused, shard);
     (finished, stats)
 }
@@ -692,6 +759,9 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow::anyhow!("bad --backend"))?;
     let mut engine = Engine::build(&params, backend)?;
     engine.tiled = !args.bool("untiled");
+    engine.prefill_chunk = args
+        .usize_or("prefill-chunk", super::DEFAULT_PREFILL_CHUNK)?
+        .max(1);
 
     let g = crate::data::Grammar::named(
         &args.str_or("dataset", "synth-c4"), cfg.vocab);
@@ -759,6 +829,9 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     println!("p95_ms {:.2}", stats.p95_latency_ms);
     println!("mean_wait_steps {:.2}", stats.mean_wait_steps);
     println!("steps {}", stats.steps);
+    println!("prefill_tokens {} in {} chunk passes (chunk {})",
+             stats.prefill_tokens, stats.prefill_chunks,
+             engine.prefill_chunk);
     println!("kv_allocated {} kv_reused {}", stats.kv_allocated,
              stats.kv_reused);
     if shard_workers > 1 {

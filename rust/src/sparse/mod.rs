@@ -16,7 +16,8 @@
 pub mod tile;
 
 pub use tile::{dense_plan, matvec_batch_tiled, par_matvec_batch_tiled,
-               pool_matvec_batch_tiled, RowTiled, Tile, TilePlan};
+               pool_matvec_batch_tiled, pool_t_matmat, RowTiled, Tile,
+               TilePlan};
 
 use crate::tensor::Matrix;
 

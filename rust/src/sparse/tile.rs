@@ -393,6 +393,66 @@ pub fn pool_matvec_batch_tiled<T: RowTiled + Sync>(
     scatter_rows(&scratch.yt, y, b, t.n_out());
 }
 
+/// [`Matrix::t_matmat`] on a persistent [`WorkerPool`]: the head
+/// projection's output columns are split into one contiguous band per
+/// pool lane and the bands run on the pool's parked workers — the
+/// engine's decode step calls this for the dense head GEMM (d_model ×
+/// vocab, the single largest dense matrix in the model) when decoding
+/// with `--shard-workers > 1`, so the head shares the same lanes as
+/// the layer linears.
+///
+/// Bit-exactness: every output element `y[bi, j]` is computed wholly
+/// within one band, accumulating over weight rows `r` in ascending
+/// order with the same skip-zero rule as `t_matvec`/`t_matmat` — so
+/// each row of `y` is bit-identical to the serial projection for any
+/// pool width. A single-lane pool (or single-column head) runs the
+/// serial GEMM inline.
+pub fn pool_t_matmat(a: &Matrix, x: &[f32], y: &mut [f32], b: usize,
+                     pool: &WorkerPool) {
+    let (n, m) = (a.rows, a.cols);
+    debug_assert_eq!(x.len(), b * n);
+    debug_assert_eq!(y.len(), b * m);
+    let lanes = pool.width().min(m);
+    if lanes <= 1 {
+        return a.t_matmat(x, y, b);
+    }
+
+    /// Raw output base shared by the band tasks; sound because every
+    /// task writes a disjoint set of column indices.
+    struct OutPtr(*mut f32);
+    unsafe impl Send for OutPtr {}
+    unsafe impl Sync for OutPtr {}
+    let y_base = OutPtr(y.as_mut_ptr());
+
+    pool.run(lanes, &|band| {
+        let c0 = band * m / lanes;
+        let c1 = (band + 1) * m / lanes;
+        // SAFETY: band tasks write only columns c0..c1 of each output
+        // row — the bands partition 0..m, so every element is written
+        // by exactly one task, and the buffer was checked to b * m.
+        let out = |bi: usize, j: usize| unsafe {
+            &mut *y_base.0.add(bi * m + j)
+        };
+        for bi in 0..b {
+            for j in c0..c1 {
+                *out(bi, j) = 0.0;
+            }
+        }
+        for r in 0..n {
+            let wseg = &a.data[r * m + c0..r * m + c1];
+            for bi in 0..b {
+                let xv = x[bi * n + r];
+                if xv == 0.0 {
+                    continue; // same skip rule as t_matvec/t_matmat
+                }
+                for (k, &wv) in wseg.iter().enumerate() {
+                    *out(bi, c0 + k) += xv * wv;
+                }
+            }
+        }
+    });
+}
+
 /// Re-layout the (n_out, b) staging buffer back to the engine's
 /// row-major (b, n_out) output.
 fn scatter_rows(yt: &[f32], y: &mut [f32], b: usize, n_out: usize) {
@@ -515,6 +575,30 @@ mod tests {
     fn shard_ranges_zero_request_clamps_to_one() {
         let plan = TilePlan::fixed(20, 5);
         assert_eq!(plan.shard_ranges(0), vec![(0, plan.tiles.len())]);
+    }
+
+    #[test]
+    fn pooled_t_matmat_matches_serial_for_any_pool_width() {
+        let mut rng = crate::util::rng::Rng::new(31);
+        let mut a = Matrix::randn(40, 57, 1.0, &mut rng);
+        a.data[11] = 0.0; // exercise the skip-zero rule
+        for b in [1usize, 3, 8] {
+            let mut x: Vec<f32> =
+                (0..b * 40).map(|_| rng.normal()).collect();
+            x[7] = 0.0;
+            let mut want = vec![0.0f32; b * 57];
+            a.t_matmat(&x, &mut want, b);
+            for width in [1usize, 2, 3, 64] {
+                let pool = WorkerPool::new(width);
+                let mut got = vec![9.0f32; b * 57];
+                // twice per pool: the second dispatch exercises the
+                // parked steady state, not the cold start
+                for _ in 0..2 {
+                    pool_t_matmat(&a, &x, &mut got, b, &pool);
+                    assert_eq!(got, want, "b={b} width={width}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -78,3 +78,31 @@ pub fn ragged_requests(n: u64) -> Vec<Request> {
         })
         .collect()
 }
+
+/// Prompt lengths that straddle the chunked-prefill windows swept in
+/// `determinism.rs` (chunks {1, 3, 16} on the seq_len-20 toy model).
+/// The chunked pass feeds `len - 1` positions headless, so for each
+/// chunk the headless count hits one-below / exactly-at / one-above a
+/// window boundary: chunk 3 → counts {2,3,4} (lens 3,4,5) and {5,6,7}
+/// (lens 6,7,8), chunk 16 → counts {15,16,17} (lens 16,17,18). Long
+/// prompts get a 2-token budget so `prompt_len + n_new <= seq_len`
+/// always holds (no request retires early on seq_len — the probe
+/// tests count on it).
+pub const STRADDLING_PROMPT_LENS: [usize; 11] =
+    [1, 2, 3, 4, 5, 6, 7, 8, 16, 17, 18];
+
+/// Deterministic requests whose prompts cycle through
+/// [`STRADDLING_PROMPT_LENS`] — the chunk-boundary companion to
+/// [`ragged_requests`].
+pub fn chunk_straddling_requests(n: u64) -> Vec<Request> {
+    (0..n)
+        .map(|id| {
+            let plen = STRADDLING_PROMPT_LENS
+                [id as usize % STRADDLING_PROMPT_LENS.len()];
+            let prompt = (0..plen)
+                .map(|i| ((id as usize * 11 + i * 5) % TOY_VOCAB) as u32)
+                .collect();
+            req(id, prompt, if plen >= 15 { 2 } else { 3 })
+        })
+        .collect()
+}

@@ -1,23 +1,29 @@
-//! Seeded randomized determinism sweep (ISSUE 4 satellite): one
-//! harness that subsumes the ad-hoc pairwise checks scattered across
-//! the older suites. ~50 seeded scheduler configurations are drawn
-//! over backend × tiled/untiled × threads {1,2,4} × shard-workers
-//! {1,2,8} × max_slots × temperature × arrival pattern, and every
-//! single one must reproduce the single-sequence `generate()` streams
-//! bit-for-bit — the engine's headline guarantee: scheduling policy,
-//! kernel traversal, slot sharding and row-band pooling decide *when*
-//! and *where* a request computes, never *what* it produces.
+//! Seeded randomized determinism sweep (ISSUE 4 satellite, extended
+//! by ISSUE 5): one harness that subsumes the ad-hoc pairwise checks
+//! scattered across the older suites. ~50 seeded scheduler
+//! configurations are drawn over backend × tiled/untiled × threads
+//! {1,2,4} × shard-workers {1,2,8} × prefill-chunk {1,3,16} ×
+//! max_slots × temperature × arrival pattern, and every single one
+//! must reproduce the single-sequence `generate()` streams of a
+//! chunk-size-1 reference engine bit-for-bit — the engine's headline
+//! guarantee: scheduling policy, kernel traversal, slot sharding,
+//! row-band pooling and prefill chunking decide *when* and *where* a
+//! request computes, never *what* it produces.
 //!
 //! The engines use deliberately tiny tile plans
 //! (`common::banded_engine`) so `--shard-workers > 1` genuinely
 //! dispatches the persistent pool at toy scale instead of degrading to
-//! one shard.
+//! one shard, and the request streams mix ragged prompts whose
+//! headless position counts sit one-below / exactly-at / one-above
+//! every chunk-window boundary (prompt lengths 1–18 against chunks
+//! {1,3,16} on a seq_len-20 model).
 
 mod common;
 
 use std::collections::HashMap;
 
-use common::{banded_engine, ragged_requests};
+use common::{banded_engine, chunk_straddling_requests, ragged_requests,
+             TOY_VOCAB};
 use elsa::infer::scheduler::{RequestQueue, SchedOptions, Scheduler};
 use elsa::infer::{Backend, Engine};
 use elsa::util::rng::Rng;
@@ -26,6 +32,7 @@ const BACKENDS: [Backend; 3] =
     [Backend::Dense, Backend::Csr, Backend::Macko];
 const THREADS: [usize; 3] = [1, 2, 4];
 const SHARD_WORKERS: [usize; 3] = [1, 2, 8];
+const PREFILL_CHUNKS: [usize; 3] = [1, 3, 16];
 const MAX_SLOTS: [usize; 4] = [1, 2, 3, 5];
 const TEMPERATURES: [f32; 3] = [0.0, 0.6, 0.9];
 const ARRIVAL_GAPS: [f64; 3] = [0.0, 1.0, 2.5];
@@ -38,10 +45,13 @@ struct Case {
     tiled: bool,
     threads: usize,
     shard_workers: usize,
+    prefill_chunk: usize,
     max_slots: usize,
     temperature: f32,
     arrival_gap: f64,
     n_requests: u64,
+    /// Odd cases use prompts that straddle the chunk boundaries.
+    straddling: bool,
     queue_seed: u64,
 }
 
@@ -51,22 +61,34 @@ fn draw(rng: &mut Rng) -> Case {
         tiled: rng.below(2) == 1,
         threads: THREADS[rng.below(THREADS.len())],
         shard_workers: SHARD_WORKERS[rng.below(SHARD_WORKERS.len())],
+        prefill_chunk: PREFILL_CHUNKS[rng.below(PREFILL_CHUNKS.len())],
         max_slots: MAX_SLOTS[rng.below(MAX_SLOTS.len())],
         temperature: TEMPERATURES[rng.below(TEMPERATURES.len())],
         arrival_gap: ARRIVAL_GAPS[rng.below(ARRIVAL_GAPS.len())],
         n_requests: 3 + rng.below(5) as u64,
+        straddling: rng.below(2) == 1,
         queue_seed: rng.next_u64(),
     }
 }
 
 #[test]
 fn randomized_sweep_reproduces_single_sequence_streams() {
-    // one engine per backend, shared across cases (`tiled` is flipped
-    // per case; it cannot change tokens, which the sweep verifies)
+    // one engine per backend, shared across cases (`tiled` and
+    // `prefill_chunk` are flipped per case; neither can change tokens,
+    // which the sweep verifies), plus a chunk-size-1 reference engine
+    // per backend: every case must reproduce the per-token-prefill
+    // single-sequence streams, whatever its own chunk is
     let mut engines: Vec<Engine> = BACKENDS
         .iter()
         .map(|&b| banded_engine(b).0)
         .collect();
+    let mut ref_engines: Vec<Engine> = BACKENDS
+        .iter()
+        .map(|&b| banded_engine(b).0)
+        .collect();
+    for e in ref_engines.iter_mut() {
+        e.prefill_chunk = 1;
+    }
     // reference streams are pure functions of (backend, prompt, n_new,
     // temperature, seed) — cache them across cases
     let mut reference: HashMap<(usize, Vec<u32>, usize, u32, u64),
@@ -74,15 +96,24 @@ fn randomized_sweep_reproduces_single_sequence_streams() {
 
     let mut rng = Rng::new(0xD5_EED);
     let mut pooled_cases = 0usize;
+    let mut chunked_cases = 0usize;
     for case_no in 0..CASES {
         let case = draw(&mut rng);
         let engine = &mut engines[case.backend_idx];
         engine.tiled = case.tiled;
+        engine.prefill_chunk = case.prefill_chunk;
         if case.shard_workers > 1 {
             pooled_cases += 1;
         }
+        if case.prefill_chunk > 1 {
+            chunked_cases += 1;
+        }
 
-        let reqs = ragged_requests(case.n_requests);
+        let reqs = if case.straddling {
+            chunk_straddling_requests(case.n_requests)
+        } else {
+            ragged_requests(case.n_requests)
+        };
         let queue = RequestQueue::with_poisson_arrivals(
             reqs.clone(), case.arrival_gap, case.queue_seed);
         let sched = Scheduler::new(engine, SchedOptions {
@@ -100,20 +131,135 @@ fn randomized_sweep_reproduces_single_sequence_streams() {
             let key = (case.backend_idx, r.prompt.clone(), r.n_new,
                        case.temperature.to_bits(), r.seed);
             let want = reference.entry(key).or_insert_with(|| {
-                engines[case.backend_idx]
+                ref_engines[case.backend_idx]
                     .generate(&r.prompt, r.n_new, case.temperature,
                               r.seed)
                     .0
             });
             assert_eq!(&f.tokens, want,
                        "case {case_no} {case:?}: req {} diverged from \
-                        single-sequence generate", f.id);
+                        chunk-1 single-sequence generate", f.id);
         }
     }
     // the draw is seeded, so this is deterministic: make sure the
-    // sweep actually covered the pooled configurations it exists for
+    // sweep actually covered the configurations it exists for
     assert!(pooled_cases >= 10,
             "sweep drew only {pooled_cases} pooled cases — reseed it");
+    assert!(chunked_cases >= 10,
+            "sweep drew only {chunked_cases} chunked cases — reseed it");
+}
+
+#[test]
+fn chunked_prefill_is_bit_identical_to_per_token_reference() {
+    // the direct (scheduler-free) axis: every chunk size must replay
+    // the chunk-1 streams and logits exactly, including ragged prompts
+    // that straddle chunk boundaries (len % chunk ∈ {0, 1, chunk-1})
+    // and a prompt filling all but one position of seq_len
+    let prompt_lens: [usize; 12] =
+        [1, 2, 3, 4, 5, 6, 7, 8, 16, 17, 18, 19];
+    for backend in BACKENDS {
+        let (mut engine, seq_len) = banded_engine(backend);
+        for &plen in &prompt_lens {
+            assert!(plen < seq_len);
+            let prompt: Vec<u32> = (0..plen)
+                .map(|i| ((plen * 5 + i * 3) % TOY_VOCAB) as u32)
+                .collect();
+            engine.prefill_chunk = 1;
+            let (want, _) = engine.generate(&prompt, 3, 0.8, 9);
+            let want_logits = engine.logits_for(&prompt);
+            for chunk in [2usize, 3, 5, 16] {
+                engine.prefill_chunk = chunk;
+                let (got, _) = engine.generate(&prompt, 3, 0.8, 9);
+                assert_eq!(got, want,
+                           "{backend:?} plen={plen} chunk={chunk}");
+                assert_eq!(engine.logits_for(&prompt), want_logits,
+                           "{backend:?} plen={plen} chunk={chunk} \
+                            logits");
+            }
+        }
+    }
+}
+
+#[test]
+fn prefill_projects_head_once_per_request_in_the_scheduler() {
+    // the projection-count probe at the serving layer: total head rows
+    // across a scheduler run must equal the generated token count —
+    // i.e. exactly ONE head projection per request covers its whole
+    // prompt (the final position), however long, at any chunk size
+    for chunk in [1usize, 3, 16] {
+        let (mut engine, _) = banded_engine(Backend::Macko);
+        engine.prefill_chunk = chunk;
+        // 11 requests = one per STRADDLING_PROMPT_LENS entry, so every
+        // boundary-adjacent headless count is exercised at every chunk
+        let reqs = chunk_straddling_requests(11);
+        let expect_tokens: usize = reqs.iter().map(|r| r.n_new).sum();
+        let queue = RequestQueue::with_poisson_arrivals(
+            reqs.clone(), 1.0, 3);
+        let before = engine.head_rows_projected();
+        let sched = Scheduler::new(&engine, SchedOptions {
+            max_slots: 2,
+            temperature: 0.8,
+            ..SchedOptions::default()
+        });
+        let (_, stats) = sched.run(queue);
+        assert_eq!(stats.tokens_generated, expect_tokens,
+                   "chunk={chunk}: fixture must not hit seq_len");
+        assert_eq!(engine.head_rows_projected() - before,
+                   stats.tokens_generated as u64,
+                   "chunk={chunk}: prefill must project the head \
+                    exactly once per request regardless of prompt \
+                    length");
+        // and the headless prompt-token accounting matches the
+        // prompts: every position but the last, in ceil((len-1)/chunk)
+        // passes per request
+        let expect_prefill: usize =
+            reqs.iter().map(|r| r.prompt.len() - 1).sum();
+        let expect_chunks: usize = reqs.iter()
+            .map(|r| (r.prompt.len() - 1).div_ceil(chunk))
+            .sum();
+        assert_eq!(stats.prefill_tokens, expect_prefill, "chunk={chunk}");
+        assert_eq!(stats.prefill_chunks, expect_chunks, "chunk={chunk}");
+    }
+}
+
+#[test]
+fn empty_prompt_generate_agrees_with_the_batch_path() {
+    // ISSUE 5 satellite: the old divergence (generate(&[], ..) emitted
+    // token 0; the batch path retired with zero tokens) is gone — the
+    // batch rule won on every path
+    let (engine, _) = banded_engine(Backend::Csr);
+    let (out, stats) = engine.generate(&[], 4, 0.8, 1);
+    assert!(out.is_empty());
+    assert_eq!(stats.tokens_generated, 0);
+    let (batch_out, _) = engine.generate_batch(
+        &[vec![], vec![1, 2, 3]],
+        &elsa::infer::BatchOptions { n_new: 4, temperature: 0.8,
+                                     seed: 1,
+                                     ..Default::default() });
+    assert_eq!(batch_out[0], out, "empty prompt: paths must agree");
+}
+
+#[test]
+#[should_panic(expected = "exceeds seq_len")]
+fn generate_rejects_oversized_prompt_like_generate_batch() {
+    // ISSUE 5 satellite: the seq_len guard generate_batch always had —
+    // an oversized prompt used to silently grow the KV cache past
+    // seq_len and recycle the last positional row
+    let (engine, seq_len) = banded_engine(Backend::Macko);
+    let long: Vec<u32> = (0..seq_len + 1)
+        .map(|i| (i % TOY_VOCAB) as u32)
+        .collect();
+    engine.generate(&long, 1, 0.0, 0);
+}
+
+#[test]
+#[should_panic(expected = "exceeds seq_len")]
+fn logits_for_rejects_oversized_prompt_like_generate_batch() {
+    let (engine, seq_len) = banded_engine(Backend::Macko);
+    let long: Vec<u32> = (0..seq_len + 1)
+        .map(|i| (i % TOY_VOCAB) as u32)
+        .collect();
+    engine.logits_for(&long);
 }
 
 #[test]

@@ -140,6 +140,11 @@ fn empty_prompt_retires_with_zero_tokens() {
     assert_eq!(outs[1].len(), 3 + n_new);
     assert_eq!(stats.tokens_generated, n_new,
                "accounting must count only real tokens");
+    // the single-sequence path follows the same rule now (the old
+    // token-0 fallback divergence is gone)
+    let (single, sstats) = engine.generate(&[], n_new, 0.8, 3);
+    assert_eq!(single, outs[0], "generate(&[]) must match the batch");
+    assert_eq!(sstats.tokens_generated, 0);
 }
 
 #[test]

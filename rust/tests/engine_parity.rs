@@ -67,14 +67,21 @@ fn logits_agree_within_tolerance() {
             .logits_for(&tokens);
         assert_eq!(reference.len(), cfg.vocab);
         for backend in [Backend::Csr, Backend::Macko] {
-            let logits = Engine::build(&p, backend).unwrap()
-                .logits_for(&tokens);
+            let mut engine = Engine::build(&p, backend).unwrap();
+            let logits = engine.logits_for(&tokens);
             let mut max_err = 0.0f32;
             for (a, b) in reference.iter().zip(logits.iter()) {
                 max_err = max_err.max((a - b).abs());
             }
             assert!(max_err < 1e-3,
                     "{backend:?} sp={sparsity}: max_err={max_err}");
+            // the prefill window is a traversal knob: logits must be
+            // BIT-identical across chunk sizes, not just within 1e-3
+            for chunk in [1usize, 4, 32] {
+                engine.prefill_chunk = chunk;
+                assert_eq!(engine.logits_for(&tokens), logits,
+                           "{backend:?} sp={sparsity} chunk={chunk}");
+            }
         }
     }
 }

@@ -233,6 +233,31 @@ fn persistent_pool_matches_serial_across_formats_and_batches() {
 }
 
 #[test]
+fn pooled_head_gemm_matches_serial_across_widths_and_batches() {
+    // the dense head projection rides the same persistent pool as the
+    // layer linears when --shard-workers > 1: one pool, many dispatch
+    // shapes, bit-identical to the serial t_matmat every time
+    let (d, vocab) = (48, 130);
+    let mut rng = Rng::new(77);
+    let head = Matrix::randn(d, vocab, 1.0, &mut rng);
+    for &width in &[2usize, 5] {
+        let pool = WorkerPool::new(width);
+        for round in 0..3u64 {
+            for &b in &[1usize, 3, 8] {
+                let x = batch_input(b, d, 100 + round + b as u64);
+                let mut want = vec![0.0f32; b * vocab];
+                let mut got = vec![5.0f32; b * vocab];
+                head.t_matmat(&x, &mut want, b);
+                elsa::sparse::pool_t_matmat(&head, &x, &mut got, b,
+                                            &pool);
+                assert_eq!(got, want,
+                           "width={width} b={b} round={round}");
+            }
+        }
+    }
+}
+
+#[test]
 fn engine_streams_identical_tiled_vs_untiled() {
     let prompts: Vec<Vec<u32>> =
         vec![vec![1, 2, 3], vec![4, 5], vec![6, 7, 8, 9], vec![10]];

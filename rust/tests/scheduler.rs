@@ -242,6 +242,50 @@ fn thread_count_does_not_change_streams() {
 }
 
 #[test]
+fn prefill_chunk_does_not_change_streams_or_token_accounting() {
+    // the scheduler consumes admitted prompts in prefill_chunk-sized
+    // headless windows; the window size is pure traversal — streams
+    // and generated-token accounting are invariant, only the pass
+    // counts change
+    let reqs = ragged_requests(7);
+    for backend in [Backend::Csr, Backend::Macko] {
+        let run = |chunk: usize| {
+            let (mut engine, _) = engine(backend);
+            engine.prefill_chunk = chunk;
+            let queue = RequestQueue::with_poisson_arrivals(
+                reqs.clone(), 1.5, 21);
+            let sched = Scheduler::new(&engine, SchedOptions {
+                max_slots: 3,
+                temperature: 0.8,
+                ..SchedOptions::default()
+            });
+            sched.run(queue)
+        };
+        let (f1, s1) = run(1);
+        let expect_prefill: usize =
+            reqs.iter().map(|r| r.prompt.len() - 1).sum();
+        assert_eq!(s1.prefill_tokens, expect_prefill, "{backend:?}");
+        for chunk in [3usize, 16] {
+            let (fc, sc) = run(chunk);
+            assert_eq!(sc.tokens_generated, s1.tokens_generated,
+                       "{backend:?} chunk={chunk}");
+            assert_eq!(sc.prefill_tokens, s1.prefill_tokens,
+                       "{backend:?} chunk={chunk}: same positions fed \
+                        headless, whatever the window");
+            assert!(sc.prefill_chunks <= s1.prefill_chunks,
+                    "{backend:?} chunk={chunk}: wider windows cannot \
+                     need more passes");
+            for (a, b) in f1.iter().zip(fc.iter()) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.tokens, b.tokens,
+                           "{backend:?} chunk={chunk} changed req {}'s \
+                            stream", a.id);
+            }
+        }
+    }
+}
+
+#[test]
 fn static_chunks_match_continuous_streams() {
     let (engine, _) = engine(Backend::Macko);
     let reqs = ragged_requests(6);
