@@ -20,21 +20,31 @@ def scheduler_baseline():
     return {
         "tolerance": 0.15,
         "min_speedup_x": 0.9,
+        "min_prefix_cached_uncached_ratio": 1.0,
         "sequential": {"tok_s": 50.0},
         "static": {"tok_s": 60.0},
         "continuous": {"tok_s": 80.0},
         "continuous_pooled": {"tok_s": 80.0},
+        "prefix_cached": {"tok_s": 60.0},
     }
 
 
 def scheduler_current(seq=100.0, stat=120.0, cont=150.0, pooled=150.0,
-                      speedup=1.25):
+                      speedup=1.25, prefix_cached=160.0,
+                      prefix_ratio=1.4):
     return {
         "sequential": {"tok_s": seq},
         "static": {"tok_s": stat, "p50_ms": 1.0, "p95_ms": 2.0},
         "continuous": {"tok_s": cont, "p50_ms": 1.0, "p95_ms": 2.0},
         "continuous_pooled": {"tok_s": pooled, "p50_ms": 1.0,
                               "p95_ms": 2.0},
+        "prefix_cached": {"tok_s": prefix_cached, "p50_ms": 1.0,
+                          "p95_ms": 2.0},
+        "prefix_uncached_tok_s": prefix_cached / prefix_ratio,
+        "prefix_cached_uncached_ratio": prefix_ratio,
+        "prefix_hits": 23.0,
+        "prefix_tokens_saved": 1104.0,
+        "prefix_hit_rate": 0.96,
         "speedup_x": speedup,
     }
 
@@ -179,6 +189,40 @@ class GateTests(unittest.TestCase):
         _, failures = cb.gate(cur, scheduler_baseline())
         self.assertTrue(any("continuous_pooled" in f and "missing" in f
                             for f in failures))
+
+    def test_prefix_cached_uncached_ratio_gate(self):
+        # cached serving of the shared-prefix stream must never lose
+        # to uncached: the 1.0 floor passes at exactly 1.0, fails just
+        # below, and an absent metric counts as 0.0 -> fails
+        _, failures = cb.gate(scheduler_current(prefix_ratio=1.0),
+                              scheduler_baseline())
+        self.assertEqual(failures, [])
+        _, failures = cb.gate(scheduler_current(prefix_ratio=0.99),
+                              scheduler_baseline())
+        self.assertTrue(any("prefix_cached_uncached_ratio" in f
+                            for f in failures))
+        cur = scheduler_current()
+        del cur["prefix_cached_uncached_ratio"]
+        _, failures = cb.gate(cur, scheduler_baseline())
+        self.assertTrue(any("prefix_cached_uncached_ratio" in f
+                            for f in failures))
+
+    def test_prefix_cached_policy_floor_gated(self):
+        # the prefix_cached cell rides the ordinary tok_s floor
+        # machinery; the informational flat keys are ignored
+        cur = scheduler_current(prefix_cached=1.0, prefix_ratio=1.4)
+        _, failures = cb.gate(cur, scheduler_baseline())
+        self.assertTrue(any("prefix_cached:" in f for f in failures))
+        cur = scheduler_current()
+        del cur["prefix_cached"]
+        _, failures = cb.gate(cur, scheduler_baseline())
+        self.assertTrue(any("prefix_cached" in f and "missing" in f
+                            for f in failures))
+
+    def test_ratchet_covers_prefix_cell_and_keeps_ratio_knob(self):
+        out = cb.ratchet(scheduler_current(), scheduler_baseline())
+        self.assertEqual(out["prefix_cached"]["tok_s"], 160.0)
+        self.assertEqual(out["min_prefix_cached_uncached_ratio"], 1.0)
 
     def test_explicit_tolerance_overrides_baseline(self):
         # floor becomes 80 * (1 - 0.5) = 40 with the looser tolerance

@@ -28,6 +28,12 @@
 //! prefill pass (default 16; every value is bit-identical — prompts
 //! just share one weight walk per window and skip the head projection
 //! until their final position).
+//!
+//! `-- --prefix-cache {on,off}` toggles the scheduler's shared-prefix
+//! KV cache (default on): admitted requests whose prompt extends a
+//! previously served prefix copy the cached KV rows and prefill only
+//! their suffix. Outputs stay bit-identical either way; the scheduler
+//! line reports the hit count.
 
 use std::path::Path;
 
@@ -36,9 +42,9 @@ use elsa::cli::Args;
 use elsa::coordinator::elsa::{prune_elsa, ElsaOptions};
 use elsa::coordinator::pretrain::{pretrain_cached, PretrainOptions};
 use elsa::data::{Dataset, Grammar};
-use elsa::infer::scheduler::{ragged_budgets, serve_static_chunks,
-                             Request, RequestQueue, SchedOptions,
-                             Scheduler};
+use elsa::infer::scheduler::{prefix_cache_flag, ragged_budgets,
+                             serve_static_chunks, Request, RequestQueue,
+                             SchedOptions, Scheduler};
 use elsa::infer::{Backend, BatchOptions, Engine};
 use elsa::model::checkpoint::Checkpoint;
 use elsa::model::Params;
@@ -84,6 +90,7 @@ fn main() -> Result<()> {
     let prefill_chunk = args
         .usize_or("prefill-chunk", elsa::infer::DEFAULT_PREFILL_CHUNK)?
         .max(1);
+    let prefix_cache = prefix_cache_flag(&args)?;
     let prompt_len = 8;
     let n_new = cfg.seq_len - prompt_len;
 
@@ -106,6 +113,7 @@ fn main() -> Result<()> {
             temperature: 0.8,
             threads,
             shard_workers,
+            prefix_cache,
         };
         for backend in [Backend::Dense, Backend::Csr, Backend::Macko] {
             let mut engine = Engine::build(&params, backend)?;
@@ -122,12 +130,14 @@ fn main() -> Result<()> {
                 "{:>6}: {:4} reqs ({max_slots} slots, {threads} thr, \
                  {shard_workers} bands) | \
                  sched {:8.1} tok/s | p50 {:7.2} ms | p95 {:7.2} ms | \
-                 static {:8.1} tok/s | x{:.2} | kv reuse {}/{}",
+                 static {:8.1} tok/s | x{:.2} | kv reuse {}/{} | \
+                 prefix hits {} (saved {} tok)",
                 format!("{backend:?}"), n_requests,
                 sc.tokens_per_second, sc.p50_latency_ms,
                 sc.p95_latency_ms, st.tokens_per_second,
                 sc.tokens_per_second / st.tokens_per_second.max(1e-9),
-                sc.kv_reused, sc.kv_reused + sc.kv_allocated);
+                sc.kv_reused, sc.kv_reused + sc.kv_allocated,
+                sc.prefix_hits, sc.prefix_tokens_saved);
         }
         return Ok(());
     }
@@ -160,7 +170,7 @@ fn main() -> Result<()> {
                     .collect();
                 let opts = BatchOptions {
                     n_new, temperature: 0.8, seed: r as u64, threads,
-                    shard_workers,
+                    shard_workers, prefix_cache,
                 };
                 let (_, stats) = engine.generate_batch(&prompts, &opts);
                 // per-batch decode wall, amortized per request

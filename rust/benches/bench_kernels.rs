@@ -315,7 +315,7 @@ fn engine_sweep(n_new: usize, threads: usize)
         .collect();
     let opts = BatchOptions {
         n_new, temperature: 0.8, seed: 0, threads: 1,
-        shard_workers: 1,
+        shard_workers: 1, ..BatchOptions::default()
     };
 
     println!("== end-to-end decode, d={} L={} sp=0.90, batch={batch}, \

@@ -10,13 +10,16 @@
 //!             [--shard-workers M] splits each layer's linears across
 //!             M persistent row-band workers per thread (batch 1 rides
 //!             the same pool); [--prefill-chunk C] sets the prompt
-//!             window of the chunked prefill pass (default 16)
+//!             window of the chunked prefill pass (default 16);
+//!             [--prefix-cache {on,off}] toggles the shared-prefix KV
+//!             cache (default on)
 //!   serve     --config tiny --ckpt ckpt.bin --requests 32
 //!             --max-slots 8 --threads 4 [--shard-workers M]
-//!             [--prefill-chunk C] [--arrival-gap 2.0]
-//!             [--deadline STEPS] [--verbose] — continuous-batching
-//!             scheduler over a seeded Poisson-ish request stream
-//!             (slots × row bands, chunked prompt prefill)
+//!             [--prefill-chunk C] [--prefix-cache {on,off}]
+//!             [--arrival-gap 2.0] [--deadline STEPS] [--verbose] —
+//!             continuous-batching scheduler over a seeded Poisson-ish
+//!             request stream (slots × row bands, chunked prompt
+//!             prefill, shared-prefix KV reuse)
 //!   exp       --id fig2|fig3|...|all [--scale quick|full] [--threads N]
 //!   report    --results results/
 

@@ -49,6 +49,7 @@
 //! (`rust/tests/determinism.rs` sweeps the axis).
 
 pub mod pool;
+pub mod prefix;
 pub mod scheduler;
 
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -494,53 +495,92 @@ impl Engine {
     /// capacity of `scratch`.
     fn prefill_pass(&self, slot: &mut Slot, n: usize,
                     scratch: &mut BatchScratch, pool: &WorkerPool) {
-        debug_assert!(n >= 1);
-        debug_assert!(slot.fed + n < slot.tokens.len(),
-                      "prefill window must leave the final prompt \
-                       position for the head-projecting step");
-        let b = n; // time-as-batch
+        self.prefill_pass_multi(std::slice::from_mut(slot), &[(0, n)],
+                                scratch, pool);
+    }
+
+    /// Cross-slot batched prefill: one pass over the packed pending
+    /// windows of several slots. `jobs` lists `(slot index, window
+    /// rows)` pairs — distinct slots — and the windows are packed
+    /// job-major into `scratch`, so the whole set of prefilling slots
+    /// shares ONE trip through every layer's weights per scheduler
+    /// iteration (time × slots as the batch dimension) instead of one
+    /// [`WeightFmt::matvec_batch_exec`] dispatch per slot.
+    ///
+    /// Bit-exactness: row `r` of a batched linear is bit-exact with
+    /// the single-vector matvec on that row alone — the invariant the
+    /// whole engine is built on — so how many windows share the pass
+    /// cannot change any slot's values; and attention stays per-slot
+    /// per-position (position `t` attends its own cache's first
+    /// `t + 1` entries in per-token order), exactly as in the
+    /// single-slot pass. `scratch` must hold `sum(n)` rows.
+    fn prefill_pass_multi(&self, slots: &mut [Slot],
+                          jobs: &[(usize, usize)],
+                          scratch: &mut BatchScratch, pool: &WorkerPool) {
+        let b: usize = jobs.iter().map(|&(_, n)| n).sum();
+        debug_assert!(b >= 1);
         let d = self.cfg.d_model;
         let h = self.cfg.n_heads;
         let dh = d / h;
         let scale = 1.0 / (dh as f32).sqrt();
-        let t0 = slot.fed;
 
-        // embed + positional for each window position
-        for r in 0..n {
-            let t = t0 + r;
-            // unreachable once the seq_len prompt guards hold; the
-            // loud mismatch error lives in Engine::build
-            debug_assert!(t < self.pos.rows);
-            let e = self.embed.row(slot.tokens[t] as usize);
-            let pr = self.pos.row(t);
-            let xrow = &mut scratch.x[r * d..(r + 1) * d];
-            for c in 0..d {
-                xrow[c] = e[c] + pr[c];
+        // embed + positional for each window position, packed job-major
+        let mut off = 0usize;
+        for &(si, n) in jobs {
+            let slot = &slots[si];
+            debug_assert!(n >= 1);
+            debug_assert!(slot.fed + n < slot.tokens.len(),
+                          "prefill window must leave the final prompt \
+                           position for the head-projecting step");
+            let t0 = slot.fed;
+            for r in 0..n {
+                let t = t0 + r;
+                // unreachable once the seq_len prompt guards hold; the
+                // loud mismatch error lives in Engine::build
+                debug_assert!(t < self.pos.rows);
+                let e = self.embed.row(slot.tokens[t] as usize);
+                let pr = self.pos.row(t);
+                let xrow = &mut scratch.x[(off + r) * d..(off + r + 1) * d];
+                for c in 0..d {
+                    xrow[c] = e[c] + pr[c];
+                }
             }
+            off += n;
         }
 
         for (li, l) in self.layers.iter().enumerate() {
             self.layer_qkv(l, b, scratch, pool);
 
-            // append the whole window's K/V, then attend each position
-            // causally over its own prefix of the cache
-            let kv = &mut slot.kvs[li];
-            kv.k.extend_from_slice(&scratch.k[..n * d]);
-            kv.v.extend_from_slice(&scratch.v[..n * d]);
-            kv.len += n;
-            for r in 0..n {
-                let orow = &mut scratch.o[r * d..(r + 1) * d];
-                orow.iter_mut().for_each(|v| *v = 0.0);
-                attend_cached(kv, t0 + r + 1,
-                              &scratch.q[r * d..(r + 1) * d], orow,
-                              &mut scratch.probs, h, dh, scale, d);
+            // per slot: append its window's K/V, then attend each of
+            // its positions causally over its own prefix of the cache
+            let mut off = 0usize;
+            for &(si, n) in jobs {
+                let slot = &mut slots[si];
+                let t0 = slot.fed;
+                let kv = &mut slot.kvs[li];
+                kv.k.extend_from_slice(&scratch.k[off * d..(off + n) * d]);
+                kv.v.extend_from_slice(&scratch.v[off * d..(off + n) * d]);
+                kv.len += n;
+                for r in 0..n {
+                    let orow =
+                        &mut scratch.o[(off + r) * d..(off + r + 1) * d];
+                    orow.iter_mut().for_each(|v| *v = 0.0);
+                    attend_cached(kv, t0 + r + 1,
+                                  &scratch.q[(off + r) * d
+                                             ..(off + r + 1) * d],
+                                  orow, &mut scratch.probs, h, dh, scale,
+                                  d);
+                }
+                off += n;
             }
 
             self.layer_ffn(l, b, scratch, pool);
         }
         // no lnf, no head: prompt logits before the last position are
         // never read, so computing them would be pure waste
-        slot.fed += n;
+        for &(si, n) in jobs {
+            slots[si].fed += n;
+        }
     }
 
     /// Drive `slot`'s whole prompt: chunked headless passes over
@@ -596,6 +636,8 @@ impl Engine {
             mem_bytes: self.mem_bytes(),
             prefill_tokens: 0,
             prefill_chunks: 0,
+            prefix_hits: 0,
+            prefix_tokens_saved: 0,
             shard_busy_seconds: 0.0,
             shard_idle_seconds: 0.0,
         };
@@ -732,6 +774,7 @@ impl Engine {
             temperature: opts.temperature,
             threads: opts.threads,
             shard_workers: opts.shard_workers,
+            prefix_cache: opts.prefix_cache,
         });
         // run() returns finished requests sorted by id == slot index
         let (finished, st) = sched.run(queue);
@@ -741,11 +784,15 @@ impl Engine {
             prefill_seconds: st.prefill_seconds,
             decode_seconds: st.decode_seconds,
             tokens_generated: st.tokens_generated,
-            tokens_per_second: st.tokens_generated as f64
-                / st.decode_seconds.max(1e-9),
+            // aggregate rate over the run's wall time: prefill/decode
+            // seconds are CPU-seconds summed across workers, so they
+            // are not a throughput denominator under `threads > 1`
+            tokens_per_second: st.tokens_per_second,
             mem_bytes: self.mem_bytes(),
             prefill_tokens: st.prefill_tokens,
             prefill_chunks: st.prefill_chunks,
+            prefix_hits: st.prefix_hits,
+            prefix_tokens_saved: st.prefix_tokens_saved,
             shard_busy_seconds: st.shard_busy_seconds.iter().sum(),
             shard_idle_seconds: st.shard_idle_seconds.iter().sum(),
         })
@@ -855,6 +902,12 @@ pub struct BatchOptions {
     /// (0/1 = serial decode, no pool threads spawned). Composes with
     /// `threads` — slots × bands — and never changes a token.
     pub shard_workers: usize,
+    /// Shared-prefix KV cache (`--prefix-cache {on,off}`, default on):
+    /// requests whose prompts extend an already-prefilled prefix
+    /// attach its cached K/V rows and prefill only their suffix.
+    /// Bit-identical streams either way — a hit copies exactly the
+    /// rows a cold prefill would have produced.
+    pub prefix_cache: bool,
 }
 
 impl Default for BatchOptions {
@@ -865,6 +918,7 @@ impl Default for BatchOptions {
             seed: 0,
             threads: 1,
             shard_workers: 1,
+            prefix_cache: true,
         }
     }
 }
@@ -909,12 +963,18 @@ struct BatchScratch {
 }
 
 impl BatchScratch {
-    /// `slots` bounds the decode step's batch; `chunk` bounds the
-    /// prefill window (a window never exceeds `seq_len - 1` positions,
-    /// so an oversized `--prefill-chunk` costs nothing extra here).
+    /// `slots` bounds the decode step's batch; `chunk` bounds each
+    /// slot's prefill window (a window never exceeds `seq_len - 1`
+    /// positions, so an oversized `--prefill-chunk` costs nothing
+    /// extra here). The activation rows are sized `slots × window`
+    /// because the scheduler packs every prefilling slot's pending
+    /// window into ONE cross-slot pass
+    /// ([`Engine::prefill_pass_multi`]); the decode step only ever
+    /// needs `slots` of them.
     fn new(cfg: &ConfigEntry, slots: usize, chunk: usize) -> BatchScratch {
         let d = cfg.d_model;
-        let rows = slots.max(chunk.min(cfg.seq_len)).max(1);
+        let window = chunk.min(cfg.seq_len.saturating_sub(1)).max(1);
+        let rows = slots.max(1) * window;
         BatchScratch {
             x: vec![0.0; rows * d],
             xa: vec![0.0; rows * d],
@@ -963,6 +1023,12 @@ pub struct GenStats {
     /// Chunked prefill passes run (`ceil((len - 1) / prefill_chunk)`
     /// per non-empty prompt).
     pub prefill_chunks: usize,
+    /// Requests that attached a shared KV prefix at admission
+    /// (0 outside the scheduler path or with `--prefix-cache off`).
+    pub prefix_hits: usize,
+    /// Prompt positions served from the shared-prefix cache instead
+    /// of being recomputed — the sum of attached prefix lengths.
+    pub prefix_tokens_saved: usize,
     /// Seconds the decode pool's shard lanes spent executing row-band
     /// jobs, summed over lanes and scheduler workers (0 when
     /// `shard_workers <= 1` — the pool is never dispatched).
@@ -978,9 +1044,10 @@ pub struct GenStats {
 /// layer's linears across M persistent row-band workers per thread
 /// (single-sequence decode uses the same pool via
 /// [`Engine::generate_pooled`]); `--prefill-chunk C` sets the prompt
-/// window of the chunked prefill pass; `--untiled` falls back to the
-/// untiled SpMM kernels (every knob is bit-identical output, for perf
-/// comparisons).
+/// window of the chunked prefill pass; `--prefix-cache {on,off}`
+/// toggles the scheduler's shared-prefix KV cache on the batch path;
+/// `--untiled` falls back to the untiled SpMM kernels (every knob is
+/// bit-identical output, for perf comparisons).
 pub fn cmd_generate(args: &Args) -> Result<()> {
     let rt = crate::commands::open_runtime(args)?;
     let ck = crate::model::checkpoint::Checkpoint::load(
@@ -1003,6 +1070,7 @@ pub fn cmd_generate(args: &Args) -> Result<()> {
     let batch = args.usize_or("batch", 1)?;
     let threads = args.usize_or("threads", 1)?;
     let shard_workers = args.usize_or("shard-workers", 1)?;
+    let prefix_cache = scheduler::prefix_cache_flag(args)?;
 
     if batch <= 1 {
         let prompt = g.generate(prompt_len, seed);
@@ -1034,6 +1102,7 @@ pub fn cmd_generate(args: &Args) -> Result<()> {
             .collect();
         let opts = BatchOptions {
             n_new, temperature, seed, threads, shard_workers,
+            prefix_cache,
         };
         let (outs, stats) = engine.generate_batch(&prompts, &opts);
         for (s, out) in outs.iter().enumerate() {
@@ -1056,6 +1125,9 @@ pub fn cmd_generate(args: &Args) -> Result<()> {
                   chunk {})",
                  stats.prefill_seconds, stats.prefill_tokens,
                  stats.prefill_chunks, engine.prefill_chunk);
+        println!("prefix_cache {} hits {} tokens_saved {}",
+                 if prefix_cache { "on" } else { "off" },
+                 stats.prefix_hits, stats.prefix_tokens_saved);
         println!("mem {}", crate::util::human_bytes(stats.mem_bytes));
     }
     Ok(())

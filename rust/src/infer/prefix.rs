@@ -1,0 +1,397 @@
+//! Shared-prefix KV cache for the continuous-batching scheduler.
+//!
+//! Real serving traffic is dominated by requests that share system
+//! prompts and few-shot templates. The KV rows for prompt positions
+//! `0..P` depend only on tokens `0..P` — nothing downstream — so once
+//! one request has prefilled a prefix, every later request whose
+//! prompt *starts with* those tokens can reuse the rows verbatim
+//! instead of recomputing them. This module is the store for those
+//! rows: refcounted immutable [`PrefixSegment`]s behind a hash index,
+//! with LRU eviction under a byte budget.
+//!
+//! ## Lifecycle (copy-on-attach)
+//!
+//! Segments are immutable and shared via [`Arc`]; a slot never decodes
+//! *into* a segment. At admission the scheduler probes
+//! [`PrefixCache::lookup`]; on a hit it copies the matched rows into
+//! the slot's own pooled KV buffers and starts prefill at the suffix.
+//! When a slot finishes its headless prefill, the scheduler hands the
+//! prompt's prefix rows to [`PrefixCache::insert`], which copies them
+//! out of the (mutable, pooled) slot buffers into a fresh immutable
+//! segment. Copy-on-attach keeps the attention loop reading one
+//! contiguous per-slot buffer — the decode path does not know the
+//! cache exists, which is also why a cache hit is bit-identical to a
+//! cold start by construction: the attached rows are the same floats a
+//! cold prefill would have appended, in the same layout.
+//!
+//! ## Index
+//!
+//! Each segment is keyed by an FNV-1a rolling hash of its token
+//! prefix at every multiple of [`PREFIX_BLOCK`] *and* at its full
+//! length, so divergent-suffix families can share the common head
+//! without the insertion lengths having to line up. `lookup` walks
+//! candidate prefix lengths longest-first (the rolling hash makes all
+//! prompt-prefix hashes one O(len) pass) and verifies tokens on every
+//! hash hit, so a collision can never attach wrong rows.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::Kv;
+
+/// Index granularity: segments are additionally keyed at every
+/// multiple of this many tokens, so a request can attach to the
+/// common head of a cached prompt even when the cached prompt's full
+/// length never matches its own.
+pub const PREFIX_BLOCK: usize = 8;
+
+/// Default byte budget for a scheduler's prefix cache.
+pub const DEFAULT_PREFIX_CACHE_BYTES: usize = 64 << 20;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Rolling FNV-1a over little-endian token bytes: `out[p]` hashes
+/// `tokens[..p]`, all `len + 1` prefixes in one pass.
+fn prefix_hashes(tokens: &[u32]) -> Vec<u64> {
+    let mut out = Vec::with_capacity(tokens.len() + 1);
+    let mut h = FNV_OFFSET;
+    out.push(h);
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+        }
+        out.push(h);
+    }
+    out
+}
+
+/// One immutable cached prefix: the K/V rows every layer produced for
+/// `tokens`, reusable by any prompt that starts with them.
+pub struct PrefixSegment {
+    tokens: Vec<u32>,
+    /// Per-layer K rows, row-major `(len, d_model)`.
+    k: Vec<Vec<f32>>,
+    /// Per-layer V rows, same layout as `k`.
+    v: Vec<Vec<f32>>,
+}
+
+impl PrefixSegment {
+    /// Cached prefix length in tokens.
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// True when the segment caches no positions (never stored).
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Copy the first `n` cached positions into `kvs` (the slot's
+    /// pooled buffers), leaving each layer's cache holding exactly
+    /// those `n` rows. `n <= self.len()`.
+    pub(crate) fn attach(&self, kvs: &mut [Kv], n: usize, d: usize) {
+        debug_assert!(n <= self.tokens.len());
+        debug_assert_eq!(kvs.len(), self.k.len());
+        for (li, kv) in kvs.iter_mut().enumerate() {
+            kv.k.clear();
+            kv.v.clear();
+            kv.k.extend_from_slice(&self.k[li][..n * d]);
+            kv.v.extend_from_slice(&self.v[li][..n * d]);
+            kv.len = n;
+        }
+    }
+
+    fn bytes(&self) -> usize {
+        let rows: usize = self.k.iter().map(Vec::len).sum::<usize>()
+            + self.v.iter().map(Vec::len).sum::<usize>();
+        self.tokens.len() * 4 + rows * 4
+    }
+}
+
+/// Refcounted store of [`PrefixSegment`]s with hash lookup and LRU
+/// eviction. The scheduler owns one behind a `Mutex`, shared by all
+/// its workers; lock order is always queue-then-cache (admission) or
+/// cache alone (insertion), so the two mutexes cannot deadlock.
+pub struct PrefixCache {
+    /// `(prefix hash, prefix len)` → candidate segments whose first
+    /// `len` tokens hash there. Tokens are verified on every probe.
+    index: HashMap<(u64, usize), Vec<Arc<PrefixSegment>>>,
+    /// Every stored segment with its last-touched LRU stamp.
+    segments: Vec<(Arc<PrefixSegment>, u64)>,
+    max_bytes: usize,
+    bytes: usize,
+    stamp: u64,
+    /// Segments stored (dedup-skipped re-inserts do not count).
+    pub insertions: usize,
+    /// Segments dropped by the LRU byte budget.
+    pub evictions: usize,
+}
+
+impl PrefixCache {
+    pub fn new(max_bytes: usize) -> PrefixCache {
+        PrefixCache {
+            index: HashMap::new(),
+            segments: Vec::new(),
+            max_bytes,
+            bytes: 0,
+            stamp: 0,
+            insertions: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Bytes currently held by stored segments.
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Stored segment count.
+    pub fn len(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// True when no segments are stored.
+    pub fn is_empty(&self) -> bool {
+        self.segments.is_empty()
+    }
+
+    /// Longest cached prefix of `prompt`, as `(segment, attach_len)`:
+    /// the caller may copy the segment's first `attach_len` rows and
+    /// start prefill there. `attach_len` is capped at
+    /// `prompt.len() - 1` — the final prompt position must ride the
+    /// head-projecting decode step to produce logits, so it is never
+    /// attached even when the whole prompt is cached.
+    pub fn lookup(&mut self, prompt: &[u32])
+                  -> Option<(Arc<PrefixSegment>, usize)> {
+        if prompt.len() < 2 {
+            return None; // nothing attachable below 2 tokens
+        }
+        let hashes = prefix_hashes(prompt);
+        for p in (1..=prompt.len()).rev() {
+            let Some(cands) = self.index.get(&(hashes[p], p)) else {
+                continue;
+            };
+            let hit = cands.iter().find(|s| {
+                s.tokens.len() >= p && s.tokens[..p] == prompt[..p]
+            });
+            if let Some(seg) = hit {
+                let seg = Arc::clone(seg);
+                self.touch(&seg);
+                let attach = p.min(prompt.len() - 1);
+                return Some((seg, attach));
+            }
+        }
+        None
+    }
+
+    /// Store the rows for `tokens` (a prompt's headless prefix) out of
+    /// a slot's KV buffers: each layer's first `tokens.len()` cached
+    /// rows are copied into a fresh immutable segment. No-op when the
+    /// exact prefix is already cached (dedupe) or when the segment
+    /// alone would exceed the byte budget; otherwise evicts
+    /// least-recently-used segments until the budget holds.
+    pub(crate) fn insert(&mut self, tokens: &[u32], kvs: &[Kv],
+                         d: usize) {
+        let len = tokens.len();
+        if len == 0 {
+            return;
+        }
+        let hashes = prefix_hashes(tokens);
+        if self.covered(&hashes, tokens, len) {
+            return;
+        }
+        let seg = Arc::new(PrefixSegment {
+            tokens: tokens.to_vec(),
+            k: kvs.iter().map(|kv| kv.k[..len * d].to_vec()).collect(),
+            v: kvs.iter().map(|kv| kv.v[..len * d].to_vec()).collect(),
+        });
+        if seg.bytes() > self.max_bytes {
+            return;
+        }
+        let mut boundaries: Vec<usize> = (1..)
+            .map(|i| i * PREFIX_BLOCK)
+            .take_while(|&b| b < len)
+            .collect();
+        boundaries.push(len);
+        for b in boundaries {
+            // skip boundaries another segment already answers for
+            // these exact tokens — one candidate per distinct prefix
+            if !self.covered(&hashes, tokens, b) {
+                self.index
+                    .entry((hashes[b], b))
+                    .or_default()
+                    .push(Arc::clone(&seg));
+            }
+        }
+        self.bytes += seg.bytes();
+        self.stamp += 1;
+        self.segments.push((seg, self.stamp));
+        self.insertions += 1;
+        while self.bytes > self.max_bytes && self.segments.len() > 1 {
+            self.evict_lru();
+        }
+    }
+
+    /// True when some stored segment already matches `tokens[..b]`.
+    fn covered(&self, hashes: &[u64], tokens: &[u32], b: usize) -> bool {
+        self.index.get(&(hashes[b], b)).is_some_and(|cands| {
+            cands.iter().any(|s| {
+                s.tokens.len() >= b && s.tokens[..b] == tokens[..b]
+            })
+        })
+    }
+
+    fn touch(&mut self, seg: &Arc<PrefixSegment>) {
+        self.stamp += 1;
+        for (s, at) in self.segments.iter_mut() {
+            if Arc::ptr_eq(s, seg) {
+                *at = self.stamp;
+                break;
+            }
+        }
+    }
+
+    fn evict_lru(&mut self) {
+        let Some(oldest) = self
+            .segments
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, (_, at))| *at)
+            .map(|(i, _)| i)
+        else {
+            return;
+        };
+        let (seg, _) = self.segments.swap_remove(oldest);
+        self.bytes -= seg.bytes();
+        for cands in self.index.values_mut() {
+            cands.retain(|s| !Arc::ptr_eq(s, &seg));
+        }
+        self.index.retain(|_, cands| !cands.is_empty());
+        self.evictions += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A fake per-layer KV holding `len` rows of `d` floats whose
+    /// values encode (layer, row) so copies are checkable.
+    fn fake_kvs(layers: usize, len: usize, d: usize) -> Vec<Kv> {
+        (0..layers)
+            .map(|li| {
+                let row = |t: usize| {
+                    (0..d).map(move |c| (li * 1000 + t * 10 + c) as f32)
+                };
+                Kv {
+                    k: (0..len).flat_map(row).collect(),
+                    v: (0..len).flat_map(|t| row(t).map(|x| -x)).collect(),
+                    len,
+                }
+            })
+            .collect()
+    }
+
+    fn empty_kvs(layers: usize) -> Vec<Kv> {
+        (0..layers)
+            .map(|_| Kv { k: Vec::new(), v: Vec::new(), len: 0 })
+            .collect()
+    }
+
+    #[test]
+    fn extension_attaches_the_cached_prefix() {
+        let d = 4;
+        let mut cache = PrefixCache::new(1 << 20);
+        let prefix: Vec<u32> = (0..10).collect();
+        cache.insert(&prefix, &fake_kvs(2, 10, d), d);
+        assert_eq!(cache.len(), 1);
+
+        // a prompt extending the cached prefix attaches all 10 rows
+        let mut prompt = prefix.clone();
+        prompt.extend([40, 41, 42]);
+        let (seg, attach) = cache.lookup(&prompt).expect("hit");
+        assert_eq!(attach, 10);
+        let mut kvs = empty_kvs(2);
+        seg.attach(&mut kvs, attach, d);
+        let want = fake_kvs(2, 10, d);
+        for (got, exp) in kvs.iter().zip(want.iter()) {
+            assert_eq!(got.k, exp.k);
+            assert_eq!(got.v, exp.v);
+            assert_eq!(got.len, 10);
+        }
+    }
+
+    #[test]
+    fn full_prompt_match_attaches_all_but_the_last_position() {
+        let d = 2;
+        let mut cache = PrefixCache::new(1 << 20);
+        let prefix: Vec<u32> = (0..6).collect();
+        cache.insert(&prefix, &fake_kvs(1, 6, d), d);
+        // the whole prompt IS the cached prefix: the last position
+        // still needs its head-projecting step, so attach stops at 5
+        let (_, attach) = cache.lookup(&prefix).expect("hit");
+        assert_eq!(attach, 5);
+    }
+
+    #[test]
+    fn divergent_suffixes_share_the_block_aligned_head() {
+        let d = 2;
+        let mut cache = PrefixCache::new(1 << 20);
+        // family head: PREFIX_BLOCK tokens, then suffix "a"
+        let mut a: Vec<u32> = (100..100 + PREFIX_BLOCK as u32).collect();
+        a.extend([1, 2, 3]);
+        cache.insert(&a, &fake_kvs(1, a.len(), d), d);
+        // sibling with a different suffix still attaches the head
+        let mut b: Vec<u32> = (100..100 + PREFIX_BLOCK as u32).collect();
+        b.extend([7, 8]);
+        let (_, attach) = cache.lookup(&b).expect("family hit");
+        assert_eq!(attach, PREFIX_BLOCK);
+        // an unrelated prompt misses
+        assert!(cache.lookup(&[9u32, 9, 9, 9]).is_none());
+    }
+
+    #[test]
+    fn reinserting_a_covered_prefix_is_deduped() {
+        let d = 2;
+        let mut cache = PrefixCache::new(1 << 20);
+        let prefix: Vec<u32> = (0..5).collect();
+        cache.insert(&prefix, &fake_kvs(1, 5, d), d);
+        let bytes = cache.bytes();
+        cache.insert(&prefix, &fake_kvs(1, 5, d), d);
+        assert_eq!(cache.insertions, 1, "exact re-insert must dedupe");
+        assert_eq!(cache.bytes(), bytes);
+    }
+
+    #[test]
+    fn lru_eviction_keeps_recently_touched_segments() {
+        let d = 2;
+        // budget fits roughly two 6-token single-layer segments
+        let per_seg = 6 * 4 + 2 * 6 * d * 4;
+        let mut cache = PrefixCache::new(2 * per_seg);
+        let seg = |base: u32| -> Vec<u32> {
+            (base..base + 6).collect()
+        };
+        cache.insert(&seg(0), &fake_kvs(1, 6, d), d);
+        cache.insert(&seg(100), &fake_kvs(1, 6, d), d);
+        // touch the first so the second is the LRU victim
+        let mut probe = seg(0);
+        probe.push(99);
+        assert!(cache.lookup(&probe).is_some());
+        cache.insert(&seg(200), &fake_kvs(1, 6, d), d);
+        assert_eq!(cache.evictions, 1);
+        assert!(cache.lookup(&probe).is_some(), "touched segment kept");
+        let mut evicted = seg(100);
+        evicted.push(99);
+        assert!(cache.lookup(&evicted).is_none(), "LRU segment evicted");
+        assert!(cache.bytes() <= 2 * per_seg);
+    }
+
+    #[test]
+    fn one_token_prompts_never_probe() {
+        let mut cache = PrefixCache::new(1 << 20);
+        cache.insert(&[5], &fake_kvs(1, 1, 2), 2);
+        // nothing attachable: attach would be min(1, 1-1) = 0
+        assert!(cache.lookup(&[5]).is_none());
+    }
+}

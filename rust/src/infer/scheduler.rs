@@ -13,7 +13,20 @@
 //! scheduler iteration, headless (zero head projections until the
 //! final prompt position rides the shared decode step) — so a long
 //! prompt costs `ceil((len-1)/chunk)` passes instead of `len` one-token
-//! steps while its batch-mates keep generating every iteration.
+//! steps while its batch-mates keep generating every iteration. Two
+//! more prefill levers sit on top:
+//!
+//!  - **Shared-prefix KV cache** ([`prefix::PrefixCache`], on by
+//!    default, `--prefix-cache off` to disable): an admitted request
+//!    whose prompt extends an already-prefilled prefix copies the
+//!    cached K/V rows into its slot buffers and prefills only its
+//!    suffix; a slot finishing its headless prefill publishes the
+//!    prefix for later admissions. Copy-on-attach, so decode never
+//!    touches shared state — hits are bit-identical to cold starts.
+//!  - **Cross-slot batched prefill**: each iteration packs the pending
+//!    windows of every prefilling slot into ONE
+//!    [`Engine::prefill_pass_multi`] call (time × slots as the batch
+//!    dimension) instead of one pass per slot.
 //!
 //! ## Time model
 //!
@@ -45,6 +58,7 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use super::pool::WorkerPool;
+use super::prefix::{PrefixCache, DEFAULT_PREFIX_CACHE_BYTES};
 use super::{sample, BatchScratch, Engine, Kv, Slot};
 use crate::cli::Args;
 use crate::util::rng::Rng;
@@ -123,24 +137,60 @@ impl RequestQueue {
     }
 }
 
+/// Releases sampled for the pool's rolling high-water estimate: a
+/// buffer keeps its allocation as long as any of the last this-many
+/// retiring requests actually needed it.
+const KV_RECENT_WINDOW: usize = 8;
+
+/// Shrink slack: a parked buffer may hold up to this multiple of the
+/// rolling high-water mark before [`KvPool::release`] trims it.
+const KV_SHRINK_MULT: usize = 2;
+
 /// Recycles per-slot KV-cache buffer sets across requests. A retiring
-/// slot's buffers (one K + one V per layer, each holding capacity for
-/// `seq_len * d_model` floats) go back to the pool; the next admission
-/// reuses them after a `clear()` that keeps the heap allocation, so
-/// steady-state decode admits and retires requests allocation-free.
+/// slot's buffers (one K + one V per layer) go back to the pool; the
+/// next admission reuses them after a `clear()` that keeps the heap
+/// allocation, so steady-state decode admits and retires requests
+/// allocation-free.
+///
+/// Buffers grow on demand (up to `seq_len * d_model` floats) and are
+/// trimmed on release when their capacity exceeds
+/// [`KV_SHRINK_MULT`] × the high-water mark of the last
+/// [`KV_RECENT_WINDOW`] releases — so one long-prompt request no
+/// longer pins peak-sized buffers for the engine's lifetime once the
+/// workload turns short again, while a steadily-long workload never
+/// thrashes (the window keeps its watermark high).
 pub struct KvPool {
     layers: usize,
+    /// Hard per-buffer capacity bound (`seq_len * d_model` floats).
     cap: usize,
     free: Vec<Vec<Kv>>,
+    /// Used sizes (floats per buffer) of the most recent releases —
+    /// the rolling window behind [`KvPool::watermark`].
+    recent: VecDeque<usize>,
     /// Buffer sets that required a fresh heap allocation.
     pub allocated: usize,
     /// Buffer sets served by recycling a retired slot's buffers.
     pub reused: usize,
+    /// Buffer sets trimmed by the shrink policy on release.
+    pub shrunk: usize,
 }
 
 impl KvPool {
     pub(crate) fn new(layers: usize, cap: usize) -> KvPool {
-        KvPool { layers, cap, free: Vec::new(), allocated: 0, reused: 0 }
+        KvPool {
+            layers,
+            cap,
+            free: Vec::new(),
+            recent: VecDeque::new(),
+            allocated: 0,
+            reused: 0,
+            shrunk: 0,
+        }
+    }
+
+    /// High-water mark (floats per buffer) over the recent releases.
+    fn watermark(&self) -> usize {
+        self.recent.iter().copied().max().unwrap_or(0)
     }
 
     fn acquire(&mut self) -> Vec<Kv> {
@@ -155,11 +205,15 @@ impl KvPool {
                 kvs
             }
             None => {
+                // size fresh buffers to the recent high-water mark
+                // instead of the seq_len peak: short-request traffic
+                // should not allocate worst-case buffers up front
+                let cap = self.watermark().min(self.cap);
                 self.allocated += 1;
                 (0..self.layers)
                     .map(|_| Kv {
-                        k: Vec::with_capacity(self.cap),
-                        v: Vec::with_capacity(self.cap),
+                        k: Vec::with_capacity(cap),
+                        v: Vec::with_capacity(cap),
                         len: 0,
                     })
                     .collect()
@@ -167,14 +221,47 @@ impl KvPool {
         }
     }
 
-    fn release(&mut self, kvs: Vec<Kv>) {
+    fn release(&mut self, mut kvs: Vec<Kv>) {
         debug_assert_eq!(kvs.len(), self.layers);
+        let used = kvs.iter().map(|kv| kv.k.len()).max().unwrap_or(0);
+        self.recent.push_back(used);
+        if self.recent.len() > KV_RECENT_WINDOW {
+            self.recent.pop_front();
+        }
+        // trim buffers the recent workload no longer justifies; the
+        // watermark includes `used` just pushed, so the limit never
+        // undercuts the data still in the buffers
+        let limit = (self.watermark() * KV_SHRINK_MULT).min(self.cap.max(1));
+        let mut trimmed = false;
+        for kv in kvs.iter_mut() {
+            if kv.k.capacity() > limit {
+                kv.k.shrink_to(limit);
+                trimmed = true;
+            }
+            if kv.v.capacity() > limit {
+                kv.v.shrink_to(limit);
+                trimmed = true;
+            }
+        }
+        if trimmed {
+            self.shrunk += 1;
+        }
         self.free.push(kvs);
     }
 
     /// Buffer sets currently parked in the pool.
     pub fn pooled(&self) -> usize {
         self.free.len()
+    }
+
+    /// Heap bytes currently parked in the pool's free buffers (the
+    /// `kv_pool_bytes` surfaced in [`SchedStats`]).
+    pub fn bytes(&self) -> usize {
+        self.free
+            .iter()
+            .flat_map(|kvs| kvs.iter())
+            .map(|kv| (kv.k.capacity() + kv.v.capacity()) * 4)
+            .sum()
     }
 }
 
@@ -195,6 +282,12 @@ pub struct SchedOptions {
     /// Orthogonal to `threads` — slots × bands — and, like every other
     /// knob here, incapable of changing a token.
     pub shard_workers: usize,
+    /// Shared-prefix KV cache (`--prefix-cache {on,off}`, default on):
+    /// admissions whose prompt extends an already-prefilled prefix
+    /// copy the cached K/V rows and prefill only their suffix.
+    /// Bit-identical token streams either way — this knob only moves
+    /// prefill work, never a token.
+    pub prefix_cache: bool,
 }
 
 impl Default for SchedOptions {
@@ -204,6 +297,7 @@ impl Default for SchedOptions {
             temperature: 0.0,
             threads: 1,
             shard_workers: 1,
+            prefix_cache: true,
         }
     }
 }
@@ -237,10 +331,14 @@ pub struct SchedStats {
     /// plus idle fast-forward jumps).
     pub steps: u64,
     pub wall_seconds: f64,
-    /// Wall seconds of chunked prefill passes plus steps where no slot
-    /// was generating yet (max across workers).
+    /// CPU-seconds of chunked prefill passes plus steps where no slot
+    /// was generating yet, summed across workers. This is *work*, not
+    /// elapsed time: with `threads > 1` it exceeds the wall time the
+    /// prefill overlapped (`wall_seconds` carries the elapsed view),
+    /// so dividing token counts by it yields per-core rates.
     pub prefill_seconds: f64,
-    /// Wall seconds of pure generation steps (max across workers).
+    /// CPU-seconds of pure generation steps, summed across workers
+    /// (same convention as `prefill_seconds`).
     pub decode_seconds: f64,
     /// Prompt positions fed via the headless chunked prefill passes
     /// (summed across workers; each admitted request additionally
@@ -258,6 +356,22 @@ pub struct SchedStats {
     pub mean_wait_steps: f64,
     pub kv_allocated: usize,
     pub kv_reused: usize,
+    /// Admissions that attached cached shared-prefix K/V rows instead
+    /// of prefilling their full prompt (0 with `--prefix-cache off`).
+    pub prefix_hits: usize,
+    /// Prompt positions served from the shared-prefix cache — the
+    /// exact sum of attached prefix lengths, and exactly the prefill
+    /// tokens the cache saved.
+    pub prefix_tokens_saved: usize,
+    /// `prefix_hits / served` over non-expired, non-empty requests.
+    pub prefix_hit_rate: f64,
+    /// Heap bytes held by cached prefix segments at the end of the run
+    /// (summed across workers' caches when sharded per group).
+    pub prefix_cache_bytes: usize,
+    /// Heap bytes parked in the KV pools' free buffers at the end of
+    /// the run — the high-water pinning signal (summed across
+    /// workers).
+    pub kv_pool_bytes: usize,
     /// Row-band shard lanes per scheduler worker (1 = serial decode).
     pub shard_workers: usize,
     /// Per-lane seconds spent executing row-band shard jobs, summed
@@ -274,6 +388,10 @@ pub struct SchedStats {
 pub struct Scheduler<'e> {
     engine: &'e Engine,
     opts: SchedOptions,
+    /// Shared-prefix KV cache, shared by every worker (`None` with
+    /// `--prefix-cache off`). Locked briefly at admission (lookup) and
+    /// at prefill completion (insert) — never during a forward pass.
+    prefix: Option<Mutex<PrefixCache>>,
 }
 
 /// State shared by the scheduler workers.
@@ -293,6 +411,11 @@ struct Meta {
     arrival_step: u64,
     admitted_step: u64,
     admitted_at: Instant,
+    /// Prompt positions attached from the shared-prefix cache at
+    /// admission (0 on a cache miss). A finished headless prefill is
+    /// published back to the cache only when it fed positions beyond
+    /// this point — re-inserting exactly what was attached is noise.
+    attached: usize,
 }
 
 struct WorkerOut {
@@ -303,16 +426,36 @@ struct WorkerOut {
     prefill_tokens: usize,
     /// Chunked prefill passes run.
     prefill_chunks: usize,
+    /// Admissions that attached cached shared-prefix K/V rows.
+    prefix_hits: usize,
+    /// Prompt positions attached from the cache instead of prefilled.
+    prefix_tokens_saved: usize,
     kv_allocated: usize,
     kv_reused: usize,
+    /// Final heap bytes parked in this worker's KV pool free list.
+    kv_pool_bytes: usize,
     /// Per-lane busy/idle seconds of this worker's decode pool.
     shard_busy: Vec<f64>,
     shard_idle: Vec<f64>,
 }
 
+/// What an idle worker (no local slots) decided at the queue lock.
+enum Idle {
+    /// Queue drained — the worker's run is over.
+    Done,
+    /// Whole scheduler idle: the clock jumped to the next arrival;
+    /// retry admission immediately.
+    FastForwarded,
+    /// Other workers still decoding: park briefly off the mutex.
+    Park,
+}
+
 impl<'e> Scheduler<'e> {
     pub fn new(engine: &'e Engine, opts: SchedOptions) -> Scheduler<'e> {
-        Scheduler { engine, opts }
+        let prefix = opts
+            .prefix_cache
+            .then(|| Mutex::new(PrefixCache::new(DEFAULT_PREFIX_CACHE_BYTES)));
+        Scheduler { engine, opts, prefix }
     }
 
     /// Drain `queue` to completion and return every request's terminal
@@ -347,12 +490,20 @@ impl<'e> Scheduler<'e> {
         };
         let wall = t0.elapsed().as_secs_f64();
 
-        let prefill = outs.iter().fold(0.0, |a, o| a.max(o.prefill_seconds));
-        let decode = outs.iter().fold(0.0, |a, o| a.max(o.decode_seconds));
+        let (prefill, decode) = sum_worker_seconds(&outs);
         let prefill_tokens = outs.iter().map(|o| o.prefill_tokens).sum();
         let prefill_chunks = outs.iter().map(|o| o.prefill_chunks).sum();
         let kv_allocated = outs.iter().map(|o| o.kv_allocated).sum();
         let kv_reused = outs.iter().map(|o| o.kv_reused).sum();
+        let cache = CacheCounts {
+            hits: outs.iter().map(|o| o.prefix_hits).sum(),
+            tokens_saved: outs.iter().map(|o| o.prefix_tokens_saved).sum(),
+            cache_bytes: self
+                .prefix
+                .as_ref()
+                .map_or(0, |p| p.lock().unwrap().bytes()),
+            kv_pool_bytes: outs.iter().map(|o| o.kv_pool_bytes).sum(),
+        };
         // lane-wise sums across workers (every worker's pool has the
         // same lane count)
         let lanes = self.opts.shard_workers.max(1);
@@ -376,7 +527,7 @@ impl<'e> Scheduler<'e> {
                               decode,
                               PrefillCounts { tokens: prefill_tokens,
                                               chunks: prefill_chunks },
-                              kv_allocated, kv_reused,
+                              kv_allocated, kv_reused, cache,
                               ShardTimes { lanes, busy: shard_busy,
                                            idle: shard_idle });
         (finished, stats)
@@ -415,11 +566,15 @@ impl<'e> Scheduler<'e> {
             decode_seconds: 0.0,
             prefill_tokens: 0,
             prefill_chunks: 0,
+            prefix_hits: 0,
+            prefix_tokens_saved: 0,
             kv_allocated: 0,
             kv_reused: 0,
+            kv_pool_bytes: 0,
             shard_busy: Vec::new(),
             shard_idle: Vec::new(),
         };
+        let mut prefill_jobs: Vec<(usize, usize)> = Vec::with_capacity(cap);
 
         loop {
             let now = shared.clock.load(Ordering::SeqCst);
@@ -460,109 +615,61 @@ impl<'e> Scheduler<'e> {
             //    the continuous part: admission happens between decode
             //    steps, not at batch boundaries.
             if slots.len() < cap {
-                let mut q = shared.queue.lock().unwrap();
-                while slots.len() < cap {
-                    if !q.front().is_some_and(|(a, _)| *a <= now) {
-                        break;
-                    }
-                    let (arrival, req) = q.pop_front().unwrap();
-                    if req.deadline
-                        .is_some_and(|d| now > arrival.saturating_add(d))
-                    {
-                        out.finished.push(FinishedRequest {
-                            id: req.id,
-                            tokens: Vec::new(),
-                            prompt_len: req.prompt.len(),
-                            generated: 0,
-                            expired: true,
-                            arrival_step: arrival,
-                            // never admitted: keep wait = 0 rather than
-                            // fabricating an admission step
-                            admitted_step: arrival,
-                            finished_step: now,
-                            latency_ms: 0.0,
-                        });
-                        continue;
-                    }
-                    if req.prompt.is_empty() {
-                        // nothing to condition on: retires immediately
-                        // with zero tokens (same rule as generate_batch)
-                        out.finished.push(FinishedRequest {
-                            id: req.id,
-                            tokens: Vec::new(),
-                            prompt_len: 0,
-                            generated: 0,
-                            expired: false,
-                            arrival_step: arrival,
-                            admitted_step: now,
-                            finished_step: now,
-                            latency_ms: 0.0,
-                        });
-                        continue;
-                    }
-                    assert!(req.prompt.len() <= cfg.seq_len,
-                            "request {}: prompt of {} tokens exceeds \
-                             seq_len {}", req.id, req.prompt.len(),
-                            cfg.seq_len);
-                    shared.active.fetch_add(1, Ordering::SeqCst);
-                    meta.push(Meta {
-                        id: req.id,
-                        arrival_step: arrival,
-                        admitted_step: now,
-                        admitted_at: Instant::now(),
-                    });
-                    slots.push(Slot {
-                        prompt_len: req.prompt.len(),
-                        tokens: req.prompt,
-                        fed: 0,
-                        kvs: pool.acquire(),
-                        rng: Rng::new(req.seed),
-                        logits: vec![],
-                        generated: 0,
-                        n_new: req.n_new,
-                    });
-                }
+                self.admit(shared, cap, &mut slots, &mut meta, &mut pool,
+                           &mut out);
             }
 
             // 3. Idle / termination.
             if slots.is_empty() {
-                let q = shared.queue.lock().unwrap();
-                if q.is_empty() {
-                    break;
+                match idle_step(shared) {
+                    Idle::Done => break,
+                    Idle::FastForwarded => continue,
+                    Idle::Park => {
+                        std::thread::sleep(
+                            std::time::Duration::from_micros(50));
+                        continue;
+                    }
                 }
-                if shared.active.load(Ordering::SeqCst) == 0 {
-                    // the whole scheduler is idle: fast-forward the
-                    // clock to the next arrival instead of spinning
-                    // through empty steps, and retry admission
-                    // immediately
-                    let next = q.front().unwrap().0;
-                    shared.clock.fetch_max(next, Ordering::SeqCst);
-                    drop(q);
-                } else {
-                    // other workers are still decoding: park briefly
-                    // instead of hot-spinning on their queue mutex
-                    drop(q);
-                    std::thread::sleep(
-                        std::time::Duration::from_micros(50));
-                }
-                continue;
             }
 
-            // 4. Chunked prefill: every slot still holding more than
-            //    one unfed prompt token advances by one headless
-            //    window of up to `prefill_chunk` positions — so a
-            //    long prompt costs ceil((len-1)/chunk) passes instead
-            //    of len-1 steps, with zero head projections, while
-            //    generating batch-mates keep stepping every iteration.
-            for s in slots.iter_mut() {
+            // 4. Cross-slot batched chunked prefill: every slot still
+            //    holding more than one unfed prompt token contributes
+            //    one headless window of up to `prefill_chunk`
+            //    positions, and ALL windows run as ONE batched pass —
+            //    one trip through each layer's linears for the packed
+            //    rows instead of one pass per slot. A long prompt
+            //    costs ceil((suffix-1)/chunk) windows, with zero head
+            //    projections, while generating batch-mates keep
+            //    stepping every iteration.
+            prefill_jobs.clear();
+            for (i, s) in slots.iter().enumerate() {
                 let last = s.tokens.len() - 1;
                 if s.fed < last {
-                    let n = chunk.min(last - s.fed);
-                    let t = Timer::start();
-                    engine.prefill_pass(s, n, &mut scratch, &shard_pool);
-                    out.prefill_seconds += t.seconds();
-                    out.prefill_tokens += n;
-                    out.prefill_chunks += 1;
+                    prefill_jobs.push((i, chunk.min(last - s.fed)));
+                }
+            }
+            if !prefill_jobs.is_empty() {
+                let t = Timer::start();
+                engine.prefill_pass_multi(&mut slots, &prefill_jobs,
+                                          &mut scratch, &shard_pool);
+                out.prefill_seconds += t.seconds();
+                out.prefill_tokens +=
+                    prefill_jobs.iter().map(|(_, n)| n).sum::<usize>();
+                out.prefill_chunks += prefill_jobs.len();
+                // publish freshly completed headless prefills: a slot
+                // that just consumed its last headless window caches
+                // prompt[..len-1] for later admissions (skip slots
+                // that only replayed an attached prefix)
+                if let Some(cache) = self.prefix.as_ref() {
+                    let mut cache = cache.lock().unwrap();
+                    for &(i, _) in &prefill_jobs {
+                        let s = &slots[i];
+                        let last = s.tokens.len() - 1;
+                        if s.fed == last && last > meta[i].attached {
+                            cache.insert(&s.tokens[..last], &s.kvs,
+                                         cfg.d_model);
+                        }
+                    }
                 }
             }
 
@@ -596,11 +703,145 @@ impl<'e> Scheduler<'e> {
         }
         out.kv_allocated = pool.allocated;
         out.kv_reused = pool.reused;
+        out.kv_pool_bytes = pool.bytes();
         let ps = shard_pool.stats();
         out.shard_idle = ps.idle_seconds();
         out.shard_busy = ps.busy_seconds;
         out
     }
+
+    /// Admit arrived requests into this worker's free capacity.
+    ///
+    /// The clock is read *inside* the queue lock: admission visibility,
+    /// deadline expiry, and `admitted_step` all use one coherent `now`
+    /// that an idle worker's fast-forward (which also holds this lock,
+    /// see [`idle_step`]) cannot move mid-admission. A loop-top clock
+    /// read would go stale against a concurrent fast-forward and
+    /// expire or mis-stamp requests (`--threads > 1`).
+    ///
+    /// On a shared-prefix cache hit the new slot starts with the
+    /// cached K/V rows copied in and `fed` already past them, so the
+    /// prefill loop only feeds the suffix. Lock order is queue →
+    /// cache, same as everywhere else.
+    fn admit(&self, shared: &Shared, cap: usize, slots: &mut Vec<Slot>,
+             meta: &mut Vec<Meta>, pool: &mut KvPool,
+             out: &mut WorkerOut) {
+        let cfg = &self.engine.cfg;
+        let mut q = shared.queue.lock().unwrap();
+        let now = shared.clock.load(Ordering::SeqCst);
+        while slots.len() < cap {
+            if !q.front().is_some_and(|(a, _)| *a <= now) {
+                break;
+            }
+            let (arrival, req) = q.pop_front().unwrap();
+            if req.deadline
+                .is_some_and(|d| now > arrival.saturating_add(d))
+            {
+                out.finished.push(FinishedRequest {
+                    id: req.id,
+                    tokens: Vec::new(),
+                    prompt_len: req.prompt.len(),
+                    generated: 0,
+                    expired: true,
+                    arrival_step: arrival,
+                    // never admitted: keep wait = 0 rather than
+                    // fabricating an admission step
+                    admitted_step: arrival,
+                    finished_step: now,
+                    latency_ms: 0.0,
+                });
+                continue;
+            }
+            if req.prompt.is_empty() {
+                // nothing to condition on: retires immediately
+                // with zero tokens (same rule as generate_batch)
+                out.finished.push(FinishedRequest {
+                    id: req.id,
+                    tokens: Vec::new(),
+                    prompt_len: 0,
+                    generated: 0,
+                    expired: false,
+                    arrival_step: arrival,
+                    admitted_step: now,
+                    finished_step: now,
+                    latency_ms: 0.0,
+                });
+                continue;
+            }
+            assert!(req.prompt.len() <= cfg.seq_len,
+                    "request {}: prompt of {} tokens exceeds \
+                     seq_len {}", req.id, req.prompt.len(),
+                    cfg.seq_len);
+            shared.active.fetch_add(1, Ordering::SeqCst);
+            let mut kvs = pool.acquire();
+            let mut fed = 0usize;
+            if let Some(cache) = self.prefix.as_ref() {
+                if let Some((seg, n)) =
+                    cache.lock().unwrap().lookup(&req.prompt)
+                {
+                    // copy-on-attach: the cached rows land in this
+                    // slot's own buffers, so decode never reads
+                    // shared state and the stream stays bit-exact
+                    seg.attach(&mut kvs, n, cfg.d_model);
+                    fed = n;
+                    out.prefix_hits += 1;
+                    out.prefix_tokens_saved += n;
+                }
+            }
+            meta.push(Meta {
+                id: req.id,
+                arrival_step: arrival,
+                admitted_step: now,
+                admitted_at: Instant::now(),
+                attached: fed,
+            });
+            slots.push(Slot {
+                prompt_len: req.prompt.len(),
+                tokens: req.prompt,
+                fed,
+                kvs,
+                rng: Rng::new(req.seed),
+                logits: vec![],
+                generated: 0,
+                n_new: req.n_new,
+            });
+        }
+    }
+}
+
+/// Decide what an idle worker (no local slots) does, entirely under
+/// the queue lock: when the whole scheduler is idle the clock
+/// fast-forwards to the *front* (minimum) pending arrival — never
+/// past any request another worker could be about to admit, because
+/// admission also holds this lock and a concurrent admit either
+/// already popped the front entry or will see the forwarded clock.
+fn idle_step(shared: &Shared) -> Idle {
+    let q = shared.queue.lock().unwrap();
+    if q.is_empty() {
+        return Idle::Done;
+    }
+    if shared.active.load(Ordering::SeqCst) == 0 {
+        // the whole scheduler is idle: fast-forward the clock to the
+        // next arrival instead of spinning through empty steps, and
+        // retry admission immediately
+        let next = q.front().unwrap().0;
+        shared.clock.fetch_max(next, Ordering::SeqCst);
+        return Idle::FastForwarded;
+    }
+    Idle::Park
+}
+
+/// Sum each worker's prefill/decode CPU-seconds into run totals.
+///
+/// Summing (not lane-`max`) is the only reduction consistent with the
+/// token counters: `prefill_tokens`/`prefill_chunks` are summed across
+/// workers, so a derived tokens-per-second must divide by summed
+/// seconds or it overstates multi-worker throughput by up to
+/// `threads`×. Elapsed time is reported separately as `wall_seconds`.
+fn sum_worker_seconds(outs: &[WorkerOut]) -> (f64, f64) {
+    outs.iter().fold((0.0, 0.0), |(p, d), o| {
+        (p + o.prefill_seconds, d + o.decode_seconds)
+    })
 }
 
 /// Lane-wise shard-pool times aggregated across scheduler workers —
@@ -615,6 +856,15 @@ struct ShardTimes {
 struct PrefillCounts {
     tokens: usize,
     chunks: usize,
+}
+
+/// Shared-prefix-cache and KV-pool memory counters aggregated across
+/// scheduler workers — carried into [`SchedStats`] by [`summarize`].
+struct CacheCounts {
+    hits: usize,
+    tokens_saved: usize,
+    cache_bytes: usize,
+    kv_pool_bytes: usize,
 }
 
 fn retire(slots: &mut Vec<Slot>, meta: &mut Vec<Meta>, i: usize,
@@ -639,7 +889,7 @@ fn retire(slots: &mut Vec<Slot>, meta: &mut Vec<Meta>, i: usize,
 
 fn summarize(finished: &[FinishedRequest], wall: f64, steps: u64,
              prefill: f64, decode: f64, pre: PrefillCounts,
-             kv_allocated: usize, kv_reused: usize,
+             kv_allocated: usize, kv_reused: usize, cache: CacheCounts,
              shard: ShardTimes) -> SchedStats {
     let tokens: usize = finished.iter().map(|f| f.generated).sum();
     let expired = finished.iter().filter(|f| f.expired).count();
@@ -671,6 +921,11 @@ fn summarize(finished: &[FinishedRequest], wall: f64, steps: u64,
         },
         kv_allocated,
         kv_reused,
+        prefix_hits: cache.hits,
+        prefix_tokens_saved: cache.tokens_saved,
+        prefix_hit_rate: cache.hits as f64 / served.max(1) as f64,
+        prefix_cache_bytes: cache.cache_bytes,
+        kv_pool_bytes: cache.kv_pool_bytes,
         shard_workers: shard.lanes,
         shard_busy_seconds: shard.busy,
         shard_idle_seconds: shard.idle,
@@ -707,6 +962,14 @@ pub fn serve_static_chunks(engine: &Engine, requests: &[Request],
     let mut pre = PrefillCounts { tokens: 0, chunks: 0 };
     let mut steps = 0u64;
     let (mut kv_allocated, mut kv_reused) = (0usize, 0usize);
+    // each group runs its own Scheduler, hence its own prefix cache:
+    // sharing stays within a group, and the totals below sum groups
+    let mut cache = CacheCounts {
+        hits: 0,
+        tokens_saved: 0,
+        cache_bytes: 0,
+        kv_pool_bytes: 0,
+    };
     let mut shard = ShardTimes {
         lanes,
         busy: vec![0.0; lanes],
@@ -730,6 +993,10 @@ pub fn serve_static_chunks(engine: &Engine, requests: &[Request],
         steps += st.steps;
         kv_allocated += st.kv_allocated;
         kv_reused += st.kv_reused;
+        cache.hits += st.prefix_hits;
+        cache.tokens_saved += st.prefix_tokens_saved;
+        cache.cache_bytes += st.prefix_cache_bytes;
+        cache.kv_pool_bytes += st.kv_pool_bytes;
         for (acc, v) in shard.busy.iter_mut()
             .zip(&st.shard_busy_seconds) {
             *acc += v;
@@ -742,8 +1009,22 @@ pub fn serve_static_chunks(engine: &Engine, requests: &[Request],
     finished.sort_by_key(|f| f.id);
     let wall = t0.elapsed().as_secs_f64();
     let stats = summarize(&finished, wall, steps, prefill, decode, pre,
-                          kv_allocated, kv_reused, shard);
+                          kv_allocated, kv_reused, cache, shard);
     (finished, stats)
+}
+
+/// Parse `--prefix-cache {on,off}` (also accepts true/false, 1/0,
+/// yes/no; a bare `--prefix-cache` means on). Defaults to on.
+pub fn prefix_cache_flag(args: &Args) -> Result<bool> {
+    match args.get("prefix-cache") {
+        None => Ok(true),
+        Some(v) => match v.to_ascii_lowercase().as_str() {
+            "on" | "true" | "1" | "yes" => Ok(true),
+            "off" | "false" | "0" | "no" => Ok(false),
+            other => anyhow::bail!(
+                "--prefix-cache expects on|off, got {other:?}"),
+        },
+    }
 }
 
 /// `elsa serve` subcommand: load a checkpoint, synthesize a seeded
@@ -769,6 +1050,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let max_slots = args.usize_or("max-slots", 8)?;
     let threads = args.usize_or("threads", 1)?;
     let shard_workers = args.usize_or("shard-workers", 1)?;
+    let prefix_cache = prefix_cache_flag(args)?;
     let prompt_len = args.usize_or("prompt-len", 8)?;
     anyhow::ensure!(prompt_len <= cfg.seq_len,
                     "--prompt-len {prompt_len} exceeds the model's \
@@ -801,6 +1083,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         temperature,
         threads,
         shard_workers,
+        prefix_cache,
     });
     let (finished, stats) = sched.run(queue);
 
@@ -832,8 +1115,13 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     println!("prefill_tokens {} in {} chunk passes (chunk {})",
              stats.prefill_tokens, stats.prefill_chunks,
              engine.prefill_chunk);
-    println!("kv_allocated {} kv_reused {}", stats.kv_allocated,
-             stats.kv_reused);
+    println!("prefix_cache {} hits {} tokens_saved {} hit_rate {:.3} \
+              cache_bytes {}",
+             if prefix_cache { "on" } else { "off" }, stats.prefix_hits,
+             stats.prefix_tokens_saved, stats.prefix_hit_rate,
+             stats.prefix_cache_bytes);
+    println!("kv_allocated {} kv_reused {} kv_pool_bytes {}",
+             stats.kv_allocated, stats.kv_reused, stats.kv_pool_bytes);
     if shard_workers > 1 {
         let busy: f64 = stats.shard_busy_seconds.iter().sum();
         let idle: f64 = stats.shard_idle_seconds.iter().sum();
@@ -869,6 +1157,245 @@ mod tests {
         assert_eq!(b[0].len, 0, "recycled buffers must come back empty");
         assert!(b[0].k.is_empty());
         assert!(b[0].k.capacity() >= 40, "capacity must be retained");
+    }
+
+    #[test]
+    fn kvpool_shrinks_after_long_then_short_workload() {
+        let mut pool = KvPool::new(1, 10_000);
+        // one long-prompt request grows its buffers to ~8000 floats
+        let mut long = pool.acquire();
+        long[0].k.resize(8000, 0.0);
+        long[0].v.resize(8000, 0.0);
+        long[0].len = 200;
+        pool.release(long);
+        // then the workload turns short: once the long release ages
+        // out of the rolling window, the shrink policy must trim the
+        // pinned buffers instead of holding peak bytes forever
+        for _ in 0..KV_RECENT_WINDOW {
+            let mut kvs = pool.acquire();
+            kvs[0].k.resize(100, 0.0);
+            kvs[0].v.resize(100, 0.0);
+            kvs[0].len = 2;
+            pool.release(kvs);
+        }
+        assert!(pool.shrunk > 0, "shrink policy never fired");
+        assert!(pool.bytes() < 8000 * 4,
+                "pool still pins peak bytes: {}", pool.bytes());
+        assert!(pool.bytes()
+                    <= 2 * 100 * KV_SHRINK_MULT * 4 * pool.pooled(),
+                "trim must land at watermark * KV_SHRINK_MULT");
+    }
+
+    #[test]
+    fn steady_long_workloads_keep_their_capacity() {
+        let mut pool = KvPool::new(1, 10_000);
+        for _ in 0..2 * KV_RECENT_WINDOW {
+            let mut kvs = pool.acquire();
+            kvs[0].k.resize(4000, 0.0);
+            kvs[0].v.resize(4000, 0.0);
+            kvs[0].len = 100;
+            pool.release(kvs);
+        }
+        assert_eq!(pool.shrunk, 0,
+                   "uniform long workload must never thrash");
+        assert_eq!(pool.allocated, 1);
+    }
+
+    #[test]
+    fn worker_seconds_sum_across_lanes() {
+        // 2-worker invariant: prefill/decode seconds must reduce by
+        // SUM to match the summed token counters — the old lane-max
+        // reduction reported 3.0/5.0 here and overstated derived
+        // multi-worker tok/s by ~2x
+        let lane = |p: f64, d: f64| WorkerOut {
+            finished: Vec::new(),
+            prefill_seconds: p,
+            decode_seconds: d,
+            prefill_tokens: 0,
+            prefill_chunks: 0,
+            prefix_hits: 0,
+            prefix_tokens_saved: 0,
+            kv_allocated: 0,
+            kv_reused: 0,
+            kv_pool_bytes: 0,
+            shard_busy: Vec::new(),
+            shard_idle: Vec::new(),
+        };
+        let outs = vec![lane(1.0, 2.0), lane(3.0, 5.0)];
+        let (prefill, decode) = sum_worker_seconds(&outs);
+        assert_eq!(prefill, 4.0);
+        assert_eq!(decode, 7.0);
+    }
+
+    fn shared_with(queue: Vec<(u64, Request)>, clock: u64,
+                   active: usize) -> Shared {
+        Shared {
+            queue: Mutex::new(queue.into_iter().collect()),
+            clock: AtomicU64::new(clock),
+            active: AtomicUsize::new(active),
+        }
+    }
+
+    fn simple_req(id: u64, deadline: Option<u64>) -> Request {
+        Request {
+            id,
+            prompt: vec![1, 2, 3],
+            n_new: 1,
+            seed: id,
+            deadline,
+        }
+    }
+
+    #[test]
+    fn admission_checks_deadlines_against_the_live_clock() {
+        let p = Params::init(&fake_config(), 4);
+        let engine = Engine::build(&p, Backend::Macko).unwrap();
+        let sched = Scheduler::new(&engine, SchedOptions::default());
+        let shared =
+            shared_with(vec![(0, simple_req(0, Some(3)))], 0, 0);
+        // the TOCTOU: a worker reads the clock at its loop top (0),
+        // then an idle peer fast-forwards it past this request's
+        // deadline before admission runs
+        let stale_now = shared.clock.load(Ordering::SeqCst);
+        assert_eq!(stale_now, 0);
+        shared.clock.store(10, Ordering::SeqCst);
+        let mut slots = Vec::new();
+        let mut meta = Vec::new();
+        let mut pool = KvPool::new(engine.cfg.n_layers,
+                                   engine.cfg.seq_len * engine.cfg.d_model);
+        let mut out = WorkerOut {
+            finished: Vec::new(),
+            prefill_seconds: 0.0,
+            decode_seconds: 0.0,
+            prefill_tokens: 0,
+            prefill_chunks: 0,
+            prefix_hits: 0,
+            prefix_tokens_saved: 0,
+            kv_allocated: 0,
+            kv_reused: 0,
+            kv_pool_bytes: 0,
+            shard_busy: Vec::new(),
+            shard_idle: Vec::new(),
+        };
+        sched.admit(&shared, 4, &mut slots, &mut meta, &mut pool,
+                    &mut out);
+        // admission must judge the deadline by the LIVE clock (10 >
+        // 0 + 3), not the stale loop-top read (0) that would have
+        // admitted an expired request and skewed wait stats
+        assert!(slots.is_empty());
+        assert_eq!(out.finished.len(), 1);
+        assert!(out.finished[0].expired);
+        assert_eq!(out.finished[0].finished_step, 10);
+    }
+
+    #[test]
+    fn idle_fast_forward_jumps_to_the_minimum_pending_arrival() {
+        let shared = shared_with(
+            vec![(5, simple_req(0, None)), (9, simple_req(1, None))],
+            0, 0);
+        assert!(matches!(idle_step(&shared), Idle::FastForwarded));
+        // only to the FRONT arrival — never past a request another
+        // worker could be about to admit
+        assert_eq!(shared.clock.load(Ordering::SeqCst), 5);
+    }
+
+    #[test]
+    fn idle_worker_parks_while_peers_are_decoding() {
+        let shared =
+            shared_with(vec![(5, simple_req(0, None))], 0, 1);
+        assert!(matches!(idle_step(&shared), Idle::Park));
+        assert_eq!(shared.clock.load(Ordering::SeqCst), 0,
+                   "clock must not move while any slot is active");
+    }
+
+    #[test]
+    fn idle_worker_terminates_on_a_drained_queue() {
+        let shared = shared_with(Vec::new(), 7, 0);
+        assert!(matches!(idle_step(&shared), Idle::Done));
+    }
+
+    #[test]
+    fn threaded_deadline_expiry_is_seeded_and_stable() {
+        // regression stress for the fast-forward race: staggered
+        // arrivals with tight deadlines under threads=2 previously
+        // interleaved badly (a worker could fast-forward past an
+        // arrival a peer was admitting); post-fix every non-expired
+        // stream must still match single-sequence generate exactly
+        let p = Params::init(&fake_config(), 4);
+        let engine = Engine::build(&p, Backend::Macko).unwrap();
+        for trial in 0..4u64 {
+            let reqs: Vec<Request> = (0..12u64)
+                .map(|id| Request {
+                    id,
+                    prompt: vec![1 + (id % 5) as u32, 2, 3],
+                    n_new: 2,
+                    seed: 50 + id,
+                    deadline: Some(1),
+                })
+                .collect();
+            let queue = RequestQueue::with_poisson_arrivals(
+                reqs, 2.0, 0xBAD + trial);
+            let sched = Scheduler::new(&engine, SchedOptions {
+                max_slots: 2,
+                temperature: 0.6,
+                threads: 2,
+                ..SchedOptions::default()
+            });
+            let (finished, stats) = sched.run(queue);
+            assert_eq!(finished.len(), 12);
+            for f in finished.iter().filter(|f| !f.expired) {
+                let (want, _) = engine.generate(
+                    &[1 + (f.id % 5) as u32, 2, 3], 2, 0.6, 50 + f.id);
+                assert_eq!(f.tokens, want,
+                           "trial {trial} req {} diverged", f.id);
+            }
+            assert_eq!(
+                stats.expired,
+                finished.iter().filter(|f| f.expired).count());
+        }
+    }
+
+    #[test]
+    fn shared_prefix_hits_skip_suffix_prefill_work() {
+        let p = Params::init(&fake_config(), 4);
+        let engine = Engine::build(&p, Backend::Macko).unwrap();
+        let prompt: Vec<u32> = vec![4, 5, 6, 7, 1];
+        let reqs = |n: u64| -> RequestQueue {
+            let mut q = RequestQueue::new();
+            for id in 0..n {
+                // spaced arrivals: each request completes (and
+                // publishes its prefix) before the next admits
+                q.push_at(id * 64, Request {
+                    id,
+                    prompt: prompt.clone(),
+                    n_new: 2,
+                    seed: 9 + id,
+                    deadline: None,
+                });
+            }
+            q
+        };
+        let on = Scheduler::new(&engine, SchedOptions::default());
+        let (fin_on, st_on) = on.run(reqs(4));
+        let off = Scheduler::new(&engine, SchedOptions {
+            prefix_cache: false,
+            ..SchedOptions::default()
+        });
+        let (fin_off, st_off) = off.run(reqs(4));
+        for (a, b) in fin_on.iter().zip(fin_off.iter()) {
+            assert_eq!(a.tokens, b.tokens,
+                       "prefix cache changed req {}", a.id);
+        }
+        assert_eq!(st_off.prefix_hits, 0);
+        assert_eq!(st_off.prefix_tokens_saved, 0);
+        // req 0 cold-prefills and publishes prompt[..4]; reqs 1..3
+        // each attach those 4 positions (cap len-1 = 4)
+        assert_eq!(st_on.prefix_hits, 3);
+        assert_eq!(st_on.prefix_tokens_saved, 3 * (prompt.len() - 1));
+        assert!(st_on.prefix_cache_bytes > 0);
+        assert_eq!(st_on.prefill_tokens + st_on.prefix_tokens_saved,
+                   st_off.prefill_tokens,
+                   "saved tokens must equal skipped prefill work");
     }
 
     #[test]

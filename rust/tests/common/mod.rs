@@ -106,3 +106,40 @@ pub fn chunk_straddling_requests(n: u64) -> Vec<Request> {
         })
         .collect()
 }
+
+/// Length of the identical "system prompt" head shared by every
+/// request in [`shared_prefix_requests`] — equal to the prefix
+/// cache's `PREFIX_BLOCK`, so the divergent-suffix family can attach
+/// at the block-aligned boundary.
+pub const SHARED_SYSTEM_PROMPT_LEN: usize = 8;
+
+/// The shared-prefix serving family: every prompt starts with the
+/// same [`SHARED_SYSTEM_PROMPT_LEN`]-token system prompt, then
+/// diverges into a per-request suffix whose length cycles
+/// {1, 2, 3, 4, 8, 9} — straddling the swept prefill-chunk windows
+/// ({1, 3, 16}) on the suffix side of an attach. Every 5th request
+/// has NO suffix: its full prompt IS the cached system prompt, the
+/// identity case where attach must stop one position short of the
+/// prompt end. Suffix first-tokens are distinct across ids (17 is
+/// coprime to [`TOY_VOCAB`]), so the system prompt head is the only
+/// shareable prefix and expected cache savings are exactly
+/// `min(SHARED_SYSTEM_PROMPT_LEN, prompt_len - 1)` per hit.
+pub fn shared_prefix_requests(n: u64) -> Vec<Request> {
+    const SUFFIX_LENS: [usize; 6] = [1, 2, 3, 4, 8, 9];
+    let system: Vec<u32> = (0..SHARED_SYSTEM_PROMPT_LEN)
+        .map(|i| ((i * 13 + 5) % TOY_VOCAB) as u32)
+        .collect();
+    (0..n)
+        .map(|id| {
+            let mut prompt = system.clone();
+            if id % 5 != 4 {
+                let slen = SUFFIX_LENS[id as usize % SUFFIX_LENS.len()];
+                prompt.extend((0..slen).map(|i| {
+                    ((id as usize * 17 + i * 7) % TOY_VOCAB) as u32
+                }));
+            }
+            let n_new = if prompt.len() >= 15 { 2 } else { 3 };
+            req(id, prompt, n_new)
+        })
+        .collect()
+}

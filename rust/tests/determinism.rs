@@ -1,13 +1,15 @@
 //! Seeded randomized determinism sweep (ISSUE 4 satellite, extended
-//! by ISSUE 5): one harness that subsumes the ad-hoc pairwise checks
-//! scattered across the older suites. ~50 seeded scheduler
-//! configurations are drawn over backend × tiled/untiled × threads
-//! {1,2,4} × shard-workers {1,2,8} × prefill-chunk {1,3,16} ×
-//! max_slots × temperature × arrival pattern, and every single one
-//! must reproduce the single-sequence `generate()` streams of a
-//! chunk-size-1 reference engine bit-for-bit — the engine's headline
-//! guarantee: scheduling policy, kernel traversal, slot sharding,
-//! row-band pooling and prefill chunking decide *when* and *where* a
+//! by ISSUE 5 and ISSUE 6): one harness that subsumes the ad-hoc
+//! pairwise checks scattered across the older suites. ~50 seeded
+//! scheduler configurations are drawn over backend × tiled/untiled ×
+//! threads {1,2,4} × shard-workers {1,2,8} × prefill-chunk {1,3,16} ×
+//! max_slots × temperature × arrival pattern × prefix-cache {on,off}
+//! × request fixture (ragged / chunk-straddling / shared-prefix
+//! families), and every single one must reproduce the
+//! single-sequence `generate()` streams of a chunk-size-1 reference
+//! engine bit-for-bit — the engine's headline guarantee: scheduling
+//! policy, kernel traversal, slot sharding, row-band pooling, prefill
+//! chunking and shared-prefix KV caching decide *when* and *where* a
 //! request computes, never *what* it produces.
 //!
 //! The engines use deliberately tiny tile plans
@@ -23,6 +25,7 @@ mod common;
 use std::collections::HashMap;
 
 use common::{banded_engine, chunk_straddling_requests, ragged_requests,
+             shared_prefix_requests, SHARED_SYSTEM_PROMPT_LEN,
              TOY_VOCAB};
 use elsa::infer::scheduler::{RequestQueue, SchedOptions, Scheduler};
 use elsa::infer::{Backend, Engine};
@@ -50,8 +53,12 @@ struct Case {
     temperature: f32,
     arrival_gap: f64,
     n_requests: u64,
-    /// Odd cases use prompts that straddle the chunk boundaries.
-    straddling: bool,
+    /// 0 = ragged prompts, 1 = chunk-straddling prompts, 2 = the
+    /// shared-prefix family (identical system prompt, divergent
+    /// suffixes, one full-prompt-is-a-cached-prefix request).
+    fixture: usize,
+    /// Shared-prefix KV cache on/off — must never change a token.
+    prefix_cache: bool,
     queue_seed: u64,
 }
 
@@ -66,7 +73,9 @@ fn draw(rng: &mut Rng) -> Case {
         temperature: TEMPERATURES[rng.below(TEMPERATURES.len())],
         arrival_gap: ARRIVAL_GAPS[rng.below(ARRIVAL_GAPS.len())],
         n_requests: 3 + rng.below(5) as u64,
-        straddling: rng.below(2) == 1,
+        fixture: rng.below(3),
+        // biased toward on — the default, and the riskier path
+        prefix_cache: rng.below(4) != 0,
         queue_seed: rng.next_u64(),
     }
 }
@@ -97,8 +106,16 @@ fn randomized_sweep_reproduces_single_sequence_streams() {
     let mut rng = Rng::new(0xD5_EED);
     let mut pooled_cases = 0usize;
     let mut chunked_cases = 0usize;
+    let mut shared_on_cases = 0usize;
     for case_no in 0..CASES {
-        let case = draw(&mut rng);
+        let mut case = draw(&mut rng);
+        if case_no % 4 == 0 {
+            // pin a quarter of the sweep to the shared-prefix family
+            // with the cache on, so cache-hit coverage never depends
+            // on how the axes happen to be drawn
+            case.fixture = 2;
+            case.prefix_cache = true;
+        }
         let engine = &mut engines[case.backend_idx];
         engine.tiled = case.tiled;
         engine.prefill_chunk = case.prefill_chunk;
@@ -108,11 +125,14 @@ fn randomized_sweep_reproduces_single_sequence_streams() {
         if case.prefill_chunk > 1 {
             chunked_cases += 1;
         }
+        if case.fixture == 2 && case.prefix_cache {
+            shared_on_cases += 1;
+        }
 
-        let reqs = if case.straddling {
-            chunk_straddling_requests(case.n_requests)
-        } else {
-            ragged_requests(case.n_requests)
+        let reqs = match case.fixture {
+            0 => ragged_requests(case.n_requests),
+            1 => chunk_straddling_requests(case.n_requests),
+            _ => shared_prefix_requests(case.n_requests),
         };
         let queue = RequestQueue::with_poisson_arrivals(
             reqs.clone(), case.arrival_gap, case.queue_seed);
@@ -121,6 +141,7 @@ fn randomized_sweep_reproduces_single_sequence_streams() {
             temperature: case.temperature,
             threads: case.threads,
             shard_workers: case.shard_workers,
+            prefix_cache: case.prefix_cache,
         });
         let (finished, stats) = sched.run(queue);
         assert_eq!(finished.len(), reqs.len(), "case {case_no} {case:?}");
@@ -147,6 +168,9 @@ fn randomized_sweep_reproduces_single_sequence_streams() {
             "sweep drew only {pooled_cases} pooled cases — reseed it");
     assert!(chunked_cases >= 10,
             "sweep drew only {chunked_cases} chunked cases — reseed it");
+    assert!(shared_on_cases >= 10,
+            "sweep ran only {shared_on_cases} shared-prefix cache-on \
+             cases — repin it");
 }
 
 #[test]
@@ -263,6 +287,105 @@ fn logits_for_rejects_oversized_prompt_like_generate_batch() {
 }
 
 #[test]
+fn prefix_cache_hits_replay_cold_start_streams_exactly() {
+    // the deterministic hit matrix (ISSUE 6 tentpole): arrivals are
+    // spaced 40 steps apart — far beyond any request's busy ticks on
+    // the toy model, and idle workers fast-forward rather than tick —
+    // so each request completes (and publishes its prefix) before the
+    // next admits. Every request after the first is then a GUARANTEED
+    // cache hit, at every backend × threads × prefill-chunk ×
+    // shard-workers cell, which pins three things bit-exactly:
+    //   1. hit streams == cold single-sequence generate streams,
+    //   2. prefix_hits == n - 1,
+    //   3. prefix_tokens_saved == Σ attached prefix lengths, exactly.
+    let n: u64 = 5;
+    let mut hit_cases = 0usize;
+    for &backend in &BACKENDS {
+        let (mut engine, _) = banded_engine(backend);
+        for threads in [1usize, 2] {
+            for chunk in [1usize, 3, 16] {
+                for shard_workers in [1usize, 2] {
+                    engine.prefill_chunk = chunk;
+                    let reqs = shared_prefix_requests(n);
+                    let mut queue = RequestQueue::new();
+                    for (i, r) in reqs.iter().enumerate() {
+                        queue.push_at(i as u64 * 40, r.clone());
+                    }
+                    let sched = Scheduler::new(&engine, SchedOptions {
+                        max_slots: 2,
+                        temperature: 0.8,
+                        threads,
+                        shard_workers,
+                        prefix_cache: true,
+                    });
+                    let (finished, stats) = sched.run(queue);
+                    let tag = format!(
+                        "{backend:?} threads={threads} chunk={chunk} \
+                         shard_workers={shard_workers}");
+                    assert_eq!(finished.len(), reqs.len(), "{tag}");
+                    for f in &finished {
+                        let r = &reqs[f.id as usize];
+                        let (want, _) = engine.generate(
+                            &r.prompt, r.n_new, 0.8, r.seed);
+                        assert_eq!(f.tokens, want,
+                                   "{tag}: req {} cache-hit stream \
+                                    diverged from cold start", f.id);
+                    }
+                    // requests admit strictly one at a time in id
+                    // order, so req 0 cold-prefills the system prompt
+                    // and every later request attaches it: exactly
+                    // min(SHARED_SYSTEM_PROMPT_LEN, len - 1) positions
+                    // each (the full-prompt-is-a-cached-prefix request
+                    // stops one short of its prompt end)
+                    let want_saved: usize = reqs[1..]
+                        .iter()
+                        .map(|r| SHARED_SYSTEM_PROMPT_LEN
+                                 .min(r.prompt.len() - 1))
+                        .sum();
+                    assert_eq!(stats.prefix_hits, reqs.len() - 1,
+                               "{tag}: hits");
+                    assert_eq!(stats.prefix_tokens_saved, want_saved,
+                               "{tag}: tokens_saved must equal the sum \
+                                of attached prefix lengths");
+                    if stats.prefix_hits > 0 {
+                        hit_cases += 1;
+                    }
+
+                    // the off axis on the identical queue: same
+                    // streams, zero hits
+                    let mut queue = RequestQueue::new();
+                    for (i, r) in reqs.iter().enumerate() {
+                        queue.push_at(i as u64 * 40, r.clone());
+                    }
+                    let off = Scheduler::new(&engine, SchedOptions {
+                        max_slots: 2,
+                        temperature: 0.8,
+                        threads,
+                        shard_workers,
+                        prefix_cache: false,
+                    });
+                    let (fin_off, st_off) = off.run(queue);
+                    assert_eq!(st_off.prefix_hits, 0, "{tag}");
+                    assert_eq!(st_off.prefix_tokens_saved, 0, "{tag}");
+                    for (a, b) in finished.iter().zip(fin_off.iter()) {
+                        assert_eq!(a.tokens, b.tokens,
+                                   "{tag}: on/off streams differ at \
+                                    req {}", a.id);
+                    }
+                    // the cache saved exactly the prefill work it
+                    // claimed to
+                    assert_eq!(stats.prefill_tokens
+                                   + stats.prefix_tokens_saved,
+                               st_off.prefill_tokens, "{tag}");
+                }
+            }
+        }
+    }
+    assert!(hit_cases >= 10,
+            "matrix produced only {hit_cases} prefix-hit cases");
+}
+
+#[test]
 fn identical_cases_are_bit_identical_across_runs() {
     // the sweep itself must be replayable: same seed, same streams,
     // run to run, including pooled multi-thread configurations
@@ -276,6 +399,7 @@ fn identical_cases_are_bit_identical_across_runs() {
             temperature: 0.8,
             threads: 2,
             shard_workers: 2,
+            ..SchedOptions::default()
         });
         let (finished, _) = sched.run(queue);
         finished.into_iter().map(|f| (f.id, f.tokens))

@@ -315,6 +315,7 @@ fn scheduler_streams_unchanged_with_tiling_on_vs_off() {
                     temperature: 0.8,
                     threads,
                     shard_workers,
+                    ..SchedOptions::default()
                 });
                 let (finished, _) = sched.run(queue);
                 finished.into_iter().map(|f| (f.id, f.tokens))

@@ -286,6 +286,44 @@ fn prefill_chunk_does_not_change_streams_or_token_accounting() {
 }
 
 #[test]
+fn long_then_short_workload_releases_peak_kv_bytes() {
+    // ISSUE 6 satellite: the KvPool used to preserve peak capacity
+    // forever, so one long-prompt request pinned peak-sized K/V
+    // buffers for the engine's lifetime. With the shrink policy, a
+    // workload that turns short must trim the parked buffers once the
+    // long release ages out of the pool's rolling high-water window.
+    let (engine, seq_len) = engine(Backend::Macko);
+    let mut queue = RequestQueue::new();
+    let long_prompt: Vec<u32> =
+        (0..seq_len - 3).map(|i| (i % 7) as u32).collect();
+    queue.push(req(0, long_prompt, 2));
+    // more short requests than the pool's release window, so the
+    // long high-water mark ages out
+    for id in 1..=12u64 {
+        queue.push(req(id, vec![1 + (id % 5) as u32, 2], 1));
+    }
+    let sched = Scheduler::new(&engine, SchedOptions {
+        max_slots: 1,
+        temperature: 0.8,
+        ..SchedOptions::default()
+    });
+    let (finished, stats) = sched.run(queue);
+    assert_eq!(finished.len(), 13);
+    assert_eq!(stats.expired, 0);
+    assert!(stats.kv_pool_bytes > 0,
+            "retired buffers should be parked in the pool");
+    // peak: the long request's ~(seq_len-1) cached rows per layer;
+    // post-shrink the pool may hold at most 2x the short-request
+    // watermark (3 rows), far below the pinned-peak bytes that the
+    // pre-fix capacity-preserving clear() held forever
+    let d = 40; // toy model d_model
+    let peak = 2 * (seq_len - 1) * d * 4 * 2; // layers x (k+v) x f32
+    assert!(stats.kv_pool_bytes < peak / 2,
+            "pool still pins peak bytes: {} (peak ~{peak})",
+            stats.kv_pool_bytes);
+}
+
+#[test]
 fn static_chunks_match_continuous_streams() {
     let (engine, _) = engine(Backend::Macko);
     let reqs = ragged_requests(6);
