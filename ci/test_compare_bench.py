@@ -54,27 +54,35 @@ def kernels_baseline():
         "min_tiled_untiled_ratio": 0.95,
         "min_pooled_serial_ratio": 0.95,
         "min_chunked_pertoken_ratio": 1.0,
+        "min_int8_f32_ratio": 1.0,
         "dense": {"tok_s": 25.0},
         "csr": {"tok_s": 40.0},
         "macko": {"tok_s": 40.0},
         "macko_pooled": {"tok_s": 40.0},
         "macko_prefill": {"tok_s": 50.0},
+        "csr_int8": {"tok_s": 30.0},
+        "macko_int4": {"tok_s": 30.0},
     }
 
 
 def kernels_current(ratio=1.1, pooled_ratio=1.0, chunked_ratio=1.6,
                     dense=80.0, csr=200.0, macko=220.0,
-                    macko_pooled=240.0, macko_prefill=300.0):
+                    macko_pooled=240.0, macko_prefill=300.0,
+                    csr_int8=260.0, macko_int4=210.0,
+                    int8_f32_ratio=1.4):
     return {
         "tiled_untiled_ratio": ratio,
         "pooled_serial_ratio": pooled_ratio,
         "chunked_pertoken_ratio": chunked_ratio,
+        "int8_f32_ratio": int8_f32_ratio,
         "dense": {"tok_s": dense},
         "csr": {"tok_s": csr},
         "macko": {"tok_s": macko},
         "macko_pooled": {"tok_s": macko_pooled},
         "macko_prefill": {"tok_s": macko_prefill,
                           "pertoken_tok_s": macko_prefill / 1.6},
+        "csr_int8": {"tok_s": csr_int8},
+        "macko_int4": {"tok_s": macko_int4},
     }
 
 
@@ -160,6 +168,42 @@ class GateTests(unittest.TestCase):
         _, failures = cb.gate(cur, kernels_baseline())
         self.assertTrue(any("chunked_pertoken_ratio" in f
                             for f in failures))
+
+    def test_int8_f32_ratio_gate(self):
+        # fused-dequant int8 must never lose to f32 at the
+        # bandwidth-bound decode shape: 1.0 passes at exactly 1.0,
+        # fails just below, and an absent metric counts as 0.0
+        _, failures = cb.gate(kernels_current(int8_f32_ratio=1.0),
+                              kernels_baseline())
+        self.assertEqual(failures, [])
+        _, failures = cb.gate(kernels_current(int8_f32_ratio=0.99),
+                              kernels_baseline())
+        self.assertTrue(any("int8_f32_ratio" in f for f in failures))
+        cur = kernels_current()
+        del cur["int8_f32_ratio"]
+        _, failures = cb.gate(cur, kernels_baseline())
+        self.assertTrue(any("int8_f32_ratio" in f for f in failures))
+
+    def test_quant_cell_floors_gated_like_any_policy(self):
+        # the quantized decode cells ride the ordinary tok_s floor
+        # machinery: collapse and disappearance both fail
+        _, failures = cb.gate(kernels_current(), kernels_baseline())
+        self.assertEqual(failures, [])
+        _, failures = cb.gate(kernels_current(csr_int8=1.0),
+                              kernels_baseline())
+        self.assertTrue(any("csr_int8" in f for f in failures))
+        cur = kernels_current()
+        del cur["macko_int4"]
+        _, failures = cb.gate(cur, kernels_baseline())
+        self.assertTrue(any("macko_int4" in f and "missing" in f
+                            for f in failures))
+
+    def test_ratchet_covers_quant_cells_and_keeps_int8_knob(self):
+        out = cb.ratchet(kernels_current(), kernels_baseline())
+        self.assertEqual(out["csr_int8"]["tok_s"], 260.0)
+        self.assertEqual(out["macko_int4"]["tok_s"], 210.0)
+        # min_int8_f32_ratio is policy, never ratcheted
+        self.assertEqual(out["min_int8_f32_ratio"], 1.0)
 
     def test_prefill_cell_floor_gated_like_any_policy(self):
         # the {backend}_prefill cells ride the ordinary tok_s floor

@@ -34,6 +34,15 @@
 //! previously served prefix copy the cached KV rows and prefill only
 //! their suffix. Outputs stay bit-identical either way; the scheduler
 //! line reports the hit count.
+//!
+//! `-- --quant {none,int8,int4}` serves quantized sparse payloads
+//! (`CsrQ`/`MackoQ`, the Elsa-L path): dequantization is fused into
+//! the tiled kernels, so the quantized engines ride the same
+//! scheduler/pool/prefill machinery. The dense backend is skipped
+//! when a quant mode is active (quantization targets the sparse
+//! serving formats); token streams are reproducible within a mode but
+//! tolerance-bounded vs f32, so per-mode throughput and weight bytes
+//! are the cells to compare.
 
 use std::path::Path;
 
@@ -49,6 +58,7 @@ use elsa::infer::{Backend, BatchOptions, Engine};
 use elsa::model::checkpoint::Checkpoint;
 use elsa::model::Params;
 use elsa::runtime::Runtime;
+use elsa::sparse::QuantMode;
 use elsa::util::{human_bytes, stats::Summary};
 
 fn main() -> Result<()> {
@@ -91,6 +101,15 @@ fn main() -> Result<()> {
         .usize_or("prefill-chunk", elsa::infer::DEFAULT_PREFILL_CHUNK)?
         .max(1);
     let prefix_cache = prefix_cache_flag(&args)?;
+    let quant = QuantMode::parse(&args.str_or("quant", "none"))?;
+    // quantization targets the sparse serving formats; dense is only a
+    // meaningful baseline in f32 mode
+    let backends: &[Backend] = if quant == QuantMode::None {
+        &[Backend::Dense, Backend::Csr, Backend::Macko]
+    } else {
+        println!("quant {} (dense backend skipped)", quant.label());
+        &[Backend::Csr, Backend::Macko]
+    };
     let prompt_len = 8;
     let n_new = cfg.seq_len - prompt_len;
 
@@ -115,8 +134,8 @@ fn main() -> Result<()> {
             shard_workers,
             prefix_cache,
         };
-        for backend in [Backend::Dense, Backend::Csr, Backend::Macko] {
-            let mut engine = Engine::build(&params, backend)?;
+        for &backend in backends {
+            let mut engine = Engine::build_quant(&params, backend, quant)?;
             engine.prefill_chunk = prefill_chunk;
             // warmup + static reference on the identical stream
             serve_static_chunks(&engine, &reqs, &sopts);
@@ -142,8 +161,8 @@ fn main() -> Result<()> {
         return Ok(());
     }
 
-    for backend in [Backend::Dense, Backend::Csr, Backend::Macko] {
-        let mut engine = Engine::build(&params, backend)?;
+    for &backend in backends {
+        let mut engine = Engine::build_quant(&params, backend, quant)?;
         engine.prefill_chunk = prefill_chunk;
         // warmup
         engine.generate(&g.generate(prompt_len, 0), n_new, 0.8, 0);

@@ -27,6 +27,13 @@
 //! shares one weight walk per window and skips the head projection
 //! for every prompt position but the last, so it must never lose to
 //! the one-position-at-a-time cadence.
+//!
+//! ISSUE 7 adds the quantized serving cells: end-to-end
+//! `{csr,macko}_{int8,int4}` tok/s floors (streams asserted bitwise
+//! run-to-run within each mode before timing) and `int8_f32_ratio` —
+//! fused-dequant int8 CSR matvec over f32 CSR matvec at the
+//! bandwidth-bound decode shape (batch 1, cache-exceeding matrix),
+//! gated >= 1.0: fewer payload bytes per row must never decode slower.
 
 use elsa::infer::pool::WorkerPool;
 use elsa::infer::{Backend, BatchOptions, Engine};
@@ -34,7 +41,7 @@ use elsa::model::{synthetic_config, Params};
 use elsa::pruners::{magnitude, uniform_alloc};
 use elsa::sparse::{dense_matvec_batch, dense_plan, par_matvec_batch_tiled,
                    pool_matvec_batch_tiled, random_sparse_weight, tile,
-                   Csr, Macko, SpmmScratch};
+                   Csr, CsrQ, Macko, QuantMode, SpmmScratch};
 use elsa::util::bench::{bench, throughput};
 use elsa::util::json::{num, obj, s, to_string, Value};
 use elsa::util::rng::Rng;
@@ -394,6 +401,102 @@ fn engine_sweep(n_new: usize, threads: usize)
     (out, pooled_serial_ratio)
 }
 
+/// Quantized decode cells (ISSUE 7): end-to-end tok/s per sparse
+/// backend x quant mode on the same serving-sized model as
+/// `engine_sweep` — the `{csr,macko}_{int8,int4}` floors the CI gate
+/// pins. Before timing, each engine's batched streams are asserted
+/// bit-identical across two runs (the within-mode determinism
+/// contract; quantized decode has no f32-bitwise reference, so
+/// run-to-run stability IS the pre-timing correctness check here,
+/// with the tolerance parity pinned in `rust/tests/quant_parity.rs`).
+fn quant_engine_sweep(n_new: usize) -> Vec<(&'static str, f64)> {
+    let (cfg, p) = bench_model();
+    let batch = 8usize;
+    let prompt_len = 8usize;
+    let mut rng = Rng::new(1);
+    let prompts: Vec<Vec<u32>> = (0..batch)
+        .map(|_| (0..prompt_len)
+             .map(|_| rng.below(cfg.vocab) as u32).collect())
+        .collect();
+    let opts = BatchOptions {
+        n_new, temperature: 0.8, seed: 0, threads: 1,
+        shard_workers: 1, ..BatchOptions::default()
+    };
+    println!("== quantized end-to-end decode, d={} L={} sp=0.90, \
+              batch={batch} ==", cfg.d_model, cfg.n_layers);
+    let mut out = Vec::new();
+    for (backend, quant, key) in [
+        (Backend::Csr, QuantMode::Int8, "csr_int8"),
+        (Backend::Csr, QuantMode::Int4, "csr_int4"),
+        (Backend::Macko, QuantMode::Int8, "macko_int8"),
+        (Backend::Macko, QuantMode::Int4, "macko_int4"),
+    ] {
+        let engine = Engine::build_quant(&p, backend, quant)
+            .expect("quant engine");
+        let (a, _) = engine.generate_batch(&prompts, &opts); // warmup
+        let (b, _) = engine.generate_batch(&prompts, &opts);
+        assert_eq!(a, b, "{key}: quantized decode is not bitwise \
+                          reproducible within its mode");
+        let t = Timer::start();
+        let (_, stats) = engine.generate_batch(&prompts, &opts);
+        let tps = stats.tokens_generated as f64 / t.seconds().max(1e-9);
+        println!("{key:>11}: {tps:9.1} tok/s aggregate (weights {} B \
+                  vs f32 backend {} B)",
+                 engine.mem_bytes(),
+                 Engine::build(&p, backend).expect("engine").mem_bytes());
+        out.push((key, tps));
+    }
+    println!();
+    out
+}
+
+/// The bandwidth-bound kernel cell behind the CI `min_int8_f32_ratio`
+/// gate: batch-1 CSR matvec (the decode shape — one FMA per nonzero,
+/// so the payload stream dominates) on a matrix sized past the last
+/// cache level, f32 (8 B/nnz) vs fused-dequant int8 (~5 B/nnz).
+/// Shrinking bytes-per-row must never lose to f32 here — that claim
+/// is the whole point of the Elsa-L serving path.
+fn quant_kernel_ratio(budget_ms: u64) -> f64 {
+    let dim = 2048usize; // 2.1M nnz at sp=0.5: past L2/L3 on CI runners
+    let sp = 0.5f64;
+    let w = random_sparse_weight(dim, dim, sp, 23);
+    let csr = Csr::from_weight(&w);
+    let q = CsrQ::from_weight(&w, QuantMode::Int8).expect("csrq");
+    let mut rng = Rng::new(9);
+    let x: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+    let mut yf = vec![0.0f32; dim];
+    let mut yq = vec![0.0f32; dim];
+    csr.matvec(&x, &mut yf);
+    q.matvec(&x, &mut yq);
+    // sanity before timing: the quantized output tracks f32 (loose —
+    // the tight analytic bound lives in sparse::quantized's tests)
+    let scale = yf.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let worst = yf.iter().zip(&yq)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(worst <= 0.05 * scale + 1e-3,
+            "int8 matvec error {worst} vs output scale {scale}");
+
+    println!("== int8 vs f32 decode-shape matvec, csr {dim}x{dim} \
+              sp={sp:.2} b=1 ==");
+    let flops = csr.nnz() as f64 * 2.0;
+    let rf = bench("csr    f32  b=1", budget_ms, || {
+        csr.matvec(&x, &mut yf);
+        std::hint::black_box(&yf);
+    });
+    throughput(&rf, flops, "flop");
+    let rq = bench("csr    int8 b=1", budget_ms, || {
+        q.matvec(&x, &mut yq);
+        std::hint::black_box(&yq);
+    });
+    throughput(&rq, flops, "flop");
+    let ratio = rf.median_ns / rq.median_ns.max(1e-9);
+    println!("  -> int8/f32 throughput ratio x{ratio:.2} \
+              ({} vs {} payload bytes)\n", q.mem_bytes(),
+             csr.mem_bytes());
+    ratio
+}
+
 fn main() {
     let threads = std::env::args()
         .nth(1)
@@ -408,6 +511,8 @@ fn main() {
     let (prefill_cells, chunked_pertoken_ratio) =
         prefill_sweep(elsa::infer::DEFAULT_PREFILL_CHUNK);
     let (engine, pooled_serial_ratio) = engine_sweep(n_new, threads);
+    let quant_cells = quant_engine_sweep(n_new);
+    let int8_f32_ratio = quant_kernel_ratio(budget_ms);
 
     // machine-readable summary for the CI regression gate
     let mut top: Vec<(&str, Value)> = vec![
@@ -420,6 +525,7 @@ fn main() {
         ("tiled_untiled_ratio", num(agg_ratio)),
         ("pooled_serial_ratio", num(pooled_serial_ratio)),
         ("chunked_pertoken_ratio", num(chunked_pertoken_ratio)),
+        ("int8_f32_ratio", num(int8_f32_ratio)),
     ];
     for &(key, ratio) in &per_fmt {
         top.push((key, num(ratio)));
@@ -428,6 +534,9 @@ fn main() {
         top.push((key, cell));
     }
     for &(key, tps) in &engine {
+        top.push((key, obj(vec![("tok_s", num(tps))])));
+    }
+    for &(key, tps) in &quant_cells {
         top.push((key, obj(vec![("tok_s", num(tps))])));
     }
     let j = obj(top);

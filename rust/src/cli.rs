@@ -12,10 +12,12 @@
 //!             the same pool); [--prefill-chunk C] sets the prompt
 //!             window of the chunked prefill pass (default 16);
 //!             [--prefix-cache {on,off}] toggles the shared-prefix KV
-//!             cache (default on)
+//!             cache (default on); [--quant {none,int8,int4}] decodes
+//!             quantized sparse payloads (csr/macko backends only)
 //!   serve     --config tiny --ckpt ckpt.bin --requests 32
 //!             --max-slots 8 --threads 4 [--shard-workers M]
 //!             [--prefill-chunk C] [--prefix-cache {on,off}]
+//!             [--quant {none,int8,int4}]
 //!             [--arrival-gap 2.0] [--deadline STEPS] [--verbose] —
 //!             continuous-batching scheduler over a seeded Poisson-ish
 //!             request stream (slots × row bands, chunked prompt

@@ -47,6 +47,19 @@
 //! the per-token accumulation order exactly, so token streams are
 //! bit-identical for every `prefill_chunk` value
 //! (`rust/tests/determinism.rs` sweeps the axis).
+//!
+//! ## Quantized decode (`--quant {none,int8,int4}`)
+//!
+//! The sparse backends can serve int8/int4 payloads
+//! ([`crate::sparse::quantized`]): [`Engine::build_quant`] converts
+//! every prunable linear to [`CsrQ`] / [`MackoQ`], and dequantization
+//! is fused into the same tiled/pooled kernel set, so quantized decode
+//! inherits tiling, the batched head, the worker pool, chunked
+//! prefill, and the prefix cache unchanged. Parity with f32 is
+//! tolerance-based (`rust/tests/quant_parity.rs`), but *within* a
+//! quant mode every determinism guarantee above still holds bit-exact
+//! — threads, shard-workers, tiling, batching, and the prefix cache
+//! remain pure traversal knobs.
 
 pub mod pool;
 pub mod prefix;
@@ -60,7 +73,8 @@ use crate::cli::Args;
 use crate::model::forward::gelu_tanh;
 use crate::model::Params;
 use crate::runtime::ConfigEntry;
-use crate::sparse::{tile, Csr, Macko, SpmmScratch, TilePlan};
+use crate::sparse::{tile, Csr, CsrQ, Macko, MackoQ, QuantMode,
+                    SpmmScratch, TilePlan};
 use crate::tensor::Matrix;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
@@ -75,9 +89,24 @@ pub enum WeightFmt {
     Dense(Matrix, TilePlan),
     Csr(Csr),
     Macko(Macko),
+    CsrQ(CsrQ),
+    MackoQ(MackoQ),
 }
 
 impl WeightFmt {
+    /// Convert one weight to f32 `kind` storage. For quantized
+    /// payloads use [`WeightFmt::build_quant`].
+    ///
+    /// ```
+    /// use elsa::infer::{Backend, WeightFmt};
+    /// use elsa::sparse::random_sparse_weight;
+    ///
+    /// let w = random_sparse_weight(64, 48, 0.9, 0);
+    /// let fmt = WeightFmt::build(w.clone(), Backend::Macko);
+    /// let mut y = vec![0.0f32; 48];
+    /// fmt.matvec(&vec![1.0f32; 64], &mut y); // y = W^T x
+    /// assert!(fmt.mem_bytes() < w.data.len() * 4);
+    /// ```
     pub fn build(w: Matrix, kind: Backend) -> WeightFmt {
         match kind {
             Backend::Dense => {
@@ -89,6 +118,28 @@ impl WeightFmt {
         }
     }
 
+    /// [`WeightFmt::build`] with a quantized payload: `quant == None`
+    /// is exactly `build`, otherwise the sparse formats store int8 or
+    /// int4 codes with per-row-block scales ([`CsrQ`] / [`MackoQ`]).
+    /// Dense weights have no quantized variant — serving them
+    /// quantized would change the f32 baseline the parity suites
+    /// compare against, so that combination fails loudly here.
+    pub fn build_quant(w: Matrix, kind: Backend, quant: QuantMode)
+                       -> Result<WeightFmt> {
+        Ok(match (kind, quant) {
+            (_, QuantMode::None) => WeightFmt::build(w, kind),
+            (Backend::Dense, _) => anyhow::bail!(
+                "--quant requires a sparse backend (csr or macko), \
+                 got dense"),
+            (Backend::Csr, q) => {
+                WeightFmt::CsrQ(CsrQ::from_weight(&w, q)?)
+            }
+            (Backend::Macko, q) => {
+                WeightFmt::MackoQ(MackoQ::from_weight(&w, q)?)
+            }
+        })
+    }
+
     /// y = W^T x (x: din, y: dout).
     pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
         match self {
@@ -98,6 +149,8 @@ impl WeightFmt {
             }
             WeightFmt::Csr(c) => c.matvec(x, y),
             WeightFmt::Macko(m) => m.matvec(x, y),
+            WeightFmt::CsrQ(c) => c.matvec(x, y),
+            WeightFmt::MackoQ(m) => m.matvec(x, y),
         }
     }
 
@@ -114,6 +167,10 @@ impl WeightFmt {
             }
             WeightFmt::Csr(c) => c.matvec_batch_into(x, y, b, scratch),
             WeightFmt::Macko(m) => m.matvec_batch_into(x, y, b, scratch),
+            WeightFmt::CsrQ(c) => c.matvec_batch_into(x, y, b, scratch),
+            WeightFmt::MackoQ(m) => {
+                m.matvec_batch_into(x, y, b, scratch)
+            }
         }
     }
 
@@ -141,6 +198,12 @@ impl WeightFmt {
             WeightFmt::Macko(m) => {
                 m.matvec_batch_tiled_into(x, y, b, scratch)
             }
+            WeightFmt::CsrQ(c) => {
+                c.matvec_batch_tiled_into(x, y, b, scratch)
+            }
+            WeightFmt::MackoQ(m) => {
+                m.matvec_batch_tiled_into(x, y, b, scratch)
+            }
         }
     }
 
@@ -162,6 +225,10 @@ impl WeightFmt {
                     c, &c.plan, x, y, b, pool, scratch),
                 WeightFmt::Macko(m) => tile::pool_matvec_batch_tiled(
                     m, &m.plan, x, y, b, pool, scratch),
+                WeightFmt::CsrQ(c) => tile::pool_matvec_batch_tiled(
+                    c, &c.plan, x, y, b, pool, scratch),
+                WeightFmt::MackoQ(m) => tile::pool_matvec_batch_tiled(
+                    m, &m.plan, x, y, b, pool, scratch),
             }
         } else if tiled {
             self.matvec_batch_tiled(x, y, b, scratch);
@@ -180,14 +247,21 @@ impl WeightFmt {
             }
             WeightFmt::Csr(c) => c.retile(target_bytes, max_rows),
             WeightFmt::Macko(m) => m.retile(target_bytes, max_rows),
+            WeightFmt::CsrQ(c) => c.retile(target_bytes, max_rows),
+            WeightFmt::MackoQ(m) => m.retile(target_bytes, max_rows),
         }
     }
 
+    /// Actual compact-buffer bytes of this weight's storage — for the
+    /// quantized variants this reflects the packed code/scale buffers,
+    /// which is the whole point of the format.
     pub fn mem_bytes(&self) -> usize {
         match self {
             WeightFmt::Dense(w, _) => w.data.len() * 4,
             WeightFmt::Csr(c) => c.mem_bytes(),
             WeightFmt::Macko(m) => m.mem_bytes(),
+            WeightFmt::CsrQ(c) => c.mem_bytes(),
+            WeightFmt::MackoQ(m) => m.mem_bytes(),
         }
     }
 }
@@ -295,6 +369,11 @@ pub struct Engine {
     /// token streams — chunking only changes how many positions share
     /// one pass through the weights.
     pub prefill_chunk: usize,
+    /// Which payload the prunable linears carry (`--quant`): f32
+    /// (`None`, the default) or fused-dequant int8/int4. A build-time
+    /// property of the converted weights — never a runtime toggle —
+    /// so one engine serves exactly one quant mode.
+    pub quant: QuantMode,
     /// Rows projected through the dense head since construction (one
     /// per (slot, step) of [`Engine::decode_step_batch`]; the chunked
     /// prefill pass never projects). The prefill-efficiency probe:
@@ -308,8 +387,39 @@ pub struct Engine {
 pub const DEFAULT_PREFILL_CHUNK: usize = 16;
 
 impl Engine {
-    /// Convert params: prunable matrices go to `backend` storage.
+    /// Convert params: prunable matrices go to `backend` storage
+    /// (f32 payloads; [`Engine::build_quant`] adds int8/int4).
+    ///
+    /// ```
+    /// use elsa::infer::{Backend, Engine};
+    /// use elsa::model::{fake_config, Params};
+    ///
+    /// let params = Params::init(&fake_config(), 4);
+    /// let engine = Engine::build(&params, Backend::Macko).unwrap();
+    /// // greedy generation: 3 new tokens after a 2-token prompt
+    /// let (tokens, stats) = engine.generate(&[1, 2], 3, 0.0, 0);
+    /// assert_eq!(tokens.len(), 5);
+    /// assert_eq!(stats.tokens_generated, 3);
+    /// assert_eq!(stats.quant_mode, "none");
+    /// ```
     pub fn build(params: &Params, backend: Backend) -> Result<Engine> {
+        Self::build_quant(params, backend, QuantMode::None)
+    }
+
+    /// [`Engine::build`] with a quantized payload: every prunable
+    /// linear is converted through [`WeightFmt::build_quant`], so with
+    /// `Int8`/`Int4` the sparse formats carry packed codes +
+    /// per-row-block scales and dequantize inside the kernel inner
+    /// loops. Requires a sparse `backend` when `quant != None` (dense
+    /// weights have no quantized variant). Embeddings, positional
+    /// table, and the head stay dense f32 — only the prunable linears
+    /// quantize, mirroring what the pruners touch.
+    pub fn build_quant(params: &Params, backend: Backend,
+                       quant: QuantMode) -> Result<Engine> {
+        if quant != QuantMode::None && backend == Backend::Dense {
+            anyhow::bail!("--quant requires a sparse backend \
+                           (csr or macko), got dense");
+        }
         let cfg = params.cfg.clone();
         let mut layers = Vec::with_capacity(cfg.n_layers);
         for l in 0..cfg.n_layers {
@@ -318,18 +428,20 @@ impl Engine {
             let vec = |n: &str| -> Result<Vec<f32>> {
                 Ok(params.vector(&(p.clone() + n))?.to_vec())
             };
+            let conv = |w: Matrix| WeightFmt::build_quant(w, backend,
+                                                          quant);
             layers.push(Layer {
                 ln1_g: vec("ln1.g")?,
                 ln1_b: vec("ln1.b")?,
-                wq: WeightFmt::build(get("attn.wq")?, backend),
-                wk: WeightFmt::build(get("attn.wk")?, backend),
-                wv: WeightFmt::build(get("attn.wv")?, backend),
-                wo: WeightFmt::build(get("attn.wo")?, backend),
+                wq: conv(get("attn.wq")?)?,
+                wk: conv(get("attn.wk")?)?,
+                wv: conv(get("attn.wv")?)?,
+                wo: conv(get("attn.wo")?)?,
                 ln2_g: vec("ln2.g")?,
                 ln2_b: vec("ln2.b")?,
-                w1: WeightFmt::build(get("mlp.w1")?, backend),
+                w1: conv(get("mlp.w1")?)?,
                 b1: vec("mlp.b1")?,
-                w2: WeightFmt::build(get("mlp.w2")?, backend),
+                w2: conv(get("mlp.w2")?)?,
                 b2: vec("mlp.b2")?,
             });
         }
@@ -353,6 +465,7 @@ impl Engine {
             backend,
             tiled: true,
             prefill_chunk: DEFAULT_PREFILL_CHUNK,
+            quant,
             head_rows: AtomicU64::new(0),
         })
     }
@@ -611,6 +724,18 @@ impl Engine {
     ///
     /// An empty prompt returns zero tokens — the same rule as
     /// [`Engine::generate_batch`] (there is nothing to condition on).
+    ///
+    /// ```
+    /// use elsa::infer::{Backend, Engine};
+    /// use elsa::model::{fake_config, Params};
+    ///
+    /// let params = Params::init(&fake_config(), 4);
+    /// let engine = Engine::build(&params, Backend::Csr).unwrap();
+    /// // temperature 0 is greedy: the same call reproduces itself
+    /// let (a, _) = engine.generate(&[1, 2, 3], 4, 0.0, 0);
+    /// let (b, _) = engine.generate(&[1, 2, 3], 4, 0.0, 0);
+    /// assert_eq!(a, b);
+    /// ```
     pub fn generate(&self, prompt: &[u32], n_new: usize, temperature: f32,
                     seed: u64) -> (Vec<u32>, GenStats) {
         self.generate_pooled(prompt, n_new, temperature, seed,
@@ -640,6 +765,7 @@ impl Engine {
             prefix_tokens_saved: 0,
             shard_busy_seconds: 0.0,
             shard_idle_seconds: 0.0,
+            quant_mode: self.quant.label(),
         };
         if prompt.is_empty() {
             return (Vec::new(), stats);
@@ -795,6 +921,7 @@ impl Engine {
             prefix_tokens_saved: st.prefix_tokens_saved,
             shard_busy_seconds: st.shard_busy_seconds.iter().sum(),
             shard_idle_seconds: st.shard_idle_seconds.iter().sum(),
+            quant_mode: st.quant_mode,
         })
     }
 
@@ -1036,6 +1163,10 @@ pub struct GenStats {
     /// Seconds shard lanes sat idle while a dispatch was in flight —
     /// the plan-imbalance signal (0 without a multi-lane pool).
     pub shard_idle_seconds: f64,
+    /// Payload the engine decoded ("none", "int8", or "int4") — lets
+    /// bench/CLI output attribute a tok/s or `mem_bytes` number to its
+    /// quant mode without carrying the engine around.
+    pub quant_mode: &'static str,
 }
 
 /// `elsa generate` / `elsa infer` subcommand. `--batch N` serves N
@@ -1046,8 +1177,10 @@ pub struct GenStats {
 /// [`Engine::generate_pooled`]); `--prefill-chunk C` sets the prompt
 /// window of the chunked prefill pass; `--prefix-cache {on,off}`
 /// toggles the scheduler's shared-prefix KV cache on the batch path;
-/// `--untiled` falls back to the untiled SpMM kernels (every knob is
-/// bit-identical output, for perf comparisons).
+/// `--quant {none,int8,int4}` serves quantized sparse payloads with
+/// fused dequant (tolerance parity vs f32, bit-exact within a mode);
+/// `--untiled` falls back to the untiled SpMM kernels (every traversal
+/// knob is bit-identical output, for perf comparisons).
 pub fn cmd_generate(args: &Args) -> Result<()> {
     let rt = crate::commands::open_runtime(args)?;
     let ck = crate::model::checkpoint::Checkpoint::load(
@@ -1056,7 +1189,8 @@ pub fn cmd_generate(args: &Args) -> Result<()> {
     let params = Params::new(&cfg, ck.get("params")?.clone());
     let backend = Backend::parse(&args.str_or("backend", "macko"))
         .ok_or_else(|| anyhow::anyhow!("bad --backend"))?;
-    let mut engine = Engine::build(&params, backend)?;
+    let quant = QuantMode::parse(&args.str_or("quant", "none"))?;
+    let mut engine = Engine::build_quant(&params, backend, quant)?;
     engine.tiled = !args.bool("untiled");
     engine.prefill_chunk =
         args.usize_or("prefill-chunk", DEFAULT_PREFILL_CHUNK)?.max(1);
@@ -1085,6 +1219,7 @@ pub fn cmd_generate(args: &Args) -> Result<()> {
         println!("output  {:?}", &tokens[prompt_len..]);
         println!("sparsity {:.4}", params.sparsity());
         println!("backend {:?}", backend);
+        println!("quant {}", stats.quant_mode);
         println!("tokens_per_s {:.2}", stats.tokens_per_second);
         println!("decode_s {:.4}", stats.decode_seconds);
         println!("prefill_s {:.4} ({} tokens, {} chunk passes, \
@@ -1112,6 +1247,7 @@ pub fn cmd_generate(args: &Args) -> Result<()> {
         }
         println!("sparsity {:.4}", params.sparsity());
         println!("backend {:?}", backend);
+        println!("quant {}", stats.quant_mode);
         println!("batch {batch} threads {threads} \
                   shard_workers {shard_workers}");
         if shard_workers > 1 {
@@ -1262,6 +1398,30 @@ mod tests {
             .generate(&prompt, 4, 0.0, 0);
         assert_eq!(dense_out, csr_out);
         assert_eq!(dense_out, macko_out);
+    }
+
+    #[test]
+    fn quant_requires_sparse_backend_and_reports_mode() {
+        let p = toy();
+        assert!(Engine::build_quant(&p, Backend::Dense, QuantMode::Int8)
+                    .is_err());
+        let e =
+            Engine::build_quant(&p, Backend::Csr, QuantMode::Int8)
+                .unwrap();
+        assert_eq!(e.quant, QuantMode::Int8);
+        let (out, stats) = e.generate(&[1, 2, 3], 3, 0.0, 0);
+        assert_eq!(out.len(), 6);
+        assert_eq!(stats.quant_mode, "int8");
+        // quantized weights must be strictly smaller than their f32
+        // counterpart on the same backend
+        let f = Engine::build(&p, Backend::Csr).unwrap();
+        assert!(e.mem_bytes() < f.mem_bytes());
+        let e4 =
+            Engine::build_quant(&p, Backend::Macko, QuantMode::Int4)
+                .unwrap();
+        let fm = Engine::build(&p, Backend::Macko).unwrap();
+        assert!(e4.mem_bytes() < fm.mem_bytes());
+        assert_eq!(e4.quant.label(), "int4");
     }
 
     #[test]

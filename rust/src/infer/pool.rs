@@ -34,7 +34,10 @@
 //! accumulation order replays the single-vector `matvec` (see
 //! [`crate::sparse::tile`]). Which lane runs which shard, and in what
 //! order, therefore cannot affect a single output bit — all PR 1–3
-//! bit-exactness guarantees survive pooled decode unchanged.
+//! bit-exactness guarantees survive pooled decode unchanged. The
+//! quantized formats (`CsrQ`/`MackoQ`) ride the same shards with the
+//! dequant fused per nonzero, so the within-mode guarantee extends to
+//! int8/int4 payloads with no pool-side changes.
 //!
 //! ## Accounting
 //!

@@ -22,7 +22,10 @@
 //! contiguous per-slot buffer — the decode path does not know the
 //! cache exists, which is also why a cache hit is bit-identical to a
 //! cold start by construction: the attached rows are the same floats a
-//! cold prefill would have appended, in the same layout.
+//! cold prefill would have appended, in the same layout. (KV rows are
+//! always f32 — weight quantization via `--quant` changes what the
+//! prefill computes, not how it is cached, so quantized engines get
+//! prefix reuse unchanged and hits stay bit-identical within a mode.)
 //!
 //! ## Index
 //!

@@ -49,6 +49,15 @@
 //! from its own seeded RNG. Scheduling policy only decides *when* a
 //! request runs, never *what* it produces. (`Engine::generate_batch` is
 //! a thin wrapper over this module with fixed admission.)
+//!
+//! The guarantee is *per engine*, and a quantized engine
+//! (`--quant int8|int4`, [`crate::sparse::QuantMode`]) is just another
+//! engine: an int8 run reproduces an int8 `generate` stream bit-for-bit
+//! across threads/shard-workers/tiling/prefix-cache exactly like f32
+//! does, because the fused dequantize-multiply-accumulate keeps the
+//! same per-row accumulation order. Only the *cross-mode* comparison
+//! (int8 vs f32) is tolerance-based — see `rust/tests/quant_parity.rs`
+//! and `docs/ARCHITECTURE.md` for where bit-exactness ends.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -382,6 +391,14 @@ pub struct SchedStats {
     /// the shard-imbalance signal (same layout as
     /// `shard_busy_seconds`).
     pub shard_idle_seconds: Vec<f64>,
+    /// Weight payload quantization mode of the engine that served the
+    /// run (`"none"`, `"int8"`, or `"int4"`) — a build-time property
+    /// of the engine, echoed here so bench/serve reports are
+    /// self-describing.
+    pub quant_mode: &'static str,
+    /// Engine weight bytes actually resident (`Engine::mem_bytes`):
+    /// the compact quantized buffers when `quant_mode != "none"`.
+    pub weight_mem_bytes: usize,
 }
 
 /// Continuous-batching scheduler over one [`Engine`].
@@ -522,14 +539,16 @@ impl<'e> Scheduler<'e> {
         finished.sort_by_key(|f| f.id);
         debug_assert_eq!(finished.len(), n_requests,
                          "every request must finish or expire");
-        let stats = summarize(&finished, wall,
-                              shared.clock.load(Ordering::SeqCst), prefill,
-                              decode,
-                              PrefillCounts { tokens: prefill_tokens,
-                                              chunks: prefill_chunks },
-                              kv_allocated, kv_reused, cache,
-                              ShardTimes { lanes, busy: shard_busy,
-                                           idle: shard_idle });
+        let mut stats = summarize(&finished, wall,
+                                  shared.clock.load(Ordering::SeqCst),
+                                  prefill, decode,
+                                  PrefillCounts { tokens: prefill_tokens,
+                                                  chunks: prefill_chunks },
+                                  kv_allocated, kv_reused, cache,
+                                  ShardTimes { lanes, busy: shard_busy,
+                                               idle: shard_idle });
+        stats.quant_mode = self.engine.quant.label();
+        stats.weight_mem_bytes = self.engine.mem_bytes();
         (finished, stats)
     }
 
@@ -929,6 +948,9 @@ fn summarize(finished: &[FinishedRequest], wall: f64, steps: u64,
         shard_workers: shard.lanes,
         shard_busy_seconds: shard.busy,
         shard_idle_seconds: shard.idle,
+        // overwritten by callers that hold the engine
+        quant_mode: "none",
+        weight_mem_bytes: 0,
     }
 }
 
@@ -1008,8 +1030,10 @@ pub fn serve_static_chunks(engine: &Engine, requests: &[Request],
     }
     finished.sort_by_key(|f| f.id);
     let wall = t0.elapsed().as_secs_f64();
-    let stats = summarize(&finished, wall, steps, prefill, decode, pre,
-                          kv_allocated, kv_reused, cache, shard);
+    let mut stats = summarize(&finished, wall, steps, prefill, decode, pre,
+                              kv_allocated, kv_reused, cache, shard);
+    stats.quant_mode = engine.quant.label();
+    stats.weight_mem_bytes = engine.mem_bytes();
     (finished, stats)
 }
 
@@ -1038,7 +1062,9 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let params = crate::model::Params::new(&cfg, ck.get("params")?.clone());
     let backend = super::Backend::parse(&args.str_or("backend", "macko"))
         .ok_or_else(|| anyhow::anyhow!("bad --backend"))?;
-    let mut engine = Engine::build(&params, backend)?;
+    let quant =
+        crate::sparse::QuantMode::parse(&args.str_or("quant", "none"))?;
+    let mut engine = Engine::build_quant(&params, backend, quant)?;
     engine.tiled = !args.bool("untiled");
     engine.prefill_chunk = args
         .usize_or("prefill-chunk", super::DEFAULT_PREFILL_CHUNK)?
@@ -1102,6 +1128,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
     println!("backend {:?}", backend);
+    println!("quant {}", stats.quant_mode);
     println!("sparsity {:.4}", params.sparsity());
     println!("requests {} expired {}", stats.requests, stats.expired);
     println!("max_slots {max_slots} threads {threads} \

@@ -6,6 +6,11 @@
 //!   `artifacts/*.hlo.txt` by `make artifacts`.
 //! - L3 is this crate: the ADMM pruning coordinator, baseline pruners,
 //!   sparse inference engine, evaluation + experiment harness.
+//!
+//! The serving stack (request lifecycle, determinism contract, slots ×
+//! bands × quant composition, how to add a weight format) is documented
+//! end-to-end in `docs/ARCHITECTURE.md`; start there before touching
+//! [`infer`] or [`sparse`].
 
 // Lint policy (CI runs `cargo clippy --all-targets -- -D warnings` as a
 // blocking job): two style lints are allowed crate-wide because they

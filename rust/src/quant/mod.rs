@@ -446,6 +446,89 @@ mod tests {
                 "block {} vs tensor {}", err(&blockwise), err(&per_tensor));
     }
 
+    // Edge cases feeding the serving-path quantizer
+    // (`sparse::quantized` mirrors this scale machinery; its own tests
+    // cover the NaN/inf `ensure!` rejection and int4 odd-row packing).
+
+    #[test]
+    fn all_zero_blocks_round_trip_exactly_with_unit_scale() {
+        // an all-zero tensor must not divide by an absmax of 0: the
+        // scale falls back to 1.0 and every value round-trips to an
+        // exact +0.0 (no NaN, no -0.0 from a negative scale)
+        let xs = vec![0.0f32; 700];
+        for p in [Precision::Int8, Precision::Int8Block(256)] {
+            let sv = StoredVec::quantize(&xs, p);
+            let back = sv.dequantize();
+            assert_eq!(back.len(), xs.len());
+            assert!(back.iter().all(|&v| v == 0.0 && !v.is_sign_negative()),
+                    "{p:?}");
+        }
+        if let StoredVec::Int8Block { scales, .. } =
+            StoredVec::quantize(&xs, Precision::Int8Block(256))
+        {
+            assert_eq!(scales, vec![1.0; 3]); // 256+256+188-tail blocks
+        } else {
+            unreachable!();
+        }
+        // a zero block embedded in a nonzero tensor gets its own unit
+        // scale instead of inheriting a neighbour's
+        let mut mixed = vec![0.0f32; 512];
+        mixed[300] = 5.0;
+        if let StoredVec::Int8Block { scales, .. } =
+            StoredVec::quantize(&mixed, Precision::Int8Block(256))
+        {
+            assert_eq!(scales[0], 1.0);
+            assert_eq!(scales[1], 5.0 / 127.0);
+        } else {
+            unreachable!();
+        }
+    }
+
+    #[test]
+    fn absmax_at_block_boundaries_is_exact() {
+        // the absmax element quantizes to exactly ±127 and so
+        // round-trips exactly; placing it at the last index of one
+        // block and the first of the next verifies the chunking is
+        // half-open [k*block, (k+1)*block) with no off-by-one leakage
+        let block = 64;
+        let mut xs = vec![0.25f32; 4 * block];
+        xs[block - 1] = -3.0; // last element of block 0
+        xs[block] = 7.0; // first element of block 1
+        let sv = StoredVec::quantize(&xs, Precision::Int8Block(block));
+        let back = sv.dequantize();
+        assert_eq!(back[block - 1], -3.0);
+        assert_eq!(back[block], 7.0);
+        if let StoredVec::Int8Block { scales, codes, .. } = &sv {
+            assert_eq!(scales.len(), 4);
+            assert_eq!(scales[0], 3.0 / 127.0);
+            assert_eq!(scales[1], 7.0 / 127.0);
+            // blocks 2/3 never see the outliers
+            assert_eq!(scales[2], 0.25 / 127.0);
+            assert_eq!(codes[block - 1], -127);
+            assert_eq!(codes[block], 127);
+        } else {
+            unreachable!();
+        }
+    }
+
+    #[test]
+    fn tail_block_shorter_than_block_size_is_scaled_independently() {
+        let block = 256;
+        let mut xs = vec![1.0f32; block + 10];
+        xs[block + 3] = 50.0; // tail-only outlier
+        let sv = StoredVec::quantize(&xs, Precision::Int8Block(block));
+        if let StoredVec::Int8Block { scales, .. } = &sv {
+            assert_eq!(scales.len(), 2);
+            assert_eq!(scales[0], 1.0 / 127.0); // full block unpolluted
+            assert_eq!(scales[1], 50.0 / 127.0);
+        } else {
+            unreachable!();
+        }
+        let back = sv.dequantize();
+        assert_eq!(back.len(), xs.len());
+        assert_eq!(back[block + 3], 50.0);
+    }
+
     #[test]
     fn memory_footprints() {
         let xs = vec![1.0f32; 1024];

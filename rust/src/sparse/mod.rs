@@ -12,9 +12,16 @@
 //!
 //! Memory accounting is real (`mem_bytes` sums the actual buffers), so
 //! the Table-1 memory column reflects genuine storage.
+//!
+//! Both formats also come in quantized variants ([`CsrQ`] / [`MackoQ`]
+//! in [`quantized`]): identical index/bitmap structure, int8 or int4
+//! codes with per-row-block absmax scales instead of f32 values, and
+//! dequant fused into the same kernel set — the Elsa-L serving path.
 
+pub mod quantized;
 pub mod tile;
 
+pub use quantized::{CsrQ, MackoQ, QuantMode, QUANT_BLOCK};
 pub use tile::{dense_plan, matvec_batch_tiled, par_matvec_batch_tiled,
                pool_matvec_batch_tiled, pool_t_matmat, RowTiled, Tile,
                TilePlan};

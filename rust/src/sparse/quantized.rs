@@ -1,0 +1,1017 @@
+//! Quantized payload variants of the sparse serving formats — the
+//! Elsa-L serving path (paper §3.3).
+//!
+//! [`CsrQ`] and [`MackoQ`] mirror [`Csr`] / [`Macko`] exactly — same
+//! row order, same index/bitmap structure, same tile plans — but store
+//! the nonzero values as int8 or int4 codes with per-row-block absmax
+//! scales instead of f32. Decode is memory-bandwidth-bound, so
+//! shrinking bytes-per-nonzero from 4 to 1 (int8) or 0.5 (int4) is a
+//! direct tok/s multiplier on top of sparsity; the paper reports up to
+//! 7.80× serve-time memory compression at 27B with this scheme.
+//!
+//! ## Format layout
+//!
+//! Per output row, the nonzero values are chunked into blocks of
+//! [`QUANT_BLOCK`] (blocks never span rows). Each block stores one f32
+//! scale `absmax / qmax` (qmax = 127 for int8, 7 for int4; scale 1.0
+//! for an all-zero block) plus one code per nonzero:
+//! `code = round(v / scale)` clamped to `[-qmax, qmax]`. Int8 codes
+//! are one byte each; int4 codes are packed two per byte, low nibble
+//! first, with every row starting byte-aligned (an odd-length row pads
+//! its final high nibble with 0). Dequantization is
+//! `code as f32 * scale`, fused into every kernel inner loop — the
+//! codes are never materialized back to an f32 buffer.
+//!
+//! ## Error bounds
+//!
+//! Rounding to the nearest code bounds the per-weight error by half a
+//! quantization step: `|v - dq(v)| <= block_absmax / 254` for int8 and
+//! `block_absmax / 14` for int4 (no clamp error: the block absmax maps
+//! to exactly qmax). A matvec row error is therefore bounded by the
+//! weighted sum of those per-weight bounds, which the tolerance tests
+//! here and in `rust/tests/quant_parity.rs` assert.
+//!
+//! ## Bit-exactness contract
+//!
+//! f32 parity is tolerance-based, but *within* a quant mode the PR 1–6
+//! determinism guarantees carry over unchanged: every kernel
+//! (single-vector, batched, tiled, pooled shards) dequantizes through
+//! the one shared `dq` expression and replays the single-vector
+//! accumulation order per row, so int8 run N == int8 run M bit-exactly
+//! across batch sizes, tile geometries, shard counts, and threads.
+//! The sweep in `rust/tests/determinism.rs` pins this with a quant
+//! axis.
+
+use anyhow::{bail, ensure, Result};
+
+use super::tile::{self, RowTiled, Tile, TilePlan};
+use super::{transpose_batch_into, SpmmScratch};
+use crate::tensor::Matrix;
+
+/// Which payload a serving weight carries: f32 (`None`) or a
+/// quantized code stream. Parsed from `--quant {none,int8,int4}`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantMode {
+    None,
+    Int8,
+    Int4,
+}
+
+impl QuantMode {
+    /// Parse a `--quant` flag value.
+    pub fn parse(s: &str) -> Result<QuantMode> {
+        match s {
+            "none" | "off" | "f32" => Ok(QuantMode::None),
+            "int8" | "i8" => Ok(QuantMode::Int8),
+            "int4" | "i4" => Ok(QuantMode::Int4),
+            other => bail!("unknown quant mode '{other}' \
+                            (expected none, int8 or int4)"),
+        }
+    }
+
+    /// Stable display/stats label.
+    pub fn label(self) -> &'static str {
+        match self {
+            QuantMode::None => "none",
+            QuantMode::Int8 => "int8",
+            QuantMode::Int4 => "int4",
+        }
+    }
+
+    fn qmax(self) -> f32 {
+        match self {
+            QuantMode::Int8 => 127.0,
+            QuantMode::Int4 => 7.0,
+            QuantMode::None => unreachable!("f32 payloads are not quantized"),
+        }
+    }
+}
+
+/// Default scale-block length: one f32 scale per 64 nonzeros keeps the
+/// scale overhead at 6.25% of an int8 payload while staying fine
+/// enough that a single outlier only coarsens 63 neighbours.
+pub const QUANT_BLOCK: usize = 64;
+
+/// The quantized code stream. Int8 indexes codes directly with the
+/// format's `row_ptr`; int4 packs two codes per byte and carries its
+/// own per-row byte offsets so every row starts byte-aligned.
+#[derive(Debug, Clone)]
+enum QuantPayload {
+    Int8 { codes: Vec<i8> },
+    Int4 { packed: Vec<u8>, byte_ptr: Vec<u32> },
+}
+
+impl QuantPayload {
+    /// Payload start offset of output row `o`.
+    #[inline(always)]
+    fn base(&self, o: usize, row_ptr: &[u32]) -> usize {
+        match self {
+            QuantPayload::Int8 { .. } => row_ptr[o] as usize,
+            QuantPayload::Int4 { byte_ptr, .. } => byte_ptr[o] as usize,
+        }
+    }
+
+    /// Code `j` of the row starting at `base`, as f32. Int4 nibbles
+    /// are two's complement: sign-extend via the i8 shift pair.
+    #[inline(always)]
+    fn code(&self, base: usize, j: usize) -> f32 {
+        match self {
+            QuantPayload::Int8 { codes } => codes[base + j] as f32,
+            QuantPayload::Int4 { packed, .. } => {
+                let byte = packed[base + (j >> 1)];
+                let nib = if j & 1 == 0 { byte & 0x0f } else { byte >> 4 };
+                (((nib << 4) as i8) >> 4) as f32
+            }
+        }
+    }
+
+    fn mem_bytes(&self) -> usize {
+        match self {
+            QuantPayload::Int8 { codes } => codes.len(),
+            QuantPayload::Int4 { packed, byte_ptr } => {
+                packed.len() + byte_ptr.len() * 4
+            }
+        }
+    }
+
+    /// Payload bytes a row of `nnz` nonzeros streams (tile costing).
+    fn row_bytes(&self, nnz: usize) -> usize {
+        match self {
+            QuantPayload::Int8 { .. } => nnz,
+            QuantPayload::Int4 { .. } => nnz.div_ceil(2),
+        }
+    }
+
+    fn mode(&self) -> QuantMode {
+        match self {
+            QuantPayload::Int8 { .. } => QuantMode::Int8,
+            QuantPayload::Int4 { .. } => QuantMode::Int4,
+        }
+    }
+}
+
+/// THE dequantization expression. Every kernel in this module funnels
+/// through this one function, which is what makes within-mode
+/// bit-exactness structural rather than something each kernel has to
+/// re-earn: there is no second dequant formula to drift.
+#[inline(always)]
+fn dq(payload: &QuantPayload, scales: &[f32], block: usize, base: usize,
+      sp: usize, j: usize) -> f32 {
+    payload.code(base, j) * scales[sp + j / block]
+}
+
+/// Quantize row-major packed nonzero values (as produced by the
+/// `from_weight` loops) into a payload + scales. Shared by both
+/// formats so the code/scale layout — and therefore the dequantized
+/// value stream — is identical for a given weight matrix.
+fn quantize_rows(values: &[f32], row_ptr: &[u32], mode: QuantMode,
+                 block: usize)
+                 -> Result<(QuantPayload, Vec<f32>, Vec<u32>)> {
+    ensure!(mode != QuantMode::None,
+            "quantize_rows needs int8 or int4, got none");
+    ensure!(block >= 1, "scale block must be >= 1");
+    for (k, &v) in values.iter().enumerate() {
+        ensure!(v.is_finite(),
+                "refusing to quantize non-finite weight {v} at nonzero {k}");
+    }
+    let qmax = mode.qmax();
+    let n_rows = row_ptr.len() - 1;
+    let mut scales = Vec::new();
+    let mut scale_ptr = Vec::with_capacity(n_rows + 1);
+    scale_ptr.push(0u32);
+    let mut codes = Vec::new();
+    let mut packed = Vec::new();
+    let mut byte_ptr = Vec::with_capacity(n_rows + 1);
+    byte_ptr.push(0u32);
+    for o in 0..n_rows {
+        let lo = row_ptr[o] as usize;
+        let hi = row_ptr[o + 1] as usize;
+        let mut pending = 0u8;
+        let mut have_low = false;
+        for chunk in values[lo..hi].chunks(block) {
+            let absmax = chunk.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+            let scale = if absmax > 0.0 { absmax / qmax } else { 1.0 };
+            scales.push(scale);
+            for &v in chunk {
+                let q = (v / scale).round().clamp(-qmax, qmax) as i8;
+                match mode {
+                    QuantMode::Int8 => codes.push(q),
+                    QuantMode::Int4 => {
+                        if have_low {
+                            packed.push(pending | ((q as u8 & 0x0f) << 4));
+                            have_low = false;
+                        } else {
+                            pending = q as u8 & 0x0f;
+                            have_low = true;
+                        }
+                    }
+                    QuantMode::None => unreachable!(),
+                }
+            }
+        }
+        if have_low {
+            packed.push(pending); // odd row: pad high nibble stays 0
+        }
+        scale_ptr.push(scales.len() as u32);
+        byte_ptr.push(packed.len() as u32);
+    }
+    let payload = match mode {
+        QuantMode::Int8 => QuantPayload::Int8 { codes },
+        QuantMode::Int4 => QuantPayload::Int4 { packed, byte_ptr },
+        QuantMode::None => unreachable!(),
+    };
+    Ok((payload, scales, scale_ptr))
+}
+
+/// [`Csr`] with a quantized payload: same `row_ptr`/`col_idx`
+/// structure, int8/int4 codes + per-row-block scales instead of f32
+/// values. Dequant is fused into every kernel inner loop.
+#[derive(Debug, Clone)]
+pub struct CsrQ {
+    pub n_out: usize,
+    pub n_in: usize,
+    pub row_ptr: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    payload: QuantPayload,
+    scales: Vec<f32>,
+    scale_ptr: Vec<u32>,
+    scale_block: usize,
+    /// Row-tiled execution plan (see [`tile`]); traversal metadata
+    /// only, excluded from [`CsrQ::mem_bytes`].
+    pub plan: TilePlan,
+}
+
+impl CsrQ {
+    /// Build from a (din, dout) weight matrix with the default
+    /// [`QUANT_BLOCK`] scale block. Fails loudly on non-finite weights
+    /// or `mode == None` (f32 serving stays on [`Csr`]).
+    pub fn from_weight(w: &Matrix, mode: QuantMode) -> Result<CsrQ> {
+        Self::from_weight_blocked(w, mode, QUANT_BLOCK)
+    }
+
+    /// [`CsrQ::from_weight`] with an explicit scale-block length — the
+    /// accuracy/overhead knob the tolerance tests sweep.
+    pub fn from_weight_blocked(w: &Matrix, mode: QuantMode, block: usize)
+                               -> Result<CsrQ> {
+        let (din, dout) = (w.rows, w.cols);
+        let mut row_ptr = Vec::with_capacity(dout + 1);
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        row_ptr.push(0u32);
+        for c in 0..dout {
+            for r in 0..din {
+                let v = w.at(r, c);
+                if v != 0.0 {
+                    col_idx.push(r as u32);
+                    values.push(v);
+                }
+            }
+            row_ptr.push(col_idx.len() as u32);
+        }
+        let (payload, scales, scale_ptr) =
+            quantize_rows(&values, &row_ptr, mode, block)?;
+        // per row: 4-byte column indices + packed codes + block scales
+        let plan = TilePlan::from_row_bytes(dout, |o| {
+            let nnz = (row_ptr[o + 1] - row_ptr[o]) as usize;
+            let sb = (scale_ptr[o + 1] - scale_ptr[o]) as usize;
+            nnz * 4 + payload.row_bytes(nnz) + sb * 4
+        });
+        Ok(CsrQ { n_out: dout, n_in: din, row_ptr, col_idx, payload,
+                  scales, scale_ptr, scale_block: block, plan })
+    }
+
+    #[inline(always)]
+    fn dq(&self, base: usize, sp: usize, j: usize) -> f32 {
+        dq(&self.payload, &self.scales, self.scale_block, base, sp, j)
+    }
+
+    /// y = W^T x with dequant fused into the accumulation loop; same
+    /// traversal and accumulation order as [`Csr::matvec`].
+    pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.n_in);
+        debug_assert_eq!(y.len(), self.n_out);
+        for o in 0..self.n_out {
+            let lo = self.row_ptr[o] as usize;
+            let hi = self.row_ptr[o + 1] as usize;
+            let base = self.payload.base(o, &self.row_ptr);
+            let sp = self.scale_ptr[o] as usize;
+            let mut acc = 0.0f32;
+            for k in lo..hi {
+                acc += self.dq(base, sp, k - lo)
+                    * unsafe { *x.get_unchecked(self.col_idx[k] as usize) };
+            }
+            y[o] = acc;
+        }
+    }
+
+    /// Batched SpMM; see [`Csr::matvec_batch`]. Allocates scratch per
+    /// call; hot loops should use [`CsrQ::matvec_batch_into`].
+    pub fn matvec_batch(&self, x: &[f32], y: &mut [f32], b: usize) {
+        self.matvec_batch_into(x, y, b, &mut SpmmScratch::default());
+    }
+
+    /// [`CsrQ::matvec_batch`] with caller-owned scratch. Per sequence
+    /// the accumulation order replays [`CsrQ::matvec`], so results are
+    /// bit-exact with the single-vector path.
+    pub fn matvec_batch_into(&self, x: &[f32], y: &mut [f32], b: usize,
+                             scratch: &mut SpmmScratch) {
+        debug_assert_eq!(x.len(), b * self.n_in);
+        debug_assert_eq!(y.len(), b * self.n_out);
+        if b == 1 {
+            return self.matvec(x, y);
+        }
+        transpose_batch_into(x, b, self.n_in, &mut scratch.xt);
+        scratch.acc.resize(b, 0.0);
+        let xt = &scratch.xt[..];
+        let acc = &mut scratch.acc;
+        for o in 0..self.n_out {
+            acc.fill(0.0);
+            let lo = self.row_ptr[o] as usize;
+            let hi = self.row_ptr[o + 1] as usize;
+            let base = self.payload.base(o, &self.row_ptr);
+            let sp = self.scale_ptr[o] as usize;
+            for k in lo..hi {
+                let v = self.dq(base, sp, k - lo);
+                let c = self.col_idx[k] as usize;
+                let xrow = &xt[c * b..c * b + b];
+                for (a, xv) in acc.iter_mut().zip(xrow.iter()) {
+                    *a += v * xv;
+                }
+            }
+            for (bi, &a) in acc.iter().enumerate() {
+                y[bi * self.n_out + o] = a;
+            }
+        }
+    }
+
+    /// Tiled variant; see [`Csr::matvec_batch_tiled_into`].
+    /// Bit-identical to the untiled path for every batch size.
+    pub fn matvec_batch_tiled_into(&self, x: &[f32], y: &mut [f32],
+                                   b: usize, scratch: &mut SpmmScratch) {
+        if b == 1 {
+            return self.matvec(x, y);
+        }
+        tile::matvec_batch_tiled(self, &self.plan, x, y, b, scratch);
+    }
+
+    /// Rebuild the row-tile plan; see [`Csr::retile`]. Traversal
+    /// metadata only — output is bit-identical for any geometry.
+    pub fn retile(&mut self, target_bytes: usize, max_rows: usize) {
+        let plan = TilePlan::with_budget(self.n_out, |o| {
+            let nnz = (self.row_ptr[o + 1] - self.row_ptr[o]) as usize;
+            let sb = (self.scale_ptr[o + 1] - self.scale_ptr[o]) as usize;
+            nnz * 4 + self.payload.row_bytes(nnz) + sb * 4
+        }, target_bytes, max_rows);
+        self.plan = plan;
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// Which quantized payload this weight carries.
+    pub fn mode(&self) -> QuantMode {
+        self.payload.mode()
+    }
+
+    /// Actual compact-buffer bytes: indices + codes + scales. The
+    /// whole point of the format — compare with [`Csr::mem_bytes`].
+    pub fn mem_bytes(&self) -> usize {
+        self.row_ptr.len() * 4 + self.col_idx.len() * 4
+            + self.payload.mem_bytes() + self.scales.len() * 4
+            + self.scale_ptr.len() * 4
+    }
+
+    /// Materialize the dequantized weight as a dense (din, dout)
+    /// matrix — test/debug helper, never on the serving path.
+    pub fn to_dense(&self) -> Matrix {
+        let mut w = Matrix::zeros(self.n_in, self.n_out);
+        for o in 0..self.n_out {
+            let lo = self.row_ptr[o] as usize;
+            let hi = self.row_ptr[o + 1] as usize;
+            let base = self.payload.base(o, &self.row_ptr);
+            let sp = self.scale_ptr[o] as usize;
+            for k in lo..hi {
+                let r = self.col_idx[k] as usize;
+                w.data[r * self.n_out + o] = self.dq(base, sp, k - lo);
+            }
+        }
+        w
+    }
+}
+
+impl RowTiled for CsrQ {
+    fn n_in(&self) -> usize {
+        self.n_in
+    }
+
+    fn n_out(&self) -> usize {
+        self.n_out
+    }
+
+    fn exec_tiles(&self, tiles: &[Tile], xt: &[f32], yt: &mut [f32],
+                  b: usize) {
+        let Some(first) = tiles.first() else { return };
+        let base_row = first.row0;
+        for t in tiles {
+            for o in t.row0..t.row1 {
+                let yrow =
+                    &mut yt[(o - base_row) * b..(o - base_row) * b + b];
+                yrow.fill(0.0);
+                let lo = self.row_ptr[o] as usize;
+                let hi = self.row_ptr[o + 1] as usize;
+                let base = self.payload.base(o, &self.row_ptr);
+                let sp = self.scale_ptr[o] as usize;
+                for k in lo..hi {
+                    let v = self.dq(base, sp, k - lo);
+                    let c = self.col_idx[k] as usize;
+                    let xrow = &xt[c * b..c * b + b];
+                    for (a, xv) in yrow.iter_mut().zip(xrow.iter()) {
+                        *a += v * xv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// [`Macko`] with a quantized payload: same bitmap/`row_ptr`
+/// structure, int8/int4 codes + per-row-block scales instead of f32
+/// values. The 1-bit indices plus sub-byte codes make this the
+/// smallest format at moderate sparsity.
+#[derive(Debug, Clone)]
+pub struct MackoQ {
+    pub n_out: usize,
+    pub n_in: usize,
+    words_per_row: usize,
+    pub bitmap: Vec<u64>,
+    pub row_ptr: Vec<u32>,
+    payload: QuantPayload,
+    scales: Vec<f32>,
+    scale_ptr: Vec<u32>,
+    scale_block: usize,
+    /// Row-tiled execution plan (see [`tile`]); traversal metadata
+    /// only, excluded from [`MackoQ::mem_bytes`].
+    pub plan: TilePlan,
+}
+
+impl MackoQ {
+    /// Build from a (din, dout) weight matrix with the default
+    /// [`QUANT_BLOCK`] scale block. Fails loudly on non-finite weights
+    /// or `mode == None` (f32 serving stays on [`Macko`]).
+    pub fn from_weight(w: &Matrix, mode: QuantMode) -> Result<MackoQ> {
+        Self::from_weight_blocked(w, mode, QUANT_BLOCK)
+    }
+
+    /// [`MackoQ::from_weight`] with an explicit scale-block length.
+    pub fn from_weight_blocked(w: &Matrix, mode: QuantMode, block: usize)
+                               -> Result<MackoQ> {
+        let (din, dout) = (w.rows, w.cols);
+        let wpr = din.div_ceil(64);
+        let mut bitmap = vec![0u64; dout * wpr];
+        let mut row_ptr = Vec::with_capacity(dout + 1);
+        let mut values = Vec::new();
+        row_ptr.push(0u32);
+        for c in 0..dout {
+            for r in 0..din {
+                let v = w.at(r, c);
+                if v != 0.0 {
+                    bitmap[c * wpr + r / 64] |= 1u64 << (r % 64);
+                    values.push(v);
+                }
+            }
+            row_ptr.push(values.len() as u32);
+        }
+        let (payload, scales, scale_ptr) =
+            quantize_rows(&values, &row_ptr, mode, block)?;
+        // per row: bitmap words + packed codes + block scales
+        let plan = TilePlan::from_row_bytes(dout, |o| {
+            let nnz = (row_ptr[o + 1] - row_ptr[o]) as usize;
+            let sb = (scale_ptr[o + 1] - scale_ptr[o]) as usize;
+            wpr * 8 + payload.row_bytes(nnz) + sb * 4
+        });
+        Ok(MackoQ { n_out: dout, n_in: din, words_per_row: wpr, bitmap,
+                    row_ptr, payload, scales, scale_ptr,
+                    scale_block: block, plan })
+    }
+
+    #[inline(always)]
+    fn dq(&self, base: usize, sp: usize, j: usize) -> f32 {
+        dq(&self.payload, &self.scales, self.scale_block, base, sp, j)
+    }
+
+    /// y = W^T x via bitmap scan with fused dequant; same traversal
+    /// and accumulation order as [`Macko::matvec`].
+    pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.n_in);
+        debug_assert_eq!(y.len(), self.n_out);
+        for o in 0..self.n_out {
+            let base = self.payload.base(o, &self.row_ptr);
+            let sp = self.scale_ptr[o] as usize;
+            let mut j = 0usize;
+            let mut acc = 0.0f32;
+            let word_base = o * self.words_per_row;
+            for wi in 0..self.words_per_row {
+                let mut word = self.bitmap[word_base + wi];
+                let col0 = wi * 64;
+                while word != 0 {
+                    let bit = word.trailing_zeros() as usize;
+                    acc += self.dq(base, sp, j)
+                        * unsafe { *x.get_unchecked(col0 + bit) };
+                    j += 1;
+                    word &= word - 1;
+                }
+            }
+            y[o] = acc;
+        }
+    }
+
+    /// Batched SpMM; see [`Macko::matvec_batch`]. Allocates scratch
+    /// per call; hot loops should use [`MackoQ::matvec_batch_into`].
+    pub fn matvec_batch(&self, x: &[f32], y: &mut [f32], b: usize) {
+        self.matvec_batch_into(x, y, b, &mut SpmmScratch::default());
+    }
+
+    /// [`MackoQ::matvec_batch`] with caller-owned scratch. Bit-exact
+    /// with [`MackoQ::matvec`] per sequence.
+    pub fn matvec_batch_into(&self, x: &[f32], y: &mut [f32], b: usize,
+                             scratch: &mut SpmmScratch) {
+        debug_assert_eq!(x.len(), b * self.n_in);
+        debug_assert_eq!(y.len(), b * self.n_out);
+        if b == 1 {
+            return self.matvec(x, y);
+        }
+        transpose_batch_into(x, b, self.n_in, &mut scratch.xt);
+        scratch.acc.resize(b, 0.0);
+        let xt = &scratch.xt[..];
+        let acc = &mut scratch.acc;
+        for o in 0..self.n_out {
+            acc.fill(0.0);
+            let base = self.payload.base(o, &self.row_ptr);
+            let sp = self.scale_ptr[o] as usize;
+            let mut j = 0usize;
+            let word_base = o * self.words_per_row;
+            for wi in 0..self.words_per_row {
+                let mut word = self.bitmap[word_base + wi];
+                let col0 = wi * 64;
+                while word != 0 {
+                    let bit = word.trailing_zeros() as usize;
+                    let v = self.dq(base, sp, j);
+                    let c = col0 + bit;
+                    let xrow = &xt[c * b..c * b + b];
+                    for (a, xv) in acc.iter_mut().zip(xrow.iter()) {
+                        *a += v * xv;
+                    }
+                    j += 1;
+                    word &= word - 1;
+                }
+            }
+            for (bi, &a) in acc.iter().enumerate() {
+                y[bi * self.n_out + o] = a;
+            }
+        }
+    }
+
+    /// Tiled variant; see [`Macko::matvec_batch_tiled_into`].
+    /// Bit-identical to the untiled path for every batch size.
+    pub fn matvec_batch_tiled_into(&self, x: &[f32], y: &mut [f32],
+                                   b: usize, scratch: &mut SpmmScratch) {
+        if b == 1 {
+            return self.matvec(x, y);
+        }
+        tile::matvec_batch_tiled(self, &self.plan, x, y, b, scratch);
+    }
+
+    /// Rebuild the row-tile plan; see [`Macko::retile`].
+    pub fn retile(&mut self, target_bytes: usize, max_rows: usize) {
+        let wpr = self.words_per_row;
+        let plan = TilePlan::with_budget(self.n_out, |o| {
+            let nnz = (self.row_ptr[o + 1] - self.row_ptr[o]) as usize;
+            let sb = (self.scale_ptr[o + 1] - self.scale_ptr[o]) as usize;
+            wpr * 8 + self.payload.row_bytes(nnz) + sb * 4
+        }, target_bytes, max_rows);
+        self.plan = plan;
+    }
+
+    pub fn nnz(&self) -> usize {
+        match &self.payload {
+            QuantPayload::Int8 { codes } => codes.len(),
+            QuantPayload::Int4 { .. } => {
+                *self.row_ptr.last().unwrap_or(&0) as usize
+            }
+        }
+    }
+
+    /// Which quantized payload this weight carries.
+    pub fn mode(&self) -> QuantMode {
+        self.payload.mode()
+    }
+
+    /// Actual compact-buffer bytes: bitmap + codes + scales. Compare
+    /// with [`Macko::mem_bytes`].
+    pub fn mem_bytes(&self) -> usize {
+        self.bitmap.len() * 8 + self.row_ptr.len() * 4
+            + self.payload.mem_bytes() + self.scales.len() * 4
+            + self.scale_ptr.len() * 4
+    }
+
+    /// Materialize the dequantized weight as a dense (din, dout)
+    /// matrix — test/debug helper, never on the serving path.
+    pub fn to_dense(&self) -> Matrix {
+        let mut w = Matrix::zeros(self.n_in, self.n_out);
+        for o in 0..self.n_out {
+            let base = self.payload.base(o, &self.row_ptr);
+            let sp = self.scale_ptr[o] as usize;
+            let mut j = 0usize;
+            let word_base = o * self.words_per_row;
+            for wi in 0..self.words_per_row {
+                let mut word = self.bitmap[word_base + wi];
+                let col0 = wi * 64;
+                while word != 0 {
+                    let bit = word.trailing_zeros() as usize;
+                    w.data[(col0 + bit) * self.n_out + o] =
+                        self.dq(base, sp, j);
+                    j += 1;
+                    word &= word - 1;
+                }
+            }
+        }
+        w
+    }
+}
+
+impl RowTiled for MackoQ {
+    fn n_in(&self) -> usize {
+        self.n_in
+    }
+
+    fn n_out(&self) -> usize {
+        self.n_out
+    }
+
+    fn exec_tiles(&self, tiles: &[Tile], xt: &[f32], yt: &mut [f32],
+                  b: usize) {
+        let Some(first) = tiles.first() else { return };
+        let base_row = first.row0;
+        let wpr = self.words_per_row;
+        for t in tiles {
+            for o in t.row0..t.row1 {
+                let yrow =
+                    &mut yt[(o - base_row) * b..(o - base_row) * b + b];
+                yrow.fill(0.0);
+                let base = self.payload.base(o, &self.row_ptr);
+                let sp = self.scale_ptr[o] as usize;
+                let mut j = 0usize;
+                let word_base = o * wpr;
+                for wi in 0..wpr {
+                    let mut word = self.bitmap[word_base + wi];
+                    let col0 = wi * 64;
+                    while word != 0 {
+                        let bit = word.trailing_zeros() as usize;
+                        let v = self.dq(base, sp, j);
+                        let c = col0 + bit;
+                        let xrow = &xt[c * b..c * b + b];
+                        for (a, xv) in yrow.iter_mut().zip(xrow.iter()) {
+                            *a += v * xv;
+                        }
+                        j += 1;
+                        word &= word - 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::pool::WorkerPool;
+    use crate::sparse::{random_sparse_weight, Csr, Macko};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn parse_and_label_round_trip() {
+        assert_eq!(QuantMode::parse("none").unwrap(), QuantMode::None);
+        assert_eq!(QuantMode::parse("off").unwrap(), QuantMode::None);
+        assert_eq!(QuantMode::parse("int8").unwrap(), QuantMode::Int8);
+        assert_eq!(QuantMode::parse("int4").unwrap(), QuantMode::Int4);
+        assert!(QuantMode::parse("fp8").is_err());
+        assert_eq!(QuantMode::None.label(), "none");
+        assert_eq!(QuantMode::Int8.label(), "int8");
+        assert_eq!(QuantMode::Int4.label(), "int4");
+    }
+
+    #[test]
+    fn none_mode_is_rejected_at_construction() {
+        let w = random_sparse_weight(8, 8, 0.5, 1);
+        assert!(CsrQ::from_weight(&w, QuantMode::None).is_err());
+        assert!(MackoQ::from_weight(&w, QuantMode::None).is_err());
+    }
+
+    #[test]
+    fn non_finite_weights_are_rejected_loudly() {
+        let mut w = Matrix::zeros(4, 4);
+        w.data[5] = f32::NAN;
+        assert!(CsrQ::from_weight(&w, QuantMode::Int8).is_err());
+        assert!(MackoQ::from_weight(&w, QuantMode::Int4).is_err());
+        w.data[5] = f32::INFINITY;
+        let err = CsrQ::from_weight(&w, QuantMode::Int8).unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "{err}");
+    }
+
+    #[test]
+    fn all_zero_rows_quantize_to_exact_zero_with_unit_scale() {
+        // unreachable via from_weight (exact zeros are dropped), but
+        // the helper must still be total: scale 1.0, codes 0
+        let vals = [0.0f32; 5];
+        let (payload, scales, scale_ptr) =
+            quantize_rows(&vals, &[0, 5], QuantMode::Int8, 2).unwrap();
+        assert_eq!(scales, vec![1.0, 1.0, 1.0]);
+        assert_eq!(&scale_ptr[..], &[0u32, 3]);
+        for j in 0..5 {
+            assert_eq!(dq(&payload, &scales, 2, 0, 0, j), 0.0);
+        }
+    }
+
+    /// Build the f32 [`Csr`] whose values are exactly the dequantized
+    /// codes, at the original nonzero positions — the bitwise
+    /// reference for the fused kernels.
+    fn dequant_csr(q: &CsrQ) -> Csr {
+        let mut values = Vec::with_capacity(q.nnz());
+        for o in 0..q.n_out {
+            let lo = q.row_ptr[o] as usize;
+            let hi = q.row_ptr[o + 1] as usize;
+            let base = q.payload.base(o, &q.row_ptr);
+            let sp = q.scale_ptr[o] as usize;
+            for k in lo..hi {
+                values.push(q.dq(base, sp, k - lo));
+            }
+        }
+        let row_ptr = q.row_ptr.clone();
+        let plan = TilePlan::from_row_bytes(q.n_out, |o| {
+            (row_ptr[o + 1] - row_ptr[o]) as usize * 8
+        });
+        Csr { n_out: q.n_out, n_in: q.n_in, row_ptr,
+              col_idx: q.col_idx.clone(), values, plan }
+    }
+
+    /// The [`Macko`] counterpart of [`dequant_csr`]: same bitmap,
+    /// dequantized values (stored in the same ascending-column order).
+    fn dequant_macko(q: &MackoQ) -> Macko {
+        let mut values = Vec::with_capacity(q.nnz());
+        for o in 0..q.n_out {
+            let lo = q.row_ptr[o] as usize;
+            let hi = q.row_ptr[o + 1] as usize;
+            let base = q.payload.base(o, &q.row_ptr);
+            let sp = q.scale_ptr[o] as usize;
+            for k in lo..hi {
+                values.push(q.dq(base, sp, k - lo));
+            }
+        }
+        let wpr = q.n_in.div_ceil(64);
+        let row_ptr = q.row_ptr.clone();
+        let plan = TilePlan::from_row_bytes(q.n_out, |o| {
+            wpr * 8 + (row_ptr[o + 1] - row_ptr[o]) as usize * 4
+        });
+        Macko { n_out: q.n_out, n_in: q.n_in, words_per_row: wpr,
+                bitmap: q.bitmap.clone(), row_ptr, values, plan }
+    }
+
+    #[test]
+    fn quantized_paths_bitwise_match_dequantized_reference() {
+        // untiled == tiled == pooled == the f32 reference holding the
+        // dequantized values, for both modes, both formats, coarse and
+        // fine scale blocks, multiple batch sizes
+        let (din, dout) = (96, 72);
+        let w = random_sparse_weight(din, dout, 0.8, 7);
+        let mut rng = Rng::new(5);
+        let pool = WorkerPool::new(4);
+        for mode in [QuantMode::Int8, QuantMode::Int4] {
+            for block in [3usize, 64] {
+                let mut q =
+                    CsrQ::from_weight_blocked(&w, mode, block).unwrap();
+                q.retile(64, 8); // force a multi-tile plan
+                let r = dequant_csr(&q);
+                let mut qm =
+                    MackoQ::from_weight_blocked(&w, mode, block).unwrap();
+                qm.retile(64, 8);
+                let rm = dequant_macko(&qm);
+                for b in [1usize, 4, 7] {
+                    let tag = format!("{mode:?} block={block} b={b}");
+                    let x: Vec<f32> =
+                        (0..b * din).map(|_| rng.normal()).collect();
+                    let mut scratch = SpmmScratch::default();
+                    let mut want = vec![0.0f32; b * dout];
+                    r.matvec_batch_into(&x, &mut want, b, &mut scratch);
+                    let mut got = vec![1.0f32; b * dout];
+                    q.matvec_batch_into(&x, &mut got, b, &mut scratch);
+                    assert_eq!(got, want, "csrq untiled {tag}");
+                    got.fill(1.0);
+                    q.matvec_batch_tiled_into(&x, &mut got, b,
+                                              &mut scratch);
+                    assert_eq!(got, want, "csrq tiled {tag}");
+                    got.fill(1.0);
+                    tile::pool_matvec_batch_tiled(&q, &q.plan, &x,
+                                                  &mut got, b, &pool,
+                                                  &mut scratch);
+                    assert_eq!(got, want, "csrq pooled {tag}");
+
+                    rm.matvec_batch_into(&x, &mut want, b, &mut scratch);
+                    got.fill(1.0);
+                    qm.matvec_batch_into(&x, &mut got, b, &mut scratch);
+                    assert_eq!(got, want, "mackoq untiled {tag}");
+                    got.fill(1.0);
+                    qm.matvec_batch_tiled_into(&x, &mut got, b,
+                                               &mut scratch);
+                    assert_eq!(got, want, "mackoq tiled {tag}");
+                    got.fill(1.0);
+                    tile::pool_matvec_batch_tiled(&qm, &qm.plan, &x,
+                                                  &mut got, b, &pool,
+                                                  &mut scratch);
+                    assert_eq!(got, want, "mackoq pooled {tag}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn both_formats_dequantize_identically() {
+        // one quantize_rows implementation → one dequantized weight
+        let w = random_sparse_weight(70, 50, 0.75, 9);
+        for mode in [QuantMode::Int8, QuantMode::Int4] {
+            let c = CsrQ::from_weight(&w, mode).unwrap();
+            let m = MackoQ::from_weight(&w, mode).unwrap();
+            assert_eq!(c.to_dense().data, m.to_dense().data, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn dequant_error_within_analytic_bound() {
+        // |v - dq(v)| <= block_absmax / (2 * qmax): half a step, no
+        // clamp error (the absmax maps to exactly qmax)
+        let w = random_sparse_weight(64, 40, 0.7, 13);
+        for (mode, qmax) in
+            [(QuantMode::Int8, 127.0f32), (QuantMode::Int4, 7.0)] {
+            for block in [3usize, 64] {
+                let q =
+                    CsrQ::from_weight_blocked(&w, mode, block).unwrap();
+                let d = q.to_dense();
+                for c in 0..w.cols {
+                    let rv: Vec<(usize, f32)> = (0..w.rows)
+                        .filter_map(|r| {
+                            let v = w.at(r, c);
+                            (v != 0.0).then_some((r, v))
+                        })
+                        .collect();
+                    for chunk in rv.chunks(block) {
+                        let absmax = chunk.iter()
+                            .fold(0.0f32, |a, &(_, v)| a.max(v.abs()));
+                        let bound =
+                            absmax / (2.0 * qmax) * 1.0001 + 1e-7;
+                        for &(r, v) in chunk {
+                            let e = (d.at(r, c) - v).abs();
+                            assert!(e <= bound,
+                                    "{mode:?} block={block} r={r} c={c}: \
+                                     err {e} > bound {bound}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_matvec_error_bounded_by_measured_per_weight_error() {
+        // row error <= sum_k |dv_k| * |x_k| (+ f32 rounding slack)
+        let (din, dout) = (80, 48);
+        let w = random_sparse_weight(din, dout, 0.75, 17);
+        let csr = Csr::from_weight(&w);
+        let mut rng = Rng::new(3);
+        let x: Vec<f32> = (0..din).map(|_| rng.normal()).collect();
+        let mut yf = vec![0.0f32; dout];
+        csr.matvec(&x, &mut yf);
+        for mode in [QuantMode::Int8, QuantMode::Int4] {
+            let q = CsrQ::from_weight(&w, mode).unwrap();
+            let d = q.to_dense();
+            let mut yq = vec![0.0f32; dout];
+            q.matvec(&x, &mut yq);
+            for o in 0..dout {
+                let bound: f32 = (0..din)
+                    .map(|r| (d.at(r, o) - w.at(r, o)).abs() * x[r].abs())
+                    .sum();
+                let slack = 1e-4 + 1e-5 * yf[o].abs();
+                let e = (yq[o] - yf[o]).abs();
+                assert!(e <= bound + slack,
+                        "{mode:?} row {o}: err {e} > {bound} + {slack}");
+            }
+        }
+    }
+
+    #[test]
+    fn int4_odd_row_packing_round_trips() {
+        // output rows with nnz 1, 3, 5 exercise byte alignment and the
+        // pad nibble
+        let mut w = Matrix::zeros(8, 3);
+        let cols: [&[(usize, f32)]; 3] = [
+            &[(2, 1.0)],
+            &[(0, 0.5), (3, -0.25), (7, 1.0)],
+            &[(1, -1.0), (2, 0.75), (4, 0.5), (5, -0.5), (6, 0.25)],
+        ];
+        for (c, entries) in cols.iter().enumerate() {
+            for &(r, v) in entries.iter() {
+                w.data[r * 3 + c] = v;
+            }
+        }
+        let q = CsrQ::from_weight(&w, QuantMode::Int4).unwrap();
+        let QuantPayload::Int4 { packed, byte_ptr } = &q.payload else {
+            panic!("expected int4 payload");
+        };
+        assert_eq!(&byte_ptr[..], &[0u32, 1, 3, 6]);
+        assert_eq!(packed.len(), 6);
+        // pad nibbles of odd-length rows stay zero
+        assert_eq!(packed[0] >> 4, 0, "row 0 pad nibble");
+        assert_eq!(packed[2] >> 4, 0, "row 1 pad nibble");
+        assert_eq!(packed[5] >> 4, 0, "row 2 pad nibble");
+        let d = q.to_dense();
+        for (c, entries) in cols.iter().enumerate() {
+            let absmax = entries.iter()
+                .fold(0.0f32, |a, &(_, v)| a.max(v.abs()));
+            for &(r, v) in entries.iter() {
+                let e = (d.at(r, c) - v).abs();
+                assert!(e <= absmax / 14.0 + 1e-6, "r={r} c={c}: {e}");
+            }
+            for r in 0..8 {
+                if !entries.iter().any(|&(rr, _)| rr == r) {
+                    assert_eq!(d.at(r, c), 0.0, "r={r} c={c} not zero");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn outlier_in_next_block_does_not_poison_scales() {
+        // 4 small weights then a 100x outlier: with block=4 the
+        // outlier lands in block 1 and block 0 keeps its fine scale
+        let mut w = Matrix::zeros(5, 1);
+        for r in 0..4 {
+            w.data[r] = 0.01;
+        }
+        w.data[4] = 100.0;
+        let q =
+            CsrQ::from_weight_blocked(&w, QuantMode::Int8, 4).unwrap();
+        assert_eq!(q.scales.len(), 2);
+        let d = q.to_dense();
+        for r in 0..4 {
+            assert!((d.at(r, 0) - 0.01).abs() <= 0.01 * 1e-4,
+                    "block 0 element {r} coarsened: {}", d.at(r, 0));
+        }
+        // the absmax element of a block dequantizes near-exactly
+        assert!((d.at(4, 0) - 100.0).abs() <= 100.0 * 1e-5);
+    }
+
+    #[test]
+    fn quantized_mem_meets_compression_targets() {
+        // the acceptance numbers: >= 3x (int8) / >= 5x (int4) vs the
+        // dense f32 matrix on a bench-shaped 90%-sparse weight
+        let w = random_sparse_weight(512, 512, 0.9, 1);
+        let dense_f32 = (512 * 512 * 4) as f64;
+        let c8 = CsrQ::from_weight(&w, QuantMode::Int8).unwrap();
+        let c4 = CsrQ::from_weight(&w, QuantMode::Int4).unwrap();
+        let m8 = MackoQ::from_weight(&w, QuantMode::Int8).unwrap();
+        let m4 = MackoQ::from_weight(&w, QuantMode::Int4).unwrap();
+        assert!(dense_f32 / c8.mem_bytes() as f64 >= 3.0,
+                "csr int8 {}", c8.mem_bytes());
+        assert!(dense_f32 / c4.mem_bytes() as f64 >= 5.0,
+                "csr int4 {}", c4.mem_bytes());
+        assert!(dense_f32 / m8.mem_bytes() as f64 >= 3.0,
+                "macko int8 {}", m8.mem_bytes());
+        assert!(dense_f32 / m4.mem_bytes() as f64 >= 5.0,
+                "macko int4 {}", m4.mem_bytes());
+        assert!(c4.mem_bytes() < c8.mem_bytes());
+        assert!(m4.mem_bytes() < m8.mem_bytes());
+        // and strictly smaller than their own f32 counterparts
+        assert!(c8.mem_bytes() < Csr::from_weight(&w).mem_bytes());
+        assert!(m8.mem_bytes() < Macko::from_weight(&w).mem_bytes());
+        assert_eq!(c8.mode(), QuantMode::Int8);
+        assert_eq!(m4.mode(), QuantMode::Int4);
+        assert_eq!(c8.nnz(), Csr::from_weight(&w).nnz());
+        assert_eq!(m4.nnz(), Macko::from_weight(&w).nnz());
+    }
+
+    #[test]
+    fn empty_matrix_ok() {
+        let w = Matrix::zeros(32, 16);
+        let x = vec![1.0f32; 32];
+        for mode in [QuantMode::Int8, QuantMode::Int4] {
+            let q = CsrQ::from_weight(&w, mode).unwrap();
+            let mut y = vec![7.0f32; 16];
+            q.matvec(&x, &mut y);
+            assert!(y.iter().all(|&v| v == 0.0));
+            let qm = MackoQ::from_weight(&w, mode).unwrap();
+            let mut y2 = vec![7.0f32; 16];
+            qm.matvec(&x, &mut y2);
+            assert!(y2.iter().all(|&v| v == 0.0));
+        }
+    }
+}

@@ -28,6 +28,16 @@
 //! tile geometry, and shard count — all PR 1/2 determinism guarantees
 //! carry over unchanged. The tests in `rust/tests/kernels.rs` assert
 //! exactly this.
+//!
+//! Quantized formats ([`super::CsrQ`] / [`super::MackoQ`]) join the
+//! same contract *within their mode*: the fused
+//! dequantize-multiply-accumulate in their `exec_tiles` evaluates one
+//! shared dequant expression per nonzero in the identical per-row
+//! order as their own untiled `matvec`, so int8/int4 tiled, pooled and
+//! sharded outputs are bit-identical to each other. Only the
+//! comparison *across* modes (int8 vs f32) is tolerance-based — the
+//! quantization error itself, not the traversal, is the sole source of
+//! deviation (see `sparse/quantized.rs` for the analytic bound).
 
 use super::{transpose_batch_into, Csr, Macko, SpmmScratch};
 use crate::infer::pool::WorkerPool;

@@ -14,6 +14,7 @@ use elsa::infer::{Backend, Engine};
 use elsa::model::{synthetic_config, Params};
 use elsa::pruners::{magnitude, uniform_alloc};
 use elsa::runtime::ConfigEntry;
+use elsa::sparse::QuantMode;
 
 /// Vocab of the toy serving model — prompt token streams index modulo
 /// this.
@@ -43,6 +44,20 @@ pub fn engine(backend: Backend) -> (Engine, usize) {
     let seq_len = cfg.seq_len;
     let p = pruned_params(&cfg, 0.75, 1);
     (Engine::build(&p, backend).expect("engine"), seq_len)
+}
+
+/// The standard toy engine with quantized weight payloads
+/// (`CsrQ`/`MackoQ` via [`QuantMode`]) — same params/seed as
+/// [`engine`], so its streams are the tolerance-parity counterpart of
+/// the f32 engine's and bit-exactly reproducible within the mode.
+/// Requires a sparse backend (`build_quant` rejects Dense).
+pub fn quant_engine(backend: Backend, quant: QuantMode)
+                    -> (Engine, usize) {
+    let cfg = toy_cfg();
+    let seq_len = cfg.seq_len;
+    let p = pruned_params(&cfg, 0.75, 1);
+    (Engine::build_quant(&p, backend, quant).expect("quant engine"),
+     seq_len)
 }
 
 /// The toy engine with deliberately tiny tile plans (64-byte budget,

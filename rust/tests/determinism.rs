@@ -4,13 +4,17 @@
 //! scheduler configurations are drawn over backend × tiled/untiled ×
 //! threads {1,2,4} × shard-workers {1,2,8} × prefill-chunk {1,3,16} ×
 //! max_slots × temperature × arrival pattern × prefix-cache {on,off}
-//! × request fixture (ragged / chunk-straddling / shared-prefix
-//! families), and every single one must reproduce the
-//! single-sequence `generate()` streams of a chunk-size-1 reference
-//! engine bit-for-bit — the engine's headline guarantee: scheduling
-//! policy, kernel traversal, slot sharding, row-band pooling, prefill
-//! chunking and shared-prefix KV caching decide *when* and *where* a
-//! request computes, never *what* it produces.
+//! × quant {none,int8,int4} (ISSUE 7: sparse backends only) × request
+//! fixture (ragged / chunk-straddling / shared-prefix families), and
+//! every single one must reproduce the single-sequence `generate()`
+//! streams of a chunk-size-1 reference engine **built at the same
+//! quant mode** bit-for-bit — the engine's headline guarantee:
+//! scheduling policy, kernel traversal, slot sharding, row-band
+//! pooling, prefill chunking and shared-prefix KV caching decide
+//! *when* and *where* a request computes, never *what* it produces.
+//! Quantization changes *what* (tolerance-bounded vs f32, see
+//! `quant_parity.rs`) but is a build-time property of the engine, so
+//! within a mode every axis above must still be bit-exact.
 //!
 //! The engines use deliberately tiny tile plans
 //! (`common::banded_engine`) so `--shard-workers > 1` genuinely
@@ -24,15 +28,18 @@ mod common;
 
 use std::collections::HashMap;
 
-use common::{banded_engine, chunk_straddling_requests, ragged_requests,
-             shared_prefix_requests, SHARED_SYSTEM_PROMPT_LEN,
-             TOY_VOCAB};
+use common::{banded_engine, chunk_straddling_requests, quant_engine,
+             ragged_requests, shared_prefix_requests,
+             SHARED_SYSTEM_PROMPT_LEN, TOY_VOCAB};
 use elsa::infer::scheduler::{RequestQueue, SchedOptions, Scheduler};
 use elsa::infer::{Backend, Engine};
+use elsa::sparse::QuantMode;
 use elsa::util::rng::Rng;
 
 const BACKENDS: [Backend; 3] =
     [Backend::Dense, Backend::Csr, Backend::Macko];
+const QUANTS: [QuantMode; 3] =
+    [QuantMode::None, QuantMode::Int8, QuantMode::Int4];
 const THREADS: [usize; 3] = [1, 2, 4];
 const SHARD_WORKERS: [usize; 3] = [1, 2, 8];
 const PREFILL_CHUNKS: [usize; 3] = [1, 3, 16];
@@ -45,6 +52,9 @@ const CASES: usize = 50;
 #[derive(Debug)]
 struct Case {
     backend_idx: usize,
+    /// Index into [`QUANTS`] — forced to 0 (f32) for the dense
+    /// backend, which has no quantized serving format.
+    quant_idx: usize,
     tiled: bool,
     threads: usize,
     shard_workers: usize,
@@ -63,8 +73,14 @@ struct Case {
 }
 
 fn draw(rng: &mut Rng) -> Case {
+    let backend_idx = rng.below(BACKENDS.len());
     Case {
-        backend_idx: rng.below(BACKENDS.len()),
+        backend_idx,
+        quant_idx: if BACKENDS[backend_idx] == Backend::Dense {
+            0
+        } else {
+            rng.below(QUANTS.len())
+        },
         tiled: rng.below(2) == 1,
         threads: THREADS[rng.below(THREADS.len())],
         shard_workers: SHARD_WORKERS[rng.below(SHARD_WORKERS.len())],
@@ -82,31 +98,30 @@ fn draw(rng: &mut Rng) -> Case {
 
 #[test]
 fn randomized_sweep_reproduces_single_sequence_streams() {
-    // one engine per backend, shared across cases (`tiled` and
-    // `prefill_chunk` are flipped per case; neither can change tokens,
-    // which the sweep verifies), plus a chunk-size-1 reference engine
-    // per backend: every case must reproduce the per-token-prefill
-    // single-sequence streams, whatever its own chunk is
-    let mut engines: Vec<Engine> = BACKENDS
-        .iter()
-        .map(|&b| banded_engine(b).0)
-        .collect();
-    let mut ref_engines: Vec<Engine> = BACKENDS
-        .iter()
-        .map(|&b| banded_engine(b).0)
-        .collect();
-    for e in ref_engines.iter_mut() {
-        e.prefill_chunk = 1;
-    }
-    // reference streams are pure functions of (backend, prompt, n_new,
-    // temperature, seed) — cache them across cases
-    let mut reference: HashMap<(usize, Vec<u32>, usize, u32, u64),
+    // one engine per (backend, quant) cell, built lazily and shared
+    // across cases (`tiled` and `prefill_chunk` are flipped per case;
+    // neither can change tokens, which the sweep verifies), plus a
+    // chunk-size-1 reference engine per cell: every case must
+    // reproduce the per-token-prefill single-sequence streams OF THE
+    // SAME QUANT MODE, whatever its own chunk is — int8 vs f32 is a
+    // tolerance question (quant_parity.rs), never a sweep question
+    let banded = |bi: usize, qi: usize| -> Engine {
+        let (mut e, _) = quant_engine(BACKENDS[bi], QUANTS[qi]);
+        e.retile(64, 8); // same tiny plans as common::banded_engine
+        e
+    };
+    let mut engines: HashMap<(usize, usize), Engine> = HashMap::new();
+    let mut ref_engines: HashMap<(usize, usize), Engine> = HashMap::new();
+    // reference streams are pure functions of (backend, quant, prompt,
+    // n_new, temperature, seed) — cache them across cases
+    let mut reference: HashMap<(usize, usize, Vec<u32>, usize, u32, u64),
                                Vec<u32>> = HashMap::new();
 
     let mut rng = Rng::new(0xD5_EED);
     let mut pooled_cases = 0usize;
     let mut chunked_cases = 0usize;
     let mut shared_on_cases = 0usize;
+    let mut quantized_cases = 0usize;
     for case_no in 0..CASES {
         let mut case = draw(&mut rng);
         if case_no % 4 == 0 {
@@ -116,7 +131,10 @@ fn randomized_sweep_reproduces_single_sequence_streams() {
             case.fixture = 2;
             case.prefix_cache = true;
         }
-        let engine = &mut engines[case.backend_idx];
+        let cell = (case.backend_idx, case.quant_idx);
+        let engine = engines
+            .entry(cell)
+            .or_insert_with(|| banded(cell.0, cell.1));
         engine.tiled = case.tiled;
         engine.prefill_chunk = case.prefill_chunk;
         if case.shard_workers > 1 {
@@ -127,6 +145,9 @@ fn randomized_sweep_reproduces_single_sequence_streams() {
         }
         if case.fixture == 2 && case.prefix_cache {
             shared_on_cases += 1;
+        }
+        if case.quant_idx != 0 {
+            quantized_cases += 1;
         }
 
         let reqs = match case.fixture {
@@ -147,12 +168,18 @@ fn randomized_sweep_reproduces_single_sequence_streams() {
         assert_eq!(finished.len(), reqs.len(), "case {case_no} {case:?}");
         assert_eq!(stats.expired, 0, "case {case_no} {case:?}");
 
+        let ref_engine = ref_engines.entry(cell).or_insert_with(|| {
+            let mut e = banded(cell.0, cell.1);
+            e.prefill_chunk = 1;
+            e
+        });
         for f in &finished {
             let r = &reqs[f.id as usize];
-            let key = (case.backend_idx, r.prompt.clone(), r.n_new,
+            let key = (case.backend_idx, case.quant_idx,
+                       r.prompt.clone(), r.n_new,
                        case.temperature.to_bits(), r.seed);
             let want = reference.entry(key).or_insert_with(|| {
-                ref_engines[case.backend_idx]
+                ref_engine
                     .generate(&r.prompt, r.n_new, case.temperature,
                               r.seed)
                     .0
@@ -171,6 +198,9 @@ fn randomized_sweep_reproduces_single_sequence_streams() {
     assert!(shared_on_cases >= 10,
             "sweep ran only {shared_on_cases} shared-prefix cache-on \
              cases — repin it");
+    assert!(quantized_cases >= 10,
+            "sweep drew only {quantized_cases} quantized cases — \
+             reseed it");
 }
 
 #[test]

@@ -1,0 +1,267 @@
+//! Tolerance-based parity for quantized decode (ISSUE 7 tentpole):
+//! the repo's first test regime where the comparison against the f32
+//! reference is *bounded*, not bit-exact. int8/int4 payloads cannot
+//! reproduce f32 logits bitwise — the quantization error is real and
+//! analytically bounded (per weight: block absmax / 254 for int8,
+//! / 14 for int4; see `sparse/quantized.rs`) — so this suite pins:
+//!
+//! 1. **Logits tolerance**: quantized `logits_for` stays within a
+//!    scale-relative envelope of the f32 engine's logits on the toy
+//!    serving model, int8 strictly tighter than int4.
+//! 2. **Margin-guarded greedy agreement**: wherever the f32 top-2
+//!    logit margin exceeds twice the measured max-abs logit error,
+//!    the quantized argmax MUST equal the f32 argmax (that much is
+//!    mathematics); the test additionally requires that enough
+//!    teacher-forced steps actually clear the margin bar — the
+//!    end-to-end statement that int8 error is small relative to the
+//!    model's decision margins.
+//! 3. **Within-mode bit-exactness**: a quantized engine is just
+//!    another engine — scheduler streams reproduce its own
+//!    single-sequence `generate` bit-for-bit across threads ×
+//!    shard-workers × tiling, and `CsrQ`/`MackoQ` (identical codes
+//!    and scales by construction) produce bitwise-identical streams.
+//! 4. **Memory accounting**: `mem_bytes` of a quantized engine is
+//!    strictly below its f32 counterpart, int4 below int8, and the
+//!    serving stats (`GenStats`/`SchedStats`) self-describe the mode.
+
+mod common;
+
+use common::{engine, quant_engine, ragged_requests, TOY_VOCAB};
+use elsa::infer::scheduler::{RequestQueue, SchedOptions, Scheduler};
+use elsa::infer::Backend;
+use elsa::sparse::QuantMode;
+
+const SPARSE_BACKENDS: [Backend; 2] = [Backend::Csr, Backend::Macko];
+
+fn toy_prompt(len: usize, salt: usize) -> Vec<u32> {
+    (0..len)
+        .map(|i| ((salt * 13 + i * 7) % TOY_VOCAB) as u32)
+        .collect()
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+/// Largest and second-largest values of `xs` (the argmax margin).
+fn top2(xs: &[f32]) -> (f32, f32) {
+    let (mut a, mut b) = (f32::NEG_INFINITY, f32::NEG_INFINITY);
+    for &x in xs {
+        if x > a {
+            b = a;
+            a = x;
+        } else if x > b {
+            b = x;
+        }
+    }
+    (a, b)
+}
+
+#[test]
+fn quantized_logits_stay_within_scale_relative_envelope() {
+    // the tolerance regime: error is measured against the dynamic
+    // range of the f32 logits, not an absolute cap, so the bound
+    // survives re-seeding the toy model. int8 must sit well inside
+    // the int4 envelope — if it doesn't, the scale machinery is
+    // broken even though both "pass" their own caps.
+    for backend in SPARSE_BACKENDS {
+        let (f32_engine, _) = engine(backend);
+        let (int8, _) = quant_engine(backend, QuantMode::Int8);
+        let (int4, _) = quant_engine(backend, QuantMode::Int4);
+        let mut worst8 = 0.0f32;
+        let mut worst4 = 0.0f32;
+        let mut scale = 0.0f32;
+        for salt in 0..6 {
+            let prompt = toy_prompt(1 + salt % 9, salt);
+            let lf = f32_engine.logits_for(&prompt);
+            scale = scale.max(
+                lf.iter().fold(0.0f32, |m, &v| m.max(v.abs())));
+            worst8 = worst8
+                .max(max_abs_diff(&lf, &int8.logits_for(&prompt)));
+            worst4 = worst4
+                .max(max_abs_diff(&lf, &int4.logits_for(&prompt)));
+        }
+        assert!(scale > 0.0, "{backend:?}: degenerate f32 logits");
+        // int8 quantizes per 64-value block at ~0.4% per weight; two
+        // transformer layers + head leave ample room inside 25% of
+        // the logit range. int4 is ~14x coarser per weight.
+        assert!(worst8 <= 0.25 * scale,
+                "{backend:?}: int8 logit error {worst8} vs scale \
+                 {scale}");
+        assert!(worst4 <= 1.5 * scale,
+                "{backend:?}: int4 logit error {worst4} vs scale \
+                 {scale}");
+        assert!(worst8 < worst4,
+                "{backend:?}: int8 ({worst8}) must beat int4 \
+                 ({worst4})");
+        assert!(worst8 > 0.0,
+                "{backend:?}: int8 logits bitwise-equal f32 — the \
+                 quantized path is not actually being exercised");
+    }
+}
+
+#[test]
+fn greedy_agreement_where_the_margin_clears_the_error() {
+    // teacher-force along the f32 greedy path and compare argmaxes
+    // step by step. When the f32 top-2 margin exceeds 2x the measured
+    // max-abs logit error the argmaxes cannot differ; the test's
+    // content is the qualifying counts — int8's error must be small
+    // relative to real decision margins on most steps.
+    let n_new = 8usize;
+    for backend in SPARSE_BACKENDS {
+        let (f32_engine, _) = engine(backend);
+        for (quant, min_qualifying) in
+            [(QuantMode::Int8, 0usize), (QuantMode::Int4, 0)]
+        {
+            let (q, _) = quant_engine(backend, quant);
+            let mut steps = 0usize;
+            let mut qualifying = 0usize;
+            for salt in 0..5 {
+                let prompt = toy_prompt(2 + salt % 5, 31 + salt);
+                let (stream, _) =
+                    f32_engine.generate(&prompt, n_new, 0.0, 7);
+                let mut prefix = prompt.clone();
+                for &tok in &stream {
+                    let lf = f32_engine.logits_for(&prefix);
+                    let lq = q.logits_for(&prefix);
+                    let diff = max_abs_diff(&lf, &lq);
+                    let (best, second) = top2(&lf);
+                    steps += 1;
+                    if best - second > 2.0 * diff {
+                        qualifying += 1;
+                        assert_eq!(
+                            argmax(&lq), argmax(&lf),
+                            "{backend:?} {quant:?}: argmax flipped \
+                             under a {:.4} margin with error {diff:.4}",
+                            best - second);
+                    }
+                    prefix.push(tok);
+                }
+            }
+            // int8: at ~0.4%-per-weight error most toy-model steps
+            // must clear the margin bar; int4 gets no floor (its
+            // qualifying steps are still hard-asserted above).
+            let floor = if quant == QuantMode::Int8 {
+                steps / 2
+            } else {
+                min_qualifying
+            };
+            assert!(qualifying >= floor,
+                    "{backend:?} {quant:?}: only {qualifying}/{steps} \
+                     teacher-forced steps cleared the margin bar");
+        }
+    }
+}
+
+#[test]
+fn quantized_scheduler_streams_match_quantized_generate() {
+    // within-mode bit-exactness at the serving layer (the full sweep
+    // lives in determinism.rs; this is the direct named check): the
+    // scheduler on a quantized engine reproduces that same engine's
+    // single-sequence streams bit-for-bit across threads x
+    // shard-workers x tiling.
+    for backend in SPARSE_BACKENDS {
+        for quant in [QuantMode::Int8, QuantMode::Int4] {
+            let (mut e, _) = quant_engine(backend, quant);
+            e.retile(64, 8); // force real multi-tile plans at toy scale
+            for (threads, shard_workers, tiled) in
+                [(1usize, 1usize, true), (2, 2, true), (2, 8, false)]
+            {
+                e.tiled = tiled;
+                let reqs = ragged_requests(5);
+                let queue = RequestQueue::with_poisson_arrivals(
+                    reqs.clone(), 1.0, 21);
+                let sched = Scheduler::new(&e, SchedOptions {
+                    max_slots: 2,
+                    temperature: 0.8,
+                    threads,
+                    shard_workers,
+                    prefix_cache: true,
+                });
+                let (finished, stats) = sched.run(queue);
+                assert_eq!(stats.quant_mode, quant.label());
+                assert_eq!(stats.weight_mem_bytes, e.mem_bytes());
+                for f in &finished {
+                    let r = &reqs[f.id as usize];
+                    let (want, _) =
+                        e.generate(&r.prompt, r.n_new, 0.8, r.seed);
+                    assert_eq!(
+                        f.tokens, want,
+                        "{backend:?} {quant:?} threads={threads} \
+                         shard_workers={shard_workers} tiled={tiled}: \
+                         req {} diverged within its own mode", f.id);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn csrq_and_mackoq_streams_are_bitwise_identical() {
+    // both quantized formats collect a row's nonzeros in the same
+    // column order and quantize them with the same block machinery,
+    // so their codes, scales and accumulation orders coincide — the
+    // two engines must agree to the bit, mirroring the f32 Csr/Macko
+    // parity the engine suite already pins.
+    for quant in [QuantMode::Int8, QuantMode::Int4] {
+        let (c, _) = quant_engine(Backend::Csr, quant);
+        let (m, _) = quant_engine(Backend::Macko, quant);
+        for salt in 0..4 {
+            let prompt = toy_prompt(3 + salt, 5 + salt);
+            let (a, _) = c.generate(&prompt, 6, 0.8, 42);
+            let (b, _) = m.generate(&prompt, 6, 0.8, 42);
+            assert_eq!(a, b, "{quant:?} salt={salt}");
+            assert_eq!(c.logits_for(&prompt), m.logits_for(&prompt),
+                       "{quant:?} salt={salt} logits");
+        }
+    }
+}
+
+#[test]
+fn quantized_runs_reproduce_themselves_bitwise() {
+    // int8 run N == int8 run M: the within-mode determinism headline,
+    // stated directly (the randomized sweep covers the axes).
+    for quant in [QuantMode::Int8, QuantMode::Int4] {
+        let (e, _) = quant_engine(Backend::Macko, quant);
+        let prompt = toy_prompt(4, 9);
+        let (a, _) = e.generate(&prompt, 8, 0.9, 3);
+        let (b, _) = e.generate(&prompt, 8, 0.9, 3);
+        assert_eq!(a, b, "{quant:?}");
+    }
+}
+
+#[test]
+fn engine_memory_shrinks_monotonically_with_precision() {
+    // engine-level accounting: the quantized payloads must actually
+    // shrink the resident weight bytes (the >= 3x / >= 5x vs dense
+    // f32 targets are pinned against the bench-shaped matrices in
+    // sparse::quantized's own tests; the toy engine here is tiny and
+    // its fixed overheads proportionally larger).
+    for backend in SPARSE_BACKENDS {
+        let (f, _) = engine(backend);
+        let (i8e, _) = quant_engine(backend, QuantMode::Int8);
+        let (i4e, _) = quant_engine(backend, QuantMode::Int4);
+        assert!(i8e.mem_bytes() < f.mem_bytes(),
+                "{backend:?}: int8 {} !< f32 {}", i8e.mem_bytes(),
+                f.mem_bytes());
+        assert!(i4e.mem_bytes() < i8e.mem_bytes(),
+                "{backend:?}: int4 {} !< int8 {}", i4e.mem_bytes(),
+                i8e.mem_bytes());
+        let (_, stats) = i8e.generate(&toy_prompt(3, 1), 4, 0.0, 0);
+        assert_eq!(stats.quant_mode, "int8");
+        let (_, f_stats) = f.generate(&toy_prompt(3, 1), 4, 0.0, 0);
+        assert_eq!(f_stats.quant_mode, "none");
+    }
+}
