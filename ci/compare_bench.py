@@ -5,6 +5,7 @@ Usage:
   compare_bench.py CURRENT.json BASELINE.json [--section NAME]
   compare_bench.py CURRENT.json BASELINE.json [--section NAME] --ratchet
                    [--write]
+  compare_bench.py CURRENT.json BASELINE.json [--section NAME] --diff
 
 Gating rules, applied against BASELINE (or BASELINE[NAME] when
 --section NAME is given; a section inherits the top-level "tolerance"
@@ -39,8 +40,15 @@ artifact to tighten the committed floors once a few runs establish
 the fleet's spread. The tolerance and min_* knobs are policy, not
 measurements — ratcheting never touches them.
 
-Exit codes: 0 gate passed / ratchet emitted, 1 regression, 2 usage or
-input error.
+--diff prints a floor-drift summary instead of gating: every floored
+policy and ratio knob with its committed baseline, the measured value,
+and the percentage drift, flagging entries sitting below the gate
+floor or so far above the committed number that the floor has gone
+stale (ratchet candidates). It always exits 0 — it is the non-blocking
+companion the CI job runs for the log, never a gate.
+
+Exit codes: 0 gate passed / ratchet emitted / diff printed, 1
+regression, 2 usage or input error.
 """
 
 import argparse
@@ -116,6 +124,53 @@ def gate(current, baseline, tolerance=None):
     return lines, failures
 
 
+def diff(current, baseline, tolerance=None):
+    """Floor-drift summary: baseline vs measured for every floored
+    policy and ratio knob, with percentage drift. Purely informational
+    — returns report lines, never failures."""
+    if tolerance is None:
+        tolerance = float(baseline.get("tolerance", 0.15))
+    lines = [f"{'metric':<24} {'baseline':>10} {'current':>10} "
+             f"{'drift':>8}"]
+    stale, below = 0, 0
+    for policy in gated_policies(baseline):
+        base = float(baseline[policy]["tok_s"])
+        cur = current.get(policy)
+        if not (isinstance(cur, dict) and "tok_s" in cur):
+            lines.append(f"{policy:<24} {base:>10.1f} {'missing':>10}")
+            continue
+        got = float(cur["tok_s"])
+        drift = (got - base) / base * 100.0 if base else 0.0
+        note = ""
+        if got < base * (1.0 - tolerance):
+            note = "  below gate floor"
+            below += 1
+        elif drift > 100.0:
+            note = "  floor stale (ratchet candidate)"
+            stale += 1
+        lines.append(f"{policy:<24} {base:>10.1f} {got:>10.1f} "
+                     f"{drift:>+7.1f}%{note}")
+    for knob in sorted(k for k in baseline
+                       if k.startswith("min_") and k.endswith("_ratio")):
+        metric = knob[len("min_"):]
+        floor = float(baseline[knob])
+        if metric not in current:
+            lines.append(f"{metric:<24} {floor:>10.2f} {'missing':>10}")
+            continue
+        got = float(current[metric])
+        drift = (got - floor) / floor * 100.0 if floor else 0.0
+        note = ""
+        if got < floor:
+            note = "  below gate floor"
+            below += 1
+        lines.append(f"{metric:<24} {floor:>10.2f} {got:>10.2f} "
+                     f"{drift:>+7.1f}%{note}")
+    lines.append(f"floor drift: {below} below gate floor, {stale} "
+                 f"stale floor(s) worth ratcheting (informational "
+                 f"only, never gated)")
+    return lines
+
+
 def ratchet(current, baseline):
     """Return a copy of `baseline` whose tok_s floors are replaced by
     the measured values in `current` (policies absent from `current`
@@ -142,6 +197,9 @@ def main(argv=None):
                          "of gating")
     ap.add_argument("--write", action="store_true",
                     help="with --ratchet: rewrite BASELINE in place")
+    ap.add_argument("--diff", action="store_true",
+                    help="print a non-blocking floor-drift summary "
+                         "(always exits 0)")
     args = ap.parse_args(argv)
 
     try:
@@ -178,6 +236,11 @@ def main(argv=None):
             print(f"ratcheted floors written to {args.baseline}")
         else:
             print(text, end="")
+        return 0
+
+    if args.diff:
+        for line in diff(current, section, tolerance):
+            print(line)
         return 0
 
     lines, failures = gate(current, section, tolerance)

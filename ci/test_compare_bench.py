@@ -55,6 +55,10 @@ def kernels_baseline():
         "min_pooled_serial_ratio": 0.95,
         "min_chunked_pertoken_ratio": 1.0,
         "min_int8_f32_ratio": 1.0,
+        "min_nm24_csr_ratio": 1.0,
+        "min_unrolled_scalar_ratio": 1.0,
+        "nm24_b1": {"tok_s": 30.0},
+        "nm24_b8": {"tok_s": 30.0},
         "dense": {"tok_s": 25.0},
         "csr": {"tok_s": 40.0},
         "macko": {"tok_s": 40.0},
@@ -69,12 +73,18 @@ def kernels_current(ratio=1.1, pooled_ratio=1.0, chunked_ratio=1.6,
                     dense=80.0, csr=200.0, macko=220.0,
                     macko_pooled=240.0, macko_prefill=300.0,
                     csr_int8=260.0, macko_int4=210.0,
-                    int8_f32_ratio=1.4):
+                    int8_f32_ratio=1.4, nm24_csr_ratio=1.3,
+                    unrolled_scalar_ratio=1.05, nm24_b1=190.0,
+                    nm24_b8=230.0):
     return {
         "tiled_untiled_ratio": ratio,
         "pooled_serial_ratio": pooled_ratio,
         "chunked_pertoken_ratio": chunked_ratio,
         "int8_f32_ratio": int8_f32_ratio,
+        "nm24_csr_ratio": nm24_csr_ratio,
+        "unrolled_scalar_ratio": unrolled_scalar_ratio,
+        "nm24_b1": {"tok_s": nm24_b1},
+        "nm24_b8": {"tok_s": nm24_b8},
         "dense": {"tok_s": dense},
         "csr": {"tok_s": csr},
         "macko": {"tok_s": macko},
@@ -183,6 +193,60 @@ class GateTests(unittest.TestCase):
         del cur["int8_f32_ratio"]
         _, failures = cb.gate(cur, kernels_baseline())
         self.assertTrue(any("int8_f32_ratio" in f for f in failures))
+
+    def test_nm24_csr_ratio_gate(self):
+        # the branch-free N:M matvec must never lose to unstructured
+        # CSR on the same projected matrix: 1.0 passes at exactly 1.0,
+        # fails just below, and an absent metric counts as 0.0
+        _, failures = cb.gate(kernels_current(nm24_csr_ratio=1.0),
+                              kernels_baseline())
+        self.assertEqual(failures, [])
+        _, failures = cb.gate(kernels_current(nm24_csr_ratio=0.99),
+                              kernels_baseline())
+        self.assertTrue(any("nm24_csr_ratio" in f for f in failures))
+        cur = kernels_current()
+        del cur["nm24_csr_ratio"]
+        _, failures = cb.gate(cur, kernels_baseline())
+        self.assertTrue(any("nm24_csr_ratio" in f for f in failures))
+
+    def test_unrolled_scalar_ratio_gate(self):
+        # the unrolled kernel path must never cost throughput vs
+        # scalar (bit-identical by construction, so the only thing
+        # left to regress is speed)
+        _, failures = cb.gate(
+            kernels_current(unrolled_scalar_ratio=1.0),
+            kernels_baseline())
+        self.assertEqual(failures, [])
+        _, failures = cb.gate(
+            kernels_current(unrolled_scalar_ratio=0.99),
+            kernels_baseline())
+        self.assertTrue(any("unrolled_scalar_ratio" in f
+                            for f in failures))
+        cur = kernels_current()
+        del cur["unrolled_scalar_ratio"]
+        _, failures = cb.gate(cur, kernels_baseline())
+        self.assertTrue(any("unrolled_scalar_ratio" in f
+                            for f in failures))
+
+    def test_nm_cell_floors_gated_like_any_policy(self):
+        # the N:M decode cells ride the ordinary tok_s floor
+        # machinery: collapse and disappearance both fail
+        _, failures = cb.gate(kernels_current(nm24_b1=1.0),
+                              kernels_baseline())
+        self.assertTrue(any("nm24_b1" in f for f in failures))
+        cur = kernels_current()
+        del cur["nm24_b8"]
+        _, failures = cb.gate(cur, kernels_baseline())
+        self.assertTrue(any("nm24_b8" in f and "missing" in f
+                            for f in failures))
+
+    def test_ratchet_covers_nm_cells_and_keeps_nm_knobs(self):
+        out = cb.ratchet(kernels_current(), kernels_baseline())
+        self.assertEqual(out["nm24_b1"]["tok_s"], 190.0)
+        self.assertEqual(out["nm24_b8"]["tok_s"], 230.0)
+        # the min_ knobs are policy, never ratcheted
+        self.assertEqual(out["min_nm24_csr_ratio"], 1.0)
+        self.assertEqual(out["min_unrolled_scalar_ratio"], 1.0)
 
     def test_quant_cell_floors_gated_like_any_policy(self):
         # the quantized decode cells ride the ordinary tok_s floor
@@ -296,6 +360,36 @@ class RatchetTests(unittest.TestCase):
         self.assertEqual(out["sequential"]["tok_s"], 50.0)
 
 
+class DiffTests(unittest.TestCase):
+    """The non-blocking floor-drift summary (--diff)."""
+
+    def test_reports_drift_for_floors_and_ratios(self):
+        lines = cb.diff(kernels_current(), kernels_baseline())
+        text = "\n".join(lines)
+        # every floored policy and every ratio knob appears
+        for metric in ("macko", "nm24_b1", "nm24_csr_ratio",
+                       "unrolled_scalar_ratio"):
+            self.assertIn(metric, text)
+        # 220 vs a 40 floor is +450%: flagged as a ratchet candidate
+        self.assertIn("ratchet candidate", text)
+
+    def test_flags_below_floor_without_failing(self):
+        # a collapsed cell is *reported*, but diff never returns
+        # failures — blocking is the gate's job
+        lines = cb.diff(kernels_current(macko=1.0, nm24_csr_ratio=0.5),
+                        kernels_baseline())
+        text = "\n".join(lines)
+        self.assertIn("below gate floor", text)
+        self.assertIn("2 below gate floor", text)
+
+    def test_missing_metrics_reported_not_fatal(self):
+        cur = kernels_current()
+        del cur["nm24_b8"]
+        del cur["unrolled_scalar_ratio"]
+        text = "\n".join(cb.diff(cur, kernels_baseline()))
+        self.assertIn("missing", text)
+
+
 class MainTests(unittest.TestCase):
     """End-to-end through main(): files on disk, exit codes, stdout."""
 
@@ -379,6 +473,20 @@ class MainTests(unittest.TestCase):
         self.assertEqual(doc["kernels"]["min_tiled_untiled_ratio"], 0.95)
         # scheduler floors outside the section are untouched
         self.assertEqual(doc["continuous"]["tok_s"], 80.0)
+
+    def test_diff_always_exits_zero_even_on_regression(self):
+        # --diff is the non-blocking CI step: a stream that would fail
+        # the gate still exits 0 and prints the drift table
+        base = self.write("baseline.json", self.full_baseline())
+        bad = self.write("bad.json", kernels_current(macko=1.0))
+        code, _ = self.run_main([bad, base, "--section", "kernels"])
+        self.assertEqual(code, 1)
+        code, out = self.run_main(
+            [bad, base, "--section", "kernels", "--diff"])
+        self.assertEqual(code, 0)
+        self.assertIn("below gate floor", out)
+        self.assertIn("floor drift", out)
+        self.assertNotIn("FAILED", out)
 
     def test_unreadable_input_is_error_not_crash(self):
         base = self.write("baseline.json", scheduler_baseline())

@@ -43,6 +43,17 @@
 //! serving formats); token streams are reproducible within a mode but
 //! tolerance-bounded vs f32, so per-mode throughput and weight bytes
 //! are the cells to compare.
+//!
+//! `-- --nm {off,2:4,4:8}` projects the pruned checkpoint onto an N:M
+//! pattern (`nm_project`, magnitude per group) and serves it through
+//! the branch-free `NmSparse` kernels. Dense is skipped like in quant
+//! mode, and the tokens differ from the unstructured run (projection
+//! changes the weights) but stay deterministic per seed.
+//!
+//! `-- --pin-workers {on,off}` (default off) pins the shard pool's
+//! lanes to cores — a best-effort placement hint, bit-identical
+//! output either way. `-- --kernel-path {scalar,unrolled}` forces the
+//! kernel traversal (default unrolled; also bit-identical).
 
 use std::path::Path;
 
@@ -51,15 +62,34 @@ use elsa::cli::Args;
 use elsa::coordinator::elsa::{prune_elsa, ElsaOptions};
 use elsa::coordinator::pretrain::{pretrain_cached, PretrainOptions};
 use elsa::data::{Dataset, Grammar};
-use elsa::infer::scheduler::{prefix_cache_flag, ragged_budgets,
-                             serve_static_chunks, Request, RequestQueue,
-                             SchedOptions, Scheduler};
+use elsa::infer::scheduler::{pin_workers_flag, prefix_cache_flag,
+                             ragged_budgets, serve_static_chunks,
+                             Request, RequestQueue, SchedOptions,
+                             Scheduler};
 use elsa::infer::{Backend, BatchOptions, Engine};
 use elsa::model::checkpoint::Checkpoint;
 use elsa::model::Params;
 use elsa::runtime::Runtime;
-use elsa::sparse::QuantMode;
+use elsa::sparse::{nm_project, KernelPath, NmMode, QuantMode};
+use elsa::tensor::Matrix;
 use elsa::util::{human_bytes, stats::Summary};
+
+/// Project every prunable linear onto the requested N:M pattern
+/// (magnitude top-N per group) so the checkpoint passes `NmWeights`
+/// verification at engine build.
+fn project_nm(p: &Params, nm: NmMode) -> Params {
+    let mut q = p.clone();
+    for seg in q.cfg.segments.clone() {
+        if seg.prunable && seg.is_matrix() {
+            let w = Matrix::from_vec(
+                seg.shape[0], seg.shape[1],
+                q.flat[seg.offset..seg.end()].to_vec());
+            let proj = nm_project(&w, nm.n(), nm.m());
+            q.flat[seg.offset..seg.end()].copy_from_slice(&proj.data);
+        }
+    }
+    q
+}
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -101,14 +131,34 @@ fn main() -> Result<()> {
         .usize_or("prefill-chunk", elsa::infer::DEFAULT_PREFILL_CHUNK)?
         .max(1);
     let prefix_cache = prefix_cache_flag(&args)?;
+    let pin_workers = pin_workers_flag(&args)?;
     let quant = QuantMode::parse(&args.str_or("quant", "none"))?;
-    // quantization targets the sparse serving formats; dense is only a
-    // meaningful baseline in f32 mode
-    let backends: &[Backend] = if quant == QuantMode::None {
-        &[Backend::Dense, Backend::Csr, Backend::Macko]
+    let nm = NmMode::parse(&args.str_or("nm", "off"))?;
+    let kernel_path = match args.get("kernel-path") {
+        Some(p) => Some(KernelPath::parse(p)?),
+        None => None,
+    };
+    // quantization / N:M target the sparse serving formats; dense is
+    // only a meaningful baseline in f32 unstructured mode
+    let backends: &[Backend] =
+        if quant == QuantMode::None && !nm.is_on() {
+            &[Backend::Dense, Backend::Csr, Backend::Macko]
+        } else {
+            if quant != QuantMode::None {
+                println!("quant {} (dense backend skipped)",
+                         quant.label());
+            }
+            if nm.is_on() {
+                println!("nm {} (dense backend skipped)", nm.label());
+            }
+            &[Backend::Csr, Backend::Macko]
+        };
+    // an unstructured pruned checkpoint will not satisfy N:M — project
+    // it once up front so every backend serves the same weights
+    let params = if nm.is_on() {
+        project_nm(&params, nm)
     } else {
-        println!("quant {} (dense backend skipped)", quant.label());
-        &[Backend::Csr, Backend::Macko]
+        params
     };
     let prompt_len = 8;
     let n_new = cfg.seq_len - prompt_len;
@@ -133,9 +183,14 @@ fn main() -> Result<()> {
             threads,
             shard_workers,
             prefix_cache,
+            pin_workers,
         };
         for &backend in backends {
-            let mut engine = Engine::build_quant(&params, backend, quant)?;
+            let mut engine =
+                Engine::build_full(&params, backend, quant, nm)?;
+            if let Some(p) = kernel_path {
+                engine.kernel_path = p;
+            }
             engine.prefill_chunk = prefill_chunk;
             // warmup + static reference on the identical stream
             serve_static_chunks(&engine, &reqs, &sopts);
@@ -162,7 +217,10 @@ fn main() -> Result<()> {
     }
 
     for &backend in backends {
-        let mut engine = Engine::build_quant(&params, backend, quant)?;
+        let mut engine = Engine::build_full(&params, backend, quant, nm)?;
+        if let Some(p) = kernel_path {
+            engine.kernel_path = p;
+        }
         engine.prefill_chunk = prefill_chunk;
         // warmup
         engine.generate(&g.generate(prompt_len, 0), n_new, 0.8, 0);
@@ -189,7 +247,7 @@ fn main() -> Result<()> {
                     .collect();
                 let opts = BatchOptions {
                     n_new, temperature: 0.8, seed: r as u64, threads,
-                    shard_workers, prefix_cache,
+                    shard_workers, prefix_cache, pin_workers,
                 };
                 let (_, stats) = engine.generate_batch(&prompts, &opts);
                 // per-batch decode wall, amortized per request

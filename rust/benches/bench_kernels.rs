@@ -34,14 +34,28 @@
 //! fused-dequant int8 CSR matvec over f32 CSR matvec at the
 //! bandwidth-bound decode shape (batch 1, cache-exceeding matrix),
 //! gated >= 1.0: fewer payload bytes per row must never decode slower.
+//!
+//! ISSUE 8 adds the N:M / kernel-path matrix: `nm24_{b1,b8}`
+//! end-to-end tok/s floors (streams asserted bit-identical to the f32
+//! CSR engine on the same 2:4-projected checkpoint before timing),
+//! `nm24_csr_ratio` — branch-free `NmSparse` batch-1 matvec over
+//! unstructured CSR on the *same* projected cache-exceeding matrix,
+//! gated >= 1.0 (5 B/slot with fixed trip counts must never lose to
+//! 8 B/nnz with a data-dependent loop bound) — and
+//! `unrolled_scalar_ratio`, the aggregate scalar/unrolled timing
+//! ratio across the tiled formats at the batch-8 decode shape, gated
+//! >= 1.0 after asserting both paths bit-identical: the lane-unrolled
+//! traversal must never cost throughput.
 
 use elsa::infer::pool::WorkerPool;
 use elsa::infer::{Backend, BatchOptions, Engine};
 use elsa::model::{synthetic_config, Params};
 use elsa::pruners::{magnitude, uniform_alloc};
-use elsa::sparse::{dense_matvec_batch, dense_plan, par_matvec_batch_tiled,
-                   pool_matvec_batch_tiled, random_sparse_weight, tile,
-                   Csr, CsrQ, Macko, QuantMode, SpmmScratch};
+use elsa::sparse::{dense_matvec_batch, dense_plan, nm_project,
+                   par_matvec_batch_tiled, pool_matvec_batch_tiled,
+                   random_sparse_weight, tile, Csr, CsrQ, KernelPath,
+                   Macko, NmMode, NmSparse, QuantMode, SpmmScratch};
+use elsa::tensor::Matrix;
 use elsa::util::bench::{bench, throughput};
 use elsa::util::json::{num, obj, s, to_string, Value};
 use elsa::util::rng::Rng;
@@ -125,18 +139,21 @@ fn kernel_sweep(dim: usize, budget_ms: u64)
             cell("csr", sp, b, flops, budget_ms, &mut rows,
                  &mut totals[0].1,
                  |y| csr.matvec_batch_into(&x, y, b, &mut su),
-                 |y| csr.matvec_batch_tiled_into(&x, y, b, &mut st),
+                 |y| csr.matvec_batch_tiled_into(&x, y, b, &mut st,
+                                                 KernelPath::Unrolled),
                  dim);
             cell("macko", sp, b, flops, budget_ms, &mut rows,
                  &mut totals[1].1,
                  |y| macko.matvec_batch_into(&x, y, b, &mut su),
-                 |y| macko.matvec_batch_tiled_into(&x, y, b, &mut st),
+                 |y| macko.matvec_batch_tiled_into(&x, y, b, &mut st,
+                                                   KernelPath::Unrolled),
                  dim);
             cell("dense", sp, b, flops, budget_ms, &mut rows,
                  &mut totals[2].1,
                  |y| dense_matvec_batch(&w, &x, y, b),
                  |y| tile::matvec_batch_tiled(&w, &dplan, &x, y, b,
-                                              &mut st),
+                                              &mut st,
+                                              KernelPath::Unrolled),
                  dim);
         }
     }
@@ -181,15 +198,16 @@ fn shard_sweep(dim: usize, threads: usize, budget_ms: u64) {
 
     println!("== intra-layer sharding, csr {dim}x{dim} sp={sp:.2} \
               b={b} ({} tiles) ==", csr.plan.tiles.len());
-    par_matvec_batch_tiled(&csr, &csr.plan, &x, &mut y1, b, 1, &mut s1);
+    par_matvec_batch_tiled(&csr, &csr.plan, &x, &mut y1, b, 1, &mut s1,
+                           KernelPath::Unrolled);
     par_matvec_batch_tiled(&csr, &csr.plan, &x, &mut yn, b, threads,
-                           &mut sn);
+                           &mut sn, KernelPath::Unrolled);
     assert_eq!(y1, yn, "sharded kernel diverged from serial tiled");
 
     let r = bench(&format!("csr tiled   1 shard        b={b}"),
                   budget_ms, || {
         par_matvec_batch_tiled(&csr, &csr.plan, &x, &mut y1, b, 1,
-                               &mut s1);
+                               &mut s1, KernelPath::Unrolled);
         std::hint::black_box(&y1);
     });
     throughput(&r, flops, "flop");
@@ -197,7 +215,7 @@ fn shard_sweep(dim: usize, threads: usize, budget_ms: u64) {
     let r = bench(&format!("csr tiled   {threads} shards (spawn) b={b}"),
                   budget_ms, || {
         par_matvec_batch_tiled(&csr, &csr.plan, &x, &mut yn, b, threads,
-                               &mut sn);
+                               &mut sn, KernelPath::Unrolled);
         std::hint::black_box(&yn);
     });
     throughput(&r, flops, "flop");
@@ -212,12 +230,12 @@ fn shard_sweep(dim: usize, threads: usize, budget_ms: u64) {
     let mut yp = vec![0.0f32; b * dim];
     let mut sp = SpmmScratch::default();
     pool_matvec_batch_tiled(&csr, &csr.plan, &x, &mut yp, b, &pool,
-                            &mut sp);
+                            &mut sp, KernelPath::Unrolled);
     assert_eq!(y1, yp, "pooled kernel diverged from serial tiled");
     let r = bench(&format!("csr tiled   {threads} shards (pool)  b={b}"),
                   budget_ms, || {
         pool_matvec_batch_tiled(&csr, &csr.plan, &x, &mut yp, b, &pool,
-                                &mut sp);
+                                &mut sp, KernelPath::Unrolled);
         std::hint::black_box(&yp);
     });
     throughput(&r, flops, "flop");
@@ -497,6 +515,176 @@ fn quant_kernel_ratio(budget_ms: u64) -> f64 {
     ratio
 }
 
+/// One scalar-vs-unrolled cell: assert the two `KernelPath`s produce
+/// bit-identical output, then time both and accumulate into
+/// `(scalar_ns, unrolled_ns)` totals.
+fn path_cell(fmt: &str, sp: f64, b: usize, budget_ms: u64,
+             totals: &mut (f64, f64), dout: usize,
+             mut run: impl FnMut(&mut [f32], KernelPath)) {
+    let mut ys = vec![0.0f32; b * dout];
+    let mut yu = vec![0.0f32; b * dout];
+    run(&mut ys, KernelPath::Scalar);
+    run(&mut yu, KernelPath::Unrolled);
+    assert_eq!(ys, yu,
+               "{fmt} sp={sp} b={b}: unrolled diverged from scalar");
+    let rs = bench(&format!("{fmt:<6} scalar   sp={sp:.2} b={b}"),
+                   budget_ms, || {
+        run(&mut ys, KernelPath::Scalar);
+        std::hint::black_box(&ys);
+    });
+    let ru = bench(&format!("{fmt:<6} unrolled sp={sp:.2} b={b}"),
+                   budget_ms, || {
+        run(&mut yu, KernelPath::Unrolled);
+        std::hint::black_box(&yu);
+    });
+    totals.0 += rs.median_ns;
+    totals.1 += ru.median_ns;
+    println!("  -> scalar/unrolled ratio x{:.2}\n",
+             rs.median_ns / ru.median_ns.max(1e-9));
+}
+
+/// Scalar vs unrolled kernel paths (ISSUE 8) across the tiled formats
+/// at the batch-8 decode shape. Unrolling spreads *independent*
+/// accumulators (batch lanes / output rows) across the loop body
+/// without reassociating any per-accumulator sum — so both paths are
+/// bit-identical (asserted per cell) and the unrolled one must never
+/// cost throughput, which is what the CI `min_unrolled_scalar_ratio`
+/// gate pins on the aggregate scalar/unrolled timing ratio.
+fn path_sweep(dim: usize, budget_ms: u64) -> f64 {
+    let b = 8usize;
+    let mut totals = (0.0f64, 0.0f64);
+    println!("== scalar vs unrolled kernel paths, {dim}x{dim} b={b} ==");
+    for &sp in &[0.5f64, 0.9] {
+        let w = random_sparse_weight(dim, dim, sp, 42);
+        let csr = Csr::from_weight(&w);
+        let macko = Macko::from_weight(&w);
+        let nm = NmSparse::<2, 4>::from_weight(&nm_project(&w, 2, 4))
+            .expect("nm24 weight");
+        let dplan = dense_plan(&w);
+        let mut st = SpmmScratch::default();
+        let mut rng = Rng::new(7);
+        let x: Vec<f32> = (0..b * dim).map(|_| rng.normal()).collect();
+        path_cell("csr", sp, b, budget_ms, &mut totals, dim, |y, p| {
+            csr.matvec_batch_tiled_into(&x, y, b, &mut st, p)
+        });
+        path_cell("macko", sp, b, budget_ms, &mut totals, dim, |y, p| {
+            macko.matvec_batch_tiled_into(&x, y, b, &mut st, p)
+        });
+        path_cell("nm24", sp, b, budget_ms, &mut totals, dim, |y, p| {
+            nm.matvec_batch_tiled_into(&x, y, b, &mut st, p)
+        });
+        path_cell("dense", sp, b, budget_ms, &mut totals, dim, |y, p| {
+            tile::matvec_batch_tiled(&w, &dplan, &x, y, b, &mut st, p)
+        });
+    }
+    let ratio = totals.0 / totals.1.max(1e-9);
+    println!("== aggregate scalar/unrolled ratio x{ratio:.2} ==\n");
+    ratio
+}
+
+/// The decode-shape cell behind the CI `min_nm24_csr_ratio` gate:
+/// batch-1 matvec on a cache-exceeding 2:4-projected matrix, f32 CSR
+/// (8 B per nonzero, data-dependent row loop) vs branch-free
+/// `NmSparse` (5 B per slot, fixed N-per-group trip counts) on the
+/// SAME weights. Both walk a row's nonzeros in ascending column order
+/// and padded N:M slots contribute exact zeros, so the outputs are
+/// asserted bit-identical before timing; fewer payload bytes with
+/// static loop bounds must never decode slower.
+fn nm_kernel_ratio(budget_ms: u64) -> f64 {
+    let dim = 2048usize; // past L2/L3 on CI runners, like the int8 cell
+    let w = nm_project(&random_sparse_weight(dim, dim, 0.5, 23), 2, 4);
+    let csr = Csr::from_weight(&w);
+    let nm = NmSparse::<2, 4>::from_weight(&w).expect("nm24 weight");
+    let mut rng = Rng::new(9);
+    let x: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+    let mut yc = vec![0.0f32; dim];
+    let mut yn = vec![0.0f32; dim];
+    csr.matvec(&x, &mut yc);
+    nm.matvec(&x, &mut yn, KernelPath::Unrolled);
+    assert_eq!(yc, yn,
+               "nm24 matvec diverged from csr on the same weights");
+
+    println!("== nm 2:4 vs csr decode-shape matvec, {dim}x{dim} \
+              b=1 ==");
+    let flops = csr.nnz() as f64 * 2.0;
+    let rc = bench("csr    f32  b=1", budget_ms, || {
+        csr.matvec(&x, &mut yc);
+        std::hint::black_box(&yc);
+    });
+    throughput(&rc, flops, "flop");
+    let rn = bench("nm24   f32  b=1", budget_ms, || {
+        nm.matvec(&x, &mut yn, KernelPath::Unrolled);
+        std::hint::black_box(&yn);
+    });
+    throughput(&rn, flops, "flop");
+    let ratio = rc.median_ns / rn.median_ns.max(1e-9);
+    println!("  -> nm24/csr throughput ratio x{ratio:.2} \
+              ({} vs {} payload bytes)\n", nm.mem_bytes(),
+             csr.mem_bytes());
+    ratio
+}
+
+/// Project every prunable linear of the bench model onto N:M so the
+/// `NmWeights` build verifies — same shape as the serving example's
+/// helper and the integration fixtures' `nm_params`.
+fn project_params_nm(p: &Params, n: usize, m: usize) -> Params {
+    let mut q = p.clone();
+    for seg in q.cfg.segments.clone() {
+        if seg.prunable && seg.is_matrix() {
+            let w = Matrix::from_vec(
+                seg.shape[0], seg.shape[1],
+                q.flat[seg.offset..seg.end()].to_vec());
+            let proj = nm_project(&w, n, m);
+            q.flat[seg.offset..seg.end()].copy_from_slice(&proj.data);
+        }
+    }
+    q
+}
+
+/// N:M serving cells (ISSUE 8): end-to-end decode tok/s through the
+/// branch-free `NmSparse` engine at the single-stream (b=1) and
+/// batched (b=8) decode shapes — the `nm24_b1`/`nm24_b8` floors the
+/// CI gate pins. Before timing, each cell's token streams are
+/// asserted bit-identical to the f32 CSR engine serving the same
+/// 2:4-projected checkpoint (identical accumulation order — the
+/// cross-format identity the kernel and engine suites pin).
+fn nm_engine_sweep(n_new: usize) -> Vec<(&'static str, f64)> {
+    let (cfg, p) = bench_model();
+    let p = project_params_nm(&p, 2, 4);
+    let prompt_len = 8usize;
+    let nm_e = Engine::build_nm(&p, Backend::Csr, NmMode::N2M4)
+        .expect("nm engine");
+    let f32_e = Engine::build(&p, Backend::Csr).expect("csr engine");
+    println!("== nm 2:4 end-to-end decode, d={} L={} (weights {} B \
+              vs f32 csr {} B) ==", cfg.d_model, cfg.n_layers,
+             nm_e.mem_bytes(), f32_e.mem_bytes());
+    let mut rng = Rng::new(1);
+    let mut out = Vec::new();
+    for (b, key) in [(1usize, "nm24_b1"), (8, "nm24_b8")] {
+        let prompts: Vec<Vec<u32>> = (0..b)
+            .map(|_| (0..prompt_len)
+                 .map(|_| rng.below(cfg.vocab) as u32).collect())
+            .collect();
+        let opts = BatchOptions {
+            n_new, temperature: 0.8, seed: 0, threads: 1,
+            shard_workers: 1, ..BatchOptions::default()
+        };
+        let (want, _) = f32_e.generate_batch(&prompts, &opts);
+        let (got, stats) = nm_e.generate_batch(&prompts, &opts); // warmup
+        assert_eq!(got, want,
+                   "{key}: N:M decode diverged from f32 csr on the \
+                    same projected checkpoint");
+        assert_eq!(stats.nm_mode, "2:4");
+        let t = Timer::start();
+        let (_, stats) = nm_e.generate_batch(&prompts, &opts);
+        let tps = stats.tokens_generated as f64 / t.seconds().max(1e-9);
+        println!("{key:>11}: {tps:9.1} tok/s aggregate (b={b})");
+        out.push((key, tps));
+    }
+    println!();
+    out
+}
+
 fn main() {
     let threads = std::env::args()
         .nth(1)
@@ -512,7 +700,10 @@ fn main() {
         prefill_sweep(elsa::infer::DEFAULT_PREFILL_CHUNK);
     let (engine, pooled_serial_ratio) = engine_sweep(n_new, threads);
     let quant_cells = quant_engine_sweep(n_new);
+    let nm_cells = nm_engine_sweep(n_new);
     let int8_f32_ratio = quant_kernel_ratio(budget_ms);
+    let nm24_csr_ratio = nm_kernel_ratio(budget_ms);
+    let unrolled_scalar_ratio = path_sweep(dim, budget_ms);
 
     // machine-readable summary for the CI regression gate
     let mut top: Vec<(&str, Value)> = vec![
@@ -526,6 +717,8 @@ fn main() {
         ("pooled_serial_ratio", num(pooled_serial_ratio)),
         ("chunked_pertoken_ratio", num(chunked_pertoken_ratio)),
         ("int8_f32_ratio", num(int8_f32_ratio)),
+        ("nm24_csr_ratio", num(nm24_csr_ratio)),
+        ("unrolled_scalar_ratio", num(unrolled_scalar_ratio)),
     ];
     for &(key, ratio) in &per_fmt {
         top.push((key, num(ratio)));
@@ -537,6 +730,9 @@ fn main() {
         top.push((key, obj(vec![("tok_s", num(tps))])));
     }
     for &(key, tps) in &quant_cells {
+        top.push((key, obj(vec![("tok_s", num(tps))])));
+    }
+    for &(key, tps) in &nm_cells {
         top.push((key, obj(vec![("tok_s", num(tps))])));
     }
     let j = obj(top);

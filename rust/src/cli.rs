@@ -13,11 +13,20 @@
 //!             window of the chunked prefill pass (default 16);
 //!             [--prefix-cache {on,off}] toggles the shared-prefix KV
 //!             cache (default on); [--quant {none,int8,int4}] decodes
-//!             quantized sparse payloads (csr/macko backends only)
+//!             quantized sparse payloads (csr/macko backends only);
+//!             [--nm {off,2:4,4:8}] serves N:M structured checkpoints
+//!             through the branch-free N:M kernels (csr/macko
+//!             backends; pattern verified at build);
+//!             [--kernel-path {scalar,unrolled}] forces the kernel
+//!             traversal (default unrolled; bit-identical either way);
+//!             [--pin-workers {on,off}] pins shard-pool lanes to cores
+//!             (default off, best effort, Linux only)
 //!   serve     --config tiny --ckpt ckpt.bin --requests 32
 //!             --max-slots 8 --threads 4 [--shard-workers M]
 //!             [--prefill-chunk C] [--prefix-cache {on,off}]
-//!             [--quant {none,int8,int4}]
+//!             [--quant {none,int8,int4}] [--nm {off,2:4,4:8}]
+//!             [--kernel-path {scalar,unrolled}]
+//!             [--pin-workers {on,off}]
 //!             [--arrival-gap 2.0] [--deadline STEPS] [--verbose] —
 //!             continuous-batching scheduler over a seeded Poisson-ish
 //!             request stream (slots × row bands, chunked prompt

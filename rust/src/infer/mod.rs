@@ -60,6 +60,19 @@
 //! quant mode every determinism guarantee above still holds bit-exact
 //! — threads, shard-workers, tiling, batching, and the prefix cache
 //! remain pure traversal knobs.
+//!
+//! ## N:M structured decode (`--nm {off,2:4,4:8}`)
+//!
+//! Semi-structured checkpoints get a dedicated format
+//! ([`crate::sparse::nm`]): [`Engine::build_nm`] converts every
+//! prunable linear to [`NmWeights`] after verifying the pattern
+//! (violations fail loudly at build), and the fixed per-group nonzero
+//! count makes the decode inner loops branch-free. N:M implements the
+//! same `RowTiled` contract as every other format, so it inherits
+//! tiling, the worker pool, chunked prefill, and the prefix cache
+//! unchanged, and it is bit-exact *within* itself across every
+//! traversal knob — including [`Engine::kernel_path`], the runtime
+//! scalar/unrolled toggle that applies to all formats.
 
 pub mod pool;
 pub mod prefix;
@@ -73,8 +86,8 @@ use crate::cli::Args;
 use crate::model::forward::gelu_tanh;
 use crate::model::Params;
 use crate::runtime::ConfigEntry;
-use crate::sparse::{tile, Csr, CsrQ, Macko, MackoQ, QuantMode,
-                    SpmmScratch, TilePlan};
+use crate::sparse::{tile, Csr, CsrQ, KernelPath, Macko, MackoQ, NmMode,
+                    NmWeights, QuantMode, SpmmScratch, TilePlan};
 use crate::tensor::Matrix;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
@@ -91,6 +104,7 @@ pub enum WeightFmt {
     Macko(Macko),
     CsrQ(CsrQ),
     MackoQ(MackoQ),
+    Nm(NmWeights),
 }
 
 impl WeightFmt {
@@ -126,6 +140,30 @@ impl WeightFmt {
     /// compare against, so that combination fails loudly here.
     pub fn build_quant(w: Matrix, kind: Backend, quant: QuantMode)
                        -> Result<WeightFmt> {
+        Self::build_full(w, kind, quant, NmMode::Off)
+    }
+
+    /// The full conversion entry: f32 (`build`), quantized
+    /// (`build_quant`), or N:M structured. `nm != Off` verifies the
+    /// weight against the pattern ([`NmWeights::from_weight`]) and
+    /// rejects violations loudly; it requires a sparse backend and is
+    /// mutually exclusive with quantization (the N:M payload is f32 —
+    /// combining them would need a quantized N:M format that does not
+    /// exist yet, and guessing a silent fallback would misreport what
+    /// is being served).
+    pub fn build_full(w: Matrix, kind: Backend, quant: QuantMode,
+                      nm: NmMode) -> Result<WeightFmt> {
+        if nm.is_on() {
+            if kind == Backend::Dense {
+                anyhow::bail!("--nm requires a sparse backend \
+                               (csr or macko), got dense");
+            }
+            if quant != QuantMode::None {
+                anyhow::bail!("--nm and --quant are mutually exclusive \
+                               (no quantized N:M payload)");
+            }
+            return Ok(WeightFmt::Nm(NmWeights::from_weight(&w, nm)?));
+        }
         Ok(match (kind, quant) {
             (_, QuantMode::None) => WeightFmt::build(w, kind),
             (Backend::Dense, _) => anyhow::bail!(
@@ -151,6 +189,7 @@ impl WeightFmt {
             WeightFmt::Macko(m) => m.matvec(x, y),
             WeightFmt::CsrQ(c) => c.matvec(x, y),
             WeightFmt::MackoQ(m) => m.matvec(x, y),
+            WeightFmt::Nm(n) => n.matvec(x, y, KernelPath::Scalar),
         }
     }
 
@@ -171,6 +210,7 @@ impl WeightFmt {
             WeightFmt::MackoQ(m) => {
                 m.matvec_batch_into(x, y, b, scratch)
             }
+            WeightFmt::Nm(n) => n.matvec_batch_into(x, y, b, scratch),
         }
     }
 
@@ -178,9 +218,11 @@ impl WeightFmt {
     /// the format's construction-time row-tile plan, so each
     /// cache-sized weight tile is streamed once per step and applied
     /// across every live slot. Bit-identical to the untiled path for
-    /// every format and batch size (see [`crate::sparse::tile`]).
+    /// every format, batch size, and [`KernelPath`] (see
+    /// [`crate::sparse::tile`]).
     pub fn matvec_batch_tiled(&self, x: &[f32], y: &mut [f32], b: usize,
-                              scratch: &mut SpmmScratch) {
+                              scratch: &mut SpmmScratch,
+                              path: KernelPath) {
         match self {
             WeightFmt::Dense(w, plan) => {
                 if b == 1 {
@@ -190,19 +232,22 @@ impl WeightFmt {
                     y.copy_from_slice(&t);
                     return;
                 }
-                tile::matvec_batch_tiled(w, plan, x, y, b, scratch)
+                tile::matvec_batch_tiled(w, plan, x, y, b, scratch, path)
             }
             WeightFmt::Csr(c) => {
-                c.matvec_batch_tiled_into(x, y, b, scratch)
+                c.matvec_batch_tiled_into(x, y, b, scratch, path)
             }
             WeightFmt::Macko(m) => {
-                m.matvec_batch_tiled_into(x, y, b, scratch)
+                m.matvec_batch_tiled_into(x, y, b, scratch, path)
             }
             WeightFmt::CsrQ(c) => {
-                c.matvec_batch_tiled_into(x, y, b, scratch)
+                c.matvec_batch_tiled_into(x, y, b, scratch, path)
             }
             WeightFmt::MackoQ(m) => {
-                m.matvec_batch_tiled_into(x, y, b, scratch)
+                m.matvec_batch_tiled_into(x, y, b, scratch, path)
+            }
+            WeightFmt::Nm(n) => {
+                n.matvec_batch_tiled_into(x, y, b, scratch, path)
             }
         }
     }
@@ -212,26 +257,36 @@ impl WeightFmt {
     /// byte-balanced row-band shards and executed on the pool's
     /// persistent workers ([`tile::pool_matvec_batch_tiled`]); the
     /// [`Engine::tiled`] toggle then only selects the serial traversal
-    /// used when the pool is single-lane. Every path produces
-    /// bit-identical output, so neither knob can change a token.
+    /// used when the pool is single-lane. Every path — either
+    /// [`KernelPath`] included — produces bit-identical output, so no
+    /// knob here can change a token. The untiled fallback
+    /// (`tiled == false`) always runs the scalar reference kernels; it
+    /// predates the path toggle and exists exactly to stay the
+    /// untouched baseline.
     pub fn matvec_batch_exec(&self, x: &[f32], y: &mut [f32], b: usize,
                              scratch: &mut SpmmScratch, tiled: bool,
-                             pool: &WorkerPool) {
+                             pool: &WorkerPool, path: KernelPath) {
         if pool.width() > 1 {
             match self {
                 WeightFmt::Dense(w, plan) => tile::pool_matvec_batch_tiled(
-                    w, plan, x, y, b, pool, scratch),
+                    w, plan, x, y, b, pool, scratch, path),
                 WeightFmt::Csr(c) => tile::pool_matvec_batch_tiled(
-                    c, &c.plan, x, y, b, pool, scratch),
+                    c, &c.plan, x, y, b, pool, scratch, path),
                 WeightFmt::Macko(m) => tile::pool_matvec_batch_tiled(
-                    m, &m.plan, x, y, b, pool, scratch),
+                    m, &m.plan, x, y, b, pool, scratch, path),
                 WeightFmt::CsrQ(c) => tile::pool_matvec_batch_tiled(
-                    c, &c.plan, x, y, b, pool, scratch),
+                    c, &c.plan, x, y, b, pool, scratch, path),
                 WeightFmt::MackoQ(m) => tile::pool_matvec_batch_tiled(
-                    m, &m.plan, x, y, b, pool, scratch),
+                    m, &m.plan, x, y, b, pool, scratch, path),
+                WeightFmt::Nm(n) => match n {
+                    NmWeights::N2M4(s) => tile::pool_matvec_batch_tiled(
+                        s, &s.plan, x, y, b, pool, scratch, path),
+                    NmWeights::N4M8(s) => tile::pool_matvec_batch_tiled(
+                        s, &s.plan, x, y, b, pool, scratch, path),
+                },
             }
         } else if tiled {
-            self.matvec_batch_tiled(x, y, b, scratch);
+            self.matvec_batch_tiled(x, y, b, scratch, path);
         } else {
             self.matvec_batch(x, y, b, scratch);
         }
@@ -249,6 +304,7 @@ impl WeightFmt {
             WeightFmt::Macko(m) => m.retile(target_bytes, max_rows),
             WeightFmt::CsrQ(c) => c.retile(target_bytes, max_rows),
             WeightFmt::MackoQ(m) => m.retile(target_bytes, max_rows),
+            WeightFmt::Nm(n) => n.retile(target_bytes, max_rows),
         }
     }
 
@@ -262,6 +318,7 @@ impl WeightFmt {
             WeightFmt::Macko(m) => m.mem_bytes(),
             WeightFmt::CsrQ(c) => c.mem_bytes(),
             WeightFmt::MackoQ(m) => m.mem_bytes(),
+            WeightFmt::Nm(n) => n.mem_bytes(),
         }
     }
 }
@@ -374,6 +431,16 @@ pub struct Engine {
     /// property of the converted weights — never a runtime toggle —
     /// so one engine serves exactly one quant mode.
     pub quant: QuantMode,
+    /// N:M structure of the converted weights (`--nm`): `Off` (the
+    /// default) or a verified 2:4 / 4:8 pattern. Like `quant`, a
+    /// build-time property of the weights, not a runtime toggle.
+    pub nm: NmMode,
+    /// Which inner-loop traversal the tiled/pooled kernels run
+    /// (`--kernel-path`, default [`KernelPath::Unrolled`], overridable
+    /// engine-wide via `ELSA_KERNEL_PATH`). A pure traversal knob:
+    /// both paths are bit-identical, so flipping this cannot change a
+    /// token — `rust/tests/determinism.rs` sweeps the axis.
+    pub kernel_path: KernelPath,
     /// Rows projected through the dense head since construction (one
     /// per (slot, step) of [`Engine::decode_step_batch`]; the chunked
     /// prefill pass never projects). The prefill-efficiency probe:
@@ -416,9 +483,38 @@ impl Engine {
     /// quantize, mirroring what the pruners touch.
     pub fn build_quant(params: &Params, backend: Backend,
                        quant: QuantMode) -> Result<Engine> {
+        Self::build_full(params, backend, quant, NmMode::Off)
+    }
+
+    /// [`Engine::build`] with an N:M structured payload: every
+    /// prunable linear is verified against the pattern and converted
+    /// to [`NmWeights`] ([`WeightFmt::build_full`]) — a checkpoint
+    /// that violates the pattern fails loudly here, at build, not
+    /// silently at serve time. Requires a sparse `backend`; the
+    /// scalar/unrolled and tiling/pool/prefill machinery is inherited
+    /// unchanged through the shared `RowTiled` contract.
+    pub fn build_nm(params: &Params, backend: Backend, nm: NmMode)
+                    -> Result<Engine> {
+        Self::build_full(params, backend, QuantMode::None, nm)
+    }
+
+    /// The full build entry behind [`Engine::build`] /
+    /// [`Engine::build_quant`] / [`Engine::build_nm`]. Invalid
+    /// combinations (quant or N:M on dense, quant + N:M together) are
+    /// rejected loudly — see [`WeightFmt::build_full`].
+    pub fn build_full(params: &Params, backend: Backend,
+                      quant: QuantMode, nm: NmMode) -> Result<Engine> {
         if quant != QuantMode::None && backend == Backend::Dense {
             anyhow::bail!("--quant requires a sparse backend \
                            (csr or macko), got dense");
+        }
+        if nm.is_on() && backend == Backend::Dense {
+            anyhow::bail!("--nm requires a sparse backend \
+                           (csr or macko), got dense");
+        }
+        if nm.is_on() && quant != QuantMode::None {
+            anyhow::bail!("--nm and --quant are mutually exclusive \
+                           (no quantized N:M payload)");
         }
         let cfg = params.cfg.clone();
         let mut layers = Vec::with_capacity(cfg.n_layers);
@@ -428,8 +524,8 @@ impl Engine {
             let vec = |n: &str| -> Result<Vec<f32>> {
                 Ok(params.vector(&(p.clone() + n))?.to_vec())
             };
-            let conv = |w: Matrix| WeightFmt::build_quant(w, backend,
-                                                          quant);
+            let conv = |w: Matrix| WeightFmt::build_full(w, backend,
+                                                         quant, nm);
             layers.push(Layer {
                 ln1_g: vec("ln1.g")?,
                 ln1_b: vec("ln1.b")?,
@@ -466,6 +562,8 @@ impl Engine {
             tiled: true,
             prefill_chunk: DEFAULT_PREFILL_CHUNK,
             quant,
+            nm,
+            kernel_path: KernelPath::default_path(),
             head_rows: AtomicU64::new(0),
         })
     }
@@ -534,13 +632,16 @@ impl Engine {
         }
         l.wq.matvec_batch_exec(&scratch.xa[..b * d],
                                &mut scratch.q[..b * d], b,
-                               &mut scratch.spmm, self.tiled, pool);
+                               &mut scratch.spmm, self.tiled, pool,
+                               self.kernel_path);
         l.wk.matvec_batch_exec(&scratch.xa[..b * d],
                                &mut scratch.k[..b * d], b,
-                               &mut scratch.spmm, self.tiled, pool);
+                               &mut scratch.spmm, self.tiled, pool,
+                               self.kernel_path);
         l.wv.matvec_batch_exec(&scratch.xa[..b * d],
                                &mut scratch.v[..b * d], b,
-                               &mut scratch.spmm, self.tiled, pool);
+                               &mut scratch.spmm, self.tiled, pool,
+                               self.kernel_path);
     }
 
     /// Second half of one layer for `b` packed rows: O-projection of
@@ -553,7 +654,8 @@ impl Engine {
         let dff = self.cfg.d_ff;
         l.wo.matvec_batch_exec(&scratch.o[..b * d],
                                &mut scratch.tmp_d[..b * d], b,
-                               &mut scratch.spmm, self.tiled, pool);
+                               &mut scratch.spmm, self.tiled, pool,
+                               self.kernel_path);
         for i in 0..b * d {
             scratch.x[i] += scratch.tmp_d[i];
         }
@@ -565,7 +667,8 @@ impl Engine {
         }
         l.w1.matvec_batch_exec(&scratch.xa[..b * d],
                                &mut scratch.ff[..b * dff], b,
-                               &mut scratch.spmm, self.tiled, pool);
+                               &mut scratch.spmm, self.tiled, pool,
+                               self.kernel_path);
         for r in 0..b {
             let frow = &mut scratch.ff[r * dff..(r + 1) * dff];
             for (f, bias) in frow.iter_mut().zip(l.b1.iter()) {
@@ -574,7 +677,8 @@ impl Engine {
         }
         l.w2.matvec_batch_exec(&scratch.ff[..b * dff],
                                &mut scratch.tmp_d[..b * d], b,
-                               &mut scratch.spmm, self.tiled, pool);
+                               &mut scratch.spmm, self.tiled, pool,
+                               self.kernel_path);
         for r in 0..b {
             for c in 0..d {
                 scratch.x[r * d + c] +=
@@ -766,6 +870,8 @@ impl Engine {
             shard_busy_seconds: 0.0,
             shard_idle_seconds: 0.0,
             quant_mode: self.quant.label(),
+            nm_mode: self.nm.label(),
+            kernel_path: self.kernel_path.label(),
         };
         if prompt.is_empty() {
             return (Vec::new(), stats);
@@ -901,6 +1007,7 @@ impl Engine {
             threads: opts.threads,
             shard_workers: opts.shard_workers,
             prefix_cache: opts.prefix_cache,
+            pin_workers: opts.pin_workers,
         });
         // run() returns finished requests sorted by id == slot index
         let (finished, st) = sched.run(queue);
@@ -922,6 +1029,8 @@ impl Engine {
             shard_busy_seconds: st.shard_busy_seconds.iter().sum(),
             shard_idle_seconds: st.shard_idle_seconds.iter().sum(),
             quant_mode: st.quant_mode,
+            nm_mode: st.nm_mode,
+            kernel_path: st.kernel_path,
         })
     }
 
@@ -1035,6 +1144,11 @@ pub struct BatchOptions {
     /// Bit-identical streams either way — a hit copies exactly the
     /// rows a cold prefill would have produced.
     pub prefix_cache: bool,
+    /// Best-effort core affinity for the row-band shard lanes
+    /// (`--pin-workers {on,off}`, default off): Linux pins each
+    /// spawned lane to a core via `sched_setaffinity`, elsewhere a
+    /// no-op. Pure placement — never changes a token.
+    pub pin_workers: bool,
 }
 
 impl Default for BatchOptions {
@@ -1046,6 +1160,7 @@ impl Default for BatchOptions {
             threads: 1,
             shard_workers: 1,
             prefix_cache: true,
+            pin_workers: false,
         }
     }
 }
@@ -1167,6 +1282,11 @@ pub struct GenStats {
     /// bench/CLI output attribute a tok/s or `mem_bytes` number to its
     /// quant mode without carrying the engine around.
     pub quant_mode: &'static str,
+    /// N:M structure the engine served ("off", "2:4", or "4:8") —
+    /// same self-description contract as `quant_mode`.
+    pub nm_mode: &'static str,
+    /// Inner-loop traversal the kernels ran ("scalar" or "unrolled").
+    pub kernel_path: &'static str,
 }
 
 /// `elsa generate` / `elsa infer` subcommand. `--batch N` serves N
@@ -1179,6 +1299,10 @@ pub struct GenStats {
 /// toggles the scheduler's shared-prefix KV cache on the batch path;
 /// `--quant {none,int8,int4}` serves quantized sparse payloads with
 /// fused dequant (tolerance parity vs f32, bit-exact within a mode);
+/// `--nm {off,2:4,4:8}` serves a verified N:M structured checkpoint
+/// through the branch-free N:M kernels; `--kernel-path
+/// {scalar,unrolled}` picks the inner-loop traversal (bit-identical);
+/// `--pin-workers {on,off}` pins shard-pool lanes to cores;
 /// `--untiled` falls back to the untiled SpMM kernels (every traversal
 /// knob is bit-identical output, for perf comparisons).
 pub fn cmd_generate(args: &Args) -> Result<()> {
@@ -1190,8 +1314,12 @@ pub fn cmd_generate(args: &Args) -> Result<()> {
     let backend = Backend::parse(&args.str_or("backend", "macko"))
         .ok_or_else(|| anyhow::anyhow!("bad --backend"))?;
     let quant = QuantMode::parse(&args.str_or("quant", "none"))?;
-    let mut engine = Engine::build_quant(&params, backend, quant)?;
+    let nm = NmMode::parse(&args.str_or("nm", "off"))?;
+    let mut engine = Engine::build_full(&params, backend, quant, nm)?;
     engine.tiled = !args.bool("untiled");
+    if let Some(p) = args.get("kernel-path") {
+        engine.kernel_path = KernelPath::parse(p)?;
+    }
     engine.prefill_chunk =
         args.usize_or("prefill-chunk", DEFAULT_PREFILL_CHUNK)?.max(1);
 
@@ -1205,13 +1333,15 @@ pub fn cmd_generate(args: &Args) -> Result<()> {
     let threads = args.usize_or("threads", 1)?;
     let shard_workers = args.usize_or("shard-workers", 1)?;
     let prefix_cache = scheduler::prefix_cache_flag(args)?;
+    let pin_workers = scheduler::pin_workers_flag(args)?;
 
     if batch <= 1 {
         let prompt = g.generate(prompt_len, seed);
         // sample with `seed` so --batch 1 and slot 0 of --batch N are
         // the same request; single-sequence decode owns its own
         // row-band pool (bands are the only sharding axis here)
-        let pool = WorkerPool::new(shard_workers.max(1));
+        let pool = WorkerPool::new_pinned(shard_workers.max(1),
+                                          pin_workers);
         let (tokens, stats) =
             engine.generate_pooled(&prompt, n_new, temperature, seed,
                                    &pool);
@@ -1220,6 +1350,8 @@ pub fn cmd_generate(args: &Args) -> Result<()> {
         println!("sparsity {:.4}", params.sparsity());
         println!("backend {:?}", backend);
         println!("quant {}", stats.quant_mode);
+        println!("nm {} kernel_path {}", stats.nm_mode,
+                 stats.kernel_path);
         println!("tokens_per_s {:.2}", stats.tokens_per_second);
         println!("decode_s {:.4}", stats.decode_seconds);
         println!("prefill_s {:.4} ({} tokens, {} chunk passes, \
@@ -1237,7 +1369,7 @@ pub fn cmd_generate(args: &Args) -> Result<()> {
             .collect();
         let opts = BatchOptions {
             n_new, temperature, seed, threads, shard_workers,
-            prefix_cache,
+            prefix_cache, pin_workers,
         };
         let (outs, stats) = engine.generate_batch(&prompts, &opts);
         for (s, out) in outs.iter().enumerate() {
@@ -1248,8 +1380,11 @@ pub fn cmd_generate(args: &Args) -> Result<()> {
         println!("sparsity {:.4}", params.sparsity());
         println!("backend {:?}", backend);
         println!("quant {}", stats.quant_mode);
+        println!("nm {} kernel_path {}", stats.nm_mode,
+                 stats.kernel_path);
         println!("batch {batch} threads {threads} \
-                  shard_workers {shard_workers}");
+                  shard_workers {shard_workers} pin_workers {}",
+                 if pin_workers { "on" } else { "off" });
         if shard_workers > 1 {
             println!("shard_busy_s {:.4} shard_idle_s {:.4}",
                      stats.shard_busy_seconds, stats.shard_idle_seconds);
@@ -1422,6 +1557,67 @@ mod tests {
         let fm = Engine::build(&p, Backend::Macko).unwrap();
         assert!(e4.mem_bytes() < fm.mem_bytes());
         assert_eq!(e4.quant.label(), "int4");
+    }
+
+    /// Project every prunable linear of `p` onto a 2:4 pattern
+    /// in-place, so the checkpoint passes `NmWeights` verification.
+    fn nm24_projected(p: &Params) -> Params {
+        let mut q = p.clone();
+        for seg in q.cfg.segments.clone() {
+            if seg.prunable && seg.is_matrix() {
+                let w = Matrix::from_vec(
+                    seg.shape[0], seg.shape[1],
+                    q.flat[seg.offset..seg.end()].to_vec());
+                let proj = crate::sparse::nm_project(&w, 2, 4);
+                q.flat[seg.offset..seg.end()]
+                    .copy_from_slice(&proj.data);
+            }
+        }
+        q
+    }
+
+    #[test]
+    fn nm_requires_sparse_backend_and_rejects_bad_combos() {
+        let p = toy();
+        // dense has no N:M payload
+        assert!(Engine::build_nm(&p, Backend::Dense, NmMode::N2M4)
+                    .is_err());
+        // no quantized N:M payload either
+        assert!(Engine::build_full(&p, Backend::Csr, QuantMode::Int8,
+                                   NmMode::N2M4)
+                    .is_err());
+        // an unprojected (dense-ish) checkpoint violates the pattern
+        // and must be rejected loudly at build, not at serve time
+        let err = Engine::build_nm(&p, Backend::Csr, NmMode::N2M4)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("pattern violation"),
+                "unexpected error: {err:#}");
+        // Off is the identity: behaves exactly like Engine::build
+        let off = Engine::build_nm(&p, Backend::Csr, NmMode::Off)
+            .unwrap();
+        assert_eq!(off.nm, NmMode::Off);
+    }
+
+    #[test]
+    fn nm_engine_reports_mode_and_matches_projected_reference() {
+        let p = nm24_projected(&toy());
+        let e = Engine::build_nm(&p, Backend::Macko, NmMode::N2M4)
+            .unwrap();
+        assert_eq!(e.nm, NmMode::N2M4);
+        let (out, stats) = e.generate(&[1, 2, 3], 3, 0.0, 0);
+        assert_eq!(out.len(), 6);
+        // stats self-describe the structure and the kernel path
+        assert_eq!(stats.nm_mode, "2:4");
+        assert!(stats.kernel_path == "scalar"
+                    || stats.kernel_path == "unrolled");
+        // the N:M engine must match an f32 CSR engine built from the
+        // same projected checkpoint bit-for-bit (same weights, same
+        // accumulation order)
+        let f = Engine::build(&p, Backend::Csr).unwrap();
+        let (want, _) = f.generate(&[1, 2, 3], 3, 0.0, 0);
+        assert_eq!(out, want);
+        // fixed 2-of-4 slots beat CSR's 8 B/nnz bookkeeping
+        assert!(e.mem_bytes() < f.mem_bytes());
     }
 
     #[test]

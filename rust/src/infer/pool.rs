@@ -39,6 +39,27 @@
 //! dequant fused per nonzero, so the within-mode guarantee extends to
 //! int8/int4 payloads with no pool-side changes.
 //!
+//! The kernel-path knob ([`crate::sparse::KernelPath`]) is equally
+//! invisible here: scalar and unrolled traversals of a shard produce
+//! bit-identical bands, so the pool dispatches the same jobs either
+//! way and only the per-lane busy time moves.
+//!
+//! ## Core pinning (`--pin-workers`)
+//!
+//! Decode shards are a few microseconds of memory-bound work, so a
+//! worker that migrates between cores pays its warmed L1/L2 tile
+//! bytes again on the next dispatch. [`WorkerPool::new_pinned`] asks
+//! the kernel to keep each spawned lane on one core
+//! (`sched_setaffinity`, raw syscall — std-only, no new crates):
+//! lane `i` requests core `i % available_parallelism`. Pinning is
+//! **best effort and off by default**: it changes scheduling only,
+//! never results (determinism is claim-order-independent, see above),
+//! it is a no-op on non-Linux builds or when the syscall is refused
+//! (containers with restricted affinity masks), and lane 0 — the
+//! caller, usually a scheduler worker that exists independently of
+//! the pool — is never pinned. Which lanes actually landed on a core
+//! is reported in [`PoolStats::pinned_lanes`].
+//!
 //! ## Accounting
 //!
 //! Per-lane busy nanoseconds (time inside shard jobs) and the wall time
@@ -48,10 +69,54 @@
 //! serving metrics, not just in a profiler.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, AtomicUsize,
+                        Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
+
+/// Best-effort thread→core affinity, std-only (no `libc` dependency).
+/// Linux pins via the raw `sched_setaffinity` syscall; every other
+/// target compiles to a no-op that reports failure.
+mod affinity {
+    /// Ask the kernel to restrict the *calling thread* to `core`.
+    /// Returns whether the kernel accepted. Never panics: an
+    /// out-of-range core or a refused syscall (e.g. a container with
+    /// a restricted affinity mask) just reports `false` and the
+    /// thread stays migratable.
+    #[cfg(all(target_os = "linux",
+              any(target_arch = "x86_64", target_arch = "aarch64")))]
+    pub fn pin_current_thread(core: usize) -> bool {
+        // 16 × 64 = 1024 bits, the kernel's default cpu_set_t width
+        let mut mask = [0u64; 16];
+        if core >= mask.len() * 64 {
+            return false;
+        }
+        mask[core / 64] |= 1u64 << (core % 64);
+        #[cfg(target_arch = "x86_64")]
+        const SYS_SCHED_SETAFFINITY: i64 = 203;
+        #[cfg(target_arch = "aarch64")]
+        const SYS_SCHED_SETAFFINITY: i64 = 122;
+        extern "C" {
+            fn syscall(num: i64, ...) -> i64;
+        }
+        // SAFETY: sched_setaffinity(pid=0 → calling thread, len,
+        // mask) reads `mask` (valid for `size_of_val` bytes) and
+        // only changes where the scheduler may place this thread.
+        let r = unsafe {
+            syscall(SYS_SCHED_SETAFFINITY, 0i64,
+                    std::mem::size_of_val(&mask), mask.as_ptr())
+        };
+        r == 0
+    }
+
+    #[cfg(not(all(target_os = "linux",
+                  any(target_arch = "x86_64",
+                      target_arch = "aarch64"))))]
+    pub fn pin_current_thread(_core: usize) -> bool {
+        false
+    }
+}
 
 /// Lifetime-erased shard job. Only dereferenced by tasks claimed while
 /// the owning [`WorkerPool::run`] call is still blocked on the barrier,
@@ -95,6 +160,10 @@ struct Shared {
     /// Wall nanoseconds spent inside `run` (dispatch + barrier).
     wall_ns: AtomicU64,
     runs: AtomicU64,
+    /// Core each lane was pinned to, or -1 if unpinned (pinning off,
+    /// refused by the kernel, or lane 0 — never pinned). Written once
+    /// by each spawned lane before its first dispatch.
+    pinned: Vec<AtomicI64>,
 }
 
 /// Iterations to spin on the epoch/remaining atomics before parking.
@@ -121,6 +190,16 @@ impl WorkerPool {
     /// Build a pool with `width.max(1)` lanes (the caller plus
     /// `width - 1` spawned workers, parked until the first dispatch).
     pub fn new(width: usize) -> WorkerPool {
+        Self::new_pinned(width, false)
+    }
+
+    /// [`WorkerPool::new`] with optional core affinity
+    /// (`--pin-workers`): each spawned lane `i` asks to stay on core
+    /// `i % available_parallelism` before entering its worker loop.
+    /// Best effort — see the module docs; a refused pin leaves the
+    /// lane migratable and the pool fully functional. Lane 0 (the
+    /// caller) is never pinned.
+    pub fn new_pinned(width: usize, pin: bool) -> WorkerPool {
         let width = width.max(1);
         let shared = Arc::new(Shared {
             epoch: AtomicU64::new(0),
@@ -134,11 +213,24 @@ impl WorkerPool {
             busy_ns: (0..width).map(|_| AtomicU64::new(0)).collect(),
             wall_ns: AtomicU64::new(0),
             runs: AtomicU64::new(0),
+            pinned: (0..width).map(|_| AtomicI64::new(-1)).collect(),
         });
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
         let handles = (1..width)
             .map(|lane| {
                 let sh = Arc::clone(&shared);
-                std::thread::spawn(move || worker_loop(&sh, lane))
+                std::thread::spawn(move || {
+                    if pin {
+                        let core = lane % cores;
+                        if affinity::pin_current_thread(core) {
+                            sh.pinned[lane]
+                                .store(core as i64, Ordering::Release);
+                        }
+                    }
+                    worker_loop(&sh, lane)
+                })
             })
             .collect();
         WorkerPool { shared, handles, width }
@@ -242,6 +334,15 @@ impl WorkerPool {
                 as f64
                 * 1e-9,
             runs: self.shared.runs.load(Ordering::Relaxed),
+            pinned_lanes: self
+                .shared
+                .pinned
+                .iter()
+                .map(|c| {
+                    let v = c.load(Ordering::Acquire);
+                    usize::try_from(v).ok()
+                })
+                .collect(),
         }
     }
 }
@@ -350,9 +451,18 @@ pub struct PoolStats {
     pub wall_seconds: f64,
     /// Number of `run` dispatches.
     pub runs: u64,
+    /// Per-lane core placement: `Some(core)` if the lane was pinned
+    /// there ([`WorkerPool::new_pinned`]), `None` if unpinned —
+    /// pinning off, refused by the kernel, or lane 0 (the caller,
+    /// never pinned).
+    pub pinned_lanes: Vec<Option<usize>>,
 }
 
 impl PoolStats {
+    /// Lanes that actually landed on a core.
+    pub fn pinned_count(&self) -> usize {
+        self.pinned_lanes.iter().filter(|p| p.is_some()).count()
+    }
     /// Seconds a lane sat idle while a dispatch was in flight
     /// (clamped at zero — lane 0 overlaps dispatch bookkeeping).
     pub fn idle_seconds(&self) -> Vec<f64> {
@@ -481,5 +591,49 @@ mod tests {
         let pool = WorkerPool::new(3);
         pool.run(0, &|_| panic!("must not be called"));
         assert_eq!(pool.stats().runs, 0);
+    }
+
+    #[test]
+    fn unpinned_pool_reports_no_placements() {
+        let pool = WorkerPool::new(4);
+        let st = pool.stats();
+        assert_eq!(st.pinned_lanes.len(), 4);
+        assert!(st.pinned_lanes.iter().all(|p| p.is_none()));
+        assert_eq!(st.pinned_count(), 0);
+    }
+
+    #[test]
+    fn pinned_pool_places_lanes_and_stays_correct() {
+        // pinning is best effort, so the hard assertions are about
+        // what it must NOT do: break dispatch, pin lane 0, or report
+        // a core outside the machine
+        let pool = WorkerPool::new_pinned(4, true);
+        let hits: Vec<AtomicUsize> =
+            (0..32).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(32, &|i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for h in &hits {
+            assert_eq!(h.load(Ordering::SeqCst), 1);
+        }
+        let st = pool.stats();
+        assert_eq!(st.pinned_lanes.len(), 4);
+        assert!(st.pinned_lanes[0].is_none(),
+                "lane 0 (the caller) must never be pinned");
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        for p in st.pinned_lanes.iter().flatten() {
+            assert!(*p < cores, "pinned to nonexistent core {p}");
+        }
+        assert!(st.pinned_count() <= 3);
+    }
+
+    #[test]
+    fn pin_flag_off_matches_plain_constructor() {
+        let a = WorkerPool::new(3);
+        let b = WorkerPool::new_pinned(3, false);
+        assert_eq!(a.stats().pinned_count(), 0);
+        assert_eq!(b.stats().pinned_count(), 0);
     }
 }

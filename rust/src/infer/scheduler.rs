@@ -297,6 +297,12 @@ pub struct SchedOptions {
     /// Bit-identical token streams either way — this knob only moves
     /// prefill work, never a token.
     pub prefix_cache: bool,
+    /// Best-effort core affinity for each worker's shard-pool lanes
+    /// (`--pin-workers {on,off}`, default off): see
+    /// [`WorkerPool::new_pinned`]. A placement knob only — refused
+    /// pins degrade to the unpinned pool, and tokens are identical
+    /// either way.
+    pub pin_workers: bool,
 }
 
 impl Default for SchedOptions {
@@ -307,6 +313,7 @@ impl Default for SchedOptions {
             threads: 1,
             shard_workers: 1,
             prefix_cache: true,
+            pin_workers: false,
         }
     }
 }
@@ -396,6 +403,19 @@ pub struct SchedStats {
     /// of the engine, echoed here so bench/serve reports are
     /// self-describing.
     pub quant_mode: &'static str,
+    /// N:M structure of the engine's weights (`"off"`, `"2:4"`, or
+    /// `"4:8"`) — like `quant_mode`, a build-time property echoed so
+    /// bench/serve reports are self-describing.
+    pub nm_mode: &'static str,
+    /// Kernel traversal the run decoded with (`"scalar"` or
+    /// `"unrolled"`). A pure speed knob — within a run the two paths
+    /// are bit-identical — but benches compare them, so reports say
+    /// which one they measured.
+    pub kernel_path: &'static str,
+    /// Shard-pool lanes that landed on a requested core, summed
+    /// across scheduler workers (0 unless `--pin-workers on` and the
+    /// kernel accepted the affinity masks).
+    pub pinned_lanes: usize,
     /// Engine weight bytes actually resident (`Engine::mem_bytes`):
     /// the compact quantized buffers when `quant_mode != "none"`.
     pub weight_mem_bytes: usize,
@@ -454,6 +474,8 @@ struct WorkerOut {
     /// Per-lane busy/idle seconds of this worker's decode pool.
     shard_busy: Vec<f64>,
     shard_idle: Vec<f64>,
+    /// Shard-pool lanes that landed on a requested core.
+    pinned_lanes: usize,
 }
 
 /// What an idle worker (no local slots) decided at the queue lock.
@@ -526,6 +548,7 @@ impl<'e> Scheduler<'e> {
         let lanes = self.opts.shard_workers.max(1);
         let mut shard_busy = vec![0.0f64; lanes];
         let mut shard_idle = vec![0.0f64; lanes];
+        let mut pinned_lanes = 0usize;
         for o in &outs {
             for (acc, v) in shard_busy.iter_mut().zip(&o.shard_busy) {
                 *acc += v;
@@ -533,6 +556,7 @@ impl<'e> Scheduler<'e> {
             for (acc, v) in shard_idle.iter_mut().zip(&o.shard_idle) {
                 *acc += v;
             }
+            pinned_lanes += o.pinned_lanes;
         }
         let mut finished: Vec<FinishedRequest> =
             outs.into_iter().flat_map(|o| o.finished).collect();
@@ -548,6 +572,9 @@ impl<'e> Scheduler<'e> {
                                   ShardTimes { lanes, busy: shard_busy,
                                                idle: shard_idle });
         stats.quant_mode = self.engine.quant.label();
+        stats.nm_mode = self.engine.nm.label();
+        stats.kernel_path = self.engine.kernel_path.label();
+        stats.pinned_lanes = pinned_lanes;
         stats.weight_mem_bytes = self.engine.mem_bytes();
         (finished, stats)
     }
@@ -574,7 +601,8 @@ impl<'e> Scheduler<'e> {
         // this worker's persistent row-band shard pool: created once,
         // workers park between decode steps — no spawns in steady
         // state (a 1-lane pool spawns nothing and decode runs serial)
-        let shard_pool = WorkerPool::new(self.opts.shard_workers.max(1));
+        let shard_pool = WorkerPool::new_pinned(
+            self.opts.shard_workers.max(1), self.opts.pin_workers);
         let mut slots: Vec<Slot> = Vec::with_capacity(cap);
         let mut meta: Vec<Meta> = Vec::with_capacity(cap);
         let mut scratch = BatchScratch::new(cfg, cap, chunk);
@@ -592,6 +620,7 @@ impl<'e> Scheduler<'e> {
             kv_pool_bytes: 0,
             shard_busy: Vec::new(),
             shard_idle: Vec::new(),
+            pinned_lanes: 0,
         };
         let mut prefill_jobs: Vec<(usize, usize)> = Vec::with_capacity(cap);
 
@@ -725,6 +754,7 @@ impl<'e> Scheduler<'e> {
         out.kv_pool_bytes = pool.bytes();
         let ps = shard_pool.stats();
         out.shard_idle = ps.idle_seconds();
+        out.pinned_lanes = ps.pinned_count();
         out.shard_busy = ps.busy_seconds;
         out
     }
@@ -950,6 +980,9 @@ fn summarize(finished: &[FinishedRequest], wall: f64, steps: u64,
         shard_idle_seconds: shard.idle,
         // overwritten by callers that hold the engine
         quant_mode: "none",
+        nm_mode: "off",
+        kernel_path: "scalar",
+        pinned_lanes: 0,
         weight_mem_bytes: 0,
     }
 }
@@ -984,6 +1017,7 @@ pub fn serve_static_chunks(engine: &Engine, requests: &[Request],
     let mut pre = PrefillCounts { tokens: 0, chunks: 0 };
     let mut steps = 0u64;
     let (mut kv_allocated, mut kv_reused) = (0usize, 0usize);
+    let mut pinned_lanes = 0usize;
     // each group runs its own Scheduler, hence its own prefix cache:
     // sharing stays within a group, and the totals below sum groups
     let mut cache = CacheCounts {
@@ -1019,6 +1053,7 @@ pub fn serve_static_chunks(engine: &Engine, requests: &[Request],
         cache.tokens_saved += st.prefix_tokens_saved;
         cache.cache_bytes += st.prefix_cache_bytes;
         cache.kv_pool_bytes += st.kv_pool_bytes;
+        pinned_lanes += st.pinned_lanes;
         for (acc, v) in shard.busy.iter_mut()
             .zip(&st.shard_busy_seconds) {
             *acc += v;
@@ -1033,6 +1068,9 @@ pub fn serve_static_chunks(engine: &Engine, requests: &[Request],
     let mut stats = summarize(&finished, wall, steps, prefill, decode, pre,
                               kv_allocated, kv_reused, cache, shard);
     stats.quant_mode = engine.quant.label();
+    stats.nm_mode = engine.nm.label();
+    stats.kernel_path = engine.kernel_path.label();
+    stats.pinned_lanes = pinned_lanes;
     stats.weight_mem_bytes = engine.mem_bytes();
     (finished, stats)
 }
@@ -1051,6 +1089,22 @@ pub fn prefix_cache_flag(args: &Args) -> Result<bool> {
     }
 }
 
+/// Parse `--pin-workers {on,off}` (also accepts true/false, 1/0,
+/// yes/no; a bare `--pin-workers` means on). Defaults to off —
+/// pinning is an opt-in placement hint, see
+/// [`WorkerPool::new_pinned`].
+pub fn pin_workers_flag(args: &Args) -> Result<bool> {
+    match args.get("pin-workers") {
+        None => Ok(false),
+        Some(v) => match v.to_ascii_lowercase().as_str() {
+            "on" | "true" | "1" | "yes" => Ok(true),
+            "off" | "false" | "0" | "no" => Ok(false),
+            other => anyhow::bail!(
+                "--pin-workers expects on|off, got {other:?}"),
+        },
+    }
+}
+
 /// `elsa serve` subcommand: load a checkpoint, synthesize a seeded
 /// request stream with Poisson-ish arrivals, and drain it through the
 /// continuous-batching scheduler.
@@ -1064,8 +1118,12 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow::anyhow!("bad --backend"))?;
     let quant =
         crate::sparse::QuantMode::parse(&args.str_or("quant", "none"))?;
-    let mut engine = Engine::build_quant(&params, backend, quant)?;
+    let nm = crate::sparse::NmMode::parse(&args.str_or("nm", "off"))?;
+    let mut engine = Engine::build_full(&params, backend, quant, nm)?;
     engine.tiled = !args.bool("untiled");
+    if let Some(p) = args.get("kernel-path") {
+        engine.kernel_path = crate::sparse::KernelPath::parse(p)?;
+    }
     engine.prefill_chunk = args
         .usize_or("prefill-chunk", super::DEFAULT_PREFILL_CHUNK)?
         .max(1);
@@ -1077,6 +1135,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let threads = args.usize_or("threads", 1)?;
     let shard_workers = args.usize_or("shard-workers", 1)?;
     let prefix_cache = prefix_cache_flag(args)?;
+    let pin_workers = pin_workers_flag(args)?;
     let prompt_len = args.usize_or("prompt-len", 8)?;
     anyhow::ensure!(prompt_len <= cfg.seq_len,
                     "--prompt-len {prompt_len} exceeds the model's \
@@ -1110,6 +1169,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         threads,
         shard_workers,
         prefix_cache,
+        pin_workers,
     });
     let (finished, stats) = sched.run(queue);
 
@@ -1129,10 +1189,14 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     }
     println!("backend {:?}", backend);
     println!("quant {}", stats.quant_mode);
+    println!("nm {} kernel_path {}", stats.nm_mode, stats.kernel_path);
     println!("sparsity {:.4}", params.sparsity());
     println!("requests {} expired {}", stats.requests, stats.expired);
     println!("max_slots {max_slots} threads {threads} \
               shard_workers {shard_workers} arrival_gap {gap}");
+    println!("pin_workers {} pinned_lanes {}",
+             if pin_workers { "on" } else { "off" },
+             stats.pinned_lanes);
     println!("tokens_generated {}", stats.tokens_generated);
     println!("agg_tokens_per_s {:.2}", stats.tokens_per_second);
     println!("p50_ms {:.2}", stats.p50_latency_ms);
@@ -1247,6 +1311,7 @@ mod tests {
             kv_pool_bytes: 0,
             shard_busy: Vec::new(),
             shard_idle: Vec::new(),
+            pinned_lanes: 0,
         };
         let outs = vec![lane(1.0, 2.0), lane(3.0, 5.0)];
         let (prefill, decode) = sum_worker_seconds(&outs);
@@ -1303,6 +1368,7 @@ mod tests {
             kv_pool_bytes: 0,
             shard_busy: Vec::new(),
             shard_idle: Vec::new(),
+            pinned_lanes: 0,
         };
         sched.admit(&shared, 4, &mut slots, &mut meta, &mut pool,
                     &mut out);

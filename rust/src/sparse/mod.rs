@@ -17,16 +17,120 @@
 //! in [`quantized`]): identical index/bitmap structure, int8 or int4
 //! codes with per-row-block absmax scales instead of f32 values, and
 //! dequant fused into the same kernel set — the Elsa-L serving path.
+//!
+//! Semi-structured N:M checkpoints get their own format ([`NmSparse`]
+//! in [`nm`]): a fixed nonzero count per M-column group makes the
+//! inner loop branch-free with compile-time trip counts. Every
+//! format's hot loops additionally come in two [`KernelPath`]s —
+//! `Scalar` (the bit-exact reference) and `Unrolled` (explicit
+//! fixed-width lane accumulators) — that produce bit-identical output
+//! because unrolling only ever spreads *independent* accumulators
+//! (batch lanes, output rows), never reassociates within one.
 
+pub mod nm;
 pub mod quantized;
 pub mod tile;
 
+pub use nm::{nm_project, NmMode, NmSparse, NmWeights};
 pub use quantized::{CsrQ, MackoQ, QuantMode, QUANT_BLOCK};
 pub use tile::{dense_plan, matvec_batch_tiled, par_matvec_batch_tiled,
                pool_matvec_batch_tiled, pool_t_matmat, RowTiled, Tile,
                TilePlan};
 
+use anyhow::{bail, Result};
+
 use crate::tensor::Matrix;
+
+/// Runtime traversal-path toggle for the hot SpMM loops. Both paths
+/// are bit-identical (see the module docs); `Scalar` exists as the
+/// always-trusted reference and as the CI forcing target, `Unrolled`
+/// is the default serving path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelPath {
+    /// One accumulator at a time, the exact pre-PR-8 loops.
+    Scalar,
+    /// Manual 4-wide unrolling over independent accumulators (batch
+    /// lanes in the tiled kernels, output rows in the N:M matvec).
+    #[default]
+    Unrolled,
+}
+
+/// Environment variable that forces a kernel path engine-wide — the
+/// CI `kernel-paths` steps set it to run the whole kernel test suite
+/// once per path. An invalid value panics: a typo silently falling
+/// back to the default would defeat the forcing.
+pub const KERNEL_PATH_ENV: &str = "ELSA_KERNEL_PATH";
+
+impl KernelPath {
+    pub fn parse(s: &str) -> Result<KernelPath> {
+        Ok(match s {
+            "scalar" => KernelPath::Scalar,
+            "unrolled" => KernelPath::Unrolled,
+            other => bail!("unknown kernel path '{other}' \
+                            (expected scalar or unrolled)"),
+        })
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            KernelPath::Scalar => "scalar",
+            KernelPath::Unrolled => "unrolled",
+        }
+    }
+
+    /// The engine-build default: `ELSA_KERNEL_PATH` if set (panicking
+    /// on garbage), else `Unrolled`. Explicit `--kernel-path` flags
+    /// and explicit-path tests override/ignore this freely.
+    pub fn default_path() -> KernelPath {
+        match std::env::var(KERNEL_PATH_ENV) {
+            Ok(v) => KernelPath::parse(&v).unwrap_or_else(|e| {
+                panic!("{KERNEL_PATH_ENV}: {e}")
+            }),
+            Err(_) => KernelPath::Unrolled,
+        }
+    }
+}
+
+/// `acc[:] += v * xrow[:]` across the batch lanes of one nonzero —
+/// the shared inner step of every format's tiled/batched kernel. The
+/// `Unrolled` arm walks four independent lanes per iteration; lane
+/// accumulation order per lane is identical to `Scalar`, so the two
+/// paths are bit-exact. `#[inline(always)]` so the per-path `match`
+/// is hoisted out of callers' nonzero loops (loop unswitching).
+#[inline(always)]
+pub(crate) fn axpy_lanes(acc: &mut [f32], xrow: &[f32], v: f32,
+                         path: KernelPath) {
+    debug_assert_eq!(acc.len(), xrow.len());
+    match path {
+        KernelPath::Scalar => {
+            for (a, xv) in acc.iter_mut().zip(xrow.iter()) {
+                *a += v * xv;
+            }
+        }
+        KernelPath::Unrolled => {
+            let b = acc.len();
+            let mut i = 0usize;
+            while i + 4 <= b {
+                // four independent lanes — no reassociation within any
+                unsafe {
+                    *acc.get_unchecked_mut(i) +=
+                        v * *xrow.get_unchecked(i);
+                    *acc.get_unchecked_mut(i + 1) +=
+                        v * *xrow.get_unchecked(i + 1);
+                    *acc.get_unchecked_mut(i + 2) +=
+                        v * *xrow.get_unchecked(i + 2);
+                    *acc.get_unchecked_mut(i + 3) +=
+                        v * *xrow.get_unchecked(i + 3);
+                }
+                i += 4;
+            }
+            while i < b {
+                acc[i] += v * xrow[i];
+                i += 1;
+            }
+        }
+    }
+}
 
 /// CSR over W^T: row r holds the non-zeros of output neuron r.
 #[derive(Debug, Clone)]
@@ -131,13 +235,16 @@ impl Csr {
     /// cache-sized row tile of the construction-time [`TilePlan`] once
     /// per step and applies it across all `b` sequences while the
     /// tile's index/value slices are cache-resident. Bit-identical to
-    /// the untiled path for every batch size (see [`tile`]).
+    /// the untiled path for every batch size and either [`KernelPath`]
+    /// (see [`tile`]); `b == 1` falls through to the single-vector
+    /// scan, which has no batch lanes to unroll.
     pub fn matvec_batch_tiled_into(&self, x: &[f32], y: &mut [f32],
-                                   b: usize, scratch: &mut SpmmScratch) {
+                                   b: usize, scratch: &mut SpmmScratch,
+                                   path: KernelPath) {
         if b == 1 {
             return self.matvec(x, y);
         }
-        tile::matvec_batch_tiled(self, &self.plan, x, y, b, scratch);
+        tile::matvec_batch_tiled(self, &self.plan, x, y, b, scratch, path);
     }
 
     /// Matrix convenience wrapper over [`Csr::matvec_batch`]:
@@ -328,13 +435,16 @@ impl Macko {
     /// cache-sized row tile of the construction-time [`TilePlan`] once
     /// per step and applies it across all `b` sequences while the
     /// tile's bitmap/value slices are cache-resident. Bit-identical to
-    /// the untiled path for every batch size (see [`tile`]).
+    /// the untiled path for every batch size and either [`KernelPath`]
+    /// (see [`tile`]); `b == 1` falls through to the single-vector
+    /// scan, which has no batch lanes to unroll.
     pub fn matvec_batch_tiled_into(&self, x: &[f32], y: &mut [f32],
-                                   b: usize, scratch: &mut SpmmScratch) {
+                                   b: usize, scratch: &mut SpmmScratch,
+                                   path: KernelPath) {
         if b == 1 {
             return self.matvec(x, y);
         }
-        tile::matvec_batch_tiled(self, &self.plan, x, y, b, scratch);
+        tile::matvec_batch_tiled(self, &self.plan, x, y, b, scratch, path);
     }
 
     /// Matrix convenience wrapper over [`Macko::matvec_batch`]:
@@ -601,6 +711,33 @@ mod tests {
             mck.matmat_into(&x, &mut y, &mut scratch);
             assert_eq!(y.data, mck.matmat(&x).data, "macko b={b}");
         }
+    }
+
+    #[test]
+    fn axpy_lanes_paths_are_bitwise_identical() {
+        // every remainder class of the 4-wide unroll
+        for b in [1usize, 2, 3, 4, 5, 7, 8, 16, 19] {
+            let mut rng = Rng::new(b as u64);
+            let xrow: Vec<f32> = (0..b).map(|_| rng.normal()).collect();
+            let base: Vec<f32> = (0..b).map(|_| rng.normal()).collect();
+            let v = rng.normal();
+            let mut s = base.clone();
+            let mut u = base.clone();
+            axpy_lanes(&mut s, &xrow, v, KernelPath::Scalar);
+            axpy_lanes(&mut u, &xrow, v, KernelPath::Unrolled);
+            assert_eq!(s, u, "b={b}");
+        }
+    }
+
+    #[test]
+    fn kernel_path_parse_and_labels() {
+        assert_eq!(KernelPath::parse("scalar").unwrap(),
+                   KernelPath::Scalar);
+        assert_eq!(KernelPath::parse("unrolled").unwrap(),
+                   KernelPath::Unrolled);
+        assert!(KernelPath::parse("simd").is_err());
+        assert_eq!(KernelPath::Scalar.label(), "scalar");
+        assert_eq!(KernelPath::default(), KernelPath::Unrolled);
     }
 
     #[test]

@@ -1,0 +1,722 @@
+//! N:M semi-structured sparse format (ISSUE 8 tentpole).
+//!
+//! [`NmSparse<N, M>`] stores a weight whose transpose rows obey an
+//! `N:M` pattern: every group of `M` consecutive input columns holds
+//! at most `N` nonzeros. The format stores **exactly** `N` slots per
+//! group — a 4-byte value plus a 1-byte in-group column offset, groups
+//! row-major and contiguous — padding short groups with explicit
+//! zeros. That fixed slot count is the whole point: the matvec/SpMM
+//! inner loop is a compile-time-constant `N`-trip walk with no
+//! per-row branching (CSR's `row_ptr[o]..row_ptr[o+1]` bounds and
+//! MACKO's bitmap scans both branch per row), which is what lets the
+//! optimizer keep the accumulators in vector registers. `N` and `M`
+//! are const generics, so a malformed pattern (`N > M`, `M > 256`)
+//! fails at compile time, and the only two instantiations the engine
+//! builds — 2:4 and 4:8, the patterns one-shot pruners like ALPS
+//! target — are selected through [`NmMode`]/[`NmWeights`].
+//!
+//! Construction verifies the pattern against the pruned f32
+//! checkpoint and rejects violations loudly (`ensure!`): a group with
+//! more than `N` nonzeros, or an input dimension not divisible by
+//! `M`, is a checkpoint bug, never something to paper over.
+//!
+//! ## Bit-exactness
+//!
+//! Every traversal — single-vector, batched, row-tiled, pooled
+//! row-band shards, and both [`KernelPath`]s — accumulates each
+//! output row in the identical order: groups ascending, slots
+//! ascending within the group, padded slots included (`acc += 0.0 *
+//! x` evaluated like any other slot, so the order never depends on
+//! which slots happen to be padding). The unrolled paths only change
+//! *which independent accumulator* advances next (4 output rows at
+//! batch 1, 4 batch lanes otherwise), never the order within one
+//! accumulator — so `NmSparse` joins Regime A of the determinism
+//! contract exactly like every other format (see
+//! `docs/ARCHITECTURE.md` §3).
+
+use anyhow::{bail, ensure, Result};
+
+use super::tile::{self, RowTiled, Tile, TilePlan};
+use super::{axpy_lanes, transpose_batch_into, KernelPath, SpmmScratch};
+use crate::tensor::Matrix;
+
+/// The engine-facing N:M selector: `--nm {off,2:4,4:8}`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum NmMode {
+    /// No N:M structure — the backend's general format serves.
+    #[default]
+    Off,
+    /// 2 nonzeros per 4 input columns (50% density).
+    N2M4,
+    /// 4 nonzeros per 8 input columns (50% density, wider groups).
+    N4M8,
+}
+
+impl NmMode {
+    pub fn parse(s: &str) -> Result<NmMode> {
+        Ok(match s {
+            "off" => NmMode::Off,
+            "2:4" => NmMode::N2M4,
+            "4:8" => NmMode::N4M8,
+            other => bail!("unknown N:M mode '{other}' \
+                            (expected off, 2:4 or 4:8)"),
+        })
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            NmMode::Off => "off",
+            NmMode::N2M4 => "2:4",
+            NmMode::N4M8 => "4:8",
+        }
+    }
+
+    /// Nonzeros per group (0 when off).
+    pub fn n(self) -> usize {
+        match self {
+            NmMode::Off => 0,
+            NmMode::N2M4 => 2,
+            NmMode::N4M8 => 4,
+        }
+    }
+
+    /// Group width in input columns (0 when off).
+    pub fn m(self) -> usize {
+        match self {
+            NmMode::Off => 0,
+            NmMode::N2M4 => 4,
+            NmMode::N4M8 => 8,
+        }
+    }
+
+    pub fn is_on(self) -> bool {
+        self != NmMode::Off
+    }
+}
+
+/// N:M weight over W^T rows: row `o` holds `n_in / M` groups of
+/// exactly `N` (value, in-group offset) slots, groups ascending,
+/// short groups padded with explicit zero slots.
+#[derive(Debug, Clone)]
+pub struct NmSparse<const N: usize, const M: usize> {
+    pub n_out: usize,
+    pub n_in: usize,
+    /// Real (pre-padding) nonzero count, for honest density reporting.
+    nnz: usize,
+    /// `n_out * (n_in / M) * N` values, padded slots hold `0.0`.
+    pub values: Vec<f32>,
+    /// Per-slot column offset within its `M`-group (`0..M`); padded
+    /// slots hold `0` (their value is zero, so the column is inert).
+    pub offsets: Vec<u8>,
+    /// Row-tiled execution plan (traversal metadata only, excluded
+    /// from [`NmSparse::mem_bytes`]).
+    pub plan: TilePlan,
+}
+
+impl<const N: usize, const M: usize> NmSparse<N, M> {
+    /// Compile-time pattern check: referencing this constant rejects
+    /// a malformed instantiation (`N > M`, zero-width groups, offsets
+    /// that would not fit the u8 table) during monomorphization.
+    const PATTERN_OK: usize = {
+        assert!(N >= 1 && N <= M && M <= 256, "malformed N:M pattern");
+        0
+    };
+
+    /// Slots stored per output row (uniform — the fixed trip count).
+    #[inline(always)]
+    fn slots_per_row(&self) -> usize {
+        (self.n_in / M) * N
+    }
+
+    /// Bytes of payload per row: 4 B value + 1 B offset per slot.
+    #[inline(always)]
+    fn row_bytes(&self) -> usize {
+        self.slots_per_row() * 5
+    }
+
+    /// Build from a (din, dout) weight matrix (x @ W orientation),
+    /// verifying the N:M pattern group by group. A group with more
+    /// than `N` nonzeros or a `din` not divisible by `M` is rejected
+    /// loudly — run the checkpoint through [`nm_project`] (or an
+    /// N:M-aware pruner) first if it is not already structured.
+    pub fn from_weight(w: &Matrix) -> Result<NmSparse<N, M>> {
+        let _ = Self::PATTERN_OK;
+        let (din, dout) = (w.rows, w.cols);
+        ensure!(din % M == 0,
+                "N:M ({N}:{M}) needs the input dimension divisible by \
+                 {M}, got {din}");
+        let gpr = din / M;
+        let spr = gpr * N;
+        let mut values = Vec::with_capacity(dout * spr);
+        let mut offsets: Vec<u8> = Vec::with_capacity(dout * spr);
+        let mut nnz = 0usize;
+        for c in 0..dout {
+            for g in 0..gpr {
+                let mut cnt = 0usize;
+                for j in 0..M {
+                    let v = w.at(g * M + j, c);
+                    if v != 0.0 {
+                        let lo = g * M;
+                        let hi = g * M + M;
+                        ensure!(cnt < N,
+                                "N:M ({N}:{M}) pattern violation: \
+                                 output row {c}, input group {g} \
+                                 (rows {lo}..{hi}) has more than {N} \
+                                 nonzeros");
+                        values.push(v);
+                        offsets.push(j as u8);
+                        cnt += 1;
+                        nnz += 1;
+                    }
+                }
+                // pad to the fixed N slots — the branch-free kernels
+                // walk exactly N entries per group, always
+                while cnt < N {
+                    values.push(0.0);
+                    offsets.push(0);
+                    cnt += 1;
+                }
+            }
+        }
+        let plan = TilePlan::from_row_bytes(dout, |_| spr * 5);
+        Ok(NmSparse { n_out: dout, n_in: din, nnz, values, offsets, plan })
+    }
+
+    /// One output row's accumulation — THE reference order every
+    /// other traversal replays: groups ascending, the fixed `N` slots
+    /// ascending within each group, one sequential accumulator.
+    #[inline(always)]
+    fn row_acc(&self, o: usize, x: &[f32]) -> f32 {
+        let gpr = self.n_in / M;
+        let spr = gpr * N;
+        let mut acc = 0.0f32;
+        for g in 0..gpr {
+            let x0 = g * M;
+            let sb = o * spr + g * N;
+            for j in 0..N {
+                let k = sb + j;
+                acc += unsafe {
+                    *self.values.get_unchecked(k)
+                        * *x.get_unchecked(
+                            x0 + *self.offsets.get_unchecked(k) as usize)
+                };
+            }
+        }
+        acc
+    }
+
+    /// y = W^T x. The inner loop has a compile-time-constant `N` trip
+    /// count per group — no per-row length branch. `Unrolled`
+    /// processes four output rows per pass with four independent
+    /// accumulators (per-row order unchanged, so both paths are
+    /// bit-identical); `Scalar` is the one-row-at-a-time reference.
+    pub fn matvec(&self, x: &[f32], y: &mut [f32], path: KernelPath) {
+        debug_assert_eq!(x.len(), self.n_in);
+        debug_assert_eq!(y.len(), self.n_out);
+        match path {
+            KernelPath::Scalar => {
+                for (o, yo) in y.iter_mut().enumerate() {
+                    *yo = self.row_acc(o, x);
+                }
+            }
+            KernelPath::Unrolled => {
+                const RO: usize = 4;
+                let gpr = self.n_in / M;
+                let spr = gpr * N;
+                let blocks = self.n_out / RO;
+                for blk in 0..blocks {
+                    let o0 = blk * RO;
+                    let mut acc = [0.0f32; RO];
+                    for g in 0..gpr {
+                        let x0 = g * M;
+                        for (r, a) in acc.iter_mut().enumerate() {
+                            let sb = (o0 + r) * spr + g * N;
+                            for j in 0..N {
+                                let k = sb + j;
+                                *a += unsafe {
+                                    *self.values.get_unchecked(k)
+                                        * *x.get_unchecked(
+                                            x0 + *self.offsets
+                                                .get_unchecked(k)
+                                                as usize)
+                                };
+                            }
+                        }
+                    }
+                    y[o0..o0 + RO].copy_from_slice(&acc);
+                }
+                for o in blocks * RO..self.n_out {
+                    y[o] = self.row_acc(o, x);
+                }
+            }
+        }
+    }
+
+    /// Multi-vector SpMM, untiled scalar reference (the analogue of
+    /// [`super::Csr::matvec_batch_into`]): decodes each row's fixed
+    /// slot list once and amortizes it across the batch. Per sequence
+    /// the accumulation order is identical to the scalar
+    /// [`NmSparse::matvec`], so results are bit-exact with the
+    /// single-vector path.
+    pub fn matvec_batch_into(&self, x: &[f32], y: &mut [f32], b: usize,
+                             scratch: &mut SpmmScratch) {
+        debug_assert_eq!(x.len(), b * self.n_in);
+        debug_assert_eq!(y.len(), b * self.n_out);
+        if b == 1 {
+            return self.matvec(x, y, KernelPath::Scalar);
+        }
+        transpose_batch_into(x, b, self.n_in, &mut scratch.xt);
+        scratch.acc.resize(b, 0.0);
+        let xt = &scratch.xt[..];
+        let acc = &mut scratch.acc;
+        let gpr = self.n_in / M;
+        let spr = gpr * N;
+        for o in 0..self.n_out {
+            acc.fill(0.0);
+            for g in 0..gpr {
+                let x0 = g * M;
+                let sb = o * spr + g * N;
+                for j in 0..N {
+                    let k = sb + j;
+                    let v = self.values[k];
+                    let c = x0 + self.offsets[k] as usize;
+                    let xrow = &xt[c * b..c * b + b];
+                    for (a, xv) in acc.iter_mut().zip(xrow.iter()) {
+                        *a += v * xv;
+                    }
+                }
+            }
+            for (bi, &a) in acc.iter().enumerate() {
+                y[bi * self.n_out + o] = a;
+            }
+        }
+    }
+
+    /// Allocating convenience wrapper over
+    /// [`NmSparse::matvec_batch_into`].
+    pub fn matvec_batch(&self, x: &[f32], y: &mut [f32], b: usize) {
+        self.matvec_batch_into(x, y, b, &mut SpmmScratch::default());
+    }
+
+    /// Tiled variant: walks the construction-time [`TilePlan`] like
+    /// every other format ([`super::tile`]), bit-identical to the
+    /// untiled path for every batch size, geometry and kernel path.
+    pub fn matvec_batch_tiled_into(&self, x: &[f32], y: &mut [f32],
+                                   b: usize, scratch: &mut SpmmScratch,
+                                   path: KernelPath) {
+        if b == 1 {
+            return self.matvec(x, y, path);
+        }
+        tile::matvec_batch_tiled(self, &self.plan, x, y, b, scratch, path);
+    }
+
+    /// Rebuild the row-tile plan with an explicit byte budget and row
+    /// cap — the [`super::Csr::retile`] counterpart. Rows are uniform
+    /// here (fixed slot count), so tiles are too.
+    pub fn retile(&mut self, target_bytes: usize, max_rows: usize) {
+        let rb = self.row_bytes();
+        self.plan = TilePlan::with_budget(self.n_out, |_| rb,
+                                          target_bytes, max_rows);
+    }
+
+    /// Real nonzeros (padding slots excluded).
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Resident payload: 4 B per value slot + 1 B per offset slot
+    /// (padding included — it is genuinely stored).
+    pub fn mem_bytes(&self) -> usize {
+        self.values.len() * 4 + self.offsets.len()
+    }
+
+    /// Reconstruct the (din, dout) weight, for tests and parity
+    /// checks.
+    pub fn to_dense(&self) -> Matrix {
+        let mut w = Matrix::zeros(self.n_in, self.n_out);
+        let gpr = self.n_in / M;
+        let spr = gpr * N;
+        for o in 0..self.n_out {
+            for g in 0..gpr {
+                for j in 0..N {
+                    let k = o * spr + g * N + j;
+                    let v = self.values[k];
+                    if v != 0.0 {
+                        let r = g * M + self.offsets[k] as usize;
+                        *w.at_mut(r, o) += v;
+                    }
+                }
+            }
+        }
+        w
+    }
+}
+
+impl<const N: usize, const M: usize> RowTiled for NmSparse<N, M> {
+    fn n_in(&self) -> usize {
+        self.n_in
+    }
+
+    fn n_out(&self) -> usize {
+        self.n_out
+    }
+
+    fn exec_tiles(&self, tiles: &[Tile], xt: &[f32], yt: &mut [f32],
+                  b: usize, path: KernelPath) {
+        let Some(first) = tiles.first() else { return };
+        let base = first.row0;
+        let gpr = self.n_in / M;
+        let spr = gpr * N;
+        for t in tiles {
+            for o in t.row0..t.row1 {
+                let yrow = &mut yt[(o - base) * b..(o - base) * b + b];
+                yrow.fill(0.0);
+                for g in 0..gpr {
+                    let x0 = g * M;
+                    let sb = o * spr + g * N;
+                    for j in 0..N {
+                        let k = sb + j;
+                        let v = self.values[k];
+                        let c = x0 + self.offsets[k] as usize;
+                        let xrow = &xt[c * b..c * b + b];
+                        axpy_lanes(yrow, xrow, v, path);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The two monomorphizations the engine serves, behind one enum so
+/// `WeightFmt` stays closed and non-generic. All methods delegate.
+#[derive(Debug, Clone)]
+pub enum NmWeights {
+    N2M4(NmSparse<2, 4>),
+    N4M8(NmSparse<4, 8>),
+}
+
+macro_rules! nm_delegate {
+    ($self:ident, $s:ident => $body:expr) => {
+        match $self {
+            NmWeights::N2M4($s) => $body,
+            NmWeights::N4M8($s) => $body,
+        }
+    };
+}
+
+impl NmWeights {
+    /// Build the mode's format from a pruned f32 checkpoint weight,
+    /// verifying the pattern ([`NmSparse::from_weight`]).
+    pub fn from_weight(w: &Matrix, mode: NmMode) -> Result<NmWeights> {
+        match mode {
+            NmMode::Off => bail!("NmWeights::from_weight with mode off"),
+            NmMode::N2M4 => Ok(NmWeights::N2M4(NmSparse::from_weight(w)?)),
+            NmMode::N4M8 => Ok(NmWeights::N4M8(NmSparse::from_weight(w)?)),
+        }
+    }
+
+    pub fn mode(&self) -> NmMode {
+        match self {
+            NmWeights::N2M4(_) => NmMode::N2M4,
+            NmWeights::N4M8(_) => NmMode::N4M8,
+        }
+    }
+
+    pub fn n_in(&self) -> usize {
+        nm_delegate!(self, s => s.n_in)
+    }
+
+    pub fn n_out(&self) -> usize {
+        nm_delegate!(self, s => s.n_out)
+    }
+
+    pub fn matvec(&self, x: &[f32], y: &mut [f32], path: KernelPath) {
+        nm_delegate!(self, s => s.matvec(x, y, path))
+    }
+
+    pub fn matvec_batch_into(&self, x: &[f32], y: &mut [f32], b: usize,
+                             scratch: &mut SpmmScratch) {
+        nm_delegate!(self, s => s.matvec_batch_into(x, y, b, scratch))
+    }
+
+    pub fn matvec_batch_tiled_into(&self, x: &[f32], y: &mut [f32],
+                                   b: usize, scratch: &mut SpmmScratch,
+                                   path: KernelPath) {
+        nm_delegate!(self, s =>
+            s.matvec_batch_tiled_into(x, y, b, scratch, path))
+    }
+
+    pub fn retile(&mut self, target_bytes: usize, max_rows: usize) {
+        nm_delegate!(self, s => s.retile(target_bytes, max_rows))
+    }
+
+    pub fn nnz(&self) -> usize {
+        nm_delegate!(self, s => s.nnz())
+    }
+
+    pub fn mem_bytes(&self) -> usize {
+        nm_delegate!(self, s => s.mem_bytes())
+    }
+}
+
+/// Project a (din, dout) weight onto the `n:m` pattern by magnitude:
+/// per output column and per group of `m` consecutive input rows,
+/// keep the `n` largest-|w| entries and zero the rest (ties broken by
+/// lower row index, so the projection is deterministic). The
+/// test/bench-side producer of valid N:M checkpoints — i.i.d.
+/// magnitude pruning almost never lands on the pattern by accident.
+pub fn nm_project(w: &Matrix, n: usize, m: usize) -> Matrix {
+    assert!(n >= 1 && n <= m, "malformed {n}:{m} projection");
+    assert_eq!(w.rows % m, 0,
+               "nm_project: {} rows not divisible by group width {m}",
+               w.rows);
+    let mut out = w.clone();
+    let mut idx: Vec<usize> = Vec::with_capacity(m);
+    for c in 0..w.cols {
+        for g in 0..w.rows / m {
+            idx.clear();
+            idx.extend(0..m);
+            idx.sort_by(|&a, &b| {
+                let va = w.at(g * m + a, c).abs();
+                let vb = w.at(g * m + b, c).abs();
+                vb.partial_cmp(&va).unwrap().then(a.cmp(&b))
+            });
+            for &j in &idx[n..] {
+                *out.at_mut(g * m + j, c) = 0.0;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{dense_matvec, random_sparse_weight, Csr};
+    use crate::util::rng::Rng;
+
+    fn nm24_weight(din: usize, dout: usize, seed: u64) -> Matrix {
+        nm_project(&random_sparse_weight(din, dout, 0.3, seed), 2, 4)
+    }
+
+    fn input(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn nm24_matches_dense_reference() {
+        let w = nm24_weight(64, 48, 1);
+        let nm = NmSparse::<2, 4>::from_weight(&w).unwrap();
+        let x = input(64, 2);
+        let mut yd = vec![0.0f32; 48];
+        let mut yn = vec![0.0f32; 48];
+        dense_matvec(&w, &x, &mut yd);
+        nm.matvec(&x, &mut yn, KernelPath::Scalar);
+        for (a, b) in yd.iter().zip(yn.iter()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn nm48_matches_dense_reference() {
+        let w = nm_project(&random_sparse_weight(64, 40, 0.3, 3), 4, 8);
+        let nm = NmSparse::<4, 8>::from_weight(&w).unwrap();
+        let x = input(64, 4);
+        let mut yd = vec![0.0f32; 40];
+        let mut yn = vec![0.0f32; 40];
+        dense_matvec(&w, &x, &mut yd);
+        nm.matvec(&x, &mut yn, KernelPath::Scalar);
+        for (a, b) in yd.iter().zip(yn.iter()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn rejects_pattern_violation_loudly() {
+        // a dense 4-group has 4 nonzeros: 2:4 must refuse it
+        let mut w = Matrix::zeros(8, 3);
+        for r in 0..4 {
+            *w.at_mut(r, 1) = 1.0 + r as f32;
+        }
+        let err = NmSparse::<2, 4>::from_weight(&w).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("pattern violation"), "{msg}");
+        assert!(msg.contains("output row 1"), "{msg}");
+    }
+
+    #[test]
+    fn rejects_input_dim_not_divisible_by_m() {
+        let w = Matrix::zeros(10, 4); // 10 % 4 != 0
+        let err = NmSparse::<2, 4>::from_weight(&w).unwrap_err();
+        assert!(format!("{err:#}").contains("divisible"),
+                "{err:#}");
+    }
+
+    #[test]
+    fn all_zero_groups_pad_and_decode_to_zero() {
+        let w = Matrix::zeros(16, 6);
+        let nm = NmSparse::<2, 4>::from_weight(&w).unwrap();
+        assert_eq!(nm.nnz(), 0);
+        // 4 groups x 2 slots per row, all padding — storage is honest
+        assert_eq!(nm.values.len(), 6 * 4 * 2);
+        let x = vec![1.0f32; 16];
+        for path in [KernelPath::Scalar, KernelPath::Unrolled] {
+            let mut y = vec![7.0f32; 6];
+            nm.matvec(&x, &mut y, path);
+            assert!(y.iter().all(|&v| v == 0.0), "{path:?}");
+        }
+    }
+
+    #[test]
+    fn unrolled_matvec_is_bitwise_scalar() {
+        // n_out = 45 exercises the 4-row block remainder
+        let w = nm24_weight(96, 45, 7);
+        let nm = NmSparse::<2, 4>::from_weight(&w).unwrap();
+        let x = input(96, 8);
+        let mut ys = vec![0.0f32; 45];
+        let mut yu = vec![0.0f32; 45];
+        nm.matvec(&x, &mut ys, KernelPath::Scalar);
+        nm.matvec(&x, &mut yu, KernelPath::Unrolled);
+        assert_eq!(ys, yu, "unrolled matvec diverged from scalar");
+    }
+
+    #[test]
+    fn batch_b1_is_bitwise_matvec() {
+        let w = nm24_weight(64, 40, 11);
+        let nm = NmSparse::<2, 4>::from_weight(&w).unwrap();
+        let x = input(64, 12);
+        let mut y1 = vec![0.0f32; 40];
+        let mut yb = vec![0.0f32; 40];
+        nm.matvec(&x, &mut y1, KernelPath::Scalar);
+        nm.matvec_batch(&x, &mut yb, 1);
+        assert_eq!(y1, yb);
+    }
+
+    #[test]
+    fn batch_matches_per_sequence_bitwise() {
+        let (din, dout) = (96, 50);
+        let w = nm24_weight(din, dout, 21);
+        let nm = NmSparse::<2, 4>::from_weight(&w).unwrap();
+        for b in [2usize, 4, 7] {
+            let x = input(b * din, 100 + b as u64);
+            let mut y = vec![0.0f32; b * dout];
+            nm.matvec_batch(&x, &mut y, b);
+            for bi in 0..b {
+                let mut want = vec![0.0f32; dout];
+                nm.matvec(&x[bi * din..(bi + 1) * din], &mut want,
+                          KernelPath::Scalar);
+                assert_eq!(&y[bi * dout..(bi + 1) * dout], &want[..],
+                           "b={b} row {bi}");
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_and_unrolled_match_untiled_bitwise() {
+        let (din, dout) = (64, 45);
+        let w = nm24_weight(din, dout, 31);
+        let mut nm = NmSparse::<2, 4>::from_weight(&w).unwrap();
+        let mut scratch = SpmmScratch::default();
+        for b in [1usize, 3, 8] {
+            let x = input(b * din, 200 + b as u64);
+            let mut want = vec![0.0f32; b * dout];
+            nm.matvec_batch_into(&x, &mut want, b, &mut scratch);
+            for plan in [TilePlan::from_row_bytes(dout, |_| 90),
+                         TilePlan::fixed(dout, 7),
+                         TilePlan::fixed(dout, 1)] {
+                nm.plan = plan;
+                for path in [KernelPath::Scalar, KernelPath::Unrolled] {
+                    let mut got = vec![0.0f32; b * dout];
+                    nm.matvec_batch_tiled_into(&x, &mut got, b,
+                                               &mut scratch, path);
+                    assert_eq!(got, want, "b={b} {path:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn retile_covers_all_rows_and_stays_bit_exact() {
+        let (din, dout, b) = (64, 40, 5);
+        let w = nm24_weight(din, dout, 41);
+        let mut nm = NmSparse::<2, 4>::from_weight(&w).unwrap();
+        let x = input(b * din, 42);
+        let mut scratch = SpmmScratch::default();
+        let mut want = vec![0.0f32; b * dout];
+        nm.matvec_batch_into(&x, &mut want, b, &mut scratch);
+        for (tb, mr) in [(64usize, 8usize), (1, 1), (1 << 20, 512)] {
+            nm.retile(tb, mr);
+            assert_eq!(nm.plan.tiles.first().unwrap().row0, 0);
+            assert_eq!(nm.plan.tiles.last().unwrap().row1, dout);
+            let mut got = vec![0.0f32; b * dout];
+            nm.matvec_batch_tiled_into(&x, &mut got, b, &mut scratch,
+                                       KernelPath::Unrolled);
+            assert_eq!(got, want, "retile({tb}, {mr})");
+        }
+    }
+
+    #[test]
+    fn to_dense_round_trips_the_projection() {
+        let w = nm24_weight(64, 32, 51);
+        let nm = NmSparse::<2, 4>::from_weight(&w).unwrap();
+        let back = nm.to_dense();
+        assert_eq!(back.data, w.data, "to_dense lost the weight");
+    }
+
+    #[test]
+    fn mem_bytes_counts_values_and_offsets() {
+        let w = nm24_weight(64, 32, 61);
+        let nm = NmSparse::<2, 4>::from_weight(&w).unwrap();
+        let slots = 32 * (64 / 4) * 2;
+        assert_eq!(nm.values.len(), slots);
+        assert_eq!(nm.offsets.len(), slots);
+        assert_eq!(nm.mem_bytes(), slots * 5);
+        // at exactly 50% density the 5 B/slot payload undercuts CSR's
+        // 8 B/nnz — the format's memory claim at its natural shape
+        let dense24 = nm_project(&Matrix::from_vec(
+            64, 32, input(64 * 32, 62)), 2, 4);
+        let full = NmSparse::<2, 4>::from_weight(&dense24).unwrap();
+        assert!(full.mem_bytes() < Csr::from_weight(&dense24).mem_bytes());
+    }
+
+    #[test]
+    fn nm_project_produces_a_valid_pattern() {
+        let w = random_sparse_weight(96, 40, 0.2, 71);
+        let p = nm_project(&w, 2, 4);
+        // every group obeys the pattern and keeps the largest entries
+        for c in 0..p.cols {
+            for g in 0..p.rows / 4 {
+                let kept: Vec<f32> = (0..4)
+                    .map(|j| p.at(g * 4 + j, c))
+                    .filter(|v| *v != 0.0)
+                    .collect();
+                assert!(kept.len() <= 2, "col {c} group {g}");
+            }
+        }
+        assert!(NmSparse::<2, 4>::from_weight(&p).is_ok());
+    }
+
+    #[test]
+    fn nmweights_delegates_and_reports_mode() {
+        let w = nm24_weight(64, 32, 81);
+        let nm = NmWeights::from_weight(&w, NmMode::N2M4).unwrap();
+        assert_eq!(nm.mode(), NmMode::N2M4);
+        assert_eq!(nm.n_in(), 64);
+        assert_eq!(nm.n_out(), 32);
+        assert!(nm.nnz() > 0);
+        assert!(NmWeights::from_weight(&w, NmMode::Off).is_err());
+    }
+
+    #[test]
+    fn mode_parse_and_labels() {
+        assert_eq!(NmMode::parse("off").unwrap(), NmMode::Off);
+        assert_eq!(NmMode::parse("2:4").unwrap(), NmMode::N2M4);
+        assert_eq!(NmMode::parse("4:8").unwrap(), NmMode::N4M8);
+        assert!(NmMode::parse("1:2").is_err());
+        assert_eq!(NmMode::N2M4.label(), "2:4");
+        assert_eq!(NmMode::N2M4.n(), 2);
+        assert_eq!(NmMode::N4M8.m(), 8);
+        assert!(!NmMode::Off.is_on());
+    }
+}

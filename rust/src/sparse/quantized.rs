@@ -45,7 +45,7 @@
 use anyhow::{bail, ensure, Result};
 
 use super::tile::{self, RowTiled, Tile, TilePlan};
-use super::{transpose_batch_into, SpmmScratch};
+use super::{axpy_lanes, transpose_batch_into, KernelPath, SpmmScratch};
 use crate::tensor::Matrix;
 
 /// Which payload a serving weight carries: f32 (`None`) or a
@@ -345,13 +345,15 @@ impl CsrQ {
     }
 
     /// Tiled variant; see [`Csr::matvec_batch_tiled_into`].
-    /// Bit-identical to the untiled path for every batch size.
+    /// Bit-identical to the untiled path for every batch size and
+    /// either [`KernelPath`].
     pub fn matvec_batch_tiled_into(&self, x: &[f32], y: &mut [f32],
-                                   b: usize, scratch: &mut SpmmScratch) {
+                                   b: usize, scratch: &mut SpmmScratch,
+                                   path: KernelPath) {
         if b == 1 {
             return self.matvec(x, y);
         }
-        tile::matvec_batch_tiled(self, &self.plan, x, y, b, scratch);
+        tile::matvec_batch_tiled(self, &self.plan, x, y, b, scratch, path);
     }
 
     /// Rebuild the row-tile plan; see [`Csr::retile`]. Traversal
@@ -410,7 +412,7 @@ impl RowTiled for CsrQ {
     }
 
     fn exec_tiles(&self, tiles: &[Tile], xt: &[f32], yt: &mut [f32],
-                  b: usize) {
+                  b: usize, path: KernelPath) {
         let Some(first) = tiles.first() else { return };
         let base_row = first.row0;
         for t in tiles {
@@ -426,9 +428,7 @@ impl RowTiled for CsrQ {
                     let v = self.dq(base, sp, k - lo);
                     let c = self.col_idx[k] as usize;
                     let xrow = &xt[c * b..c * b + b];
-                    for (a, xv) in yrow.iter_mut().zip(xrow.iter()) {
-                        *a += v * xv;
-                    }
+                    axpy_lanes(yrow, xrow, v, path);
                 }
             }
         }
@@ -573,13 +573,15 @@ impl MackoQ {
     }
 
     /// Tiled variant; see [`Macko::matvec_batch_tiled_into`].
-    /// Bit-identical to the untiled path for every batch size.
+    /// Bit-identical to the untiled path for every batch size and
+    /// either [`KernelPath`].
     pub fn matvec_batch_tiled_into(&self, x: &[f32], y: &mut [f32],
-                                   b: usize, scratch: &mut SpmmScratch) {
+                                   b: usize, scratch: &mut SpmmScratch,
+                                   path: KernelPath) {
         if b == 1 {
             return self.matvec(x, y);
         }
-        tile::matvec_batch_tiled(self, &self.plan, x, y, b, scratch);
+        tile::matvec_batch_tiled(self, &self.plan, x, y, b, scratch, path);
     }
 
     /// Rebuild the row-tile plan; see [`Macko::retile`].
@@ -650,7 +652,7 @@ impl RowTiled for MackoQ {
     }
 
     fn exec_tiles(&self, tiles: &[Tile], xt: &[f32], yt: &mut [f32],
-                  b: usize) {
+                  b: usize, path: KernelPath) {
         let Some(first) = tiles.first() else { return };
         let base_row = first.row0;
         let wpr = self.words_per_row;
@@ -671,9 +673,7 @@ impl RowTiled for MackoQ {
                         let v = self.dq(base, sp, j);
                         let c = col0 + bit;
                         let xrow = &xt[c * b..c * b + b];
-                        for (a, xv) in yrow.iter_mut().zip(xrow.iter()) {
-                            *a += v * xv;
-                        }
+                        axpy_lanes(yrow, xrow, v, path);
                         j += 1;
                         word &= word - 1;
                     }
@@ -807,29 +807,38 @@ mod tests {
                     let mut got = vec![1.0f32; b * dout];
                     q.matvec_batch_into(&x, &mut got, b, &mut scratch);
                     assert_eq!(got, want, "csrq untiled {tag}");
-                    got.fill(1.0);
-                    q.matvec_batch_tiled_into(&x, &mut got, b,
-                                              &mut scratch);
-                    assert_eq!(got, want, "csrq tiled {tag}");
-                    got.fill(1.0);
-                    tile::pool_matvec_batch_tiled(&q, &q.plan, &x,
-                                                  &mut got, b, &pool,
-                                                  &mut scratch);
-                    assert_eq!(got, want, "csrq pooled {tag}");
+                    for path in [KernelPath::Scalar,
+                                 KernelPath::Unrolled] {
+                        got.fill(1.0);
+                        q.matvec_batch_tiled_into(&x, &mut got, b,
+                                                  &mut scratch, path);
+                        assert_eq!(got, want, "csrq tiled {tag} {path:?}");
+                        got.fill(1.0);
+                        tile::pool_matvec_batch_tiled(&q, &q.plan, &x,
+                                                      &mut got, b, &pool,
+                                                      &mut scratch, path);
+                        assert_eq!(got, want,
+                                   "csrq pooled {tag} {path:?}");
+                    }
 
                     rm.matvec_batch_into(&x, &mut want, b, &mut scratch);
                     got.fill(1.0);
                     qm.matvec_batch_into(&x, &mut got, b, &mut scratch);
                     assert_eq!(got, want, "mackoq untiled {tag}");
-                    got.fill(1.0);
-                    qm.matvec_batch_tiled_into(&x, &mut got, b,
-                                               &mut scratch);
-                    assert_eq!(got, want, "mackoq tiled {tag}");
-                    got.fill(1.0);
-                    tile::pool_matvec_batch_tiled(&qm, &qm.plan, &x,
-                                                  &mut got, b, &pool,
-                                                  &mut scratch);
-                    assert_eq!(got, want, "mackoq pooled {tag}");
+                    for path in [KernelPath::Scalar,
+                                 KernelPath::Unrolled] {
+                        got.fill(1.0);
+                        qm.matvec_batch_tiled_into(&x, &mut got, b,
+                                                   &mut scratch, path);
+                        assert_eq!(got, want,
+                                   "mackoq tiled {tag} {path:?}");
+                        got.fill(1.0);
+                        tile::pool_matvec_batch_tiled(&qm, &qm.plan, &x,
+                                                      &mut got, b, &pool,
+                                                      &mut scratch, path);
+                        assert_eq!(got, want,
+                                   "mackoq pooled {tag} {path:?}");
+                    }
                 }
             }
         }

@@ -39,7 +39,15 @@
 //! quantization error itself, not the traversal, is the sole source of
 //! deviation (see `sparse/quantized.rs` for the analytic bound).
 
-use super::{transpose_batch_into, Csr, Macko, SpmmScratch};
+//! The tiled kernels also take a [`KernelPath`]: `Unrolled` runs the
+//! batch-lane inner loop through 4-wide explicit lane accumulators
+//! ([`super::axpy_lanes`]), `Scalar` is the one-lane-at-a-time
+//! reference. Each lane's accumulation order is identical either way,
+//! so the path choice joins the bit-exactness contract above as
+//! another pure traversal knob.
+
+use super::{axpy_lanes, transpose_batch_into, Csr, KernelPath, Macko,
+            SpmmScratch};
 use crate::infer::pool::WorkerPool;
 use crate::tensor::Matrix;
 
@@ -173,9 +181,11 @@ pub trait RowTiled {
     /// Compute output rows `tiles[0].row0 .. tiles.last().row1` into
     /// `yt`, laid out `yt[(row - tiles[0].row0) * b + bi]`, reading the
     /// `(n_in, b)` batch re-layout `xt`. Rows in the range are fully
-    /// overwritten (zeroed first), so callers never pre-clear.
+    /// overwritten (zeroed first), so callers never pre-clear. `path`
+    /// selects the lane-unrolled or scalar inner loop — bit-identical
+    /// per the module contract.
     fn exec_tiles(&self, tiles: &[Tile], xt: &[f32], yt: &mut [f32],
-                  b: usize);
+                  b: usize, path: KernelPath);
 }
 
 impl RowTiled for Csr {
@@ -188,7 +198,7 @@ impl RowTiled for Csr {
     }
 
     fn exec_tiles(&self, tiles: &[Tile], xt: &[f32], yt: &mut [f32],
-                  b: usize) {
+                  b: usize, path: KernelPath) {
         let Some(first) = tiles.first() else { return };
         let base = first.row0;
         for t in tiles {
@@ -204,9 +214,7 @@ impl RowTiled for Csr {
                     let v = self.values[k];
                     let c = self.col_idx[k] as usize;
                     let xrow = &xt[c * b..c * b + b];
-                    for (a, xv) in yrow.iter_mut().zip(xrow.iter()) {
-                        *a += v * xv;
-                    }
+                    axpy_lanes(yrow, xrow, v, path);
                 }
             }
         }
@@ -223,7 +231,7 @@ impl RowTiled for Macko {
     }
 
     fn exec_tiles(&self, tiles: &[Tile], xt: &[f32], yt: &mut [f32],
-                  b: usize) {
+                  b: usize, path: KernelPath) {
         let Some(first) = tiles.first() else { return };
         let base = first.row0;
         let wpr = self.words_per_row;
@@ -241,9 +249,7 @@ impl RowTiled for Macko {
                         let v = self.values[k];
                         let c = col0 + bit;
                         let xrow = &xt[c * b..c * b + b];
-                        for (a, xv) in yrow.iter_mut().zip(xrow.iter()) {
-                            *a += v * xv;
-                        }
+                        axpy_lanes(yrow, xrow, v, path);
                         k += 1;
                         word &= word - 1;
                     }
@@ -269,7 +275,7 @@ impl RowTiled for Matrix {
     }
 
     fn exec_tiles(&self, tiles: &[Tile], xt: &[f32], yt: &mut [f32],
-                  b: usize) {
+                  b: usize, path: KernelPath) {
         let Some(first) = tiles.first() else { return };
         let base = first.row0;
         for t in tiles {
@@ -284,8 +290,33 @@ impl RowTiled for Matrix {
                     if xv == 0.0 {
                         continue; // same skip rule as t_matvec
                     }
-                    for (j, &wv) in wseg.iter().enumerate() {
-                        yt[(off + j) * b + bi] += xv * wv;
+                    match path {
+                        KernelPath::Scalar => {
+                            for (j, &wv) in wseg.iter().enumerate() {
+                                yt[(off + j) * b + bi] += xv * wv;
+                            }
+                        }
+                        KernelPath::Unrolled => {
+                            // four independent output columns per pass
+                            // — each (column, lane) accumulator still
+                            // sees rows r in ascending order
+                            let m = wseg.len();
+                            let mut j = 0usize;
+                            while j + 4 <= m {
+                                yt[(off + j) * b + bi] += xv * wseg[j];
+                                yt[(off + j + 1) * b + bi] +=
+                                    xv * wseg[j + 1];
+                                yt[(off + j + 2) * b + bi] +=
+                                    xv * wseg[j + 2];
+                                yt[(off + j + 3) * b + bi] +=
+                                    xv * wseg[j + 3];
+                                j += 4;
+                            }
+                            while j < m {
+                                yt[(off + j) * b + bi] += xv * wseg[j];
+                                j += 1;
+                            }
+                        }
                     }
                 }
             }
@@ -305,13 +336,14 @@ pub fn dense_plan(w: &Matrix) -> TilePlan {
 /// `matvec_batch_into` for every batch size and plan geometry.
 pub fn matvec_batch_tiled<T: RowTiled>(t: &T, plan: &TilePlan, x: &[f32],
                                        y: &mut [f32], b: usize,
-                                       scratch: &mut SpmmScratch) {
+                                       scratch: &mut SpmmScratch,
+                                       path: KernelPath) {
     debug_assert_eq!(x.len(), b * t.n_in());
     debug_assert_eq!(y.len(), b * t.n_out());
     debug_assert_eq!(plan.n_rows, t.n_out(), "plan built for another shape");
     transpose_batch_into(x, b, t.n_in(), &mut scratch.xt);
     scratch.yt.resize(t.n_out() * b, 0.0);
-    t.exec_tiles(&plan.tiles, &scratch.xt, &mut scratch.yt, b);
+    t.exec_tiles(&plan.tiles, &scratch.xt, &mut scratch.yt, b, path);
     scatter_rows(&scratch.yt, y, b, t.n_out());
 }
 
@@ -325,10 +357,10 @@ pub fn matvec_batch_tiled<T: RowTiled>(t: &T, plan: &TilePlan, x: &[f32],
 /// thread count; `threads <= 1` runs inline.
 pub fn par_matvec_batch_tiled<T: RowTiled + Sync>(
     t: &T, plan: &TilePlan, x: &[f32], y: &mut [f32], b: usize,
-    threads: usize, scratch: &mut SpmmScratch) {
+    threads: usize, scratch: &mut SpmmScratch, path: KernelPath) {
     let shards = plan.shard_ranges(threads);
     if shards.len() <= 1 {
-        return matvec_batch_tiled(t, plan, x, y, b, scratch);
+        return matvec_batch_tiled(t, plan, x, y, b, scratch, path);
     }
     debug_assert_eq!(x.len(), b * t.n_in());
     debug_assert_eq!(y.len(), b * t.n_out());
@@ -348,7 +380,7 @@ pub fn par_matvec_batch_tiled<T: RowTiled + Sync>(
     std::thread::scope(|sc| {
         for (&(t0, t1), band) in shards.iter().zip(bands) {
             let tiles = &plan.tiles[t0..t1];
-            sc.spawn(move || t.exec_tiles(tiles, xt, band, b));
+            sc.spawn(move || t.exec_tiles(tiles, xt, band, b, path));
         }
     });
     scatter_rows(&scratch.yt, y, b, t.n_out());
@@ -367,10 +399,10 @@ pub fn par_matvec_batch_tiled<T: RowTiled + Sync>(
 /// pool (or single-shard plan) runs the serial tiled kernel inline.
 pub fn pool_matvec_batch_tiled<T: RowTiled + Sync>(
     t: &T, plan: &TilePlan, x: &[f32], y: &mut [f32], b: usize,
-    pool: &WorkerPool, scratch: &mut SpmmScratch) {
+    pool: &WorkerPool, scratch: &mut SpmmScratch, path: KernelPath) {
     let shards = plan.shard_ranges(pool.width());
     if shards.len() <= 1 {
-        return matvec_batch_tiled(t, plan, x, y, b, scratch);
+        return matvec_batch_tiled(t, plan, x, y, b, scratch, path);
     }
     debug_assert_eq!(x.len(), b * t.n_in());
     debug_assert_eq!(y.len(), b * t.n_out());
@@ -398,7 +430,7 @@ pub fn pool_matvec_batch_tiled<T: RowTiled + Sync>(
             std::slice::from_raw_parts_mut(yt_base.0.add(row0 * b),
                                            rows * b)
         };
-        t.exec_tiles(&tiles[t0..t1], xt, band, b);
+        t.exec_tiles(&tiles[t0..t1], xt, band, b, path);
     });
     scatter_rows(&scratch.yt, y, b, t.n_out());
 }
@@ -622,18 +654,55 @@ mod tests {
         let x: Vec<f32> = (0..b * din).map(|_| rng.normal()).collect();
         let mut want = vec![0.0f32; b * dout];
         let mut s0 = SpmmScratch::default();
-        matvec_batch_tiled(&csr, &plan, &x, &mut want, b, &mut s0);
+        matvec_batch_tiled(&csr, &plan, &x, &mut want, b, &mut s0,
+                           KernelPath::Scalar);
         for width in [1usize, 2, 3, 16] {
             let pool = WorkerPool::new(width);
             let mut got = vec![0.0f32; b * dout];
             let mut sp = SpmmScratch::default();
             // twice per pool: the second dispatch exercises the parked
-            // steady state, not the cold start
-            for _ in 0..2 {
+            // steady state, not the cold start; alternate the kernel
+            // path — both must match the serial scalar reference
+            for path in [KernelPath::Scalar, KernelPath::Unrolled] {
                 pool_matvec_batch_tiled(&csr, &plan, &x, &mut got, b,
-                                        &pool, &mut sp);
-                assert_eq!(got, want, "pool width {width}");
+                                        &pool, &mut sp, path);
+                assert_eq!(got, want, "pool width {width} {path:?}");
             }
+        }
+    }
+
+    #[test]
+    fn unrolled_paths_match_scalar_for_all_rowtiled_impls() {
+        use crate::sparse::{random_sparse_weight, Macko};
+        let (din, dout) = (72, 53);
+        let w = random_sparse_weight(din, dout, 0.7, 77);
+        let csr = Csr::from_weight(&w);
+        let mck = Macko::from_weight(&w);
+        let plan = TilePlan::fixed(dout, 5);
+        let dplan = TilePlan::fixed(dout, 5);
+        let mut rng = crate::util::rng::Rng::new(78);
+        for b in [2usize, 3, 4, 5, 8, 9] {
+            let mut x: Vec<f32> =
+                (0..b * din).map(|_| rng.normal()).collect();
+            x[din / 2] = 0.0; // exercise the dense skip-zero rule
+            let mut want = vec![0.0f32; b * dout];
+            let mut got = vec![0.0f32; b * dout];
+            let mut s = SpmmScratch::default();
+            matvec_batch_tiled(&csr, &plan, &x, &mut want, b, &mut s,
+                               KernelPath::Scalar);
+            matvec_batch_tiled(&csr, &plan, &x, &mut got, b, &mut s,
+                               KernelPath::Unrolled);
+            assert_eq!(got, want, "csr b={b}");
+            matvec_batch_tiled(&mck, &plan, &x, &mut want, b, &mut s,
+                               KernelPath::Scalar);
+            matvec_batch_tiled(&mck, &plan, &x, &mut got, b, &mut s,
+                               KernelPath::Unrolled);
+            assert_eq!(got, want, "macko b={b}");
+            matvec_batch_tiled(&w, &dplan, &x, &mut want, b, &mut s,
+                               KernelPath::Scalar);
+            matvec_batch_tiled(&w, &dplan, &x, &mut got, b, &mut s,
+                               KernelPath::Unrolled);
+            assert_eq!(got, want, "dense b={b}");
         }
     }
 }

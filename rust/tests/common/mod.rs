@@ -14,7 +14,8 @@ use elsa::infer::{Backend, Engine};
 use elsa::model::{synthetic_config, Params};
 use elsa::pruners::{magnitude, uniform_alloc};
 use elsa::runtime::ConfigEntry;
-use elsa::sparse::QuantMode;
+use elsa::sparse::{nm_project, NmMode, QuantMode};
+use elsa::tensor::Matrix;
 
 /// Vocab of the toy serving model — prompt token streams index modulo
 /// this.
@@ -58,6 +59,37 @@ pub fn quant_engine(backend: Backend, quant: QuantMode)
     let p = pruned_params(&cfg, 0.75, 1);
     (Engine::build_quant(&p, backend, quant).expect("quant engine"),
      seq_len)
+}
+
+/// [`pruned_params`] re-projected so every prunable linear satisfies
+/// the requested N:M pattern (magnitude top-N per group via
+/// [`nm_project`]); the `NmWeights` build verifies it. The toy dims
+/// (d_model 40, d_ff 64) divide by both 4 and 8, so 2:4 and 4:8 both
+/// apply.
+pub fn nm_params(cfg: &ConfigEntry, nm: NmMode, seed: u64) -> Params {
+    let mut p = pruned_params(cfg, 0.5, seed);
+    for seg in p.cfg.segments.clone() {
+        if seg.prunable && seg.is_matrix() {
+            let w = Matrix::from_vec(
+                seg.shape[0], seg.shape[1],
+                p.flat[seg.offset..seg.end()].to_vec());
+            let proj = nm_project(&w, nm.n(), nm.m());
+            p.flat[seg.offset..seg.end()].copy_from_slice(&proj.data);
+        }
+    }
+    p
+}
+
+/// The toy engine serving an N:M structured checkpoint through the
+/// branch-free `NmSparse` kernels — same seed convention as
+/// [`engine`], but the weights are projected (see [`nm_params`]), so
+/// its streams are self-consistent rather than comparable to the
+/// unstructured engine's. Requires a sparse backend.
+pub fn nm_engine(backend: Backend, nm: NmMode) -> (Engine, usize) {
+    let cfg = toy_cfg();
+    let seq_len = cfg.seq_len;
+    let p = nm_params(&cfg, nm, 1);
+    (Engine::build_nm(&p, backend, nm).expect("nm engine"), seq_len)
 }
 
 /// The toy engine with deliberately tiny tile plans (64-byte budget,

@@ -1,19 +1,23 @@
 //! Seeded randomized determinism sweep (ISSUE 4 satellite, extended
-//! by ISSUE 5 and ISSUE 6): one harness that subsumes the ad-hoc
-//! pairwise checks scattered across the older suites. ~50 seeded
-//! scheduler configurations are drawn over backend × tiled/untiled ×
-//! threads {1,2,4} × shard-workers {1,2,8} × prefill-chunk {1,3,16} ×
-//! max_slots × temperature × arrival pattern × prefix-cache {on,off}
-//! × quant {none,int8,int4} (ISSUE 7: sparse backends only) × request
-//! fixture (ragged / chunk-straddling / shared-prefix families), and
-//! every single one must reproduce the single-sequence `generate()`
-//! streams of a chunk-size-1 reference engine **built at the same
-//! quant mode** bit-for-bit — the engine's headline guarantee:
-//! scheduling policy, kernel traversal, slot sharding, row-band
-//! pooling, prefill chunking and shared-prefix KV caching decide
-//! *when* and *where* a request computes, never *what* it produces.
-//! Quantization changes *what* (tolerance-bounded vs f32, see
-//! `quant_parity.rs`) but is a build-time property of the engine, so
+//! by ISSUE 5, ISSUE 6 and ISSUE 8): one harness that subsumes the
+//! ad-hoc pairwise checks scattered across the older suites. ~70
+//! seeded scheduler configurations are drawn over backend ×
+//! tiled/untiled × threads {1,2,4} × shard-workers {1,2,8} ×
+//! prefill-chunk {1,3,16} × max_slots × temperature × arrival pattern
+//! × prefix-cache {on,off} × quant {none,int8,int4} (ISSUE 7: sparse
+//! backends only) × nm {off,2:4,4:8} (ISSUE 8: sparse f32 backends
+//! only, projected checkpoints) × kernel-path {scalar,unrolled} ×
+//! pin-workers {on,off} × request fixture (ragged / chunk-straddling
+//! / shared-prefix families), and every single one must reproduce the
+//! single-sequence `generate()` streams of a chunk-size-1
+//! scalar-kernel reference engine **built at the same quant/nm mode**
+//! bit-for-bit — the engine's headline guarantee: scheduling policy,
+//! kernel traversal (including the unrolled path), slot sharding,
+//! row-band pooling, lane pinning, prefill chunking and shared-prefix
+//! KV caching decide *when* and *where* a request computes, never
+//! *what* it produces. Quantization and N:M projection change *what*
+//! (tolerance-bounded vs f32 / different weights — see
+//! `quant_parity.rs`) but are build-time properties of the engine, so
 //! within a mode every axis above must still be bit-exact.
 //!
 //! The engines use deliberately tiny tile plans
@@ -28,25 +32,26 @@ mod common;
 
 use std::collections::HashMap;
 
-use common::{banded_engine, chunk_straddling_requests, quant_engine,
-             ragged_requests, shared_prefix_requests,
+use common::{banded_engine, chunk_straddling_requests, nm_engine,
+             quant_engine, ragged_requests, shared_prefix_requests,
              SHARED_SYSTEM_PROMPT_LEN, TOY_VOCAB};
 use elsa::infer::scheduler::{RequestQueue, SchedOptions, Scheduler};
 use elsa::infer::{Backend, Engine};
-use elsa::sparse::QuantMode;
+use elsa::sparse::{KernelPath, NmMode, QuantMode};
 use elsa::util::rng::Rng;
 
 const BACKENDS: [Backend; 3] =
     [Backend::Dense, Backend::Csr, Backend::Macko];
 const QUANTS: [QuantMode; 3] =
     [QuantMode::None, QuantMode::Int8, QuantMode::Int4];
+const NMS: [NmMode; 3] = [NmMode::Off, NmMode::N2M4, NmMode::N4M8];
 const THREADS: [usize; 3] = [1, 2, 4];
 const SHARD_WORKERS: [usize; 3] = [1, 2, 8];
 const PREFILL_CHUNKS: [usize; 3] = [1, 3, 16];
 const MAX_SLOTS: [usize; 4] = [1, 2, 3, 5];
 const TEMPERATURES: [f32; 3] = [0.0, 0.6, 0.9];
 const ARRIVAL_GAPS: [f64; 3] = [0.0, 1.0, 2.5];
-const CASES: usize = 50;
+const CASES: usize = 70;
 
 /// One drawn configuration of the sweep.
 #[derive(Debug)]
@@ -55,9 +60,18 @@ struct Case {
     /// Index into [`QUANTS`] — forced to 0 (f32) for the dense
     /// backend, which has no quantized serving format.
     quant_idx: usize,
+    /// Index into [`NMS`] — forced to 0 (off) for the dense backend
+    /// and for quantized cells (no quantized N:M payload).
+    nm_idx: usize,
     tiled: bool,
+    /// Kernel traversal for the sweep engine; the reference engine
+    /// always runs scalar, so every unrolled case is also a
+    /// cross-path identity check.
+    scalar_path: bool,
     threads: usize,
     shard_workers: usize,
+    /// Best-effort lane affinity — a placement hint, never a token.
+    pin_workers: bool,
     prefill_chunk: usize,
     max_slots: usize,
     temperature: f32,
@@ -74,16 +88,25 @@ struct Case {
 
 fn draw(rng: &mut Rng) -> Case {
     let backend_idx = rng.below(BACKENDS.len());
+    let quant_idx = if BACKENDS[backend_idx] == Backend::Dense {
+        0
+    } else {
+        rng.below(QUANTS.len())
+    };
     Case {
         backend_idx,
-        quant_idx: if BACKENDS[backend_idx] == Backend::Dense {
+        quant_idx,
+        nm_idx: if BACKENDS[backend_idx] == Backend::Dense
+                    || quant_idx != 0 {
             0
         } else {
-            rng.below(QUANTS.len())
+            rng.below(NMS.len())
         },
         tiled: rng.below(2) == 1,
+        scalar_path: rng.below(2) == 1,
         threads: THREADS[rng.below(THREADS.len())],
         shard_workers: SHARD_WORKERS[rng.below(SHARD_WORKERS.len())],
+        pin_workers: rng.below(4) == 0,
         prefill_chunk: PREFILL_CHUNKS[rng.below(PREFILL_CHUNKS.len())],
         max_slots: MAX_SLOTS[rng.below(MAX_SLOTS.len())],
         temperature: TEMPERATURES[rng.below(TEMPERATURES.len())],
@@ -105,16 +128,21 @@ fn randomized_sweep_reproduces_single_sequence_streams() {
     // reproduce the per-token-prefill single-sequence streams OF THE
     // SAME QUANT MODE, whatever its own chunk is — int8 vs f32 is a
     // tolerance question (quant_parity.rs), never a sweep question
-    let banded = |bi: usize, qi: usize| -> Engine {
-        let (mut e, _) = quant_engine(BACKENDS[bi], QUANTS[qi]);
+    let banded = |bi: usize, qi: usize, ni: usize| -> Engine {
+        let (mut e, _) = if ni == 0 {
+            quant_engine(BACKENDS[bi], QUANTS[qi])
+        } else {
+            nm_engine(BACKENDS[bi], NMS[ni])
+        };
         e.retile(64, 8); // same tiny plans as common::banded_engine
         e
     };
-    let mut engines: HashMap<(usize, usize), Engine> = HashMap::new();
-    let mut ref_engines: HashMap<(usize, usize), Engine> = HashMap::new();
-    // reference streams are pure functions of (backend, quant, prompt,
-    // n_new, temperature, seed) — cache them across cases
-    let mut reference: HashMap<(usize, usize, Vec<u32>, usize, u32, u64),
+    type Cell = (usize, usize, usize);
+    let mut engines: HashMap<Cell, Engine> = HashMap::new();
+    let mut ref_engines: HashMap<Cell, Engine> = HashMap::new();
+    // reference streams are pure functions of (backend, quant, nm,
+    // prompt, n_new, temperature, seed) — cache them across cases
+    let mut reference: HashMap<(Cell, Vec<u32>, usize, u32, u64),
                                Vec<u32>> = HashMap::new();
 
     let mut rng = Rng::new(0xD5_EED);
@@ -122,6 +150,9 @@ fn randomized_sweep_reproduces_single_sequence_streams() {
     let mut chunked_cases = 0usize;
     let mut shared_on_cases = 0usize;
     let mut quantized_cases = 0usize;
+    let mut nm_cases = 0usize;
+    let mut scalar_cases = 0usize;
+    let mut unrolled_cases = 0usize;
     for case_no in 0..CASES {
         let mut case = draw(&mut rng);
         if case_no % 4 == 0 {
@@ -131,12 +162,37 @@ fn randomized_sweep_reproduces_single_sequence_streams() {
             case.fixture = 2;
             case.prefix_cache = true;
         }
-        let cell = (case.backend_idx, case.quant_idx);
+        // pin disjoint fifths of the sweep to the quantized and the
+        // N:M cells, so both build modes hit their coverage floors
+        // regardless of the draw (both need a sparse backend)
+        if case_no % 5 == 1 {
+            if BACKENDS[case.backend_idx] == Backend::Dense {
+                case.backend_idx = 1 + case_no % 2;
+            }
+            case.nm_idx = 0;
+            if case.quant_idx == 0 {
+                case.quant_idx = 1 + case_no % 2;
+            }
+        } else if case_no % 5 == 3 {
+            if BACKENDS[case.backend_idx] == Backend::Dense {
+                case.backend_idx = 1 + case_no % 2;
+            }
+            case.quant_idx = 0;
+            if case.nm_idx == 0 {
+                case.nm_idx = 1 + (case_no / 5) % 2;
+            }
+        }
+        let cell = (case.backend_idx, case.quant_idx, case.nm_idx);
         let engine = engines
             .entry(cell)
-            .or_insert_with(|| banded(cell.0, cell.1));
+            .or_insert_with(|| banded(cell.0, cell.1, cell.2));
         engine.tiled = case.tiled;
         engine.prefill_chunk = case.prefill_chunk;
+        engine.kernel_path = if case.scalar_path {
+            KernelPath::Scalar
+        } else {
+            KernelPath::Unrolled
+        };
         if case.shard_workers > 1 {
             pooled_cases += 1;
         }
@@ -148,6 +204,14 @@ fn randomized_sweep_reproduces_single_sequence_streams() {
         }
         if case.quant_idx != 0 {
             quantized_cases += 1;
+        }
+        if case.nm_idx != 0 {
+            nm_cases += 1;
+        }
+        if case.scalar_path {
+            scalar_cases += 1;
+        } else {
+            unrolled_cases += 1;
         }
 
         let reqs = match case.fixture {
@@ -163,20 +227,25 @@ fn randomized_sweep_reproduces_single_sequence_streams() {
             threads: case.threads,
             shard_workers: case.shard_workers,
             prefix_cache: case.prefix_cache,
+            pin_workers: case.pin_workers,
         });
         let (finished, stats) = sched.run(queue);
         assert_eq!(finished.len(), reqs.len(), "case {case_no} {case:?}");
         assert_eq!(stats.expired, 0, "case {case_no} {case:?}");
+        assert_eq!(stats.nm_mode, NMS[case.nm_idx].label(),
+                   "case {case_no}: stats must echo the engine's nm");
 
         let ref_engine = ref_engines.entry(cell).or_insert_with(|| {
-            let mut e = banded(cell.0, cell.1);
+            let mut e = banded(cell.0, cell.1, cell.2);
             e.prefill_chunk = 1;
+            // the reference always runs the scalar kernels, so every
+            // unrolled case doubles as a cross-path identity check
+            e.kernel_path = KernelPath::Scalar;
             e
         });
         for f in &finished {
             let r = &reqs[f.id as usize];
-            let key = (case.backend_idx, case.quant_idx,
-                       r.prompt.clone(), r.n_new,
+            let key = (cell, r.prompt.clone(), r.n_new,
                        case.temperature.to_bits(), r.seed);
             let want = reference.entry(key).or_insert_with(|| {
                 ref_engine
@@ -200,6 +269,14 @@ fn randomized_sweep_reproduces_single_sequence_streams() {
              cases — repin it");
     assert!(quantized_cases >= 10,
             "sweep drew only {quantized_cases} quantized cases — \
+             reseed it");
+    assert!(nm_cases >= 10,
+            "sweep drew only {nm_cases} N:M cases — repin it");
+    assert!(scalar_cases >= 10,
+            "sweep drew only {scalar_cases} scalar-path cases — \
+             reseed it");
+    assert!(unrolled_cases >= 10,
+            "sweep drew only {unrolled_cases} unrolled-path cases — \
              reseed it");
 }
 
@@ -347,6 +424,7 @@ fn prefix_cache_hits_replay_cold_start_streams_exactly() {
                         threads,
                         shard_workers,
                         prefix_cache: true,
+                        pin_workers: false,
                     });
                     let (finished, stats) = sched.run(queue);
                     let tag = format!(
@@ -393,6 +471,7 @@ fn prefix_cache_hits_replay_cold_start_streams_exactly() {
                         threads,
                         shard_workers,
                         prefix_cache: false,
+                        pin_workers: false,
                     });
                     let (fin_off, st_off) = off.run(queue);
                     assert_eq!(st_off.prefix_hits, 0, "{tag}");

@@ -6,6 +6,15 @@
 //! on the persistent decode pool (`pool_matvec_batch_tiled`) — and the
 //! engine/scheduler token streams must be unchanged with tiling on vs
 //! off, so the PR 1/2 determinism guarantees carry over.
+//!
+//! The tiled entry points take a [`KernelPath`]; most assertions here
+//! run the unrolled (default) traversal against the scalar untiled
+//! reference — the strongest single statement of the PR 8 contract —
+//! and `kernel_paths_bit_identical_across_formats` pins
+//! scalar == unrolled directly for every format including N:M. CI
+//! runs this whole suite twice, once per forced path
+//! (`ELSA_KERNEL_PATH`), which covers the engine-level streams both
+//! ways.
 
 mod common;
 
@@ -14,9 +23,10 @@ use elsa::infer::pool::WorkerPool;
 use elsa::infer::scheduler::{Request, RequestQueue, SchedOptions,
                              Scheduler};
 use elsa::infer::{Backend, BatchOptions, Engine};
-use elsa::sparse::{dense_matvec_batch, dense_plan, par_matvec_batch_tiled,
-                   pool_matvec_batch_tiled, random_sparse_weight, tile,
-                   Csr, Macko, SpmmScratch, TilePlan};
+use elsa::sparse::{dense_matvec_batch, dense_plan, nm_project,
+                   par_matvec_batch_tiled, pool_matvec_batch_tiled,
+                   random_sparse_weight, tile, Csr, KernelPath, Macko,
+                   NmSparse, SpmmScratch, TilePlan};
 use elsa::tensor::Matrix;
 use elsa::util::rng::Rng;
 
@@ -31,8 +41,10 @@ fn tiled_matches_untiled_bit_exact_all_formats() {
     let (din, dout) = (100, 72);
     for &sp in &[0.5f64, 0.9] {
         let w = random_sparse_weight(din, dout, sp, 7);
+        let nw = nm_project(&w, 2, 4);
         let csr = Csr::from_weight(&w);
         let mck = Macko::from_weight(&w);
+        let nm = NmSparse::<2, 4>::from_weight(&nw).unwrap();
         let dplan = dense_plan(&w);
         let mut su = SpmmScratch::default();
         let mut st = SpmmScratch::default();
@@ -40,19 +52,27 @@ fn tiled_matches_untiled_bit_exact_all_formats() {
             let x = batch_input(b, din, 40 + b as u64);
             let mut want = vec![0.0f32; b * dout];
             let mut got = vec![0.0f32; b * dout];
+            for path in [KernelPath::Scalar, KernelPath::Unrolled] {
+                csr.matvec_batch_into(&x, &mut want, b, &mut su);
+                csr.matvec_batch_tiled_into(&x, &mut got, b, &mut st,
+                                            path);
+                assert_eq!(got, want, "csr sp={sp} b={b} {path:?}");
 
-            csr.matvec_batch_into(&x, &mut want, b, &mut su);
-            csr.matvec_batch_tiled_into(&x, &mut got, b, &mut st);
-            assert_eq!(got, want, "csr sp={sp} b={b}");
+                mck.matvec_batch_into(&x, &mut want, b, &mut su);
+                mck.matvec_batch_tiled_into(&x, &mut got, b, &mut st,
+                                            path);
+                assert_eq!(got, want, "macko sp={sp} b={b} {path:?}");
 
-            mck.matvec_batch_into(&x, &mut want, b, &mut su);
-            mck.matvec_batch_tiled_into(&x, &mut got, b, &mut st);
-            assert_eq!(got, want, "macko sp={sp} b={b}");
+                nm.matvec_batch_into(&x, &mut want, b, &mut su);
+                nm.matvec_batch_tiled_into(&x, &mut got, b, &mut st,
+                                           path);
+                assert_eq!(got, want, "nm24 sp={sp} b={b} {path:?}");
 
-            dense_matvec_batch(&w, &x, &mut want, b);
-            tile::matvec_batch_tiled(&w, &dplan, &x, &mut got, b,
-                                     &mut st);
-            assert_eq!(got, want, "dense sp={sp} b={b}");
+                dense_matvec_batch(&w, &x, &mut want, b);
+                tile::matvec_batch_tiled(&w, &dplan, &x, &mut got, b,
+                                         &mut st, path);
+                assert_eq!(got, want, "dense sp={sp} b={b} {path:?}");
+            }
         }
     }
 }
@@ -75,11 +95,13 @@ fn ragged_tile_boundaries_bit_exact() {
         assert_eq!(plan.tiles.last().unwrap().row1, dout);
 
         csr.matvec_batch_into(&x, &mut want, b, &mut su);
-        tile::matvec_batch_tiled(&csr, &plan, &x, &mut got, b, &mut st);
+        tile::matvec_batch_tiled(&csr, &plan, &x, &mut got, b, &mut st,
+                                 KernelPath::Unrolled);
         assert_eq!(got, want, "csr tile_rows={tile_rows}");
 
         mck.matvec_batch_into(&x, &mut want, b, &mut su);
-        tile::matvec_batch_tiled(&mck, &plan, &x, &mut got, b, &mut st);
+        tile::matvec_batch_tiled(&mck, &plan, &x, &mut got, b, &mut st,
+                                 KernelPath::Unrolled);
         assert_eq!(got, want, "macko tile_rows={tile_rows}");
     }
 }
@@ -103,7 +125,8 @@ fn all_zero_rows_bit_exact_and_zero() {
     let csr = Csr::from_weight(&w);
     csr.matvec_batch_into(&x, &mut want, b, &mut su);
     tile::matvec_batch_tiled(&csr, &TilePlan::fixed(dout, 6), &x,
-                             &mut got, b, &mut st);
+                             &mut got, b, &mut st,
+                             KernelPath::Unrolled);
     assert_eq!(got, want);
     for bi in 0..b {
         for c in 10..25 {
@@ -114,7 +137,8 @@ fn all_zero_rows_bit_exact_and_zero() {
     let z = Matrix::zeros(din, dout);
     let mck = Macko::from_weight(&z);
     let mut got = vec![7.0f32; b * dout];
-    mck.matvec_batch_tiled_into(&x, &mut got, b, &mut st);
+    mck.matvec_batch_tiled_into(&x, &mut got, b, &mut st,
+                                KernelPath::Unrolled);
     assert!(got.iter().all(|&v| v == 0.0));
 }
 
@@ -150,12 +174,14 @@ fn retile_covers_all_rows_and_stays_bit_exact() {
         csr.retile(budget, cap);
         assert_eq!(csr.plan.tiles[0].row0, 0);
         assert_eq!(csr.plan.tiles.last().unwrap().row1, dout);
-        csr.matvec_batch_tiled_into(&x, &mut got, b, &mut st);
+        csr.matvec_batch_tiled_into(&x, &mut got, b, &mut st,
+                                    KernelPath::Unrolled);
         assert_eq!(got, want, "csr retile({budget}, {cap})");
 
         mck.retile(budget, cap);
         mck.matvec_batch_into(&x, &mut want, b, &mut su);
-        mck.matvec_batch_tiled_into(&x, &mut got, b, &mut st);
+        mck.matvec_batch_tiled_into(&x, &mut got, b, &mut st,
+                                    KernelPath::Unrolled);
         assert_eq!(got, want, "macko retile({budget}, {cap})");
         csr.matvec_batch_into(&x, &mut want, b, &mut su);
     }
@@ -177,12 +203,12 @@ fn sharded_tiled_matches_serial_any_thread_count() {
     for &threads in &[1usize, 2, 5, 64] {
         csr.matvec_batch_into(&x, &mut want, b, &mut su);
         par_matvec_batch_tiled(&csr, &plan, &x, &mut got, b, threads,
-                               &mut st);
+                               &mut st, KernelPath::Unrolled);
         assert_eq!(got, want, "csr threads={threads}");
 
         mck.matvec_batch_into(&x, &mut want, b, &mut su);
         par_matvec_batch_tiled(&mck, &plan, &x, &mut got, b, threads,
-                               &mut st);
+                               &mut st, KernelPath::Unrolled);
         assert_eq!(got, want, "macko threads={threads}");
     }
 }
@@ -210,19 +236,22 @@ fn persistent_pool_matches_serial_across_formats_and_batches() {
 
                 csr.matvec_batch_into(&x, &mut want, b, &mut su);
                 pool_matvec_batch_tiled(&csr, &plan, &x, &mut got, b,
-                                        &pool, &mut st);
+                                        &pool, &mut st,
+                                        KernelPath::Unrolled);
                 assert_eq!(got, want,
                            "csr width={width} b={b} round={round}");
 
                 mck.matvec_batch_into(&x, &mut want, b, &mut su);
                 pool_matvec_batch_tiled(&mck, &plan, &x, &mut got, b,
-                                        &pool, &mut st);
+                                        &pool, &mut st,
+                                        KernelPath::Unrolled);
                 assert_eq!(got, want,
                            "macko width={width} b={b} round={round}");
 
                 dense_matvec_batch(&w, &x, &mut want, b);
                 pool_matvec_batch_tiled(&w, &dplan, &x, &mut got, b,
-                                        &pool, &mut st);
+                                        &pool, &mut st,
+                                        KernelPath::Unrolled);
                 assert_eq!(got, want,
                            "dense width={width} b={b} round={round}");
             }
@@ -253,6 +282,82 @@ fn pooled_head_gemm_matches_serial_across_widths_and_batches() {
                 assert_eq!(got, want,
                            "width={width} b={b} round={round}");
             }
+        }
+    }
+}
+
+#[test]
+fn kernel_paths_bit_identical_across_formats() {
+    // the PR 8 contract stated directly: for every format, batch size
+    // and traversal (tiled / scoped threads / persistent pool), the
+    // unrolled kernels produce the same bits as the scalar reference
+    let (din, dout) = (96, 61);
+    let w = random_sparse_weight(din, dout, 0.7, 51);
+    let nw = nm_project(&w, 2, 4);
+    let csr = Csr::from_weight(&w);
+    let mck = Macko::from_weight(&w);
+    let nm = NmSparse::<2, 4>::from_weight(&nw).unwrap();
+    let plan = TilePlan::fixed(dout, 5);
+    let dplan = dense_plan(&w);
+    let pool = WorkerPool::new(3);
+    let mut st = SpmmScratch::default();
+    for &b in &[1usize, 2, 4, 7, 8] {
+        let x = batch_input(b, din, 400 + b as u64);
+        let mut scalar = vec![0.0f32; b * dout];
+        let mut unrolled = vec![0.0f32; b * dout];
+        let run = |y: &mut [f32], path: KernelPath,
+                   st: &mut SpmmScratch| {
+            tile::matvec_batch_tiled(&csr, &plan, &x, y, b, st, path);
+            let mut t = vec![0.0f32; b * dout];
+            tile::matvec_batch_tiled(&mck, &plan, &x, &mut t, b, st,
+                                     path);
+            y.iter_mut().zip(&t).for_each(|(a, v)| *a += v);
+            tile::matvec_batch_tiled(&nm, &nm.plan, &x, &mut t, b, st,
+                                     path);
+            y.iter_mut().zip(&t).for_each(|(a, v)| *a += v);
+            tile::matvec_batch_tiled(&w, &dplan, &x, &mut t, b, st,
+                                     path);
+            y.iter_mut().zip(&t).for_each(|(a, v)| *a += v);
+            par_matvec_batch_tiled(&csr, &plan, &x, &mut t, b, 3, st,
+                                   path);
+            y.iter_mut().zip(&t).for_each(|(a, v)| *a += v);
+            pool_matvec_batch_tiled(&nm, &nm.plan, &x, &mut t, b,
+                                    &pool, st, path);
+            y.iter_mut().zip(&t).for_each(|(a, v)| *a += v);
+        };
+        run(&mut scalar, KernelPath::Scalar, &mut st);
+        run(&mut unrolled, KernelPath::Unrolled, &mut st);
+        assert_eq!(scalar, unrolled, "b={b}");
+    }
+}
+
+#[test]
+fn nm_rides_pool_and_scoped_threads_bit_exact() {
+    // N:M through the same shard machinery as every other format:
+    // scoped threads and the persistent pool must replay the untiled
+    // scalar reference bit-for-bit, both kernel paths
+    let (din, dout) = (104, 66);
+    let nw = nm_project(&random_sparse_weight(din, dout, 0.4, 61), 2, 4);
+    let nm = NmSparse::<2, 4>::from_weight(&nw).unwrap();
+    let plan = TilePlan::fixed(dout, 7);
+    let pool = WorkerPool::new(4);
+    let mut su = SpmmScratch::default();
+    let mut st = SpmmScratch::default();
+    for &b in &[1usize, 3, 8] {
+        let x = batch_input(b, din, 700 + b as u64);
+        let mut want = vec![0.0f32; b * dout];
+        let mut got = vec![0.0f32; b * dout];
+        nm.matvec_batch_into(&x, &mut want, b, &mut su);
+        for path in [KernelPath::Scalar, KernelPath::Unrolled] {
+            for &threads in &[1usize, 2, 5] {
+                par_matvec_batch_tiled(&nm, &plan, &x, &mut got, b,
+                                       threads, &mut st, path);
+                assert_eq!(got, want,
+                           "par b={b} threads={threads} {path:?}");
+            }
+            pool_matvec_batch_tiled(&nm, &plan, &x, &mut got, b, &pool,
+                                    &mut st, path);
+            assert_eq!(got, want, "pool b={b} {path:?}");
         }
     }
 }

@@ -26,10 +26,11 @@
 
 mod common;
 
-use common::{engine, quant_engine, ragged_requests, TOY_VOCAB};
+use common::{engine, nm_engine, nm_params, quant_engine,
+             ragged_requests, toy_cfg, TOY_VOCAB};
 use elsa::infer::scheduler::{RequestQueue, SchedOptions, Scheduler};
-use elsa::infer::Backend;
-use elsa::sparse::QuantMode;
+use elsa::infer::{Backend, Engine};
+use elsa::sparse::{NmMode, QuantMode};
 
 const SPARSE_BACKENDS: [Backend; 2] = [Backend::Csr, Backend::Macko];
 
@@ -189,6 +190,7 @@ fn quantized_scheduler_streams_match_quantized_generate() {
                     threads,
                     shard_workers,
                     prefix_cache: true,
+                    pin_workers: false,
                 });
                 let (finished, stats) = sched.run(queue);
                 assert_eq!(stats.quant_mode, quant.label());
@@ -263,5 +265,62 @@ fn engine_memory_shrinks_monotonically_with_precision() {
         assert_eq!(stats.quant_mode, "int8");
         let (_, f_stats) = f.generate(&toy_prompt(3, 1), 4, 0.0, 0);
         assert_eq!(f_stats.quant_mode, "none");
+    }
+}
+
+#[test]
+fn nm_engine_stats_self_describe_and_shrink_memory() {
+    // the N:M counterpart of the quant accounting test: an N:M engine
+    // must name its pattern (and its kernel path) in both GenStats and
+    // SchedStats, stay quant_mode "none", reproduce its own streams
+    // through the scheduler, and spend fewer weight bytes than the f32
+    // CSR engine on the *same projected checkpoint* — NmSparse stores
+    // 5 B per slot (f32 value + u8 offset) at exactly-N-of-M density
+    // where CSR spends 8 B per nonzero.
+    for backend in SPARSE_BACKENDS {
+        for nm in [NmMode::N2M4, NmMode::N4M8] {
+            let (e, _) = nm_engine(backend, nm);
+            let (tokens, stats) =
+                e.generate(&toy_prompt(3, 1), 4, 0.0, 0);
+            assert_eq!(stats.nm_mode, nm.label(),
+                       "{backend:?} {nm:?}: GenStats nm_mode");
+            assert_eq!(stats.quant_mode, "none",
+                       "{backend:?} {nm:?}: N:M is an f32 format");
+            assert_eq!(stats.kernel_path, e.kernel_path.label());
+            assert!(!tokens.is_empty());
+
+            let csr_f32 =
+                Engine::build(&nm_params(&toy_cfg(), nm, 1),
+                              Backend::Csr)
+                    .expect("f32 engine on projected params");
+            assert!(e.mem_bytes() < csr_f32.mem_bytes(),
+                    "{backend:?} {nm:?}: nm {} !< f32 csr {}",
+                    e.mem_bytes(), csr_f32.mem_bytes());
+
+            let reqs = ragged_requests(4);
+            let queue = RequestQueue::with_poisson_arrivals(
+                reqs.clone(), 1.0, 13);
+            let sched = Scheduler::new(&e, SchedOptions {
+                max_slots: 2,
+                temperature: 0.8,
+                threads: 2,
+                shard_workers: 2,
+                prefix_cache: true,
+                pin_workers: false,
+            });
+            let (finished, sstats) = sched.run(queue);
+            assert_eq!(sstats.nm_mode, nm.label(),
+                       "{backend:?} {nm:?}: SchedStats nm_mode");
+            assert_eq!(sstats.kernel_path, e.kernel_path.label());
+            assert_eq!(sstats.weight_mem_bytes, e.mem_bytes());
+            for f in &finished {
+                let r = &reqs[f.id as usize];
+                let (want, _) =
+                    e.generate(&r.prompt, r.n_new, 0.8, r.seed);
+                assert_eq!(f.tokens, want,
+                           "{backend:?} {nm:?}: req {} diverged \
+                            within its own mode", f.id);
+            }
+        }
     }
 }
