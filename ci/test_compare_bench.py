@@ -96,6 +96,31 @@ def kernels_current(ratio=1.1, pooled_ratio=1.0, chunked_ratio=1.6,
     }
 
 
+def prune_baseline():
+    return {
+        "min_prune_parallel_serial_ratio": 1.0,
+        "magnitude_w1": {"tok_s": 50000.0},
+        "magnitude_par": {"tok_s": 50000.0},
+        "sparsegpt_w1": {"tok_s": 5000.0},
+        "sparsegpt_par": {"tok_s": 5000.0},
+        "ladmm_w1": {"tok_s": 500.0},
+        "ladmm_par": {"tok_s": 500.0},
+    }
+
+
+def prune_current(ratio=1.6, magnitude=4.0e6, sparsegpt=9.0e4,
+                  ladmm=8.0e3):
+    return {
+        "prune_parallel_serial_ratio": ratio,
+        "magnitude_w1": {"tok_s": magnitude},
+        "magnitude_par": {"tok_s": magnitude * 1.2},
+        "sparsegpt_w1": {"tok_s": sparsegpt},
+        "sparsegpt_par": {"tok_s": sparsegpt * 1.7},
+        "ladmm_w1": {"tok_s": ladmm},
+        "ladmm_par": {"tok_s": ladmm * 1.8},
+    }
+
+
 class GateTests(unittest.TestCase):
     def test_passes_when_above_floors(self):
         _, failures = cb.gate(scheduler_current(), scheduler_baseline())
@@ -332,6 +357,44 @@ class GateTests(unittest.TestCase):
         self.assertEqual(out["prefix_cached"]["tok_s"], 160.0)
         self.assertEqual(out["min_prefix_cached_uncached_ratio"], 1.0)
 
+    def test_prune_parallel_serial_ratio_gate(self):
+        # pool-parallel pruning must never lose wall-clock to the
+        # serial walk: 1.0 passes at exactly 1.0, fails just below,
+        # and an absent metric counts as 0.0 -> fails
+        _, failures = cb.gate(prune_current(ratio=1.0),
+                              prune_baseline())
+        self.assertEqual(failures, [])
+        _, failures = cb.gate(prune_current(ratio=0.99),
+                              prune_baseline())
+        self.assertTrue(any("prune_parallel_serial_ratio" in f
+                            for f in failures))
+        cur = prune_current()
+        del cur["prune_parallel_serial_ratio"]
+        _, failures = cb.gate(cur, prune_baseline())
+        self.assertTrue(any("prune_parallel_serial_ratio" in f
+                            for f in failures))
+
+    def test_prune_cell_floors_gated_like_any_policy(self):
+        # the per-method weight-throughput cells ride the ordinary
+        # tok_s floor machinery: collapse and disappearance both fail
+        _, failures = cb.gate(prune_current(), prune_baseline())
+        self.assertEqual(failures, [])
+        _, failures = cb.gate(prune_current(ladmm=1.0),
+                              prune_baseline())
+        self.assertTrue(any("ladmm_w1" in f for f in failures))
+        cur = prune_current()
+        del cur["sparsegpt_par"]
+        _, failures = cb.gate(cur, prune_baseline())
+        self.assertTrue(any("sparsegpt_par" in f and "missing" in f
+                            for f in failures))
+
+    def test_ratchet_covers_prune_cells_and_keeps_ratio_knob(self):
+        out = cb.ratchet(prune_current(), prune_baseline())
+        self.assertEqual(out["magnitude_w1"]["tok_s"], 4.0e6)
+        self.assertEqual(out["ladmm_par"]["tok_s"], 8.0e3 * 1.8)
+        # the min_ knob is policy, never ratcheted
+        self.assertEqual(out["min_prune_parallel_serial_ratio"], 1.0)
+
     def test_explicit_tolerance_overrides_baseline(self):
         # floor becomes 80 * (1 - 0.5) = 40 with the looser tolerance
         cur = scheduler_current(cont=45.0)
@@ -412,6 +475,7 @@ class MainTests(unittest.TestCase):
     def full_baseline(self):
         doc = scheduler_baseline()
         doc["kernels"] = kernels_baseline()
+        doc["prune"] = prune_baseline()
         return doc
 
     def test_gate_pass_and_fail_exit_codes(self):
@@ -434,6 +498,18 @@ class MainTests(unittest.TestCase):
         self.assertNotIn("speedup_x", out)
         bad = self.write("kern_bad.json", kernels_current(macko=1.0))
         code, _ = self.run_main([bad, base, "--section", "kernels"])
+        self.assertEqual(code, 1)
+
+    def test_section_selects_prune_gates(self):
+        base = self.write("baseline.json", self.full_baseline())
+        cur = self.write("prune.json", prune_current())
+        code, out = self.run_main([cur, base, "--section", "prune"])
+        self.assertEqual(code, 0)
+        # scheduler- and kernels-only gates must not leak in
+        self.assertNotIn("speedup_x", out)
+        self.assertNotIn("tiled_untiled_ratio", out)
+        bad = self.write("prune_bad.json", prune_current(ratio=0.5))
+        code, _ = self.run_main([bad, base, "--section", "prune"])
         self.assertEqual(code, 1)
 
     def test_section_inherits_top_level_tolerance(self):

@@ -4,12 +4,16 @@
 //!   1. pretrain the `small` (~0.9M param) transformer on synth-c4,
 //!      logging the loss curve (L2 train_step HLO driven from rust),
 //!   2. prune to 90% with ELSA (global Fisher-weighted ADMM projection)
-//!      and with SparseGPT as the layer-wise comparator,
+//!      and with SparseGPT as the layer-wise comparator (`--workers N`
+//!      fans the comparator across pool lanes, `--alloc` picks the
+//!      cross-layer budget — both flow through `prune_oneshot` and are
+//!      bit-identical to the serial/uniform defaults),
 //!   3. evaluate perplexity on both held-out corpora + the 7-task
 //!      zero-shot probe suite,
 //!   4. write a summary table to results/e2e.{csv,md}.
 //!
-//! Run: `cargo run --release --example prune_pipeline [-- --steps 600]`
+//! Run: `cargo run --release --example prune_pipeline
+//!       [-- --steps 600 --workers 4]`
 
 use std::path::Path;
 

@@ -1,0 +1,144 @@
+//! Pool-parallel pruning bench (ISSUE 9): every one-shot method
+//! (magnitude, wanda, sparsegpt, l-admm, alps) timed serially and on a
+//! persistent `--workers N` pool over the serving-sized toy model.
+//!
+//! Before a single cell is timed, the pooled output is asserted
+//! **bitwise identical** to the serial output for every method — the
+//! whole point of the column-sharded solvers is that lane interleaving
+//! cannot change a bit, and a bench that silently measured a diverging
+//! pruner would be worse than no bench.
+//!
+//! Calibration statistics are collected once outside the timed region
+//! (both paths share them), so each cell measures pruning itself.
+//!
+//! Run: cargo bench --bench bench_prune [-- <workers> [small]].
+//! Writes a machine-readable summary to `$BENCH_OUT` (default
+//! `BENCH_prune.json`) for the CI regression gate
+//! (`ci/compare_bench.py --section prune`): per-method
+//! weight-equivalent throughput cells `{method}_w1` / `{method}_par`
+//! (`tok_s` = prunable weights pruned per second — the tok/s slot the
+//! shared gate machinery floors) and `prune_parallel_serial_ratio`,
+//! the aggregate serial/parallel timing ratio across all five methods,
+//! gated >= 1.0: fanning independent columns/segments across persistent
+//! lanes must never cost wall-clock against the serial walk.
+
+use elsa::infer::pool::WorkerPool;
+use elsa::model::{synthetic_config, Params};
+use elsa::pruners::{calibrate, ladmm, magnitude, sparsegpt,
+                    uniform_alloc, wanda};
+use elsa::util::bench::{bench, throughput};
+use elsa::util::json::{num, obj, to_string, Value};
+use elsa::util::rng::Rng;
+
+/// (method, serial-cell key, parallel-cell key) — fixed key names so
+/// the committed baseline floors match regardless of the worker count
+/// the CI invocation picks.
+const METHODS: [(&str, &str, &str); 5] = [
+    ("magnitude", "magnitude_w1", "magnitude_par"),
+    ("wanda", "wanda_w1", "wanda_par"),
+    ("sparsegpt", "sparsegpt_w1", "sparsegpt_par"),
+    ("l-admm", "ladmm_w1", "ladmm_par"),
+    ("alps", "alps_w1", "alps_par"),
+];
+
+fn main() {
+    let workers = std::env::args()
+        .nth(1)
+        .and_then(|a| a.parse::<usize>().ok())
+        .unwrap_or(2)
+        .max(2);
+    let small = std::env::args().nth(2).as_deref() == Some("small");
+    let (d, mlp, seq, budget_ms) =
+        if small { (96, 384, 64, 60) } else { (128, 512, 96, 200) };
+
+    let cfg = synthetic_config("prune_bench", d, 2, 4, mlp, 256, seq);
+    let dense = Params::init(&cfg, 3).flat;
+    let mut rng = Rng::new(11);
+    let train: Vec<u32> =
+        (0..8192).map(|_| rng.below(cfg.vocab) as u32).collect();
+    let sp = 0.7f64;
+    let alloc = uniform_alloc(&cfg, sp);
+    let calib = calibrate(&cfg, &dense, &train, 7).expect("calibration");
+    let weights: f64 = cfg.segments
+        .iter()
+        .filter(|s| s.prunable)
+        .map(|s| s.len() as f64)
+        .sum();
+    let pool = WorkerPool::new(workers);
+
+    let run = |method: &str, pool: Option<&WorkerPool>| -> Vec<f32> {
+        match method {
+            "magnitude" => {
+                magnitude::prune_pooled(&cfg, &dense, &alloc, pool)
+            }
+            "wanda" => {
+                wanda::prune_pooled(&cfg, &dense, &calib, &alloc, pool)
+            }
+            "sparsegpt" => sparsegpt::prune_pooled(
+                &cfg, &dense, &calib, &alloc, pool),
+            "l-admm" => ladmm::prune_pooled(
+                &cfg, &dense, &calib, &alloc,
+                &ladmm::LAdmmOptions::default(), pool),
+            "alps" => ladmm::prune_pooled(
+                &cfg, &dense, &calib, &alloc,
+                &ladmm::LAdmmOptions::alps(), pool),
+            other => panic!("unknown method {other}"),
+        }
+        .expect("prune")
+    };
+
+    println!("== pool-parallel pruning, d={d} L=2 mlp={mlp} \
+              ({weights:.0} prunable weights) @ sp={sp}, \
+              workers {{1, {workers}}} ==");
+    let mut cells: Vec<(&'static str, f64)> = Vec::new();
+    let (mut serial_ns, mut parallel_ns) = (0.0f64, 0.0f64);
+    for (method, key_w1, key_par) in METHODS {
+        // determinism first: --workers N must be bit-identical to
+        // --workers 1 before either cell's timing means anything
+        let want = run(method, None);
+        let got = run(method, Some(&pool));
+        assert_eq!(want, got,
+                   "{method}: pooled prune diverged from serial");
+
+        let rs = bench(&format!("{method:<9} workers=1"), budget_ms,
+                       || {
+            std::hint::black_box(run(method, None));
+        });
+        throughput(&rs, weights, "w");
+        let rp = bench(&format!("{method:<9} workers={workers}"),
+                       budget_ms, || {
+            std::hint::black_box(run(method, Some(&pool)));
+        });
+        throughput(&rp, weights, "w");
+        serial_ns += rs.median_ns;
+        parallel_ns += rp.median_ns;
+        println!("  -> serial/parallel ratio x{:.2} (bit-identical \
+                  output)\n", rs.median_ns / rp.median_ns.max(1e-9));
+        cells.push((key_w1, weights / (rs.median_ns / 1e9)));
+        cells.push((key_par, weights / (rp.median_ns / 1e9)));
+    }
+    let ratio = serial_ns / parallel_ns.max(1e-9);
+    println!("== aggregate serial/parallel pruning ratio x{ratio:.2} \
+              at {workers} workers ==\n");
+
+    // machine-readable summary for the CI regression gate
+    let mut top: Vec<(&str, Value)> = vec![
+        ("config", obj(vec![
+            ("d_model", num(d as f64)),
+            ("small", num(if small { 1.0 } else { 0.0 })),
+            ("workers", num(workers as f64)),
+            ("sparsity", num(sp)),
+            ("prunable_weights", num(weights)),
+        ])),
+        ("prune_parallel_serial_ratio", num(ratio)),
+    ];
+    for &(key, tps) in &cells {
+        top.push((key, obj(vec![("tok_s", num(tps))])));
+    }
+    let j = obj(top);
+    let path = std::env::var("BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_prune.json".to_string());
+    std::fs::write(&path, to_string(&j) + "\n")
+        .expect("write bench summary");
+    println!("wrote {path}");
+}

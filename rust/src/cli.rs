@@ -3,6 +3,15 @@
 //! Subcommands:
 //!   pretrain  --config tiny --steps 300 [--lr 3e-3] [--out ckpt.bin]
 //!   prune     --config tiny --method elsa --sparsity 0.9 [...]
+//!             one-shot methods (magnitude|wanda|sparsegpt|l-admm|alps|
+//!             wanda-owl|...) additionally take [--workers N] (pool
+//!             lanes for segment fan-out / per-column sharding;
+//!             bit-identical to --workers 1), [--alloc
+//!             {uniform,owl,evo,global}] (cross-layer budget
+//!             allocation) and [--feedback-rounds R] (held-out-NLL
+//!             budget refinement); [--out ckpt.bin] feeds the pruned
+//!             checkpoint straight into `serve` (prune → quantize →
+//!             serve)
 //!   eval      --config tiny --ckpt ckpt.bin [--dataset synth-c4]
 //!   generate  --config tiny --ckpt ckpt.bin [--sparse] [--prompt-len 8]
 //!   infer     alias of generate; --batch N --threads N serves N

@@ -114,9 +114,13 @@ fn cmd_prune(args: &Args) -> Result<()> {
                         m.wall_seconds))
         }
         other => {
+            let popts = crate::pruners::PruneOptions::from_args(args)?;
+            let t0 = std::time::Instant::now();
             let p = crate::pruners::prune_oneshot(
                 &rt, &cfg, other, &dense, &ds.train, sparsity, args)?;
-            (p, String::new())
+            (p, format!("workers={} alloc={} wall={:.1}s",
+                        popts.workers, popts.alloc.name(),
+                        t0.elapsed().as_secs_f64()))
         }
     };
 

@@ -1,6 +1,7 @@
 //! Table 7: non-uniform sparsity allocation at 70% — SparseGPT uniform,
-//! OWL, EvoPress-lite, ELSA (global budget) and ELSA seeded with the
-//! EvoPress allocation.
+//! OWL, EvoPress-lite, SparseLLM-style global saliency ranking (with
+//! and without UniPruning-style NLL feedback), ELSA (global budget)
+//! and ELSA seeded with the EvoPress allocation.
 
 use anyhow::Result;
 
@@ -50,6 +51,22 @@ pub fn run(ctx: &Ctx, args: &Args) -> Result<()> {
         pruners::wanda::prune(&cfg, &dense, &calib, &evo_alloc)
     })?;
     add("evopress (wanda)", &evo)?;
+
+    // SparseLLM-style global saliency ranking across all segments
+    let glob_alloc =
+        alloc::global_allocation(&cfg, &dense, &calib, sp)?;
+    let glob = ctx.pruned_cached(&cfg, "wanda-global", sp, "", || {
+        pruners::wanda::prune(&cfg, &dense, &calib, &glob_alloc)
+    })?;
+    add("global (wanda)", &glob)?;
+
+    // ... refined by UniPruning-style held-out-NLL feedback
+    let fb_alloc = alloc::feedback_allocation(
+        &cfg, &dense, &calib, &c4.train, &glob_alloc, sp, 2)?;
+    let fb = ctx.pruned_cached(&cfg, "wanda-global-fb", sp, "", || {
+        pruners::wanda::prune(&cfg, &dense, &calib, &fb_alloc)
+    })?;
+    add("global+feedback (wanda)", &fb)?;
 
     // ELSA with the EvoPress non-uniform budget
     let evo_pat = Pattern::NonUniform {

@@ -1,22 +1,39 @@
 //! Non-uniform sparsity allocation (paper Table 7): OWL outlier-based
-//! budgets and an EvoPress-style evolutionary search.
+//! budgets, an EvoPress-style evolutionary search, a SparseLLM-style
+//! global saliency ranking, and a UniPruning-style held-out-NLL
+//! feedback loop.
+//!
+//! Budget exactness (ISSUE 9): every allocation returned from this
+//! module has a size-weighted mean sparsity equal to the requested
+//! global target (to f64 rounding) — mutations that a clamp would
+//! knock off-budget are rejected, and [`rebalance`] redistributes its
+//! residual only over layers that still have clamp headroom.
 
 use std::collections::BTreeMap;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::model::forward::{nll_seq, CalibSet};
 use crate::model::Params;
 use crate::runtime::ConfigEntry;
 use crate::util::rng::Rng;
 
+/// Per-layer sparsity clamp range shared by every allocator: never
+/// fully dense (below 0.02) or fully empty (above 0.998) a layer.
+const SP_MIN: f64 = 0.02;
+const SP_MAX: f64 = 0.998;
+
 /// OWL (Yin et al. 2024): layers with more activation-weighted outliers
 /// get *less* sparsity. Outlier ratio D_l = fraction of |W_ij|*||X_i||
 /// scores above `m_factor` x layer mean; budgets are
 /// s_l = S - lam * (D_l - mean D), then rescaled so the weighted mean
 /// (by layer size) equals the global target S.
+///
+/// A prunable layer missing from `calib` is an error (it would
+/// otherwise score with unit norms and skew its outlier ratio against
+/// the calibrated layers) — same contract as `wanda::prune`.
 pub fn owl_allocation(cfg: &ConfigEntry, dense: &[f32], calib: &CalibSet,
-                      target: f64) -> BTreeMap<String, f64> {
+                      target: f64) -> Result<BTreeMap<String, f64>> {
     const M_FACTOR: f32 = 5.0;
     const LAM: f64 = 0.08;
     let params = Params::new(cfg, dense.to_vec());
@@ -25,11 +42,11 @@ pub fn owl_allocation(cfg: &ConfigEntry, dense: &[f32], calib: &CalibSet,
 
     let mut ratios = Vec::with_capacity(segs.len());
     for seg in &segs {
-        let w = params.matrix(&seg.name).expect("matrix");
+        let w = params.matrix(&seg.name)?;
         let xn = calib
             .get(&seg.name)
-            .map(|s| s.col_norms())
-            .unwrap_or_else(|| vec![1.0; w.rows]);
+            .with_context(|| format!("no calibration for {}", seg.name))?
+            .col_norms();
         let mut scores = Vec::with_capacity(w.rows * w.cols);
         for r in 0..w.rows {
             for c in 0..w.cols {
@@ -48,24 +65,58 @@ pub fn owl_allocation(cfg: &ConfigEntry, dense: &[f32], calib: &CalibSet,
         .map(|d| (target - LAM * (d - mean_ratio) / mean_ratio.max(1e-9))
              .clamp(0.05, 0.995))
         .collect();
-    rebalance(&segs, raw, target)
+    Ok(rebalance(&segs, raw, target))
 }
 
 /// Rescale per-layer budgets so the size-weighted mean hits `target`.
+///
+/// The residual is redistributed only over layers that still have
+/// clamp headroom in the needed direction (a layer pinned at a bound
+/// cannot absorb any shift, so spreading the shift over everyone —
+/// the pre-ISSUE-9 behavior — stalled geometrically and could exit
+/// 32 iterations with the budget still off). If every layer clamps
+/// before the target is reached, the target is infeasible within
+/// [SP_MIN, SP_MAX] and the achieved mean is logged.
 fn rebalance(segs: &[crate::runtime::Segment], mut raw: Vec<f64>,
              target: f64) -> BTreeMap<String, f64> {
     let sizes: Vec<f64> = segs.iter().map(|s| s.len() as f64).collect();
     let total: f64 = sizes.iter().sum();
-    for _ in 0..32 {
-        let cur: f64 = raw.iter().zip(sizes.iter())
-            .map(|(s, n)| s * n).sum::<f64>() / total;
-        let shift = target - cur;
-        if shift.abs() < 1e-6 {
+    let weighted_mean = |raw: &[f64]| -> f64 {
+        raw.iter().zip(sizes.iter()).map(|(s, n)| s * n).sum::<f64>()
+            / total
+    };
+    for _ in 0..64 {
+        let resid = target - weighted_mean(&raw);
+        if resid.abs() < 1e-9 {
             break;
         }
-        for s in raw.iter_mut() {
-            *s = (*s + shift).clamp(0.02, 0.998);
+        // layers with headroom in the residual's direction
+        let movable: f64 = raw
+            .iter()
+            .zip(sizes.iter())
+            .filter(|(s, _)| {
+                if resid > 0.0 { **s < SP_MAX } else { **s > SP_MIN }
+            })
+            .map(|(_, n)| *n)
+            .sum();
+        if movable == 0.0 {
+            break; // infeasible: every layer pinned at a bound
         }
+        let shift = resid * total / movable;
+        for s in raw.iter_mut() {
+            if (resid > 0.0 && *s < SP_MAX)
+                || (resid < 0.0 && *s > SP_MIN)
+            {
+                *s = (*s + shift).clamp(SP_MIN, SP_MAX);
+            }
+        }
+    }
+    let achieved = weighted_mean(&raw);
+    if (achieved - target).abs() > 1e-6 {
+        crate::debug!("alloc",
+                      "rebalance did not converge: achieved \
+                       {achieved:.6} vs target {target:.6} \
+                       (infeasible within [{SP_MIN}, {SP_MAX}])");
     }
     segs.iter()
         .map(|s| s.name.clone())
@@ -92,6 +143,28 @@ impl Default for EvoOptions {
     }
 }
 
+/// One budget-moving mutation: shift layer `a` by `delta` (clamped)
+/// and compensate layer `b` size-weightedly so the global
+/// size-weighted mean is unchanged. Returns `None` — mutation
+/// rejected — when `b`'s compensation would itself clamp: the
+/// pre-ISSUE-9 code clamped `b` anyway, silently changing the
+/// candidate's global sparsity, so lower-sparsity candidates won
+/// fitness unfairly and the returned allocation could miss the target.
+fn mutate(best: &[f64], sizes: &[f64], a: usize, b: usize, delta: f64)
+          -> Option<Vec<f64>> {
+    let mut cand = best.to_vec();
+    let new_a = (cand[a] + delta).clamp(SP_MIN, SP_MAX);
+    // size-weighted compensation from the *actual* (post-clamp) move
+    let moved = (new_a - cand[a]) * sizes[a] / sizes[b];
+    let new_b = cand[b] - moved;
+    if !(SP_MIN..=SP_MAX).contains(&new_b) {
+        return None;
+    }
+    cand[a] = new_a;
+    cand[b] = new_b;
+    Some(cand)
+}
+
 pub fn evopress_allocation(cfg: &ConfigEntry, dense: &[f32],
                            calib: &CalibSet, train: &[u32], target: f64,
                            opts: &EvoOptions)
@@ -99,6 +172,7 @@ pub fn evopress_allocation(cfg: &ConfigEntry, dense: &[f32],
     let segs: Vec<_> =
         cfg.segments.iter().filter(|s| s.prunable).cloned().collect();
     let n = segs.len();
+    let sizes: Vec<f64> = segs.iter().map(|s| s.len() as f64).collect();
     let mut rng = Rng::new(opts.seed ^ 0xE70);
 
     // fitness evaluation windows (fixed across the whole search)
@@ -127,19 +201,17 @@ pub fn evopress_allocation(cfg: &ConfigEntry, dense: &[f32],
         let mut improved = false;
         for _ in 0..opts.population {
             // mutate: move budget between two random layers, keeping the
-            // size-weighted global sparsity fixed
-            let mut cand = best.clone();
+            // size-weighted global sparsity fixed (off-budget mutations
+            // are rejected, so every evaluated candidate is on-budget)
             let a = rng.below(n);
             let mut b = rng.below(n);
             while b == a {
                 b = rng.below(n);
             }
             let delta = (rng.f64() * 2.0 - 1.0) * opts.mutation;
-            let na = segs[a].len() as f64;
-            let nb = segs[b].len() as f64;
-            cand[a] = (cand[a] + delta).clamp(0.02, 0.998);
-            let moved = (cand[a] - best[a]) * na / nb;
-            cand[b] = (cand[b] - moved).clamp(0.02, 0.998);
+            let Some(cand) = mutate(&best, &sizes, a, b, delta) else {
+                continue;
+            };
             let f = fitness(&cand)?;
             if f < best_fit {
                 best = cand;
@@ -153,23 +225,169 @@ pub fn evopress_allocation(cfg: &ConfigEntry, dense: &[f32],
     Ok(segs.iter().map(|s| s.name.clone()).zip(best).collect())
 }
 
+/// SparseLLM-style global allocation (Bai et al. 2024): rank the
+/// per-weight wanda saliency |W_ij|·||X_i||_2 across *all* prunable
+/// segments at once and keep the global top-K,
+/// K = round((1-target)·N). Per-layer budgets are each layer's share
+/// of the cut, so the size-weighted mean sparsity equals
+/// `1 - K/N` — the global target, exactly (one global rounding instead
+/// of one per layer).
+pub fn global_allocation(cfg: &ConfigEntry, dense: &[f32],
+                         calib: &CalibSet, target: f64)
+                         -> Result<BTreeMap<String, f64>> {
+    let params = Params::new(cfg, dense.to_vec());
+    let segs: Vec<_> =
+        cfg.segments.iter().filter(|s| s.prunable).cloned().collect();
+
+    // concatenated saliency over all prunable weights, plus each
+    // segment's [start, end) range in the concatenation
+    let mut scores: Vec<f32> = Vec::new();
+    let mut ranges = Vec::with_capacity(segs.len());
+    for seg in &segs {
+        let w = params.matrix(&seg.name)?;
+        let xn = calib
+            .get(&seg.name)
+            .with_context(|| format!("no calibration for {}", seg.name))?
+            .col_norms();
+        let start = scores.len();
+        for r in 0..w.rows {
+            for c in 0..w.cols {
+                scores.push(w.at(r, c).abs() * xn[r]);
+            }
+        }
+        ranges.push((start, scores.len()));
+    }
+    let n = scores.len();
+    let keep_total = ((1.0 - target) * n as f64).round() as usize;
+    let mask = crate::tensor::select::topk_mask(&scores,
+                                               keep_total.min(n));
+
+    Ok(segs
+        .iter()
+        .zip(ranges.iter())
+        .map(|(seg, &(s, e))| {
+            let kept = mask[s..e].iter().filter(|&&m| m > 0.0).count();
+            let sp = 1.0 - kept as f64 / (e - s) as f64;
+            (seg.name.clone(), sp)
+        })
+        .collect())
+}
+
+/// UniPruning-style global feedback (Ding et al. 2025): greedy
+/// coordinate descent on the per-layer budgets, driven by held-out
+/// NLL of the wanda-pruned candidate. Each move shifts one layer's
+/// budget by ±step and funds it uniformly (in sparsity units) across
+/// the other layers, so the size-weighted global mean is invariant;
+/// moves that any clamp would knock off-budget are rejected. The step
+/// halves after a round with no accepted move.
+pub fn feedback_allocation(cfg: &ConfigEntry, dense: &[f32],
+                           calib: &CalibSet, train: &[u32],
+                           base: &BTreeMap<String, f64>, target: f64,
+                           rounds: usize)
+                           -> Result<BTreeMap<String, f64>> {
+    let segs: Vec<_> =
+        cfg.segments.iter().filter(|s| s.prunable).cloned().collect();
+    let n = segs.len();
+    let sizes: Vec<f64> = segs.iter().map(|s| s.len() as f64).collect();
+    let total: f64 = sizes.iter().sum();
+
+    let mut cur: Vec<f64> = segs
+        .iter()
+        .map(|s| base.get(&s.name).copied().unwrap_or(target))
+        .collect();
+
+    // held-out windows, disjoint seed from the evo fitness windows
+    let windows = crate::data::calibration(train, 4, cfg.seq_len + 1,
+                                           0x5EED);
+    let fitness = |alloc: &[f64]| -> Result<f64> {
+        let map: BTreeMap<String, f64> = segs
+            .iter()
+            .map(|s| s.name.clone())
+            .zip(alloc.iter().copied())
+            .collect();
+        let pruned = super::wanda::prune(cfg, dense, calib, &map)?;
+        let p = Params::new(cfg, pruned);
+        let mut nll = 0.0;
+        for w in &windows {
+            nll += nll_seq(&p, w)?;
+        }
+        Ok(nll / windows.len() as f64)
+    };
+
+    // budget-preserving candidate: layer `a` moves by `delta`, every
+    // other layer absorbs a uniform compensating shift
+    let shifted = |cur: &[f64], a: usize, delta: f64|
+                   -> Option<Vec<f64>> {
+        let mut cand = cur.to_vec();
+        let new_a = cand[a] + delta;
+        if !(SP_MIN..=SP_MAX).contains(&new_a) {
+            return None;
+        }
+        let comp = -delta * sizes[a] / (total - sizes[a]);
+        for (i, c) in cand.iter_mut().enumerate() {
+            if i == a {
+                *c = new_a;
+            } else {
+                *c += comp;
+                if !(SP_MIN..=SP_MAX).contains(c) {
+                    return None;
+                }
+            }
+        }
+        Some(cand)
+    };
+
+    let mut best_fit = fitness(&cur)?;
+    let mut step = 0.05;
+    for round in 0..rounds {
+        let mut improved = false;
+        for a in 0..n {
+            for delta in [-step, step] {
+                let Some(cand) = shifted(&cur, a, delta) else {
+                    continue;
+                };
+                let f = fitness(&cand)?;
+                if f < best_fit {
+                    cur = cand;
+                    best_fit = f;
+                    improved = true;
+                }
+            }
+        }
+        if !improved {
+            step *= 0.5;
+        }
+        crate::debug!("alloc", "feedback round {round}: nll \
+                       {best_fit:.4} step {step:.3}");
+    }
+    Ok(segs.iter().map(|s| s.name.clone()).zip(cur).collect())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::pruners::test_support::*;
 
+    fn weighted_mean(cfg: &ConfigEntry,
+                     alloc: &BTreeMap<String, f64>) -> f64 {
+        let segs: Vec<_> =
+            cfg.segments.iter().filter(|s| s.prunable).collect();
+        let total: f64 = segs.iter().map(|s| s.len() as f64).sum();
+        segs.iter()
+            .map(|s| alloc[&s.name] * s.len() as f64)
+            .sum::<f64>()
+            / total
+    }
+
     #[test]
     fn owl_respects_global_budget() {
         let (cfg, dense, calib) = toy_setup();
         for target in [0.5, 0.7] {
-            let alloc = owl_allocation(&cfg, &dense, &calib, target);
-            let segs: Vec<_> = cfg.segments.iter()
-                .filter(|s| s.prunable).collect();
-            let total: f64 = segs.iter().map(|s| s.len() as f64).sum();
-            let mean: f64 = segs.iter()
-                .map(|s| alloc[&s.name] * s.len() as f64)
-                .sum::<f64>() / total;
-            assert!((mean - target).abs() < 0.01, "target={target}");
+            let alloc =
+                owl_allocation(&cfg, &dense, &calib, target).unwrap();
+            let mean = weighted_mean(&cfg, &alloc);
+            assert!((mean - target).abs() < 1e-9,
+                    "target={target} mean={mean}");
         }
     }
 
@@ -179,7 +397,7 @@ mod tests {
         // plant one extreme outlier in wq: OWL must protect the layer
         let seg = cfg.segment("l0.attn.wq").unwrap().clone();
         dense[seg.offset] = 500.0;
-        let alloc = owl_allocation(&cfg, &dense, &calib, 0.7);
+        let alloc = owl_allocation(&cfg, &dense, &calib, 0.7).unwrap();
         let wq = alloc["l0.attn.wq"];
         let others: Vec<f64> = alloc
             .iter()
@@ -189,6 +407,113 @@ mod tests {
         let mean_other = others.iter().sum::<f64>() / others.len() as f64;
         assert!(wq < mean_other,
                 "outlier layer not protected: {wq} vs {mean_other}");
+    }
+
+    #[test]
+    fn owl_missing_calibration_is_an_error() {
+        let (cfg, dense, mut calib) = toy_setup();
+        calib.remove("l0.attn.wk");
+        let err = owl_allocation(&cfg, &dense, &calib, 0.5).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("l0.attn.wk"),
+                "error must name the layer: {msg}");
+    }
+
+    #[test]
+    fn rebalance_converges_under_heavy_clamping() {
+        // one small layer (wq, 16 of 192 weights) holds all the
+        // headroom. The pre-fix uniform shift was mostly absorbed by
+        // the five layers pinned at SP_MAX, shrinking the residual by
+        // only 1/12 per iteration — 32 iterations left the mean off
+        // by ~1e-3. Redistributing over unclamped layers only lands
+        // exactly.
+        let (cfg, _, _) = toy_setup();
+        let segs: Vec<_> =
+            cfg.segments.iter().filter(|s| s.prunable).cloned().collect();
+        let raw: Vec<f64> = segs
+            .iter()
+            .map(|s| if s.name == "l0.attn.wq" { 0.2 } else { SP_MAX })
+            .collect();
+        let alloc = rebalance(&segs, raw, 0.95);
+        let mean = weighted_mean(&cfg, &alloc);
+        assert!((mean - 0.95).abs() < 1e-9, "mean={mean}");
+        // the pinned layers never moved; wq absorbed the residual
+        assert_eq!(alloc["l0.attn.wk"], SP_MAX);
+        assert!(alloc["l0.attn.wq"] > 0.2);
+    }
+
+    #[test]
+    fn rebalance_handles_infeasible_targets_without_overshoot() {
+        // every layer pinned at SP_MAX and the target still higher:
+        // infeasible — rebalance must stop at the bound, not loop or
+        // return out-of-range budgets
+        let (cfg, _, _) = toy_setup();
+        let segs: Vec<_> =
+            cfg.segments.iter().filter(|s| s.prunable).cloned().collect();
+        let raw = vec![SP_MAX; segs.len()];
+        let alloc = rebalance(&segs, raw, 0.9999);
+        for (name, sp) in &alloc {
+            assert_eq!(*sp, SP_MAX, "{name}");
+        }
+    }
+
+    #[test]
+    fn evopress_mutations_preserve_budget_within_1e9() {
+        // clamp-prone budgets: many draws push a or b past a bound.
+        // Every *accepted* mutation must keep the size-weighted mean
+        // bit-for-bit on budget; off-budget ones must be rejected.
+        let (cfg, _, _) = toy_setup();
+        let segs: Vec<_> =
+            cfg.segments.iter().filter(|s| s.prunable).cloned().collect();
+        let sizes: Vec<f64> = segs.iter().map(|s| s.len() as f64).collect();
+        let total: f64 = sizes.iter().sum();
+        let best = vec![0.03, 0.997, 0.5, 0.98, 0.05, 0.6];
+        let base_mean: f64 = best.iter().zip(sizes.iter())
+            .map(|(s, n)| s * n).sum::<f64>() / total;
+        let mut rng = Rng::new(0xB06E7);
+        let n = best.len();
+        let (mut accepted, mut rejected) = (0, 0);
+        for _ in 0..500 {
+            let a = rng.below(n);
+            let mut b = rng.below(n);
+            while b == a {
+                b = rng.below(n);
+            }
+            let delta = (rng.f64() * 2.0 - 1.0) * 0.5;
+            match mutate(&best, &sizes, a, b, delta) {
+                Some(cand) => {
+                    accepted += 1;
+                    let mean: f64 = cand.iter().zip(sizes.iter())
+                        .map(|(s, n)| s * n).sum::<f64>() / total;
+                    assert!((mean - base_mean).abs() < 1e-9,
+                            "a={a} b={b} delta={delta}: {mean} vs \
+                             {base_mean}");
+                }
+                None => rejected += 1,
+            }
+        }
+        assert!(accepted > 0 && rejected > 0,
+                "clamp-prone setup must exercise both paths \
+                 ({accepted} accepted, {rejected} rejected)");
+    }
+
+    #[test]
+    fn evopress_returns_on_budget_allocation_under_clamping() {
+        let (cfg, dense, calib) = toy_setup();
+        let mut rng = crate::util::rng::Rng::new(0);
+        let train: Vec<u32> =
+            (0..2000).map(|_| rng.below(16) as u32).collect();
+        // near-SP_MAX target + huge mutation: pre-fix, clamped
+        // compensations silently lowered candidates' global sparsity
+        // and the winner drifted off budget
+        let opts = EvoOptions { generations: 2, population: 4,
+                                mutation: 0.5, fitness_windows: 2,
+                                ..Default::default() };
+        let target = 0.97;
+        let alloc = evopress_allocation(&cfg, &dense, &calib, &train,
+                                        target, &opts).unwrap();
+        let mean = weighted_mean(&cfg, &alloc);
+        assert!((mean - target).abs() < 1e-9, "mean={mean}");
     }
 
     #[test]
@@ -205,5 +530,58 @@ mod tests {
                                         &opts).unwrap();
         assert_eq!(alloc.len(),
                    cfg.segments.iter().filter(|s| s.prunable).count());
+    }
+
+    #[test]
+    fn global_allocation_budget_is_exact() {
+        let (cfg, dense, calib) = toy_setup();
+        let n: usize = cfg.segments.iter().filter(|s| s.prunable)
+            .map(|s| s.len()).sum();
+        // non-1/32-aligned targets: one global rounding, no drift
+        for target in [0.55, 0.7, 0.9] {
+            let alloc =
+                global_allocation(&cfg, &dense, &calib, target).unwrap();
+            let mean = weighted_mean(&cfg, &alloc);
+            let exact =
+                1.0 - ((1.0 - target) * n as f64).round() / n as f64;
+            assert!((mean - exact).abs() < 1e-12,
+                    "target={target} mean={mean} exact={exact}");
+        }
+    }
+
+    #[test]
+    fn global_allocation_protects_salient_layers() {
+        let (cfg, mut dense, calib) = toy_setup();
+        // make every wq weight huge: global ranking must keep wq
+        // nearly dense and push sparsity onto the other layers
+        let seg = cfg.segment("l0.attn.wq").unwrap().clone();
+        for i in seg.offset..seg.end() {
+            dense[i] = 50.0 + (i - seg.offset) as f32;
+        }
+        let alloc = global_allocation(&cfg, &dense, &calib, 0.7).unwrap();
+        let wq = alloc["l0.attn.wq"];
+        let others: Vec<f64> = alloc
+            .iter()
+            .filter(|(k, _)| k.as_str() != "l0.attn.wq")
+            .map(|(_, v)| *v)
+            .collect();
+        let mean_other = others.iter().sum::<f64>() / others.len() as f64;
+        assert!(wq < mean_other,
+                "salient layer not protected: {wq} vs {mean_other}");
+    }
+
+    #[test]
+    fn feedback_preserves_global_budget() {
+        let (cfg, dense, calib) = toy_setup();
+        let mut rng = crate::util::rng::Rng::new(1);
+        let train: Vec<u32> =
+            (0..2000).map(|_| rng.below(16) as u32).collect();
+        let target = 0.6;
+        let base = crate::pruners::uniform_alloc(&cfg, target);
+        let alloc = feedback_allocation(&cfg, &dense, &calib, &train,
+                                        &base, target, 1).unwrap();
+        assert_eq!(alloc.len(), base.len());
+        let mean = weighted_mean(&cfg, &alloc);
+        assert!((mean - target).abs() < 1e-9, "mean={mean}");
     }
 }

@@ -12,12 +12,21 @@
 //! update" step). These are the strongest layer-wise baselines in the
 //! paper's tables — and still collapse at extreme sparsity, which is the
 //! paper's point.
+//!
+//! Parallelism: the W-update is one ridge solve per output column
+//! against the *shared* Cholesky factor of (H + rho I), and the ALPS
+//! refinement is one support-restricted solve per column — both fully
+//! column-independent, so [`prune_layer_pooled`] shards them across
+//! the worker pool bit-identically. The Z-update's magnitude
+//! projection is global over the whole matrix and stays serial.
 
 use std::collections::BTreeMap;
 
 use anyhow::{Context, Result};
 
+use crate::infer::pool::WorkerPool;
 use crate::model::forward::CalibSet;
+use crate::pruners::{shard_columns, MatPtr};
 use crate::runtime::ConfigEntry;
 use crate::tensor::linalg::{damp, Cholesky};
 use crate::tensor::select::topk_mask;
@@ -50,16 +59,31 @@ impl LAdmmOptions {
 pub fn prune(cfg: &ConfigEntry, dense: &[f32], calib: &CalibSet,
              alloc: &BTreeMap<String, f64>, opts: &LAdmmOptions)
              -> Result<Vec<f32>> {
+    prune_pooled(cfg, dense, calib, alloc, opts, None)
+}
+
+/// [`prune`] with per-layer column sharding across `pool`.
+pub fn prune_pooled(cfg: &ConfigEntry, dense: &[f32], calib: &CalibSet,
+                    alloc: &BTreeMap<String, f64>, opts: &LAdmmOptions,
+                    pool: Option<&WorkerPool>) -> Result<Vec<f32>> {
     super::map_prunable(cfg, dense, alloc, |name, w, sp| {
         let stat = calib.get(name)
             .with_context(|| format!("no calibration for {name}"))?;
-        prune_layer(&w, &stat.gram, sp, opts)
+        prune_layer_pooled(&w, &stat.gram, sp, opts, pool)
     })
 }
 
 /// Layer-wise ADMM on one (din, dout) matrix.
 pub fn prune_layer(w0: &Matrix, gram: &Matrix, sparsity: f64,
                    opts: &LAdmmOptions) -> Result<Matrix> {
+    prune_layer_pooled(w0, gram, sparsity, opts, None)
+}
+
+/// [`prune_layer`] with the per-column ridge solves (and the ALPS
+/// support refinement) sharded over `pool` — bit-identical to serial.
+pub fn prune_layer_pooled(w0: &Matrix, gram: &Matrix, sparsity: f64,
+                          opts: &LAdmmOptions, pool: Option<&WorkerPool>)
+                          -> Result<Matrix> {
     let din = w0.rows;
     let dout = w0.cols;
     let mut h = gram.clone();
@@ -77,22 +101,31 @@ pub fn prune_layer(w0: &Matrix, gram: &Matrix, sparsity: f64,
             *a.at_mut(i, i) += rho;
         }
         let ch = Cholesky::factor(&a)?;
-        // rhs = H w0_col + rho (z - u)_col
-        let mut w0_col = vec![0.0f32; din];
-        let mut zu_col = vec![0.0f32; din];
-        for c in 0..dout {
-            for r in 0..din {
-                w0_col[r] = w0.at(r, c);
-                zu_col[r] = z.at(r, c) - u.at(r, c);
-            }
-            let mut rhs = h.matvec(&w0_col);
-            for r in 0..din {
-                rhs[r] += rho * zu_col[r];
-            }
-            let sol = ch.solve(&rhs);
-            for r in 0..din {
-                *w.at_mut(r, c) = sol[r];
-            }
+        // rhs = H w0_col + rho (z - u)_col, one independent solve per
+        // column against the shared factor
+        {
+            let ptr = MatPtr(w.data.as_mut_ptr());
+            let (h_ref, ch_ref, z_ref, u_ref) = (&h, &ch, &z, &u);
+            shard_columns(pool, dout, &|c| {
+                let mut w0_col = vec![0.0f32; din];
+                let mut zu_col = vec![0.0f32; din];
+                for r in 0..din {
+                    w0_col[r] = w0.at(r, c);
+                    zu_col[r] = z_ref.at(r, c) - u_ref.at(r, c);
+                }
+                let mut rhs = h_ref.matvec(&w0_col);
+                for r in 0..din {
+                    rhs[r] += rho * zu_col[r];
+                }
+                let sol = ch_ref.solve(&rhs);
+                for r in 0..din {
+                    // SAFETY: this task owns column c of `w`; writes
+                    // are disjoint and the barrier outlives the borrow.
+                    unsafe {
+                        *ptr.0.add(r * dout + c) = sol[r];
+                    }
+                }
+            });
         }
         // Z-update + dual ascent
         let wu = add(&w, &u);
@@ -104,7 +137,7 @@ pub fn prune_layer(w0: &Matrix, gram: &Matrix, sparsity: f64,
     }
 
     if opts.obs_refine {
-        refine_on_support(w0, &h, &z)
+        refine_on_support(w0, &h, &z, pool)
     } else {
         // Return the primal W restricted to the converged support: z's
         // values still carry the (scaled) dual u, which is only a valid
@@ -122,41 +155,59 @@ pub fn prune_layer(w0: &Matrix, gram: &Matrix, sparsity: f64,
 }
 
 /// Ridge regression restricted to the kept support of each column
-/// (solve the small SPD system over the support indices).
-fn refine_on_support(w0: &Matrix, h: &Matrix, z: &Matrix)
-                     -> Result<Matrix> {
+/// (solve the small SPD system over the support indices). Columns are
+/// independent and shard across `pool`; a failed per-column
+/// factorization is collected and surfaced after the barrier.
+fn refine_on_support(w0: &Matrix, h: &Matrix, z: &Matrix,
+                     pool: Option<&WorkerPool>) -> Result<Matrix> {
     let din = w0.rows;
     let dout = w0.cols;
     let mut out = Matrix::zeros(din, dout);
-    let mut w0_col = vec![0.0f32; din];
-    for c in 0..dout {
-        let support: Vec<usize> =
-            (0..din).filter(|&r| z.at(r, c) != 0.0).collect();
-        if support.is_empty() {
-            continue;
-        }
-        for r in 0..din {
-            w0_col[r] = w0.at(r, c);
-        }
-        // minimize (w - w0)^T H (w - w0) over support:
-        //   H_ss w_s = H_s: w0   (rows of H restricted to support)
-        let k = support.len();
-        let mut hss = Matrix::zeros(k, k);
-        let mut rhs = vec![0.0f32; k];
-        let hw0 = h.matvec(&w0_col);
-        for (a, &ra) in support.iter().enumerate() {
-            for (b, &rb) in support.iter().enumerate() {
-                *hss.at_mut(a, b) = h.at(ra, rb);
+    let failed = std::sync::Mutex::new(Vec::new());
+    {
+        let ptr = MatPtr(out.data.as_mut_ptr());
+        shard_columns(pool, dout, &|c| {
+            let support: Vec<usize> =
+                (0..din).filter(|&r| z.at(r, c) != 0.0).collect();
+            if support.is_empty() {
+                return;
             }
-            rhs[a] = hw0[ra];
-        }
-        damp(&mut hss, 1e-4);
-        let ch = Cholesky::factor(&hss)?;
-        let sol = ch.solve(&rhs);
-        for (a, &ra) in support.iter().enumerate() {
-            *out.at_mut(ra, c) = sol[a];
-        }
+            let mut w0_col = vec![0.0f32; din];
+            for r in 0..din {
+                w0_col[r] = w0.at(r, c);
+            }
+            // minimize (w - w0)^T H (w - w0) over support:
+            //   H_ss w_s = H_s: w0   (rows of H restricted to support)
+            let k = support.len();
+            let mut hss = Matrix::zeros(k, k);
+            let mut rhs = vec![0.0f32; k];
+            let hw0 = h.matvec(&w0_col);
+            for (a, &ra) in support.iter().enumerate() {
+                for (b, &rb) in support.iter().enumerate() {
+                    *hss.at_mut(a, b) = h.at(ra, rb);
+                }
+                rhs[a] = hw0[ra];
+            }
+            damp(&mut hss, 1e-4);
+            let ch = match Cholesky::factor(&hss) {
+                Ok(ch) => ch,
+                Err(e) => {
+                    failed.lock().unwrap().push(format!("col {c}: {e}"));
+                    return;
+                }
+            };
+            let sol = ch.solve(&rhs);
+            for (a, &ra) in support.iter().enumerate() {
+                // SAFETY: this task owns column c of `out`.
+                unsafe {
+                    *ptr.0.add(ra * dout + c) = sol[a];
+                }
+            }
+        });
     }
+    let errs = failed.into_inner().unwrap();
+    anyhow::ensure!(errs.is_empty(), "support refine failed: {}",
+                    errs.join("; "));
     Ok(out)
 }
 
@@ -189,7 +240,6 @@ mod tests {
     use crate::pruners::sparsegpt::recon_error;
     use crate::pruners::test_support::*;
     use crate::pruners::uniform_alloc;
-    use crate::util::rng::Rng;
 
     use crate::pruners::sparsegpt::tests::correlated_problem as
         random_problem;
@@ -235,6 +285,24 @@ mod tests {
             }
         }
         assert!(worse <= 1, "alps worse {worse}/5");
+    }
+
+    #[test]
+    fn pooled_layer_is_bit_identical_to_serial() {
+        // both presets (fixed rho, and the ALPS ramp + support refine)
+        for opts in [LAdmmOptions::default(), LAdmmOptions::alps()] {
+            let (w, gram) = random_problem(24, 7, 48, 21);
+            let serial =
+                prune_layer(&w, &gram, 0.6, &opts).unwrap();
+            for width in [2, 4, 8] {
+                let pool = WorkerPool::new(width);
+                let pooled = prune_layer_pooled(&w, &gram, 0.6, &opts,
+                                                Some(&pool))
+                    .unwrap();
+                assert_eq!(serial, pooled,
+                           "width {width} refine={}", opts.obs_refine);
+            }
+        }
     }
 
     #[test]

@@ -1,16 +1,29 @@
 //! Magnitude pruning (Han et al. 2015): keep the largest |w| per layer.
+//!
+//! The top-k is global per layer (no column axis to shard), so the
+//! pooled variant fans whole *segments* across the worker pool via
+//! [`super::map_prunable_pooled`] — each lane prunes a disjoint layer,
+//! which is bit-identical to the serial walk for any pool width.
 
 use std::collections::BTreeMap;
 
 use anyhow::Result;
 
+use crate::infer::pool::WorkerPool;
 use crate::runtime::ConfigEntry;
 use crate::tensor::select::topk_mask;
 use crate::tensor::Matrix;
 
 pub fn prune(cfg: &ConfigEntry, dense: &[f32],
              alloc: &BTreeMap<String, f64>) -> Result<Vec<f32>> {
-    super::map_prunable(cfg, dense, alloc, |_, mut w, sp| {
+    prune_pooled(cfg, dense, alloc, None)
+}
+
+/// [`prune`] with the prunable segments fanned across `pool`.
+pub fn prune_pooled(cfg: &ConfigEntry, dense: &[f32],
+                    alloc: &BTreeMap<String, f64>,
+                    pool: Option<&WorkerPool>) -> Result<Vec<f32>> {
+    super::map_prunable_pooled(cfg, dense, alloc, pool, |_, mut w, sp| {
         let scores: Vec<f32> = w.data.iter().map(|x| x.abs()).collect();
         let keep = ((1.0 - sp) * scores.len() as f64).round() as usize;
         let mask = topk_mask(&scores, keep.min(scores.len()));
@@ -67,6 +80,19 @@ mod tests {
             .map(|(o, _)| o.abs())
             .fold(0.0f32, f32::max);
         assert!(kept_min >= pruned_max);
+    }
+
+    #[test]
+    fn pooled_is_bit_identical_to_serial() {
+        let (cfg, dense, _) = toy_setup();
+        let alloc = uniform_alloc(&cfg, 0.55);
+        let serial = prune(&cfg, &dense, &alloc).unwrap();
+        for width in [2, 4, 8] {
+            let pool = WorkerPool::new(width);
+            let pooled =
+                prune_pooled(&cfg, &dense, &alloc, Some(&pool)).unwrap();
+            assert_eq!(serial, pooled, "width {width}");
+        }
     }
 
     #[test]

@@ -6,6 +6,39 @@
 //! practice the paper argues against (§2) — so they share the same
 //! skeleton: calibrate once on the dense model, then prune each
 //! prunable matrix independently.
+//!
+//! ## Parallel pruning (ISSUE 9)
+//!
+//! Per-layer pruning is embarrassingly parallel, and every per-layer
+//! solver here is additionally independent *per output column* (the
+//! comparison group of Wanda/SparseGPT and the ridge systems of
+//! L-ADMM/ALPS never mix columns). [`prune_oneshot_core`] therefore
+//! builds one persistent [`WorkerPool`] (`--workers N`) and threads it
+//! through the solvers:
+//!
+//!  - magnitude fans whole **segments** across the pool (its top-k is
+//!    global per layer, so there is no column axis) via
+//!    [`map_prunable_pooled`];
+//!  - wanda / sparsegpt / l-admm / alps keep the serial segment walk
+//!    and shard **columns** inside each `prune_layer` via
+//!    [`shard_columns`], which keeps the pool's one-dispatcher rule
+//!    intact (one `run` at a time, never nested).
+//!
+//! Determinism: a task is one column (or one segment) and runs the
+//! exact serial loop body in the exact serial accumulation order;
+//! writes are disjoint per task. Which lane runs which task therefore
+//! cannot change a single output bit — `--workers N` is bit-identical
+//! to `--workers 1` for every method (asserted in
+//! `tests/prune_pipeline.rs` and pre-timing in `benches/bench_prune`).
+//!
+//! ## Cross-layer allocation
+//!
+//! `--alloc {uniform,owl,evo,global}` plus an optional NLL-feedback
+//! refinement (`--feedback-rounds R`) select the per-layer sparsity
+//! budgets; see [`alloc`] for the OWL / EvoPress / SparseLLM-style
+//! global / UniPruning-style feedback implementations. Every
+//! allocation's size-weighted mean sparsity equals the requested
+//! target exactly (the budget-accounting bugs fixed in ISSUE 9).
 
 pub mod alloc;
 pub mod ladmm;
@@ -14,6 +47,7 @@ pub mod sparsegpt;
 pub mod wanda;
 
 use std::collections::BTreeMap;
+use std::sync::Mutex;
 
 use anyhow::{bail, Result};
 
@@ -21,6 +55,7 @@ use crate::cli::Args;
 use crate::coordinator::retrain::{full_retrain, lora_retrain,
                                   RetrainOptions};
 use crate::data;
+use crate::infer::pool::WorkerPool;
 use crate::model::forward::{collect_calibration, CalibSet};
 use crate::model::Params;
 use crate::runtime::{ConfigEntry, Runtime};
@@ -37,59 +72,175 @@ pub fn calibrate(cfg: &ConfigEntry, dense: &[f32], train: &[u32],
     collect_calibration(&params, &seqs)
 }
 
+/// Cross-layer sparsity allocation mode (`--alloc`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocMode {
+    /// Same sparsity for every prunable segment.
+    Uniform,
+    /// OWL outlier-ratio budgets ([`alloc::owl_allocation`]).
+    Owl,
+    /// EvoPress-lite evolutionary search
+    /// ([`alloc::evopress_allocation`]).
+    Evo,
+    /// Global saliency ranking across all segments at once
+    /// ([`alloc::global_allocation`]).
+    Global,
+}
+
+impl AllocMode {
+    pub fn parse(s: &str) -> Result<AllocMode> {
+        Ok(match s {
+            "uniform" => AllocMode::Uniform,
+            "owl" => AllocMode::Owl,
+            "evo" => AllocMode::Evo,
+            "global" => AllocMode::Global,
+            other => bail!("bad --alloc '{other}' \
+                            (expected uniform|owl|evo|global)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AllocMode::Uniform => "uniform",
+            AllocMode::Owl => "owl",
+            AllocMode::Evo => "evo",
+            AllocMode::Global => "global",
+        }
+    }
+}
+
+/// Options for [`prune_oneshot_core`] (the `elsa prune` knobs that do
+/// not need a [`Runtime`]).
+#[derive(Debug, Clone)]
+pub struct PruneOptions {
+    /// Pool lanes for segment fan-out / column sharding. 1 = serial;
+    /// results are bit-identical for every value.
+    pub workers: usize,
+    /// Cross-layer budget allocation.
+    pub alloc: AllocMode,
+    /// Rounds of held-out-NLL budget feedback
+    /// ([`alloc::feedback_allocation`]) applied on top of `alloc`.
+    pub feedback_rounds: usize,
+}
+
+impl Default for PruneOptions {
+    fn default() -> Self {
+        PruneOptions { workers: 1, alloc: AllocMode::Uniform,
+                       feedback_rounds: 0 }
+    }
+}
+
+impl PruneOptions {
+    /// Parse `--workers N --alloc MODE --feedback-rounds R`.
+    pub fn from_args(args: &Args) -> Result<PruneOptions> {
+        Ok(PruneOptions {
+            workers: args.usize_or("workers", 1)?,
+            alloc: AllocMode::parse(&args.str_or("alloc", "uniform"))?,
+            feedback_rounds: args.usize_or("feedback-rounds", 0)?,
+        })
+    }
+}
+
 /// One-shot (no gradient) pruning dispatch. `sparsity` is uniform
-/// per-layer unless the method carries its own allocation.
+/// per-layer unless the method carries its own allocation. Thin
+/// [`Runtime`]-requiring wrapper over [`prune_oneshot_core`]: only the
+/// retraining variants (`wanda-full`, `wanda-lora`) touch the HLO
+/// path; everything else — including `--workers` / `--alloc` parsing —
+/// runs through the core.
 pub fn prune_oneshot(rt: &Runtime, cfg: &ConfigEntry, method: &str,
                      dense: &[f32], train: &[u32], sparsity: f64,
                      args: &Args) -> Result<Vec<f32>> {
-    let uniform = uniform_alloc(cfg, sparsity);
+    let opts = PruneOptions::from_args(args)?;
     match method {
-        "magnitude" => magnitude::prune(cfg, dense, &uniform),
-        "wanda" => {
-            let calib = calibrate(cfg, dense, train, 7)?;
-            wanda::prune(cfg, dense, &calib, &uniform)
-        }
-        "sparsegpt" => {
-            let calib = calibrate(cfg, dense, train, 7)?;
-            sparsegpt::prune(cfg, dense, &calib, &uniform)
-        }
-        "l-admm" => {
-            let calib = calibrate(cfg, dense, train, 7)?;
-            ladmm::prune(cfg, dense, &calib, &uniform,
-                         &ladmm::LAdmmOptions::default())
-        }
-        "alps" => {
-            let calib = calibrate(cfg, dense, train, 7)?;
-            ladmm::prune(cfg, dense, &calib, &uniform,
-                         &ladmm::LAdmmOptions::alps())
-        }
-        "wanda-owl" => {
-            let calib = calibrate(cfg, dense, train, 7)?;
-            let alloc = alloc::owl_allocation(cfg, dense, &calib, sparsity);
-            wanda::prune(cfg, dense, &calib, &alloc)
-        }
         "wanda-full" => {
-            let calib = calibrate(cfg, dense, train, 7)?;
-            let pruned = wanda::prune(cfg, dense, &calib, &uniform)?;
+            let pruned = prune_oneshot_core(cfg, "wanda", dense, train,
+                                            sparsity, &opts)?;
             let mask = mask_of(cfg, &pruned);
-            let opts = RetrainOptions::new(
+            let ropts = RetrainOptions::new(
                 args.usize_or("retrain-steps", 500)?,
                 args.f32_or("retrain-lr", 1e-3)?);
             let (p, _) = full_retrain(rt, cfg, train, &pruned, &mask,
-                                      &opts)?;
+                                      &ropts)?;
             Ok(p)
         }
         "wanda-lora" => {
-            let calib = calibrate(cfg, dense, train, 7)?;
-            let pruned = wanda::prune(cfg, dense, &calib, &uniform)?;
+            let pruned = prune_oneshot_core(cfg, "wanda", dense, train,
+                                            sparsity, &opts)?;
             let mask = mask_of(cfg, &pruned);
-            let opts = RetrainOptions::new(
+            let ropts = RetrainOptions::new(
                 args.usize_or("retrain-steps", 500)?,
                 args.f32_or("retrain-lr", 3e-3)?);
             let (p, _) = lora_retrain(rt, cfg, train, &pruned, &mask,
-                                      &opts)?;
+                                      &ropts)?;
             Ok(p)
         }
+        _ => prune_oneshot_core(cfg, method, dense, train, sparsity,
+                                &opts),
+    }
+}
+
+/// One-shot pruning without a [`Runtime`]: calibrate (if the method or
+/// allocation needs it), compute the cross-layer budget, then run the
+/// per-layer solver over the shared worker pool. This is the whole
+/// prune half of the prune→quantize→serve pipeline, callable from
+/// integration tests and benches with no artifacts directory.
+pub fn prune_oneshot_core(cfg: &ConfigEntry, method: &str, dense: &[f32],
+                          train: &[u32], sparsity: f64,
+                          opts: &PruneOptions) -> Result<Vec<f32>> {
+    let method_needs_calib = matches!(
+        method, "wanda" | "sparsegpt" | "l-admm" | "alps" | "wanda-owl");
+    let need_calib = method_needs_calib
+        || opts.alloc != AllocMode::Uniform
+        || opts.feedback_rounds > 0;
+    let calib = if need_calib {
+        Some(calibrate(cfg, dense, train, 7)?)
+    } else {
+        None
+    };
+    let calib_ref = calib.as_ref();
+
+    // cross-layer budgets: the method's own allocation (wanda-owl)
+    // wins, otherwise --alloc picks one; --feedback-rounds refines it.
+    let mut allocation = match method {
+        "wanda-owl" => alloc::owl_allocation(cfg, dense,
+                                             calib_ref.unwrap(),
+                                             sparsity)?,
+        _ => match opts.alloc {
+            AllocMode::Uniform => uniform_alloc(cfg, sparsity),
+            AllocMode::Owl => alloc::owl_allocation(
+                cfg, dense, calib_ref.unwrap(), sparsity)?,
+            AllocMode::Evo => alloc::evopress_allocation(
+                cfg, dense, calib_ref.unwrap(), train, sparsity,
+                &alloc::EvoOptions::default())?,
+            AllocMode::Global => alloc::global_allocation(
+                cfg, dense, calib_ref.unwrap(), sparsity)?,
+        },
+    };
+    if opts.feedback_rounds > 0 {
+        allocation = alloc::feedback_allocation(
+            cfg, dense, calib_ref.unwrap(), train, &allocation, sparsity,
+            opts.feedback_rounds)?;
+    }
+
+    // one pool for the whole prune; width 1 spawns nothing and every
+    // dispatch runs inline (the serial reference path).
+    let pool = (opts.workers > 1)
+        .then(|| WorkerPool::new(opts.workers));
+    let pool = pool.as_ref();
+
+    match method {
+        "magnitude" => magnitude::prune_pooled(cfg, dense, &allocation,
+                                               pool),
+        "wanda" | "wanda-owl" => wanda::prune_pooled(
+            cfg, dense, calib_ref.unwrap(), &allocation, pool),
+        "sparsegpt" => sparsegpt::prune_pooled(
+            cfg, dense, calib_ref.unwrap(), &allocation, pool),
+        "l-admm" => ladmm::prune_pooled(
+            cfg, dense, calib_ref.unwrap(), &allocation,
+            &ladmm::LAdmmOptions::default(), pool),
+        "alps" => ladmm::prune_pooled(
+            cfg, dense, calib_ref.unwrap(), &allocation,
+            &ladmm::LAdmmOptions::alps(), pool),
         other => bail!("unknown pruning method '{other}'"),
     }
 }
@@ -116,6 +267,30 @@ pub fn mask_of(cfg: &ConfigEntry, params: &[f32]) -> Vec<f32> {
     mask
 }
 
+/// Raw-pointer view of an `f32` buffer for *disjoint* writes from pool
+/// lanes — the `SendPtr` idiom of `infer/pool.rs` / `sparse/tile.rs`.
+/// Sound only because every task writes a set of elements no other
+/// task touches (its own column / its own segment range) and the
+/// pool's `run` barrier outlives every dereference.
+#[derive(Clone, Copy)]
+pub(crate) struct MatPtr(pub *mut f32);
+// SAFETY: see above — tasks write disjoint element sets, and the
+// borrow behind the pointer outlives the dispatch barrier.
+unsafe impl Send for MatPtr {}
+unsafe impl Sync for MatPtr {}
+
+/// Run `f(c)` for every column `0..cols`, sharded across `pool` when
+/// one is given (serial loop otherwise — the reference order). A task
+/// is one column and runs the identical loop body either way, so the
+/// result is bit-exact for any pool width.
+pub(crate) fn shard_columns(pool: Option<&WorkerPool>, cols: usize,
+                            f: &(dyn Fn(usize) + Sync)) {
+    match pool {
+        Some(p) if p.width() > 1 && cols > 1 => p.run(cols, f),
+        _ => (0..cols).for_each(f),
+    }
+}
+
 /// Shared helper: replace the prunable matrices of `dense` with the
 /// per-segment matrices produced by `f(segment_name, W, target_sparsity)`.
 pub fn map_prunable(cfg: &ConfigEntry, dense: &[f32],
@@ -132,6 +307,60 @@ pub fn map_prunable(cfg: &ConfigEntry, dense: &[f32],
         anyhow::ensure!(new.rows * new.cols == seg.len());
         out[seg.offset..seg.end()].copy_from_slice(&new.data);
     }
+    Ok(out)
+}
+
+/// [`map_prunable`] with the *segments* fanned out across `pool` — for
+/// per-layer closures with no internal parallelism (magnitude's
+/// whole-layer top-k). Each task writes only its own segment's
+/// disjoint `out[offset..end)` range, so any lane interleaving is
+/// bit-identical to the serial walk.
+pub fn map_prunable_pooled<F>(cfg: &ConfigEntry, dense: &[f32],
+                              alloc: &BTreeMap<String, f64>,
+                              pool: Option<&WorkerPool>, f: F)
+                              -> Result<Vec<f32>>
+where
+    F: Fn(&str, crate::tensor::Matrix, f64)
+        -> Result<crate::tensor::Matrix> + Sync,
+{
+    let pool = match pool {
+        Some(p) if p.width() > 1 => p,
+        _ => return map_prunable(cfg, dense, alloc,
+                                 |n, w, sp| f(n, w, sp)),
+    };
+    let mut out = dense.to_vec();
+    let params = Params::new(cfg, dense.to_vec());
+    let segs: Vec<_> =
+        cfg.segments.iter().filter(|s| s.prunable).cloned().collect();
+    let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    let ptr = MatPtr(out.as_mut_ptr());
+    let params_ref = &params;
+    let f_ref = &f;
+    pool.run(segs.len(), &|i| {
+        let seg = &segs[i];
+        let sp = alloc.get(&seg.name).copied().unwrap_or(0.0);
+        let res = params_ref
+            .matrix(&seg.name)
+            .and_then(|w| f_ref(&seg.name, w, sp));
+        match res {
+            Ok(new) if new.rows * new.cols == seg.len() => {
+                // SAFETY: segments are disjoint ranges of `out`, and
+                // the pool barrier keeps `out` alive past every write.
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        new.data.as_ptr(), ptr.0.add(seg.offset),
+                        seg.len());
+                }
+            }
+            Ok(_) => errors.lock().unwrap().push(
+                format!("{}: pruned size mismatch", seg.name)),
+            Err(e) => errors.lock().unwrap().push(
+                format!("{}: {e:#}", seg.name)),
+        }
+    });
+    let errs = errors.into_inner().unwrap();
+    anyhow::ensure!(errs.is_empty(), "pruning failed: {}",
+                    errs.join("; "));
     Ok(out)
 }
 
@@ -163,6 +392,7 @@ pub mod test_support {
 mod tests {
     use super::test_support::*;
     use super::*;
+    use crate::util::rng::Rng;
 
     #[test]
     fn uniform_alloc_covers_prunables() {
@@ -184,5 +414,108 @@ mod tests {
         // non-prunable zeros stay 1 (they are not "pruned")
         let b1 = cfg.segment("l0.mlp.b1").unwrap().clone();
         assert_eq!(m[b1.offset], 1.0);
+    }
+
+    #[test]
+    fn alloc_mode_parses() {
+        assert_eq!(AllocMode::parse("uniform").unwrap(),
+                   AllocMode::Uniform);
+        assert_eq!(AllocMode::parse("owl").unwrap(), AllocMode::Owl);
+        assert_eq!(AllocMode::parse("evo").unwrap(), AllocMode::Evo);
+        assert_eq!(AllocMode::parse("global").unwrap(),
+                   AllocMode::Global);
+        assert!(AllocMode::parse("nope").is_err());
+        assert_eq!(AllocMode::Global.name(), "global");
+    }
+
+    #[test]
+    fn prune_options_from_args() {
+        let argv: Vec<String> =
+            ["prune", "--workers", "4", "--alloc", "global",
+             "--feedback-rounds", "2"]
+                .iter().map(|s| s.to_string()).collect();
+        let args = Args::parse(&argv).unwrap();
+        let o = PruneOptions::from_args(&args).unwrap();
+        assert_eq!(o.workers, 4);
+        assert_eq!(o.alloc, AllocMode::Global);
+        assert_eq!(o.feedback_rounds, 2);
+        let d = PruneOptions::default();
+        assert_eq!(d.workers, 1);
+        assert_eq!(d.alloc, AllocMode::Uniform);
+    }
+
+    #[test]
+    fn map_prunable_pooled_matches_serial() {
+        let (cfg, dense, _) = toy_setup();
+        let alloc = uniform_alloc(&cfg, 0.5);
+        let negate = |_: &str, mut w: crate::tensor::Matrix, _: f64|
+                      -> Result<crate::tensor::Matrix> {
+            for x in w.data.iter_mut() {
+                *x = -*x;
+            }
+            Ok(w)
+        };
+        let serial =
+            map_prunable_pooled(&cfg, &dense, &alloc, None, negate)
+                .unwrap();
+        let pool = WorkerPool::new(4);
+        let pooled = map_prunable_pooled(&cfg, &dense, &alloc,
+                                         Some(&pool), negate)
+            .unwrap();
+        assert_eq!(serial, pooled);
+        // non-prunable untouched, prunable negated
+        let emb = cfg.segment("embed").unwrap().clone();
+        assert_eq!(&serial[emb.offset..emb.end()],
+                   &dense[emb.offset..emb.end()]);
+        let wq = cfg.segment("l0.attn.wq").unwrap().clone();
+        assert_eq!(serial[wq.offset], -dense[wq.offset]);
+    }
+
+    #[test]
+    fn map_prunable_pooled_propagates_errors() {
+        let (cfg, dense, _) = toy_setup();
+        let alloc = uniform_alloc(&cfg, 0.5);
+        let pool = WorkerPool::new(4);
+        let err = map_prunable_pooled(
+            &cfg, &dense, &alloc, Some(&pool),
+            |name, w, _| {
+                if name == "l0.attn.wk" {
+                    anyhow::bail!("boom");
+                }
+                Ok(w)
+            });
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("l0.attn.wk"), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn shard_columns_covers_every_column_once() {
+        let hits: Vec<std::sync::atomic::AtomicUsize> =
+            (0..37).map(|_| std::sync::atomic::AtomicUsize::new(0))
+                   .collect();
+        let pool = WorkerPool::new(4);
+        shard_columns(Some(&pool), hits.len(), &|c| {
+            hits[c].fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        });
+        for (c, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(std::sync::atomic::Ordering::Relaxed), 1,
+                       "col {c}");
+        }
+    }
+
+    #[test]
+    fn core_dispatch_magnitude_needs_no_calibration() {
+        let (cfg, dense, _) = toy_setup();
+        let mut rng = Rng::new(0);
+        let train: Vec<u32> =
+            (0..512).map(|_| rng.below(16) as u32).collect();
+        let p = prune_oneshot_core(&cfg, "magnitude", &dense, &train,
+                                   0.5, &PruneOptions::default())
+            .unwrap();
+        assert!((sparsity_of(&cfg, &p) - 0.5).abs() < 0.05);
+        assert!(prune_oneshot_core(&cfg, "nope", &dense, &train, 0.5,
+                                   &PruneOptions::default())
+                .is_err());
     }
 }

@@ -3,44 +3,69 @@
 //!
 //! Our weights are stored (din, dout) for x @ W, so the comparison group
 //! for output neuron c is column c, and the activation norm indexes the
-//! *row* (input feature) i.
+//! *row* (input feature) i. Columns are fully independent, so
+//! [`prune_layer_pooled`] shards them across the worker pool with
+//! bit-identical results (each task runs the serial per-column body and
+//! writes only its own column).
 
 use std::collections::BTreeMap;
 
 use anyhow::{Context, Result};
 
+use crate::infer::pool::WorkerPool;
 use crate::model::forward::CalibSet;
+use crate::pruners::{shard_columns, MatPtr};
 use crate::runtime::ConfigEntry;
 use crate::tensor::select::topk_mask;
 use crate::tensor::Matrix;
 
 pub fn prune(cfg: &ConfigEntry, dense: &[f32], calib: &CalibSet,
              alloc: &BTreeMap<String, f64>) -> Result<Vec<f32>> {
+    prune_pooled(cfg, dense, calib, alloc, None)
+}
+
+/// [`prune`] with per-layer column sharding across `pool`.
+pub fn prune_pooled(cfg: &ConfigEntry, dense: &[f32], calib: &CalibSet,
+                    alloc: &BTreeMap<String, f64>,
+                    pool: Option<&WorkerPool>) -> Result<Vec<f32>> {
     super::map_prunable(cfg, dense, alloc, |name, w, sp| {
         let stat = calib.get(name)
             .with_context(|| format!("no calibration for {name}"))?;
-        Ok(prune_layer(&w, &stat.col_norms(), sp))
+        Ok(prune_layer_pooled(&w, &stat.col_norms(), sp, pool))
     })
 }
 
 /// Prune one (din, dout) matrix given input-feature norms (len din).
 pub fn prune_layer(w: &Matrix, xnorms: &[f32], sparsity: f64) -> Matrix {
+    prune_layer_pooled(w, xnorms, sparsity, None)
+}
+
+/// [`prune_layer`] with the per-column mask work sharded over `pool`
+/// (serial when `None` — same loop body, same bits either way).
+pub fn prune_layer_pooled(w: &Matrix, xnorms: &[f32], sparsity: f64,
+                          pool: Option<&WorkerPool>) -> Matrix {
     assert_eq!(xnorms.len(), w.rows);
     let mut out = w.clone();
     let keep_per_col =
         ((1.0 - sparsity) * w.rows as f64).round() as usize;
-    let mut col_scores = vec![0.0f32; w.rows];
-    for c in 0..w.cols {
+    let cols = w.cols;
+    let ptr = MatPtr(out.data.as_mut_ptr());
+    shard_columns(pool, cols, &|c| {
+        let mut col_scores = vec![0.0f32; w.rows];
         for r in 0..w.rows {
             col_scores[r] = w.at(r, c).abs() * xnorms[r];
         }
         let mask = topk_mask(&col_scores, keep_per_col.min(w.rows));
         for r in 0..w.rows {
             if mask[r] == 0.0 {
-                *out.at_mut(r, c) = 0.0;
+                // SAFETY: this task owns column c; writes are disjoint
+                // and the shard barrier outlives the borrow of `out`.
+                unsafe {
+                    *ptr.0.add(r * cols + c) = 0.0;
+                }
             }
         }
-    }
+    });
     out
 }
 
@@ -82,6 +107,19 @@ mod tests {
         for c in 0..5 {
             let kept = (0..16).filter(|&r| pruned.at(r, c) != 0.0).count();
             assert_eq!(kept, 4, "col {c}");
+        }
+    }
+
+    #[test]
+    fn pooled_layer_is_bit_identical_to_serial() {
+        let mut rng = Rng::new(2);
+        let w = Matrix::randn(24, 17, 1.0, &mut rng);
+        let xn: Vec<f32> = (0..24).map(|i| 0.5 + (i % 5) as f32).collect();
+        let serial = prune_layer(&w, &xn, 0.6);
+        for width in [2, 4, 8] {
+            let pool = WorkerPool::new(width);
+            let pooled = prune_layer_pooled(&w, &xn, 0.6, Some(&pool));
+            assert_eq!(serial, pooled, "width {width}");
         }
     }
 }

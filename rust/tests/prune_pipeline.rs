@@ -1,0 +1,189 @@
+//! Prune → quantize → serve pipeline (ISSUE 9): worker-count
+//! bit-identity for every one-shot method, exact sparsity budgets on
+//! non-1/32-aligned targets, and end-to-end stream identity through
+//! `Engine::build_quant` + the continuous-batching scheduler
+//! regardless of how many workers pruned the checkpoint.
+//!
+//! Everything runs through [`elsa::pruners::prune_oneshot_core`] — the
+//! Runtime-free half of `elsa prune` — on the shared toy serving model
+//! from `common`.
+
+mod common;
+
+use std::collections::BTreeMap;
+
+use common::{ragged_requests, toy_cfg, TOY_VOCAB};
+use elsa::infer::scheduler::{RequestQueue, SchedOptions, Scheduler};
+use elsa::infer::{Backend, Engine};
+use elsa::model::Params;
+use elsa::pruners::{prune_oneshot_core, AllocMode, PruneOptions};
+use elsa::runtime::ConfigEntry;
+use elsa::sparse::QuantMode;
+use elsa::util::rng::Rng;
+
+/// Every pool-parallelized one-shot method.
+const METHODS: [&str; 5] =
+    ["magnitude", "wanda", "sparsegpt", "l-admm", "alps"];
+
+fn toy_train(n: usize, seed: u64) -> Vec<u32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.below(TOY_VOCAB) as u32).collect()
+}
+
+fn opts(workers: usize) -> PruneOptions {
+    PruneOptions { workers, ..PruneOptions::default() }
+}
+
+fn per_column_kept(cfg: &ConfigEntry, flat: &[f32])
+                   -> BTreeMap<String, Vec<usize>> {
+    let p = Params::new(cfg, flat.to_vec());
+    cfg.segments
+        .iter()
+        .filter(|s| s.prunable)
+        .map(|seg| {
+            let w = p.matrix(&seg.name).unwrap();
+            let kept = (0..w.cols)
+                .map(|c| {
+                    (0..w.rows).filter(|&r| w.at(r, c) != 0.0).count()
+                })
+                .collect();
+            (seg.name.clone(), kept)
+        })
+        .collect()
+}
+
+#[test]
+fn every_method_is_bit_identical_across_worker_counts() {
+    let cfg = toy_cfg();
+    let dense = Params::init(&cfg, 3).flat;
+    let train = toy_train(4096, 11);
+    for method in METHODS {
+        let serial = prune_oneshot_core(&cfg, method, &dense, &train,
+                                        0.6, &opts(1))
+            .unwrap();
+        for workers in [2, 8] {
+            let pooled = prune_oneshot_core(&cfg, method, &dense,
+                                            &train, 0.6,
+                                            &opts(workers))
+                .unwrap();
+            assert_eq!(serial, pooled,
+                       "{method} diverged at --workers {workers}");
+        }
+    }
+}
+
+#[test]
+fn allocation_modes_are_bit_identical_across_worker_counts() {
+    let cfg = toy_cfg();
+    let dense = Params::init(&cfg, 3).flat;
+    let train = toy_train(4096, 11);
+    for alloc in [AllocMode::Owl, AllocMode::Global] {
+        let base = PruneOptions { workers: 1, alloc,
+                                  ..PruneOptions::default() };
+        let serial = prune_oneshot_core(&cfg, "wanda", &dense, &train,
+                                        0.6, &base)
+            .unwrap();
+        let pooled = prune_oneshot_core(
+            &cfg, "wanda", &dense, &train, 0.6,
+            &PruneOptions { workers: 4, alloc,
+                            ..PruneOptions::default() })
+            .unwrap();
+        assert_eq!(serial, pooled, "alloc {alloc:?} diverged");
+    }
+}
+
+#[test]
+fn sparsegpt_budget_is_exact_per_column_on_unaligned_targets() {
+    let cfg = toy_cfg();
+    let dense = Params::init(&cfg, 3).flat;
+    let train = toy_train(4096, 11);
+    // 0.55 and 0.9 are NOT multiples of 1/32: the pre-ISSUE-9
+    // per-block rounding achieved 0.5625 / 0.90625 instead
+    for sp in [0.55f64, 0.9] {
+        let pruned = prune_oneshot_core(&cfg, "sparsegpt", &dense,
+                                        &train, sp, &opts(2))
+            .unwrap();
+        for (name, kept) in per_column_kept(&cfg, &pruned) {
+            let seg = cfg.segment(&name).unwrap();
+            let din = seg.shape[0];
+            let expect = ((1.0 - sp) * din as f64).round() as usize;
+            for (c, k) in kept.iter().enumerate() {
+                assert_eq!(*k, expect, "{name} col {c} sp={sp}");
+            }
+        }
+    }
+}
+
+#[test]
+fn wanda_and_magnitude_budgets_are_exact_on_unaligned_targets() {
+    let cfg = toy_cfg();
+    let dense = Params::init(&cfg, 3).flat;
+    let train = toy_train(4096, 11);
+    let sp = 0.55f64;
+    // wanda: per-column keep quota
+    let wanda = prune_oneshot_core(&cfg, "wanda", &dense, &train, sp,
+                                   &opts(2))
+        .unwrap();
+    for (name, kept) in per_column_kept(&cfg, &wanda) {
+        let seg = cfg.segment(&name).unwrap();
+        let expect =
+            ((1.0 - sp) * seg.shape[0] as f64).round() as usize;
+        for (c, k) in kept.iter().enumerate() {
+            assert_eq!(*k, expect, "{name} col {c}");
+        }
+    }
+    // magnitude: whole-layer keep quota
+    let mag = prune_oneshot_core(&cfg, "magnitude", &dense, &train, sp,
+                                 &opts(2))
+        .unwrap();
+    let p = Params::new(&cfg, mag);
+    for seg in cfg.segments.iter().filter(|s| s.prunable) {
+        let w = p.matrix(&seg.name).unwrap();
+        let expect = ((1.0 - sp) * seg.len() as f64).round() as usize;
+        assert_eq!(w.nnz(), expect, "{}", seg.name);
+    }
+}
+
+/// The full producer→consumer path: prune with N workers, quantize at
+/// engine build, serve through the continuous-batching scheduler —
+/// token streams must be bit-identical to the serially-pruned run.
+#[test]
+fn prune_quantize_serve_streams_are_worker_count_invariant() {
+    let cfg = toy_cfg();
+    let dense = Params::init(&cfg, 3).flat;
+    let train = toy_train(4096, 11);
+
+    let serve = |flat: &[f32]| -> BTreeMap<u64, Vec<u32>> {
+        let p = Params::new(&cfg, flat.to_vec());
+        let engine = Engine::build_quant(&p, Backend::Macko,
+                                         QuantMode::Int8)
+            .expect("quant engine");
+        let mut queue = RequestQueue::new();
+        for r in ragged_requests(6) {
+            queue.push(r);
+        }
+        let sched = Scheduler::new(&engine, SchedOptions {
+            max_slots: 3,
+            threads: 2,
+            temperature: 0.8,
+            ..SchedOptions::default()
+        });
+        let (finished, _) = sched.run(queue);
+        finished.into_iter().map(|f| (f.id, f.tokens)).collect()
+    };
+
+    let base = prune_oneshot_core(&cfg, "sparsegpt", &dense, &train,
+                                  0.75, &opts(1))
+        .unwrap();
+    let base_streams = serve(&base);
+    assert_eq!(base_streams.len(), 6);
+    for workers in [2, 8] {
+        let pruned = prune_oneshot_core(&cfg, "sparsegpt", &dense,
+                                        &train, 0.75, &opts(workers))
+            .unwrap();
+        assert_eq!(base, pruned, "checkpoint diverged at {workers}");
+        let streams = serve(&pruned);
+        assert_eq!(base_streams, streams,
+                   "served streams diverged at --workers {workers}");
+    }
+}
