@@ -1,0 +1,488 @@
+#!/usr/bin/env python3
+"""Offline mirror of `elsa-lint` (rust/src/lint/mod.rs).
+
+The Rust binary (`cargo run --bin elsa-lint`) is the authoritative
+implementation and the blocking CI step. This mirror re-implements the
+same four rules line-for-line so the invariants can also be checked
+from environments without a Rust toolchain, and so the lint logic
+itself has executable test coverage in `ci/test_lint_mirror.py`
+(which runs the mirror over the real tree and over the shared fixture
+suite in `rust/tests/lint_fixtures/`). If the two implementations ever
+disagree on the fixtures, the fixture tests on both sides catch it.
+
+Rules (see docs/ARCHITECTURE.md section 8 for the full table):
+  R1 safety    every `unsafe` block/fn/impl is immediately preceded by
+               a `// SAFETY:` comment with a non-empty argument
+  R2 nondet    no nondeterminism sources in kernel/model modules
+               (sparse/, model/, tensor/, pruners/) outside sites
+               annotated `// TIMING-OK:` / `// DETERMINISM-OK: <why>`
+  R3 alloc     no allocation calls inside the per-step decode hot path
+               (a fixed table of file -> fn names) outside
+               `// ALLOC-OK: <why>` sites
+  R4 wildcard  no `_ =>` wildcard arm in any match whose arm patterns
+               name WeightFmt/QuantMode/KernelPath/Backend variants
+
+Usage: python3 ci/lint_mirror.py [root]   (root defaults to rust/src)
+Exit status 0 when clean, 1 when violations are found.
+"""
+
+import os
+import sys
+
+SAFETY_TAG = "SAFETY:"
+TIMING_TAG = "TIMING-OK:"
+DETERMINISM_TAG = "DETERMINISM-OK:"
+ALLOC_TAG = "ALLOC-OK:"
+
+WATCHED_DIRS = ("sparse/", "model/", "tensor/", "pruners/")
+
+NONDET_TOKENS = (
+    "Instant::now",
+    "SystemTime",
+    "env::var",
+    "thread::sleep",
+    "RandomState",
+    "HashMap",
+)
+
+ALLOC_TOKENS = (
+    "Vec::new",
+    "vec!",
+    ".to_vec(",
+    ".clone(",
+    ".collect",
+    "Box::new",
+    "with_capacity",
+    "String::new",
+    "format!",
+    ".to_string(",
+    ".to_owned(",
+)
+
+EXHAUSTIVE_ENUMS = ("WeightFmt::", "QuantMode::", "KernelPath::", "Backend::")
+
+# The per-step decode hot path: file (relative to the lint root) ->
+# function names whose bodies must be allocation-free outside ALLOC-OK
+# sites. Renaming or deleting a listed fn is itself a lint error so the
+# table cannot silently go stale.
+HOT_FNS = (
+    ("sparse/mod.rs", ("matvec", "matvec_batch_into",
+                       "matvec_batch_tiled_into", "axpy_lanes",
+                       "transpose_batch_into")),
+    ("sparse/tile.rs", ("exec_tiles", "matvec_batch_tiled",
+                        "pool_matvec_batch_tiled", "pool_t_matmat",
+                        "scatter_rows")),
+    ("sparse/quantized.rs", ("matvec", "matvec_batch_into",
+                             "matvec_batch_tiled_into", "exec_tiles")),
+    ("sparse/nm.rs", ("matvec", "row_acc", "matvec_batch_into",
+                      "matvec_batch_tiled_into", "exec_tiles")),
+    ("infer/pool.rs", ("run", "drain", "worker_loop")),
+    ("infer/mod.rs", ("decode_step_batch", "layer_qkv", "layer_ffn",
+                      "attend_cached", "prefill_pass_multi")),
+)
+
+
+def blank(src):
+    """Return src with comment and string/char-literal contents replaced
+    by spaces (newlines preserved), so token scans see only code."""
+    out = []
+    b = src
+    n = len(b)
+    i = 0
+    CODE, LINE, BLOCK, STR, RAWSTR, CH = range(6)
+    st = CODE
+    depth = 0  # block-comment nesting / raw-string hash count
+    while i < n:
+        c = b[i]
+        nxt = b[i + 1] if i + 1 < n else ""
+        if st == CODE:
+            if c == "/" and nxt == "/":
+                st = LINE
+                out.append("  ")
+                i += 2
+            elif c == "/" and nxt == "*":
+                st = BLOCK
+                depth = 1
+                out.append("  ")
+                i += 2
+            elif c == '"':
+                st = STR
+                out.append(" ")
+                i += 1
+            elif c in "rb":
+                j = i + 1 if (c == "b" and nxt == "r") else i
+                if b[j] == "r":
+                    k = j + 1
+                    hashes = 0
+                    while k < n and b[k] == "#":
+                        hashes += 1
+                        k += 1
+                    if k < n and b[k] == '"':
+                        out.append(" " * (k + 1 - i))
+                        i = k + 1
+                        st = RAWSTR
+                        depth = hashes
+                        continue
+                out.append(c)
+                i += 1
+            elif c == "'":
+                is_char = nxt == "\\" or (i + 2 < n and b[i + 2] == "'")
+                if is_char:
+                    st = CH
+                    out.append(" ")
+                    i += 1
+                else:  # lifetime
+                    out.append(c)
+                    i += 1
+            else:
+                out.append(c)
+                i += 1
+        elif st == LINE:
+            if c == "\n":
+                out.append("\n")
+                st = CODE
+            else:
+                out.append(" ")
+            i += 1
+        elif st == BLOCK:
+            if c == "*" and nxt == "/":
+                out.append("  ")
+                i += 2
+                depth -= 1
+                if depth == 0:
+                    st = CODE
+            elif c == "/" and nxt == "*":
+                out.append("  ")
+                i += 2
+                depth += 1
+            else:
+                out.append("\n" if c == "\n" else " ")
+                i += 1
+        elif st == STR:
+            if c == "\\" and i + 1 < n:
+                out.append(" ")
+                out.append("\n" if nxt == "\n" else " ")
+                i += 2
+            elif c == '"':
+                out.append(" ")
+                st = CODE
+                i += 1
+            else:
+                out.append("\n" if c == "\n" else " ")
+                i += 1
+        elif st == RAWSTR:
+            if c == '"':
+                k = i + 1
+                m = 0
+                while m < depth and k < n and b[k] == "#":
+                    m += 1
+                    k += 1
+                if m == depth:
+                    out.append(" " * (k - i))
+                    i = k
+                    st = CODE
+                    continue
+            out.append("\n" if c == "\n" else " ")
+            i += 1
+        elif st == CH:
+            if c == "\\" and i + 1 < n:
+                out.append("  ")
+                i += 2
+            elif c == "'":
+                out.append(" ")
+                st = CODE
+                i += 1
+            else:
+                out.append("\n" if c == "\n" else " ")
+                i += 1
+    return "".join(out)
+
+
+def is_ident(c):
+    return c.isalnum() or c == "_"
+
+
+def find_word(line, word, start=0):
+    """Index of `word` in line with non-identifier chars on both sides,
+    or -1."""
+    i = start
+    while True:
+        p = line.find(word, i)
+        if p < 0:
+            return -1
+        before_ok = p == 0 or not is_ident(line[p - 1])
+        after = p + len(word)
+        after_ok = after >= len(line) or not is_ident(line[after])
+        if before_ok and after_ok:
+            return p
+        i = p + 1
+
+
+def line_has_tag(line, tags):
+    for tag in tags:
+        p = line.find(tag)
+        if p >= 0 and line[p + len(tag):].strip():
+            return True
+    return False
+
+
+def annotated(orig_lines, code_lines, idx, tags, skip_unsafe_impl=False):
+    """True when line idx carries one of `tags` (with a non-empty
+    reason) on the same line or in the immediately preceding block of
+    comment/attribute lines. With skip_unsafe_impl, single-line
+    `unsafe impl` items may sit between the flagged line and the
+    comment so one SAFETY block covers a Send/Sync pair."""
+    if line_has_tag(orig_lines[idx], tags):
+        return True
+    j = idx
+    while j > 0:
+        j -= 1
+        t = orig_lines[j].lstrip()
+        if t.startswith("//"):
+            if line_has_tag(orig_lines[j], tags):
+                return True
+            continue
+        if t.startswith("#[") or t.startswith("#!"):
+            continue
+        if skip_unsafe_impl and find_word(code_lines[j], "unsafe") >= 0 \
+                and "impl" in code_lines[j]:
+            continue
+        break
+    return False
+
+
+def rule_safety(path, orig_lines, code_lines, out):
+    for i, code in enumerate(code_lines):
+        if find_word(code, "unsafe") < 0:
+            continue
+        is_impl = "impl" in code
+        if not annotated(orig_lines, code_lines, i, (SAFETY_TAG,),
+                         skip_unsafe_impl=is_impl):
+            out.append((path, i + 1, "safety",
+                        "`unsafe` without an immediately preceding "
+                        "`// SAFETY:` comment"))
+
+
+def rule_nondet(path, orig_lines, code_lines, out):
+    if not path.startswith(WATCHED_DIRS):
+        return
+    for i, code in enumerate(code_lines):
+        for tok in NONDET_TOKENS:
+            if tok not in code:
+                continue
+            if not annotated(orig_lines, code_lines, i,
+                             (TIMING_TAG, DETERMINISM_TAG)):
+                out.append((path, i + 1, "nondet",
+                            f"nondeterminism source `{tok}` in a "
+                            "kernel/model module without a "
+                            "TIMING-OK/DETERMINISM-OK annotation"))
+
+
+def brace_depths(code):
+    """Per-char brace depth: chars inside {...} sit one deeper; both
+    braces of a pair report the outer depth."""
+    depths = []
+    d = 0
+    for c in code:
+        if c == "}":
+            d -= 1
+        depths.append(d)
+        if c == "{":
+            d += 1
+    return depths
+
+
+def fn_extents(code, name):
+    """(body_start, body_end) char offsets for every `fn name` with a
+    body; bodyless trait declarations are skipped."""
+    extents = []
+    depths = brace_depths(code)
+    i = 0
+    while True:
+        p = find_word(code, "fn", i)
+        if p < 0:
+            break
+        i = p + 2
+        rest = code[p + 2:].lstrip()
+        if not (rest.startswith(name)
+                and (len(rest) == len(name)
+                     or not is_ident(rest[len(name)]))):
+            continue
+        # scan to the body `{` (or a `;` for a bodyless declaration)
+        paren = 0
+        j = p
+        while j < len(code):
+            c = code[j]
+            if c == "(":
+                paren += 1
+            elif c == ")":
+                paren -= 1
+            elif c == ";" and paren == 0:
+                j = -1
+                break
+            elif c == "{" and paren == 0:
+                break
+            j += 1
+        if j < 0 or j >= len(code):
+            continue
+        d = depths[j]
+        k = j + 1
+        while k < len(code) and not (code[k] == "}" and depths[k] == d):
+            k += 1
+        extents.append((j, k))
+        i = k
+    return extents
+
+
+def rule_alloc(path, orig_lines, code_lines, code, out):
+    fns = dict(HOT_FNS).get(path)
+    if not fns:
+        return
+    line_of = offsets_to_lines(code)
+    for name in fns:
+        extents = fn_extents(code, name)
+        if not extents:
+            out.append((path, 1, "config",
+                        f"hot-path fn `{name}` not found in {path} — "
+                        "update the hot-path table in the linter"))
+            continue
+        for (start, end) in extents:
+            first = line_of[start]
+            last = line_of[end]
+            for li in range(first, last + 1):
+                cl = code_lines[li]
+                for tok in ALLOC_TOKENS:
+                    if tok not in cl:
+                        continue
+                    if not annotated(orig_lines, code_lines, li,
+                                     (ALLOC_TAG,)):
+                        out.append((path, li + 1, "alloc",
+                                    f"allocation `{tok}` inside hot-path "
+                                    f"fn `{name}` without an ALLOC-OK "
+                                    "annotation"))
+
+
+def offsets_to_lines(code):
+    """char offset -> 0-based line index."""
+    line_of = [0] * len(code)
+    ln = 0
+    for i, c in enumerate(code):
+        line_of[i] = ln
+        if c == "\n":
+            ln += 1
+    return line_of
+
+
+def rule_wildcard(path, code_lines, code, out):
+    depths = brace_depths(code)
+    line_of = offsets_to_lines(code)
+    i = 0
+    while True:
+        p = find_word(code, "match", i)
+        if p < 0:
+            break
+        i = p + 5
+        if p > 0 and code[:p].rstrip().endswith("."):
+            continue  # method call, not the keyword
+        # body `{` at relative paren/bracket depth 0
+        paren = 0
+        j = p + 5
+        while j < len(code):
+            c = code[j]
+            if c in "([":
+                paren += 1
+            elif c in ")]":
+                paren -= 1
+            elif c == "{" and paren == 0:
+                break
+            elif c == ";" and paren == 0:
+                j = -1
+                break
+            j += 1
+        if j is None or j < 0 or j >= len(code):
+            continue
+        d = depths[j]
+        k = j + 1
+        while k < len(code) and not (code[k] == "}" and depths[k] == d):
+            k += 1
+        arm_sep = []  # offsets of `=>` directly inside the match braces
+        m = j + 1
+        while m + 1 < k:
+            if code[m] == "=" and code[m + 1] == ">" and depths[m] == d + 1:
+                arm_sep.append(m)
+            m += 1
+        arms = []
+        for s in arm_sep:
+            # pattern = text back to the previous arm-separating comma
+            # (skipping commas nested in ()/[]) or the match `{`
+            b = s - 1
+            nest = 0
+            while b > j:
+                c = code[b]
+                if c in ")]":
+                    nest += 1
+                elif c in "([":
+                    nest -= 1
+                elif c == "," and nest == 0 and depths[b] == d + 1:
+                    break
+                elif c in "{}" and depths[b] <= d:
+                    break
+                b -= 1
+            pat = code[b + 1:s].strip().lstrip("|").strip()
+            core = pat.split(" if ")[0].strip()
+            arms.append((core, line_of[s]))
+        if not any(any(e in core for e in EXHAUSTIVE_ENUMS)
+                   for core, _ in arms):
+            continue
+        for core, ln in arms:
+            if core == "_":
+                out.append((path, ln + 1, "wildcard",
+                            "`_ =>` wildcard arm in a match over "
+                            "WeightFmt/QuantMode/KernelPath/Backend — "
+                            "spell the variants so new formats fail "
+                            "exhaustiveness"))
+
+
+def lint_source(path, src):
+    """Lint one file; `path` is relative to the lint root (used for the
+    watched-module and hot-path tables)."""
+    code = blank(src)
+    orig_lines = src.split("\n")
+    code_lines = code.split("\n")
+    out = []
+    rule_safety(path, orig_lines, code_lines, out)
+    rule_nondet(path, orig_lines, code_lines, out)
+    rule_alloc(path, orig_lines, code_lines, code, out)
+    rule_wildcard(path, code_lines, code, out)
+    return out
+
+
+def lint_tree(root):
+    out = []
+    found = []
+    for dirpath, _dirnames, filenames in os.walk(root):
+        for f in filenames:
+            if f.endswith(".rs"):
+                found.append(os.path.join(dirpath, f))
+    for full in sorted(found):
+        rel = os.path.relpath(full, root).replace(os.sep, "/")
+        with open(full, encoding="utf-8") as fh:
+            out.extend(lint_source(rel, fh.read()))
+    return out
+
+
+def main(argv):
+    root = argv[1] if len(argv) > 1 else "rust/src"
+    violations = lint_tree(root)
+    for (path, line, rule, msg) in violations:
+        print(f"{path}:{line}: [{rule}] {msg}", file=sys.stderr)
+    if violations:
+        print(f"lint mirror: {len(violations)} violation(s)",
+              file=sys.stderr)
+        return 1
+    print(f"lint mirror: clean ({root})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

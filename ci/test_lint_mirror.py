@@ -1,0 +1,157 @@
+"""Tests for ci/lint_mirror.py against the shared fixture suite.
+
+The fixtures in rust/tests/lint_fixtures/ are the contract between the
+authoritative Rust linter (rust/src/lint, exercised by
+rust/tests/lint_fixtures.rs) and this mirror: each rule class has a bad
+snippet that must fire and a good snippet that must stay quiet, with
+identical expected rules and line numbers on both sides. The suite also
+runs the mirror over the real tree, mirroring the blocking `elsa-lint`
+CI step.
+
+Run: python3 -m unittest ci.test_lint_mirror  (or unittest discover ci)
+"""
+
+import os
+import sys
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import lint_mirror  # noqa: E402
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURES = os.path.join(REPO, "rust", "tests", "lint_fixtures")
+
+
+def fixture(name):
+    with open(os.path.join(FIXTURES, name), encoding="utf-8") as fh:
+        return fh.read()
+
+
+def lint(path, src):
+    return lint_mirror.lint_source(path, src)
+
+
+def rules(violations):
+    return [rule for (_p, _l, rule, _m) in violations]
+
+
+def lines(violations):
+    return [line for (_p, line, _r, _m) in violations]
+
+
+class HotFnTable:
+    """Temporarily swap the mirror's hot-fn table for fixture runs."""
+
+    def __init__(self, table):
+        self.table = table
+
+    def __enter__(self):
+        self.saved = lint_mirror.HOT_FNS
+        lint_mirror.HOT_FNS = self.table
+
+    def __exit__(self, *exc):
+        lint_mirror.HOT_FNS = self.saved
+
+
+class TestSafetyRule(unittest.TestCase):
+    def test_bad_fixture_fires_on_both_sites(self):
+        v = lint("infer/fixture.rs", fixture("bad_unsafe.rs"))
+        self.assertEqual(rules(v), ["safety", "safety"])
+        self.assertEqual(lines(v), [3, 7])
+
+    def test_good_fixture_is_quiet(self):
+        v = lint("infer/fixture.rs", fixture("good_unsafe.rs"))
+        self.assertEqual(v, [])
+
+    def test_safety_tag_requires_a_reason(self):
+        src = "// SAFETY:\nunsafe impl Send for X {}\n"
+        self.assertEqual(rules(lint("infer/f.rs", src)), ["safety"])
+
+
+class TestNondetRule(unittest.TestCase):
+    def test_bad_fixture_fires_in_watched_module(self):
+        v = lint("sparse/fixture.rs", fixture("bad_nondet.rs"))
+        self.assertEqual(rules(v), ["nondet", "nondet"])
+        self.assertEqual(lines(v), [5, 10])
+
+    def test_same_source_outside_watched_modules_is_legal(self):
+        v = lint("util/fixture.rs", fixture("bad_nondet.rs"))
+        self.assertEqual(v, [])
+
+    def test_good_fixture_is_quiet(self):
+        v = lint("sparse/fixture.rs", fixture("good_nondet.rs"))
+        self.assertEqual(v, [])
+
+
+class TestAllocRule(unittest.TestCase):
+    def test_bad_fixture_fires_only_in_listed_hot_fn(self):
+        with HotFnTable((("sparse/fixture.rs", ("hot",)),)):
+            v = lint("sparse/fixture.rs", fixture("bad_alloc.rs"))
+        self.assertEqual(rules(v), ["alloc"])
+        self.assertEqual(lines(v), [5])
+
+    def test_good_fixture_is_quiet(self):
+        with HotFnTable((("sparse/fixture.rs", ("hot",)),)):
+            v = lint("sparse/fixture.rs", fixture("good_alloc.rs"))
+        self.assertEqual(v, [])
+
+    def test_stale_table_entry_is_a_config_error(self):
+        with HotFnTable((("sparse/fixture.rs", ("decode",)),)):
+            v = lint("sparse/fixture.rs", fixture("bad_alloc.rs"))
+        self.assertEqual(rules(v), ["config"])
+
+
+class TestWildcardRule(unittest.TestCase):
+    def test_bad_fixture_fires_once(self):
+        v = lint("infer/fixture.rs", fixture("bad_wildcard.rs"))
+        self.assertEqual(rules(v), ["wildcard"])
+        self.assertEqual(lines(v), [12])
+
+    def test_good_fixture_is_quiet(self):
+        v = lint("infer/fixture.rs", fixture("good_wildcard.rs"))
+        self.assertEqual(v, [])
+
+
+class TestLexer(unittest.TestCase):
+    def test_blank_preserves_shape(self):
+        src = 'let a = "unsafe"; // unsafe\nlet b = \'x\';\n'
+        out = lint_mirror.blank(src)
+        self.assertEqual(len(out), len(src))
+        self.assertEqual(out.count("\n"), src.count("\n"))
+        self.assertNotIn("unsafe", out)
+
+    def test_blank_raw_strings(self):
+        src = 'let s = r#"match _ => unsafe"#;\n'
+        out = lint_mirror.blank(src)
+        self.assertNotIn("unsafe", out)
+        self.assertNotIn("match", out)
+
+    def test_lifetimes_stay_code(self):
+        out = lint_mirror.blank("fn f<'a>(x: &'a u32) -> &'a u32 { x }\n")
+        self.assertIn("<'a>", out)
+
+
+class TestRealTree(unittest.TestCase):
+    def test_rust_src_is_clean(self):
+        violations = lint_mirror.lint_tree(os.path.join(REPO, "rust", "src"))
+        self.assertEqual(
+            violations, [],
+            "\n".join(f"{p}:{l}: [{r}] {m}"
+                      for (p, l, r, m) in violations))
+
+    def test_hot_fn_table_matches_the_tree(self):
+        # every (file, fn) entry must resolve: a rename that bypasses
+        # the table shows up here (and as a `config` violation above)
+        root = os.path.join(REPO, "rust", "src")
+        for path, fns in lint_mirror.HOT_FNS:
+            with open(os.path.join(root, path), encoding="utf-8") as fh:
+                code = lint_mirror.blank(fh.read())
+            for name in fns:
+                self.assertTrue(
+                    lint_mirror.fn_extents(code, name),
+                    f"{path}: hot fn `{name}` not found")
+
+
+if __name__ == "__main__":
+    unittest.main()

@@ -1,0 +1,41 @@
+//! `elsa-lint` — the repo's invariant linter, run as a blocking CI
+//! step: `cargo run --release --bin elsa-lint [root]`.
+//!
+//! Walks every `.rs` file under `root` (default `rust/src`) and
+//! enforces the four static invariants described in
+//! `docs/ARCHITECTURE.md` §8: SAFETY-commented `unsafe`, no
+//! nondeterminism in kernel/model modules, no allocation in the decode
+//! hot path, and no wildcard arms over the format/backend enums. All
+//! logic lives in [`elsa::lint`]; this binary is argument parsing and
+//! exit-status plumbing.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use elsa::lint::{lint_tree, Config};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().collect();
+    if args.iter().any(|a| a == "-h" || a == "--help") {
+        eprintln!("usage: elsa-lint [root]   (root defaults to rust/src)");
+        return ExitCode::SUCCESS;
+    }
+    let root = args.get(1).map(String::as_str).unwrap_or("rust/src");
+    let violations = match lint_tree(&Config::repo(), Path::new(root)) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("elsa-lint: {e:#}");
+            return ExitCode::FAILURE;
+        }
+    };
+    for v in &violations {
+        eprintln!("{v}");
+    }
+    if violations.is_empty() {
+        println!("elsa-lint: clean ({root})");
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("elsa-lint: {} violation(s)", violations.len());
+        ExitCode::FAILURE
+    }
+}

@@ -115,6 +115,7 @@ fn cmd_prune(args: &Args) -> Result<()> {
         }
         other => {
             let popts = crate::pruners::PruneOptions::from_args(args)?;
+            // TIMING-OK: wall-seconds for the summary line only.
             let t0 = std::time::Instant::now();
             let p = crate::pruners::prune_oneshot(
                 &rt, &cfg, other, &dense, &ds.train, sparsity, args)?;

@@ -333,8 +333,13 @@ pub struct FinishedRequest {
     /// that expired without ever being admitted).
     pub admitted_step: u64,
     pub finished_step: u64,
-    /// Wall milliseconds from admission to retirement (0 if expired).
-    pub latency_ms: f64,
+    /// Step-clock ticks from admission to retirement (0 if expired).
+    /// Latency is recorded on the deterministic step clock — the same
+    /// clock scheduling runs on — so per-request latency and its
+    /// percentiles are identical across runs and thread counts;
+    /// [`summarize`] converts to milliseconds with the run's measured
+    /// wall-seconds-per-step when reporting.
+    pub latency_steps: u64,
 }
 
 /// Aggregate serving metrics for one scheduler run.
@@ -366,7 +371,14 @@ pub struct SchedStats {
     pub prefill_chunks: usize,
     /// Aggregate serving throughput: generated tokens / wall seconds.
     pub tokens_per_second: f64,
+    /// Median request latency in milliseconds: the deterministic
+    /// step-count percentile scaled by the run's measured
+    /// wall-seconds-per-step. The *structure* (which request is the
+    /// median, how many steps it took) is bit-stable across runs; only
+    /// the ms scale factor carries wall noise.
     pub p50_latency_ms: f64,
+    /// 95th-percentile request latency in milliseconds (same
+    /// construction as `p50_latency_ms`).
     pub p95_latency_ms: f64,
     /// Mean steps a served request waited between arrival and admission.
     pub mean_wait_steps: f64,
@@ -447,7 +459,6 @@ struct Meta {
     id: u64,
     arrival_step: u64,
     admitted_step: u64,
-    admitted_at: Instant,
     /// Prompt positions attached from the shared-prefix cache at
     /// admission (0 on a cache miss). A finished headless prefill is
     /// published back to the cache only when it fed positions beyond
@@ -509,6 +520,9 @@ impl<'e> Scheduler<'e> {
             clock: AtomicU64::new(0),
             active: AtomicUsize::new(0),
         };
+        // TIMING-OK: wall_seconds / throughput reporting only — no
+        // scheduling decision reads this clock (those run on the
+        // deterministic step clock above).
         let t0 = Instant::now();
         let outs: Vec<WorkerOut> = if threads <= 1 {
             vec![self.worker(&shared, max_slots)]
@@ -673,6 +687,11 @@ impl<'e> Scheduler<'e> {
                     Idle::Done => break,
                     Idle::FastForwarded => continue,
                     Idle::Park => {
+                        // TIMING-OK: backoff while other workers hold
+                        // active slots — affects only when this worker
+                        // re-polls, never which step a request is
+                        // admitted or retired on (both read the step
+                        // clock under the queue lock).
                         std::thread::sleep(
                             std::time::Duration::from_micros(50));
                         continue;
@@ -797,7 +816,7 @@ impl<'e> Scheduler<'e> {
                     // fabricating an admission step
                     admitted_step: arrival,
                     finished_step: now,
-                    latency_ms: 0.0,
+                    latency_steps: 0,
                 });
                 continue;
             }
@@ -813,7 +832,7 @@ impl<'e> Scheduler<'e> {
                     arrival_step: arrival,
                     admitted_step: now,
                     finished_step: now,
-                    latency_ms: 0.0,
+                    latency_steps: 0,
                 });
                 continue;
             }
@@ -841,7 +860,6 @@ impl<'e> Scheduler<'e> {
                 id: req.id,
                 arrival_step: arrival,
                 admitted_step: now,
-                admitted_at: Instant::now(),
                 attached: fed,
             });
             slots.push(Slot {
@@ -932,7 +950,7 @@ fn retire(slots: &mut Vec<Slot>, meta: &mut Vec<Meta>, i: usize,
         arrival_step: m.arrival_step,
         admitted_step: m.admitted_step,
         finished_step: now,
-        latency_ms: m.admitted_at.elapsed().as_secs_f64() * 1e3,
+        latency_steps: now - m.admitted_step,
     });
 }
 
@@ -942,11 +960,16 @@ fn summarize(finished: &[FinishedRequest], wall: f64, steps: u64,
              shard: ShardTimes) -> SchedStats {
     let tokens: usize = finished.iter().map(|f| f.generated).sum();
     let expired = finished.iter().filter(|f| f.expired).count();
+    // Per-request latency is recorded in deterministic step-clock
+    // ticks; only the ms scale factor below touches the wall clock, so
+    // which request lands on p50/p95 (and how many steps it took) is
+    // identical across runs and thread counts.
+    let ms_per_step = wall * 1e3 / steps.max(1) as f64;
     let mut lat = Summary::new();
     let mut wait = 0u64;
     let mut served = 0usize;
     for f in finished.iter().filter(|f| !f.expired && f.prompt_len > 0) {
-        lat.push(f.latency_ms);
+        lat.push(f.latency_steps as f64 * ms_per_step);
         wait += f.admitted_step - f.arrival_step;
         served += 1;
     }
@@ -1011,6 +1034,7 @@ pub fn serve_static_chunks(engine: &Engine, requests: &[Request],
                            -> (Vec<FinishedRequest>, SchedStats) {
     let max_slots = opts.max_slots.max(1);
     let lanes = opts.shard_workers.max(1);
+    // TIMING-OK: wall_seconds / throughput reporting only.
     let t0 = Instant::now();
     let mut finished = Vec::with_capacity(requests.len());
     let (mut prefill, mut decode) = (0.0f64, 0.0f64);
@@ -1181,9 +1205,9 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
                          f.id, f.arrival_step, f.finished_step);
             } else {
                 println!("req {:4}: arrived {:5} admitted {:5} finished \
-                          {:5} | {:3} new tokens | {:8.2} ms",
+                          {:5} | {:3} new tokens | {:5} steps",
                          f.id, f.arrival_step, f.admitted_step,
-                         f.finished_step, f.generated, f.latency_ms);
+                         f.finished_step, f.generated, f.latency_steps);
             }
         }
     }

@@ -20,6 +20,11 @@
 // through hot paths instead of bundling short-lived structs.
 #![allow(clippy::needless_range_loop)]
 #![allow(clippy::too_many_arguments)]
+// Every unsafe operation must sit in an explicit `unsafe` block even
+// inside an `unsafe fn`, so the per-site `// SAFETY:` comments enforced
+// by `elsa-lint` (rule 1) map one-to-one onto the operations they
+// justify.
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod cli;
 pub mod commands;
@@ -28,6 +33,7 @@ pub mod data;
 pub mod eval;
 pub mod experiments;
 pub mod infer;
+pub mod lint;
 pub mod model;
 pub mod pruners;
 pub mod quant;

@@ -1,0 +1,838 @@
+//! `elsa-lint`: the repo's invariant linter (ISSUE 10).
+//!
+//! The determinism contract — bit-identical token streams across slots
+//! × bands × tiling × quant × N:M × worker counts — is enforced
+//! dynamically by the determinism sweep. This module enforces the
+//! *static* half: whole classes of regression that a sweep case may or
+//! may not trip over are rejected at CI time by four rules over
+//! `rust/src`:
+//!
+//! 1. **safety** — every `unsafe` block/fn/impl is immediately
+//!    preceded by a `// SAFETY:` comment with a non-empty argument
+//!    (attribute lines may sit between; a single SAFETY block may
+//!    cover a contiguous pair of `unsafe impl Send`/`Sync` lines).
+//! 2. **nondet** — no nondeterminism sources (`Instant::now`,
+//!    `SystemTime`, `env::var`, `thread::sleep`, `RandomState`,
+//!    `HashMap`) in the kernel/model modules (`sparse/`, `model/`,
+//!    `tensor/`, `pruners/`) outside sites annotated
+//!    `// TIMING-OK: <why>` or `// DETERMINISM-OK: <why>`.
+//! 3. **alloc** — no allocation calls (`Vec::new`, `vec!`, `.clone(`,
+//!    `.collect`, `with_capacity`, `format!`, …) inside the per-step
+//!    decode hot path — a fixed table of (file, fn) pairs — outside
+//!    `// ALLOC-OK: <why>` sites. Renaming a listed fn without
+//!    updating the table is itself an error, so the table cannot go
+//!    stale silently. The check is token-level: an allocation hidden
+//!    inside a callee (e.g. `TilePlan::shard_ranges`) is out of scope.
+//! 4. **wildcard** — no `_ =>` arm in any `match` whose arm patterns
+//!    name `WeightFmt`/`QuantMode`/`KernelPath`/`Backend` variants, so
+//!    adding a format is a compile-time exhaustiveness sweep instead
+//!    of a silent fallthrough. Matches *over other scrutinees* (e.g.
+//!    the string matches in `Backend::parse`) may use `_ =>` freely —
+//!    only the pattern text left of `=>` is inspected.
+//!
+//! The lexer is deliberately line-based and std-only (no syn /
+//! proc-macro, consistent with the offline vendored-deps policy): a
+//! single char-level pass blanks comment and string/char-literal
+//! contents (preserving line structure), then the rules scan the
+//! blanked code with the original lines kept alongside for annotation
+//! lookups. `ci/lint_mirror.py` re-implements the same rules for
+//! toolchain-free environments and shares the fixture suite in
+//! `rust/tests/lint_fixtures/`; this module is authoritative.
+
+use std::fmt;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Annotation tags. Each requires a non-empty reason after the colon.
+pub const SAFETY_TAG: &str = "SAFETY:";
+pub const TIMING_TAG: &str = "TIMING-OK:";
+pub const DETERMINISM_TAG: &str = "DETERMINISM-OK:";
+pub const ALLOC_TAG: &str = "ALLOC-OK:";
+
+/// Which rule a violation belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rule {
+    /// `unsafe` without an immediately preceding `// SAFETY:` comment.
+    Safety,
+    /// Nondeterminism source in a kernel/model module.
+    Nondet,
+    /// Allocation call inside a hot-path fn.
+    Alloc,
+    /// `_ =>` wildcard over an exhaustiveness-checked enum.
+    Wildcard,
+    /// The linter's own hot-path table went stale (fn not found).
+    Config,
+}
+
+impl Rule {
+    pub fn label(self) -> &'static str {
+        match self {
+            Rule::Safety => "safety",
+            Rule::Nondet => "nondet",
+            Rule::Alloc => "alloc",
+            Rule::Wildcard => "wildcard",
+            Rule::Config => "config",
+        }
+    }
+}
+
+/// One finding: file, 1-based line, rule, message.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub path: String,
+    pub line: usize,
+    pub rule: Rule,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line,
+               self.rule.label(), self.msg)
+    }
+}
+
+/// Rule configuration. [`Config::repo`] is the committed policy;
+/// fixture tests build narrow configs to exercise single rules.
+pub struct Config {
+    /// Module prefixes (relative to the lint root) where the nondet
+    /// rule applies.
+    pub watched_dirs: &'static [&'static str],
+    /// Substrings treated as nondeterminism sources.
+    pub nondet_tokens: &'static [&'static str],
+    /// Substrings treated as allocation calls in hot fns.
+    pub alloc_tokens: &'static [&'static str],
+    /// Enum path prefixes whose matches must stay wildcard-free.
+    pub exhaustive_enums: &'static [&'static str],
+    /// (file, fn names) pairs forming the decode hot path.
+    pub hot_fns: &'static [(&'static str, &'static [&'static str])],
+}
+
+impl Config {
+    /// The repo policy enforced by CI. Keep in sync with
+    /// `ci/lint_mirror.py` and the table in docs/ARCHITECTURE.md §8.
+    pub fn repo() -> Config {
+        Config {
+            watched_dirs: &["sparse/", "model/", "tensor/", "pruners/"],
+            nondet_tokens: &["Instant::now", "SystemTime", "env::var",
+                             "thread::sleep", "RandomState", "HashMap"],
+            alloc_tokens: &["Vec::new", "vec!", ".to_vec(", ".clone(",
+                            ".collect", "Box::new", "with_capacity",
+                            "String::new", "format!", ".to_string(",
+                            ".to_owned("],
+            exhaustive_enums: &["WeightFmt::", "QuantMode::",
+                                "KernelPath::", "Backend::"],
+            hot_fns: &[
+                ("sparse/mod.rs",
+                 &["matvec", "matvec_batch_into",
+                   "matvec_batch_tiled_into", "axpy_lanes",
+                   "transpose_batch_into"]),
+                ("sparse/tile.rs",
+                 &["exec_tiles", "matvec_batch_tiled",
+                   "pool_matvec_batch_tiled", "pool_t_matmat",
+                   "scatter_rows"]),
+                ("sparse/quantized.rs",
+                 &["matvec", "matvec_batch_into",
+                   "matvec_batch_tiled_into", "exec_tiles"]),
+                ("sparse/nm.rs",
+                 &["matvec", "row_acc", "matvec_batch_into",
+                   "matvec_batch_tiled_into", "exec_tiles"]),
+                ("infer/pool.rs", &["run", "drain", "worker_loop"]),
+                ("infer/mod.rs",
+                 &["decode_step_batch", "layer_qkv", "layer_ffn",
+                   "attend_cached", "prefill_pass_multi"]),
+            ],
+        }
+    }
+}
+
+// ---------------------------------------------------------------- lexer
+
+/// Replace comment and string/char-literal contents with spaces,
+/// preserving length and line structure, so token scans see only code.
+fn blank(src: &str) -> String {
+    #[derive(Clone, Copy, PartialEq)]
+    enum St {
+        Code,
+        Line,
+        /// nesting depth
+        Block(u32),
+        Str,
+        /// hash count of the opening `r#*"`
+        RawStr(u32),
+        Ch,
+    }
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut out = Vec::with_capacity(n);
+    let push_blank = |out: &mut Vec<u8>, c: u8| {
+        out.push(if c == b'\n' { b'\n' } else { b' ' });
+    };
+    let mut st = St::Code;
+    let mut i = 0usize;
+    while i < n {
+        let c = b[i];
+        let nxt = b.get(i + 1).copied();
+        match st {
+            St::Code => {
+                if c == b'/' && nxt == Some(b'/') {
+                    st = St::Line;
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                } else if c == b'/' && nxt == Some(b'*') {
+                    st = St::Block(1);
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                } else if c == b'"' {
+                    st = St::Str;
+                    out.push(b' ');
+                    i += 1;
+                } else if c == b'r' || c == b'b' {
+                    // raw string openers: r"  r#"  br"  br#"
+                    let j = if c == b'b' && nxt == Some(b'r') {
+                        i + 1
+                    } else {
+                        i
+                    };
+                    let mut k = j + 1;
+                    let mut hashes = 0u32;
+                    if b[j] == b'r' {
+                        while b.get(k) == Some(&b'#') {
+                            hashes += 1;
+                            k += 1;
+                        }
+                    }
+                    if b[j] == b'r' && b.get(k) == Some(&b'"') {
+                        for _ in i..=k {
+                            out.push(b' ');
+                        }
+                        i = k + 1;
+                        st = St::RawStr(hashes);
+                    } else {
+                        out.push(c);
+                        i += 1;
+                    }
+                } else if c == b'\'' {
+                    // char literal vs lifetime: `'\…'` or `'x'` is a
+                    // literal; `'ident` is a lifetime and stays code
+                    let is_char = nxt == Some(b'\\')
+                        || b.get(i + 2) == Some(&b'\'');
+                    out.push(if is_char { b' ' } else { c });
+                    if is_char {
+                        st = St::Ch;
+                    }
+                    i += 1;
+                } else {
+                    out.push(c);
+                    i += 1;
+                }
+            }
+            St::Line => {
+                if c == b'\n' {
+                    out.push(b'\n');
+                    st = St::Code;
+                } else {
+                    out.push(b' ');
+                }
+                i += 1;
+            }
+            St::Block(d) => {
+                if c == b'*' && nxt == Some(b'/') {
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                    st = if d == 1 { St::Code } else { St::Block(d - 1) };
+                } else if c == b'/' && nxt == Some(b'*') {
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                    st = St::Block(d + 1);
+                } else {
+                    push_blank(&mut out, c);
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == b'\\' && i + 1 < n {
+                    push_blank(&mut out, c);
+                    push_blank(&mut out, b[i + 1]);
+                    i += 2;
+                } else if c == b'"' {
+                    out.push(b' ');
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    push_blank(&mut out, c);
+                    i += 1;
+                }
+            }
+            St::RawStr(h) => {
+                let mut closed = false;
+                if c == b'"' {
+                    let mut k = i + 1;
+                    let mut m = 0u32;
+                    while m < h && b.get(k) == Some(&b'#') {
+                        m += 1;
+                        k += 1;
+                    }
+                    if m == h {
+                        for _ in i..k {
+                            out.push(b' ');
+                        }
+                        i = k;
+                        st = St::Code;
+                        closed = true;
+                    }
+                }
+                if !closed {
+                    push_blank(&mut out, c);
+                    i += 1;
+                }
+            }
+            St::Ch => {
+                if c == b'\\' && i + 1 < n {
+                    push_blank(&mut out, c);
+                    push_blank(&mut out, b[i + 1]);
+                    i += 2;
+                } else if c == b'\'' {
+                    out.push(b' ');
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    push_blank(&mut out, c);
+                    i += 1;
+                }
+            }
+        }
+    }
+    // blanking is byte-for-byte, so the output is valid ASCII/UTF-8
+    String::from_utf8(out).expect("blanked source is valid utf-8")
+}
+
+fn is_ident(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Byte index of `word` in `hay` with non-identifier chars (or edges)
+/// on both sides, searching from `start`.
+fn find_word(hay: &str, word: &str, start: usize) -> Option<usize> {
+    let h = hay.as_bytes();
+    let mut i = start;
+    while let Some(rel) = hay.get(i..).and_then(|s| s.find(word)) {
+        let p = i + rel;
+        let before_ok = p == 0 || !is_ident(h[p - 1]);
+        let after = p + word.len();
+        let after_ok = after >= h.len() || !is_ident(h[after]);
+        if before_ok && after_ok {
+            return Some(p);
+        }
+        i = p + 1;
+    }
+    None
+}
+
+/// True when `line` carries one of `tags` followed by a non-empty
+/// reason.
+fn line_has_tag(line: &str, tags: &[&str]) -> bool {
+    tags.iter().any(|tag| match line.find(tag) {
+        Some(p) => !line[p + tag.len()..].trim().is_empty(),
+        None => false,
+    })
+}
+
+/// True when line `idx` is annotated with one of `tags` on the same
+/// line or in the immediately preceding block of comment/attribute
+/// lines. With `skip_unsafe_impl`, `unsafe impl` lines may sit in
+/// between so one SAFETY block covers a `Send`/`Sync` pair.
+fn annotated(orig: &[&str], code: &[String], idx: usize, tags: &[&str],
+             skip_unsafe_impl: bool) -> bool {
+    if line_has_tag(orig[idx], tags) {
+        return true;
+    }
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let t = orig[j].trim_start();
+        if t.starts_with("//") {
+            if line_has_tag(orig[j], tags) {
+                return true;
+            }
+            continue;
+        }
+        if t.starts_with("#[") || t.starts_with("#!") {
+            continue;
+        }
+        if skip_unsafe_impl
+            && find_word(&code[j], "unsafe", 0).is_some()
+            && code[j].contains("impl")
+        {
+            continue;
+        }
+        break;
+    }
+    false
+}
+
+/// Per-char brace depth for the whole source: chars inside `{…}` sit
+/// one level deeper; both braces of a pair report the outer depth.
+fn brace_depths(code: &str) -> Vec<i32> {
+    let mut depths = Vec::with_capacity(code.len());
+    let mut d = 0i32;
+    for c in code.bytes() {
+        if c == b'}' {
+            d -= 1;
+        }
+        depths.push(d);
+        if c == b'{' {
+            d += 1;
+        }
+    }
+    depths
+}
+
+/// Char offset → 0-based line index.
+fn offsets_to_lines(code: &str) -> Vec<usize> {
+    let mut line_of = Vec::with_capacity(code.len());
+    let mut ln = 0usize;
+    for c in code.bytes() {
+        line_of.push(ln);
+        if c == b'\n' {
+            ln += 1;
+        }
+    }
+    line_of
+}
+
+/// `(body_start, body_end)` offsets for every `fn name` with a body;
+/// bodyless trait declarations are skipped.
+fn fn_extents(code: &str, name: &str) -> Vec<(usize, usize)> {
+    let bytes = code.as_bytes();
+    let depths = brace_depths(code);
+    let mut extents = Vec::new();
+    let mut i = 0usize;
+    while let Some(p) = find_word(code, "fn", i) {
+        i = p + 2;
+        let rest = code[p + 2..].trim_start();
+        let matches_name = rest.starts_with(name)
+            && rest.as_bytes().get(name.len())
+                .map_or(true, |&c| !is_ident(c));
+        if !matches_name {
+            continue;
+        }
+        // scan to the body `{` (or `;` for a bodyless declaration)
+        let mut paren = 0i32;
+        let mut j = p;
+        let mut body = None;
+        while j < bytes.len() {
+            match bytes[j] {
+                b'(' => paren += 1,
+                b')' => paren -= 1,
+                b';' if paren == 0 => break,
+                b'{' if paren == 0 => {
+                    body = Some(j);
+                    break;
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        let Some(start) = body else { continue };
+        let d = depths[start];
+        let mut k = start + 1;
+        while k < bytes.len() && !(bytes[k] == b'}' && depths[k] == d) {
+            k += 1;
+        }
+        extents.push((start, k));
+        i = k;
+    }
+    extents
+}
+
+// ---------------------------------------------------------------- rules
+
+fn rule_safety(path: &str, orig: &[&str], code: &[String],
+               out: &mut Vec<Violation>) {
+    for (i, cl) in code.iter().enumerate() {
+        if find_word(cl, "unsafe", 0).is_none() {
+            continue;
+        }
+        let is_impl = cl.contains("impl");
+        if !annotated(orig, code, i, &[SAFETY_TAG], is_impl) {
+            out.push(Violation {
+                path: path.to_string(),
+                line: i + 1,
+                rule: Rule::Safety,
+                msg: "`unsafe` without an immediately preceding \
+                      `// SAFETY:` comment"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+fn rule_nondet(cfg: &Config, path: &str, orig: &[&str], code: &[String],
+               out: &mut Vec<Violation>) {
+    if !cfg.watched_dirs.iter().any(|d| path.starts_with(d)) {
+        return;
+    }
+    for (i, cl) in code.iter().enumerate() {
+        for tok in cfg.nondet_tokens {
+            if !cl.contains(tok) {
+                continue;
+            }
+            if !annotated(orig, code, i, &[TIMING_TAG, DETERMINISM_TAG],
+                          false) {
+                out.push(Violation {
+                    path: path.to_string(),
+                    line: i + 1,
+                    rule: Rule::Nondet,
+                    msg: format!(
+                        "nondeterminism source `{tok}` in a \
+                         kernel/model module without a \
+                         TIMING-OK/DETERMINISM-OK annotation"),
+                });
+            }
+        }
+    }
+}
+
+fn rule_alloc(cfg: &Config, path: &str, orig: &[&str], code_lines: &[String],
+              code: &str, out: &mut Vec<Violation>) {
+    let Some((_, fns)) =
+        cfg.hot_fns.iter().find(|(file, _)| *file == path)
+    else {
+        return;
+    };
+    let line_of = offsets_to_lines(code);
+    for name in *fns {
+        let extents = fn_extents(code, name);
+        if extents.is_empty() {
+            out.push(Violation {
+                path: path.to_string(),
+                line: 1,
+                rule: Rule::Config,
+                msg: format!(
+                    "hot-path fn `{name}` not found in {path} — \
+                     update the hot-path table in the linter"),
+            });
+            continue;
+        }
+        for (start, end) in extents {
+            let first = line_of[start];
+            let last = line_of[end.min(code.len() - 1)];
+            for li in first..=last {
+                for tok in cfg.alloc_tokens {
+                    if !code_lines[li].contains(tok) {
+                        continue;
+                    }
+                    if !annotated(orig, code_lines, li, &[ALLOC_TAG],
+                                  false) {
+                        out.push(Violation {
+                            path: path.to_string(),
+                            line: li + 1,
+                            rule: Rule::Alloc,
+                            msg: format!(
+                                "allocation `{tok}` inside hot-path \
+                                 fn `{name}` without an ALLOC-OK \
+                                 annotation"),
+                        });
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn rule_wildcard(cfg: &Config, path: &str, code: &str,
+                 out: &mut Vec<Violation>) {
+    let bytes = code.as_bytes();
+    let depths = brace_depths(code);
+    let line_of = offsets_to_lines(code);
+    let mut i = 0usize;
+    while let Some(p) = find_word(code, "match", i) {
+        i = p + 5;
+        if code[..p].trim_end().ends_with('.') {
+            continue; // method call, not the keyword
+        }
+        // body `{` at paren/bracket depth 0 relative to the scrutinee
+        let mut paren = 0i32;
+        let mut j = p + 5;
+        let mut body = None;
+        while j < bytes.len() {
+            match bytes[j] {
+                b'(' | b'[' => paren += 1,
+                b')' | b']' => paren -= 1,
+                b'{' if paren == 0 => {
+                    body = Some(j);
+                    break;
+                }
+                b';' if paren == 0 => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        let Some(open) = body else { continue };
+        let d = depths[open];
+        let mut close = open + 1;
+        while close < bytes.len()
+            && !(bytes[close] == b'}' && depths[close] == d)
+        {
+            close += 1;
+        }
+        // arm separators: `=>` directly inside the match braces
+        let mut seps = Vec::new();
+        let mut m = open + 1;
+        while m + 1 < close {
+            if bytes[m] == b'=' && bytes[m + 1] == b'>'
+                && depths[m] == d + 1
+            {
+                seps.push(m);
+            }
+            m += 1;
+        }
+        // pattern of each arm: text back to the previous arm-separating
+        // comma (skipping commas nested in ()/[]) or the match `{`
+        let mut arms = Vec::new();
+        for &s in &seps {
+            let mut b = s - 1;
+            let mut nest = 0i32;
+            while b > open {
+                match bytes[b] {
+                    b')' | b']' => nest += 1,
+                    b'(' | b'[' => nest -= 1,
+                    b',' if nest == 0 && depths[b] == d + 1 => break,
+                    b'{' | b'}' if depths[b] <= d => break,
+                    _ => {}
+                }
+                b -= 1;
+            }
+            let pat = code[b + 1..s].trim()
+                .trim_start_matches('|').trim();
+            // strip any guard: only the pattern itself is inspected
+            let core = pat.split(" if ").next().unwrap_or(pat).trim();
+            arms.push((core.to_string(), line_of[s]));
+        }
+        let over_watched_enum = arms.iter().any(|(core, _)| {
+            cfg.exhaustive_enums.iter().any(|e| core.contains(e))
+        });
+        if !over_watched_enum {
+            continue;
+        }
+        for (core, ln) in &arms {
+            if core == "_" {
+                out.push(Violation {
+                    path: path.to_string(),
+                    line: ln + 1,
+                    rule: Rule::Wildcard,
+                    msg: "`_ =>` wildcard arm in a match over \
+                          WeightFmt/QuantMode/KernelPath/Backend — \
+                          spell the variants so new formats fail \
+                          exhaustiveness"
+                        .to_string(),
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- driver
+
+/// Lint one file. `path` is the file's path relative to the lint root
+/// (`sparse/mod.rs` style) — it selects the watched-module and
+/// hot-path tables.
+pub fn lint_source(cfg: &Config, path: &str, src: &str) -> Vec<Violation> {
+    let code = blank(src);
+    let orig: Vec<&str> = src.split('\n').collect();
+    let code_lines: Vec<String> =
+        code.split('\n').map(|s| s.to_string()).collect();
+    let mut out = Vec::new();
+    rule_safety(path, &orig, &code_lines, &mut out);
+    rule_nondet(cfg, path, &orig, &code_lines, &mut out);
+    rule_alloc(cfg, path, &orig, &code_lines, &code, &mut out);
+    rule_wildcard(cfg, path, &code, &mut out);
+    out
+}
+
+/// Recursively lint every `.rs` file under `root`, in sorted path
+/// order so output (and CI logs) are deterministic.
+pub fn lint_tree(cfg: &Config, root: &Path) -> Result<Vec<Violation>> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    for full in &files {
+        let rel = full.strip_prefix(root).unwrap_or(full);
+        let rel = rel.to_string_lossy().replace('\\', "/");
+        let src = fs::read_to_string(full)
+            .with_context(|| format!("reading {}", full.display()))?;
+        out.extend(lint_source(cfg, &rel, &src));
+    }
+    Ok(out)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> Result<()> {
+    for entry in fs::read_dir(dir)
+        .with_context(|| format!("walking {}", dir.display()))?
+    {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules(v: &[Violation]) -> Vec<Rule> {
+        v.iter().map(|x| x.rule).collect()
+    }
+
+    #[test]
+    fn blank_strips_comments_and_strings() {
+        let src = "let a = \"unsafe\"; // unsafe\nlet b = 'x';\n";
+        let out = blank(src);
+        assert!(!out.contains("unsafe"));
+        assert!(out.contains("let a ="));
+        assert_eq!(out.len(), src.len());
+        assert_eq!(out.matches('\n').count(), src.matches('\n').count());
+    }
+
+    #[test]
+    fn blank_handles_raw_strings_and_escapes() {
+        let src = "let s = r#\"match _ => unsafe\"#;\nlet c = '\\n';\n";
+        let out = blank(src);
+        assert!(!out.contains("unsafe"));
+        assert!(!out.contains("match"));
+        assert_eq!(out.matches('\n').count(), src.matches('\n').count());
+    }
+
+    #[test]
+    fn blank_keeps_lifetimes_as_code() {
+        let out = blank("fn f<'a>(x: &'a u32) -> &'a u32 { x }\n");
+        assert!(out.contains("<'a>"));
+    }
+
+    #[test]
+    fn undocumented_unsafe_is_flagged_and_safety_comment_passes() {
+        let cfg = Config::repo();
+        let bad = "fn f(x: &[f32]) -> f32 {\n    \
+                   unsafe { *x.get_unchecked(0) }\n}\n";
+        assert_eq!(rules(&lint_source(&cfg, "infer/f.rs", bad)),
+                   vec![Rule::Safety]);
+        let good = "fn f(x: &[f32]) -> f32 {\n    \
+                    // SAFETY: caller guarantees x is non-empty\n    \
+                    unsafe { *x.get_unchecked(0) }\n}\n";
+        assert!(lint_source(&cfg, "infer/f.rs", good).is_empty());
+    }
+
+    #[test]
+    fn safety_tag_requires_a_reason() {
+        let cfg = Config::repo();
+        let empty = "// SAFETY:\nunsafe impl Send for X {}\n";
+        assert_eq!(rules(&lint_source(&cfg, "infer/f.rs", empty)),
+                   vec![Rule::Safety]);
+    }
+
+    #[test]
+    fn one_safety_block_covers_an_unsafe_impl_pair() {
+        let cfg = Config::repo();
+        let src = "// SAFETY: disjoint bands, barrier outlives borrow\n\
+                   unsafe impl Send for P {}\n\
+                   unsafe impl Sync for P {}\n";
+        assert!(lint_source(&cfg, "infer/f.rs", src).is_empty());
+    }
+
+    #[test]
+    fn nondet_fires_only_in_watched_modules() {
+        let cfg = Config::repo();
+        let src = "fn t() -> std::time::Instant \
+                   { std::time::Instant::now() }\n";
+        assert_eq!(rules(&lint_source(&cfg, "sparse/x.rs", src)),
+                   vec![Rule::Nondet]);
+        assert!(lint_source(&cfg, "util/x.rs", src).is_empty());
+        let ok = "fn t() {\n    // TIMING-OK: bench-only wall clock\n    \
+                  let _ = std::time::Instant::now();\n}\n";
+        assert!(lint_source(&cfg, "sparse/x.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn alloc_rule_scans_only_listed_fns_and_honors_annotation() {
+        let cfg = Config {
+            watched_dirs: &[],
+            nondet_tokens: &[],
+            alloc_tokens: &["Vec::new"],
+            exhaustive_enums: &[],
+            hot_fns: &[("sparse/k.rs", &["hot"])],
+        };
+        let bad = "fn hot() { let v: Vec<f32> = Vec::new(); }\n\
+                   fn cold() { let v: Vec<f32> = Vec::new(); }\n";
+        let v = lint_source(&cfg, "sparse/k.rs", bad);
+        assert_eq!(rules(&v), vec![Rule::Alloc]);
+        assert_eq!(v[0].line, 1);
+        let ok = "fn hot() {\n    \
+                  // ALLOC-OK: one-time warmup, reused thereafter\n    \
+                  let v: Vec<f32> = Vec::new();\n    drop(v);\n}\n";
+        assert!(lint_source(&cfg, "sparse/k.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn missing_hot_fn_is_a_config_violation() {
+        let cfg = Config {
+            watched_dirs: &[],
+            nondet_tokens: &[],
+            alloc_tokens: &[],
+            exhaustive_enums: &[],
+            hot_fns: &[("sparse/k.rs", &["renamed_away"])],
+        };
+        let v = lint_source(&cfg, "sparse/k.rs", "fn other() {}\n");
+        assert_eq!(rules(&v), vec![Rule::Config]);
+    }
+
+    #[test]
+    fn wildcard_over_watched_enum_is_flagged() {
+        let cfg = Config::repo();
+        let bad = "fn f(p: KernelPath) -> u32 {\n    match p {\n        \
+                   KernelPath::Scalar => 0,\n        _ => 1,\n    }\n}\n";
+        assert_eq!(rules(&lint_source(&cfg, "infer/f.rs", bad)),
+                   vec![Rule::Wildcard]);
+    }
+
+    #[test]
+    fn wildcard_over_other_scrutinees_is_fine() {
+        let cfg = Config::repo();
+        // enum paths in arm BODIES (Backend::parse shape) don't arm
+        // the rule; `_` over a string scrutinee stays legal
+        let src = "fn parse(s: &str) -> Option<Backend> {\n    \
+                   match s {\n        \
+                   \"csr\" => Some(Backend::Csr),\n        \
+                   _ => None,\n    }\n}\n";
+        assert!(lint_source(&cfg, "infer/f.rs", src).is_empty());
+    }
+
+    #[test]
+    fn exhaustive_match_over_watched_enum_is_fine() {
+        let cfg = Config::repo();
+        let src = "fn f(p: KernelPath) -> u32 {\n    match p {\n        \
+                   KernelPath::Scalar => 0,\n        \
+                   KernelPath::Unrolled => 1,\n    }\n}\n";
+        assert!(lint_source(&cfg, "infer/f.rs", src).is_empty());
+    }
+
+    #[test]
+    fn repo_tree_is_clean() {
+        // the committed tree must satisfy its own invariants — this is
+        // the in-process twin of the blocking `elsa-lint` CI step
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("rust").join("src");
+        let v = lint_tree(&Config::repo(), &root).unwrap();
+        assert!(v.is_empty(), "lint violations:\n{}",
+                v.iter().map(|x| x.to_string())
+                    .collect::<Vec<_>>().join("\n"));
+    }
+}

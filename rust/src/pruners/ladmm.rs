@@ -254,6 +254,10 @@ mod tests {
     }
 
     #[test]
+    // multi-seed statistical sweep (5 full ADMM solves) — out of
+    // Miri's budget; memory-model coverage comes from the single-solve
+    // tests in this module
+    #[cfg_attr(miri, ignore)]
     fn admm_beats_plain_magnitude_projection() {
         let mut worse = 0;
         for seed in 0..5 {
@@ -270,6 +274,8 @@ mod tests {
     }
 
     #[test]
+    // multi-seed statistical sweep — see above
+    #[cfg_attr(miri, ignore)]
     fn alps_refine_improves_over_plain_admm() {
         let mut worse = 0;
         for seed in 10..15 {

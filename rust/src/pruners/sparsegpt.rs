@@ -107,11 +107,17 @@ pub fn prune_layer_pooled(w: &Matrix, gram: &Matrix, sparsity: f64,
                 // the U row encodes the Schur-complement update for the
                 // remaining (r.., c) weights; r itself lands on zero
                 for r2 in r..din {
+                    // SAFETY: this task owns column c of `out`
+                    // exclusively; `r2 < din` and `c < dout`, so
+                    // `r2 * dout + c` is inside the (din, dout)
+                    // buffer, and the shard barrier outlives `ptr`.
                     unsafe {
                         *ptr.0.add(r2 * dout + c) -=
                             err * u_ref.at(r, r2);
                     }
                 }
+                // SAFETY: same disjoint-column ownership as above with
+                // `r < din`.
                 unsafe {
                     *ptr.0.add(r * dout + c) = 0.0;
                 }
@@ -237,6 +243,10 @@ pub mod tests {
     }
 
     #[test]
+    // 8-seed statistical sweep of full prunes — out of Miri's budget;
+    // pooled_layer_is_bit_identical_to_serial carries the unsafe-path
+    // coverage under Miri
+    #[cfg_attr(miri, ignore)]
     fn beats_same_granularity_magnitude_on_reconstruction() {
         // the point of OBS compensation: lower ||X(W'-W)||^2 than a pure
         // magnitude mask at the same (per-column) selection granularity

@@ -82,6 +82,9 @@ impl KernelPath {
     /// on garbage), else `Unrolled`. Explicit `--kernel-path` flags
     /// and explicit-path tests override/ignore this freely.
     pub fn default_path() -> KernelPath {
+        // DETERMINISM-OK: engine-build configuration read, resolved
+        // once before any serving starts — the chosen path is constant
+        // for the engine's lifetime and both paths are bit-identical.
         match std::env::var(KERNEL_PATH_ENV) {
             Ok(v) => KernelPath::parse(&v).unwrap_or_else(|e| {
                 panic!("{KERNEL_PATH_ENV}: {e}")
@@ -112,6 +115,10 @@ pub(crate) fn axpy_lanes(acc: &mut [f32], xrow: &[f32], v: f32,
             let mut i = 0usize;
             while i + 4 <= b {
                 // four independent lanes — no reassociation within any
+                // SAFETY: the loop guard holds i + 4 <= b and
+                // `acc.len() == xrow.len() == b` (debug-asserted
+                // above), so lanes i..i+4 are in bounds of both
+                // slices.
                 unsafe {
                     *acc.get_unchecked_mut(i) +=
                         v * *xrow.get_unchecked(i);
@@ -180,8 +187,11 @@ impl Csr {
             let hi = self.row_ptr[o + 1] as usize;
             let mut acc = 0.0f32;
             for k in lo..hi {
-                acc += self.values[k]
-                    * unsafe { *x.get_unchecked(self.col_idx[k] as usize) };
+                // SAFETY: `from_weight` stores only column indices
+                // `< n_in`, and `x.len() == n_in` is debug-asserted
+                // above, so the lookup is in bounds.
+                let xv = unsafe { *x.get_unchecked(self.col_idx[k] as usize) };
+                acc += self.values[k] * xv;
             }
             y[o] = acc;
         }
@@ -370,6 +380,12 @@ impl Macko {
                 let col0 = wi * 64;
                 while word != 0 {
                     let bit = word.trailing_zeros() as usize;
+                    // SAFETY: `values` holds one entry per set bitmap
+                    // bit in scan order, so `k < values.len()`; and
+                    // `col0 + bit < words_per_row * 64` rounds up to
+                    // `n_in` with the tail-word bits never set, so the
+                    // `x` lookup (len `n_in`, debug-asserted) is in
+                    // bounds.
                     acc += unsafe {
                         *self.values.get_unchecked(k)
                             * *x.get_unchecked(col0 + bit)

@@ -195,6 +195,11 @@ impl<const N: usize, const M: usize> NmSparse<N, M> {
             let sb = o * spr + g * N;
             for j in 0..N {
                 let k = sb + j;
+                // SAFETY: `from_weight` lays out exactly `spr` slots
+                // per output row, so `k < n_out * spr == values.len()
+                // == offsets.len()`; every stored offset is `< M`, so
+                // `x0 + offset < gpr * M == n_in == x.len()`
+                // (debug-asserted by the callers).
                 acc += unsafe {
                     *self.values.get_unchecked(k)
                         * *x.get_unchecked(
@@ -233,6 +238,12 @@ impl<const N: usize, const M: usize> NmSparse<N, M> {
                             let sb = (o0 + r) * spr + g * N;
                             for j in 0..N {
                                 let k = sb + j;
+                                // SAFETY: same layout argument as
+                                // `row_acc` — `o0 + r < n_out` keeps
+                                // `k` under `n_out * spr ==
+                                // values.len() == offsets.len()`, and
+                                // offsets `< M` keep the `x` lookup
+                                // under `n_in`.
                                 *a += unsafe {
                                     *self.values.get_unchecked(k)
                                         * *x.get_unchecked(

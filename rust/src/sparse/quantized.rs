@@ -297,8 +297,11 @@ impl CsrQ {
             let sp = self.scale_ptr[o] as usize;
             let mut acc = 0.0f32;
             for k in lo..hi {
-                acc += self.dq(base, sp, k - lo)
-                    * unsafe { *x.get_unchecked(self.col_idx[k] as usize) };
+                // SAFETY: `from_weight` stores only column indices
+                // `< n_in`, and `x.len() == n_in` is debug-asserted
+                // above — same invariant as [`Csr::matvec`].
+                let xv = unsafe { *x.get_unchecked(self.col_idx[k] as usize) };
+                acc += self.dq(base, sp, k - lo) * xv;
             }
             y[o] = acc;
         }
@@ -516,8 +519,13 @@ impl MackoQ {
                 let col0 = wi * 64;
                 while word != 0 {
                     let bit = word.trailing_zeros() as usize;
-                    acc += self.dq(base, sp, j)
-                        * unsafe { *x.get_unchecked(col0 + bit) };
+                    // SAFETY: bitmap bits are set only for columns
+                    // `< n_in` (tail-word bits beyond `n_in` are never
+                    // set at construction), and `x.len() == n_in` is
+                    // debug-asserted above — same invariant as
+                    // [`Macko::matvec`].
+                    let xv = unsafe { *x.get_unchecked(col0 + bit) };
+                    acc += self.dq(base, sp, j) * xv;
                     j += 1;
                     word &= word - 1;
                 }

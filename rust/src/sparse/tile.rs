@@ -414,6 +414,10 @@ pub fn pool_matvec_batch_tiled<T: RowTiled + Sync>(
     /// Raw staging-buffer base shared by the shard tasks; sound
     /// because every shard writes a disjoint row band.
     struct StagingPtr(*mut f32);
+    // SAFETY: the wrapped pointer is only dereferenced through the
+    // disjoint per-shard row bands carved out below, and the `pool.run`
+    // barrier ends every task before `scratch.yt` is touched again —
+    // no two threads ever alias a band.
     unsafe impl Send for StagingPtr {}
     unsafe impl Sync for StagingPtr {}
     let yt_base = StagingPtr(scratch.yt.as_mut_ptr());
@@ -462,6 +466,10 @@ pub fn pool_t_matmat(a: &Matrix, x: &[f32], y: &mut [f32], b: usize,
     /// Raw output base shared by the band tasks; sound because every
     /// task writes a disjoint set of column indices.
     struct OutPtr(*mut f32);
+    // SAFETY: tasks only write through `out` at column indices inside
+    // their own `c0..c1` band — the bands partition `0..m` — and the
+    // `pool.run` barrier ends every task before the `y` borrow is
+    // released, so no two threads ever alias an element.
     unsafe impl Send for OutPtr {}
     unsafe impl Sync for OutPtr {}
     let y_base = OutPtr(y.as_mut_ptr());

@@ -2,6 +2,10 @@
 //! set). Warmup + timed iterations with median/MAD reporting, and a
 //! throughput helper. Used by every target in rust/benches (all declared
 //! `harness = false`).
+//!
+//! TIMING-OK: measurement harness — wall time is the *output* here,
+//! and nothing downstream of a bench result feeds back into kernels or
+//! scheduling.
 
 use std::time::Instant;
 

@@ -1,6 +1,10 @@
 //! Leveled stderr logger with elapsed-time prefixes.
 //!
 //! `ELSA_LOG=debug|info|warn|quiet` selects verbosity (default info).
+//!
+//! TIMING-OK: the elapsed-time prefix decorates stderr lines only.
+//! DETERMINISM-OK: the `ELSA_LOG` env read selects log *verbosity* —
+//! it cannot change any computed value or token.
 
 use std::sync::OnceLock;
 use std::time::Instant;

@@ -1,4 +1,9 @@
 //! Wall-clock timing helpers for the cost analysis (Table 3) and benches.
+//!
+//! TIMING-OK: this module *is* the wall clock — everything here feeds
+//! reporting (bench medians, wall_seconds, cost tables), never token
+//! selection or scheduling decisions, which run on the deterministic
+//! step clock (see `infer/scheduler.rs` module docs).
 
 use std::time::Instant;
 

@@ -1,0 +1,116 @@
+//! Fixture suite for `elsa-lint` (rust/src/lint): each rule class has
+//! a bad snippet it must fire on and a good snippet it must stay quiet
+//! on. The same files are checked against the Python mirror by
+//! `ci/test_lint_mirror.py`, so the two implementations cannot drift
+//! apart without a fixture failing on one side.
+//!
+//! The snippets live in `rust/tests/lint_fixtures/*.rs` as data
+//! (`include_str!`) — they are linted, never compiled.
+
+use elsa::lint::{lint_source, Config, Rule};
+
+fn rules(v: &[elsa::lint::Violation]) -> Vec<Rule> {
+    v.iter().map(|x| x.rule).collect()
+}
+
+/// Narrow config for the alloc fixtures: the fixture masquerades as a
+/// kernel file whose only hot fn is `hot`.
+fn fixture_cfg() -> Config {
+    Config {
+        hot_fns: &[("sparse/fixture.rs", &["hot"])],
+        ..Config::repo()
+    }
+}
+
+#[test]
+fn bad_unsafe_fires_on_both_sites() {
+    let src = include_str!("lint_fixtures/bad_unsafe.rs");
+    let v = lint_source(&Config::repo(), "infer/fixture.rs", src);
+    assert_eq!(rules(&v), vec![Rule::Safety, Rule::Safety], "{v:?}");
+    assert_eq!(v[0].line, 3);
+    assert_eq!(v[1].line, 7);
+}
+
+#[test]
+fn good_unsafe_is_quiet() {
+    let src = include_str!("lint_fixtures/good_unsafe.rs");
+    let v = lint_source(&Config::repo(), "infer/fixture.rs", src);
+    assert!(v.is_empty(), "{v:?}");
+}
+
+#[test]
+fn bad_nondet_fires_in_watched_module_only() {
+    let src = include_str!("lint_fixtures/bad_nondet.rs");
+    let v = lint_source(&Config::repo(), "sparse/fixture.rs", src);
+    assert_eq!(rules(&v), vec![Rule::Nondet, Rule::Nondet], "{v:?}");
+    assert_eq!(v[0].line, 5);
+    assert_eq!(v[1].line, 10);
+    // the same source outside the watched modules is legal
+    let outside = lint_source(&Config::repo(), "util/fixture.rs", src);
+    assert!(outside.is_empty(), "{outside:?}");
+}
+
+#[test]
+fn good_nondet_is_quiet() {
+    let src = include_str!("lint_fixtures/good_nondet.rs");
+    let v = lint_source(&Config::repo(), "sparse/fixture.rs", src);
+    assert!(v.is_empty(), "{v:?}");
+}
+
+#[test]
+fn bad_alloc_fires_only_inside_the_listed_hot_fn() {
+    let src = include_str!("lint_fixtures/bad_alloc.rs");
+    let v = lint_source(&fixture_cfg(), "sparse/fixture.rs", src);
+    assert_eq!(rules(&v), vec![Rule::Alloc], "{v:?}");
+    assert_eq!(v[0].line, 5);
+}
+
+#[test]
+fn good_alloc_is_quiet() {
+    let src = include_str!("lint_fixtures/good_alloc.rs");
+    let v = lint_source(&fixture_cfg(), "sparse/fixture.rs", src);
+    assert!(v.is_empty(), "{v:?}");
+}
+
+#[test]
+fn renamed_hot_fn_is_a_config_error() {
+    // the alloc fixture has no fn named `decode`: a stale table entry
+    // must surface as a violation, not silently stop scanning
+    let cfg = Config {
+        hot_fns: &[("sparse/fixture.rs", &["decode"])],
+        ..Config::repo()
+    };
+    let src = include_str!("lint_fixtures/bad_alloc.rs");
+    let v = lint_source(&cfg, "sparse/fixture.rs", src);
+    assert_eq!(rules(&v), vec![Rule::Config], "{v:?}");
+}
+
+#[test]
+fn bad_wildcard_fires_once() {
+    let src = include_str!("lint_fixtures/bad_wildcard.rs");
+    let v = lint_source(&Config::repo(), "infer/fixture.rs", src);
+    assert_eq!(rules(&v), vec![Rule::Wildcard], "{v:?}");
+    assert_eq!(v[0].line, 12);
+}
+
+#[test]
+fn good_wildcard_is_quiet() {
+    let src = include_str!("lint_fixtures/good_wildcard.rs");
+    let v = lint_source(&Config::repo(), "infer/fixture.rs", src);
+    assert!(v.is_empty(), "{v:?}");
+}
+
+#[test]
+fn repo_policy_accepts_the_committed_tree() {
+    // same check the blocking `elsa-lint` CI step runs; kept here too
+    // so `cargo test` alone catches violations before CI does
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust")
+        .join("src");
+    let v = elsa::lint::lint_tree(&Config::repo(), &root).unwrap();
+    assert!(
+        v.is_empty(),
+        "lint violations in rust/src:\n{}",
+        v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}

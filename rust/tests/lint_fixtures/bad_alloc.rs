@@ -1,0 +1,14 @@
+// Fixture: rule 3 (alloc) must fire once — `hot` is on the hot-fn
+// table, `cold` is not.
+
+pub fn hot(n: usize) -> f32 {
+    let mut acc = Vec::new();
+    for i in 0..n {
+        acc.push(i as f32);
+    }
+    acc.iter().sum()
+}
+
+pub fn cold(n: usize) -> Vec<f32> {
+    (0..n).map(|i| i as f32).collect()
+}

@@ -1,0 +1,11 @@
+// Fixture: rule 2 (nondet) must fire twice when this file is linted
+// under a watched-module path such as `sparse/fixture.rs`.
+
+pub fn stamp() -> f64 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64()
+}
+
+pub fn pause() {
+    std::thread::sleep(std::time::Duration::from_millis(1));
+}

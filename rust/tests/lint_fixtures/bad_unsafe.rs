@@ -1,0 +1,7 @@
+// Fixture: rule 1 (safety) must fire on both sites below.
+pub fn first(x: &[f32]) -> f32 {
+    unsafe { *x.get_unchecked(0) }
+}
+
+pub struct Wrapper(pub *mut f32);
+unsafe impl Send for Wrapper {}

@@ -1,0 +1,14 @@
+// Fixture: rule 4 (wildcard) must fire once — the match patterns name
+// KernelPath variants, so `_ =>` hides future variants.
+
+pub enum KernelPath {
+    Scalar,
+    Unrolled,
+}
+
+pub fn cost(p: KernelPath) -> u32 {
+    match p {
+        KernelPath::Scalar => 1,
+        _ => 2,
+    }
+}

@@ -1,0 +1,16 @@
+// Fixture: rule 3 (alloc) must stay quiet — the only allocation in a
+// hot fn is annotated, and allocations in unlisted fns are free.
+
+pub fn hot(n: usize) -> f32 {
+    // ALLOC-OK: fixture — warmup buffer allocated once per call for
+    // the test, amortized across the whole dispatch.
+    let mut acc = vec![0.0f32; n];
+    for (i, a) in acc.iter_mut().enumerate() {
+        *a = i as f32;
+    }
+    acc.iter().sum()
+}
+
+pub fn cold(n: usize) -> Vec<f32> {
+    (0..n).map(|i| i as f32).collect()
+}

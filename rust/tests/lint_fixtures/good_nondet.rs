@@ -1,0 +1,14 @@
+// Fixture: rule 2 (nondet) must stay quiet — every nondeterminism
+// source carries an annotation with a reason.
+
+pub fn stamp() -> f64 {
+    // TIMING-OK: measurement only; never feeds token selection.
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64()
+}
+
+pub fn verbose() -> bool {
+    // DETERMINISM-OK: selects log verbosity only — it cannot change
+    // any computed value or token.
+    std::env::var("FIXTURE_LOG").is_ok()
+}

@@ -1,0 +1,17 @@
+// Fixture: rule 1 (safety) must stay quiet — every unsafe site is
+// justified, and `unsafe` inside comments/strings is not code.
+pub fn first(x: &[f32]) -> f32 {
+    // SAFETY: callers guarantee x is non-empty.
+    unsafe { *x.get_unchecked(0) }
+}
+
+pub struct Wrapper(pub *mut f32);
+// SAFETY: the pointer is only dereferenced through disjoint per-task
+// bands, and the dispatch barrier outlives every borrow.
+unsafe impl Send for Wrapper {}
+unsafe impl Sync for Wrapper {}
+
+pub fn not_code() -> &'static str {
+    // a comment mentioning unsafe { } is not code either
+    "unsafe { boom() }"
+}

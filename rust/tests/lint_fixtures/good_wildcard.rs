@@ -1,0 +1,23 @@
+// Fixture: rule 4 (wildcard) must stay quiet — the enum match is
+// exhaustive, and `_` over a *string* scrutinee is legal even though
+// the arm bodies name enum variants (the Backend::parse shape).
+
+pub enum KernelPath {
+    Scalar,
+    Unrolled,
+}
+
+pub fn cost(p: KernelPath) -> u32 {
+    match p {
+        KernelPath::Scalar => 1,
+        KernelPath::Unrolled => 2,
+    }
+}
+
+pub fn parse(s: &str) -> Option<KernelPath> {
+    match s {
+        "scalar" => Some(KernelPath::Scalar),
+        "unrolled" => Some(KernelPath::Unrolled),
+        _ => None,
+    }
+}
